@@ -1,0 +1,65 @@
+//! Fig. 6.2 — Disk Space Requirements: PEMS1 (indirect area grows with v)
+//! vs PEMS2 (exactly vµ/P per node) as real processors are added with
+//! v/P = 8 and µ = 2 GiB, reproducing the table's rows.
+
+use pems2::config::{DeliveryMode, SimConfig};
+use pems2::util::bytes::human_bytes;
+
+fn main() {
+    let v_per_p = 8usize;
+    let mu: u64 = 2 << 30;
+    println!("Fig 6.2: disk space (v/P = {v_per_p}, mu = {})", human_bytes(mu));
+    println!(
+        "{:>4} {:>5} {:>12} {:>14} {:>14} {:>14} {:>14}",
+        "P", "v", "required", "PEMS1/proc", "PEMS1 total", "PEMS2/proc", "PEMS2 total"
+    );
+    let mut rows = Vec::new();
+    for p in [1usize, 2, 4, 8, 16] {
+        let v = v_per_p * p;
+        let mk = |delivery| {
+            SimConfig::builder()
+                .p(p)
+                .v(v)
+                .mu(mu)
+                .delivery(delivery)
+                // The thesis' indirect area is vµ per node: slot = µ/v of
+                // *sender* memory per (sender, local receiver) pair scaled
+                // to the table's vµ shape -> slot = µ / v_per_p.
+                .indirect_slot(mu / v_per_p as u64)
+                .block(256 << 10)
+                .build()
+                .unwrap()
+        };
+        let p1 = mk(DeliveryMode::Pems1Indirect);
+        let p2 = mk(DeliveryMode::Pems2Direct);
+        let required = v as u64 * mu;
+        println!(
+            "{:>4} {:>5} {:>12} {:>14} {:>14} {:>14} {:>14}",
+            p,
+            v,
+            human_bytes(required),
+            human_bytes(p1.disk_space_per_node()),
+            human_bytes(p1.disk_space_per_node() * p as u64),
+            human_bytes(p2.disk_space_per_node()),
+            human_bytes(p2.disk_space_per_node() * p as u64),
+        );
+        rows.push((p, p1.disk_space_per_node(), p2.disk_space_per_node()));
+    }
+    // Shape assertions (the table's two key properties).
+    // PEMS2: per-node space constant as P grows.
+    assert!(rows.windows(2).all(|w| w[0].2 == w[1].2), "PEMS2 per-node must be flat");
+    // PEMS1: per-node space strictly increasing with P.
+    assert!(rows.windows(2).all(|w| w[0].1 < w[1].1), "PEMS1 per-node must grow");
+    println!("\nshape check: PEMS2 flat per node, PEMS1 grows with total v — OK");
+
+    let mut s1 = pems2::bench::Series::new("PEMS1 per-node GiB");
+    let mut s2 = pems2::bench::Series::new("PEMS2 per-node GiB");
+    for (p, a, b) in rows {
+        s1.push(p as f64, a as f64 / (1u64 << 30) as f64);
+        s2.push(p as f64, b as f64 / (1u64 << 30) as f64);
+    }
+    let dir = pems2::bench::results_dir();
+    pems2::bench::write_series(&format!("{dir}/fig6_2_disk_space.dat"), "Fig 6.2", &[s1, s2])
+        .unwrap();
+    println!("wrote {dir}/fig6_2_disk_space.dat");
+}

@@ -1,0 +1,73 @@
+//! Fig. 7.2 — Single-processor EM-Alltoallv performance: one Alltoallv
+//! over the complete data set, unix vs mmap I/O, k = 1 vs k = 4.
+//!
+//! The thesis' observations to reproduce:
+//! * unix: k=4 faster than k=1 (the −vkω/2 term of Thm. 7.1.6);
+//! * mmap: slower than unix for this trivial single-shot program (cache
+//!   overhead with no reuse).
+//!
+//! x = total 32-bit integers, y = seconds (wall + charged reported).
+
+use pems2::bench::{alltoallv_once, full_mode, print_series, results_dir, write_series, Series};
+use pems2::config::{IoStyle, Layout, SimConfig};
+
+fn main() {
+    let v = 8usize;
+    let sizes: Vec<u64> = if full_mode() {
+        vec![4 << 20, 16 << 20, 64 << 20, 128 << 20]
+    } else {
+        vec![1 << 18, 1 << 20, 4 << 20]
+    };
+    let mut wall_series = Vec::new();
+    let mut charged_series = Vec::new();
+    for (io, k) in [
+        (IoStyle::Unix, 1usize),
+        (IoStyle::Unix, 4),
+        (IoStyle::Mmap, 1),
+        (IoStyle::Mmap, 4),
+    ] {
+        let label = format!("alltoall-{}-k{k}", io.label());
+        let mut sw = Series::new(label.clone());
+        let mut sc = Series::new(label.clone());
+        for &n in &sizes {
+            let elems_per_vp = (n / v as u64) as usize;
+            let mu = ((elems_per_vp * 8 + 4096) as u64).next_power_of_two();
+            let mut b = SimConfig::builder()
+                .v(v)
+                .k(k)
+                .mu(mu)
+                .sigma(mu)
+                .block(256 << 10)
+                .io(io);
+            if io == IoStyle::Mmap {
+                b = b.layout(Layout::PerVpDisk);
+            }
+            let cfg = b.build().unwrap();
+            let r = alltoallv_once(cfg, elems_per_vp).unwrap();
+            assert!(r.verified);
+            sw.push(n as f64, r.report.wall.as_secs_f64());
+            sc.push(n as f64, r.report.charged.total());
+        }
+        wall_series.push(sw);
+        charged_series.push(sc);
+    }
+    print_series("Fig 7.2 wall seconds", &wall_series);
+    print_series("Fig 7.2 charged seconds (2009 disk model)", &charged_series);
+
+    // Shape check on the model-charged times (deterministic): with unix
+    // I/O, k=4 must beat k=1 (less deferred-message I/O).
+    let last = sizes.len() - 1;
+    let unix_k1 = charged_series[0].points[last].1;
+    let unix_k4 = charged_series[1].points[last].1;
+    assert!(
+        unix_k4 < unix_k1,
+        "unix k=4 ({unix_k4:.3}s) must beat k=1 ({unix_k1:.3}s)"
+    );
+    println!("\nshape check: unix k=4 < k=1 (charged) — OK");
+
+    let dir = results_dir();
+    write_series(&format!("{dir}/fig7_2_wall.dat"), "Fig 7.2 wall", &wall_series).unwrap();
+    write_series(&format!("{dir}/fig7_2_charged.dat"), "Fig 7.2 charged", &charged_series)
+        .unwrap();
+    println!("wrote {dir}/fig7_2_*.dat");
+}

@@ -1,0 +1,51 @@
+//! Figs. 8.12–8.14 — per-thread elapsed time at every superstep barrier
+//! for one PSRS run under unix, stxxl-file and mmap I/O.
+//!
+//! The thesis' signature shapes: unix/stxxl timelines climb in jumps at
+//! every superstep (each barrier forces a full swap); mmap stays nearly
+//! flat through the three splitter supersteps (tiny working set, cached)
+//! and only climbs at the final data-moving Alltoallv.
+
+use pems2::bench::{full_mode, psrs_config, results_dir, Series};
+use pems2::config::IoStyle;
+
+fn main() {
+    let n: u64 = if full_mode() { 8_000_000 } else { 800_000 };
+    let v = 8usize;
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+
+    for io in [IoStyle::Unix, IoStyle::Async, IoStyle::Mmap] {
+        let mut cfg = psrs_config(n, 1, v, 2, io, false).unwrap();
+        cfg.record_timeline = true;
+        let r = pems2::apps::run_psrs(cfg, n, false).unwrap();
+        let series = r.report.timelines.expect("timeline enabled");
+        let path = format!("{dir}/fig8_12_14_timeline_{}.dat", io.label());
+        let mut f = std::fs::File::create(&path).unwrap();
+        use std::io::Write;
+        writeln!(f, "# PSRS per-thread elapsed seconds per superstep ({})", io.label()).unwrap();
+        let steps = series.iter().map(Vec::len).max().unwrap_or(0);
+        for s in 0..steps {
+            write!(f, "{s}").unwrap();
+            for row in &series {
+                match row.get(s) {
+                    Some(t) => write!(f, " {t:.6}").unwrap(),
+                    None => write!(f, " -").unwrap(),
+                }
+            }
+            writeln!(f).unwrap();
+        }
+        // Console summary: mean elapsed per superstep.
+        let mut mean = Series::new(format!("mean elapsed ({})", io.label()));
+        for s in 0..steps {
+            let vals: Vec<f64> = series.iter().filter_map(|r| r.get(s).copied()).collect();
+            mean.push(s as f64, vals.iter().sum::<f64>() / vals.len().max(1) as f64);
+        }
+        println!("-- {} ({} supersteps per thread)", io.label(), steps);
+        for (x, y) in &mean.points {
+            println!("  superstep {x:>2}: {y:.4}s");
+        }
+        println!("wrote {path}");
+    }
+    println!("\nexpected shape: unix/stxxl step up every superstep; mmap flat until the final alltoallv");
+}

@@ -1,0 +1,51 @@
+//! Fig. 8.24 — CGMLib Euler Tour with memory-mapped I/O: forests of `n`
+//! trees (the thesis uses n trees of n² nodes; scaled here), wall time vs
+//! total arcs.
+
+use pems2::bench::{full_mode, print_series, results_dir, write_series, Series};
+use pems2::config::{IoStyle, Layout, SimConfig};
+
+fn main() {
+    let v = 8usize;
+    let shapes: Vec<(usize, usize)> = if full_mode() {
+        vec![(4, 2048), (8, 4096), (16, 8192)]
+    } else {
+        vec![(2, 512), (4, 1024), (8, 1024)]
+    };
+
+    let mut s_mmap = Series::new("Euler tour (mmap)");
+    let mut s_unix = Series::new("Euler tour (unix)");
+    for &(trees, nodes) in &shapes {
+        let arcs = (trees * (nodes - 1) * 2) as u64;
+        let mu = pems2::apps::list_ranking::required_mu(arcs, v).next_power_of_two();
+        for io in [IoStyle::Mmap, IoStyle::Unix] {
+            let mut b = SimConfig::builder()
+                .v(v)
+                .k(2)
+                .mu(mu)
+                .sigma(mu)
+                .block(256 << 10)
+                .io(io);
+            if io == IoStyle::Mmap {
+                b = b.layout(Layout::PerVpDisk);
+            }
+            let cfg = b.build().unwrap();
+            let r = pems2::apps::run_euler_tour(cfg, trees, nodes, true).unwrap();
+            assert!(r.verified);
+            let series = if io == IoStyle::Mmap { &mut s_mmap } else { &mut s_unix };
+            series.push(r.arcs as f64, r.report.wall.as_secs_f64());
+        }
+    }
+    print_series("Fig 8.24: Euler tour (x = arcs, y = wall s)", &[s_mmap.clone(), s_unix.clone()]);
+
+    // Shape: many-superstep list ranking benefits from mmap (§8.4.4).
+    let m = s_mmap.points.last().unwrap().1;
+    let u = s_unix.points.last().unwrap().1;
+    println!("\nlargest forest: mmap {m:.3}s vs unix {u:.3}s");
+    assert!(m < u, "mmap must beat unix for the many-superstep Euler tour");
+
+    let dir = results_dir();
+    write_series(&format!("{dir}/fig8_24_euler_tour.dat"), "Fig 8.24", &[s_mmap, s_unix])
+        .unwrap();
+    println!("wrote {dir}/fig8_24_euler_tour.dat");
+}

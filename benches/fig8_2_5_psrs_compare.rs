@@ -1,0 +1,77 @@
+//! Figs. 8.2–8.5 — PEMS1 vs PEMS2 vs the EM merge-sort baseline on PSRS,
+//! for P = 1, 2, 4, 8 (scaling n via v with constant µ, §8.3.3).
+//!
+//! y = model-charged seconds (the deterministic stand-in for the thesis'
+//! spinning-disk wall clock; see DESIGN.md §3); wall seconds are written
+//! to the results file as well.
+//!
+//! Shapes to reproduce:
+//! * PEMS2 below PEMS1 at every P;
+//! * the PEMS1↔PEMS2 gap grows with P;
+//! * PEMS2 approaches/overtakes the baseline as P grows (the baseline is
+//!   single-machine, so its line is flat across P).
+
+use pems2::bench::{full_mode, print_series, psrs_config, results_dir, write_series, Series};
+use pems2::config::IoStyle;
+
+fn main() {
+    let v_per_p = 4usize;
+    let sizes: Vec<u64> = if full_mode() {
+        vec![2_000_000, 8_000_000, 32_000_000]
+    } else {
+        vec![200_000, 800_000]
+    };
+    let ps: Vec<usize> = vec![1, 2, 4, 8];
+
+    let mut all = Vec::new();
+    let mut final_points: Vec<(usize, f64, f64, f64)> = Vec::new(); // (P, pems1, pems2, baseline)
+    for &p in &ps {
+        let v = v_per_p * p;
+        let mut s1 = Series::new(format!("PSRS PEMS1 P={p}"));
+        let mut s2 = Series::new(format!("PSRS PEMS2 P={p}"));
+        let mut sb = Series::new(format!("stxxl-like baseline (P=1) [at P={p}]"));
+        for &n in &sizes {
+            let cfg2 = psrs_config(n, p, v, 1, IoStyle::Unix, false).unwrap();
+            let r2 = pems2::apps::run_psrs(cfg2.clone(), n, false).unwrap();
+            s2.push(n as f64, r2.report.charged.total());
+
+            let cfg1 = psrs_config(n, p, v, 1, IoStyle::Unix, true).unwrap();
+            let r1 = pems2::apps::run_psrs(cfg1, n, false).unwrap();
+            s1.push(n as f64, r1.report.charged.total());
+
+            let rb = pems2::baseline::run_stxxl_sort(&cfg2, n, false).unwrap();
+            sb.push(n as f64, rb.charged);
+
+            if n == *sizes.last().unwrap() {
+                final_points.push((p, r1.report.charged.total(), r2.report.charged.total(), rb.charged));
+            }
+        }
+        all.push(s1);
+        all.push(s2);
+        all.push(sb);
+    }
+    print_series("Figs 8.2-8.5: PSRS charged seconds", &all);
+
+    // Shape assertions.
+    for &(p, t1, t2, _tb) in &final_points {
+        assert!(t2 < t1, "P={p}: PEMS2 ({t2:.2}) must beat PEMS1 ({t1:.2})");
+    }
+    let gap_first = final_points[0].1 / final_points[0].2;
+    let gap_last = final_points.last().unwrap().1 / final_points.last().unwrap().2;
+    println!("\nPEMS1/PEMS2 charged ratio: P=1 -> {gap_first:.2}x, P=8 -> {gap_last:.2}x");
+    // PEMS2 vs baseline crossover: per-P PEMS2 time must fall as P grows
+    // while the baseline stays flat.
+    let p1_t2 = final_points[0].2;
+    let p8_t2 = final_points.last().unwrap().2;
+    assert!(p8_t2 < p1_t2, "PEMS2 must speed up with P ({p1_t2:.2} -> {p8_t2:.2})");
+    let tb = final_points[0].3;
+    println!(
+        "PEMS2 vs baseline at max n: P=1 {:.2}x, P=8 {:.2}x (thesis: crossover by P=8)",
+        p1_t2 / tb,
+        p8_t2 / tb
+    );
+
+    let dir = results_dir();
+    write_series(&format!("{dir}/fig8_2_5_psrs.dat"), "Figs 8.2-8.5", &all).unwrap();
+    println!("wrote {dir}/fig8_2_5_psrs.dat");
+}

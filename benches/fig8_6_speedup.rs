@@ -1,0 +1,43 @@
+//! Fig. 8.6 — PEMS1 vs PEMS2 PSRS relative speedup (fixed n, P = 1..8;
+//! each system normalized to its own P = 1 time).  The thesis' claim:
+//! PEMS2's speedup curve is markedly steeper.
+
+use pems2::bench::{full_mode, print_series, psrs_config, results_dir, write_series, Series};
+use pems2::config::IoStyle;
+
+fn main() {
+    let n: u64 = if full_mode() { 8_000_000 } else { 800_000 };
+    let v_per_p = 4usize;
+    let ps = [1usize, 2, 4, 8];
+
+    let mut t1 = Vec::new();
+    let mut t2 = Vec::new();
+    for &p in &ps {
+        let v = v_per_p * p;
+        let cfg2 = psrs_config(n, p, v, 1, IoStyle::Unix, false).unwrap();
+        t2.push(pems2::apps::run_psrs(cfg2, n, false).unwrap().report.charged.total());
+        let cfg1 = psrs_config(n, p, v, 1, IoStyle::Unix, true).unwrap();
+        t1.push(pems2::apps::run_psrs(cfg1, n, false).unwrap().report.charged.total());
+    }
+    let mut s1 = Series::new("PEMS1 speedup");
+    let mut s2 = Series::new("PEMS2 speedup");
+    for (i, &p) in ps.iter().enumerate() {
+        s1.push(p as f64, t1[0] / t1[i]);
+        s2.push(p as f64, t2[0] / t2[i]);
+    }
+    print_series(&format!("Fig 8.6: PSRS relative speedup (n={n})"), &[s1.clone(), s2.clone()]);
+
+    let sp1 = *s1.points.last().unwrap();
+    let sp2 = *s2.points.last().unwrap();
+    assert!(
+        sp2.1 > sp1.1,
+        "PEMS2 speedup at P=8 ({:.2}) must exceed PEMS1's ({:.2})",
+        sp2.1,
+        sp1.1
+    );
+    println!("\nshape check: PEMS2 P=8 speedup {:.2}x > PEMS1 {:.2}x — OK", sp2.1, sp1.1);
+
+    let dir = results_dir();
+    write_series(&format!("{dir}/fig8_6_speedup.dat"), "Fig 8.6", &[s1, s2]).unwrap();
+    println!("wrote {dir}/fig8_6_speedup.dat");
+}

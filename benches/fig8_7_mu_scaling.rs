@@ -1,0 +1,75 @@
+//! Fig. 8.7 — Increasing context size with constant v: PEMS1's indirect
+//! area makes the disk head commute between distant regions, so its time
+//! *grows* with µ even at constant n; PEMS2's stays flat.
+//!
+//! Our testbed's page cache hides seek latency, so the seek-dominated
+//! effect is shown through the charged-time model (which prices each
+//! discontiguous access; DESIGN.md §3) — the measured *seek counts* are
+//! also printed, and they alone reproduce the shape.
+
+use pems2::bench::{print_series, results_dir, write_series, Series};
+use pems2::config::{AllocPolicy, DeliveryMode, IoStyle, SimConfig};
+
+fn main() {
+    let n: u64 = 400_000;
+    let v = 8usize;
+    let mus: Vec<u64> = vec![4 << 20, 8 << 20, 16 << 20, 32 << 20];
+
+    let mut s1 = Series::new("PEMS1 charged s");
+    let mut s2 = Series::new("PEMS2 charged s");
+    let mut k1 = Series::new("PEMS1 seeks");
+    let mut k2 = Series::new("PEMS2 seeks");
+    // Scaled platter: the thesis fills a 200 GB disk with GiB contexts;
+    // here µ is MiB-scale, so the stroke is scaled down proportionally
+    // (distance *fractions* then match the thesis' regime).
+    let mut cost = pems2::config::CostCoeffs::default();
+    cost.stroke = 64 << 20;
+    for &mu in &mus {
+        let base = SimConfig::builder()
+            .v(v)
+            .k(1)
+            .mu(mu)
+            .sigma(mu)
+            .cost(cost)
+            .block(256 << 10)
+            .io(IoStyle::Unix);
+        let cfg2 = base.clone().build().unwrap();
+        let r2 = pems2::apps::run_psrs(cfg2, n, false).unwrap();
+        s2.push((mu >> 20) as f64, r2.report.charged.total());
+        k2.push((mu >> 20) as f64, r2.report.metrics.seeks as f64);
+
+        let cfg1 = base
+            .delivery(DeliveryMode::Pems1Indirect)
+            .alloc(AllocPolicy::Bump)
+            .indirect_slot(mu / v as u64)
+            .build()
+            .unwrap();
+        let r1 = pems2::apps::run_psrs(cfg1, n, false).unwrap();
+        s1.push((mu >> 20) as f64, r1.report.charged.total());
+        k1.push((mu >> 20) as f64, r1.report.metrics.seeks as f64);
+    }
+    print_series(
+        &format!("Fig 8.7: µ scaling at constant v={v}, n={n} (x = µ MiB)"),
+        &[s1.clone(), s2.clone(), k1.clone(), k2.clone()],
+    );
+
+    // Shape: PEMS1 charged time grows with µ; PEMS2 stays (near) flat.
+    let growth1 = s1.points.last().unwrap().1 / s1.points[0].1;
+    let growth2 = s2.points.last().unwrap().1 / s2.points[0].1;
+    println!("\ncharged-time growth over µ: PEMS1 {growth1:.2}x, PEMS2 {growth2:.2}x");
+    // PEMS1 commutes between the context region and the (distant, also
+    // growing) indirect area; PEMS2 only spans its contexts.  The slope
+    // gap is the Fig. 8.7 shape.
+    assert!(
+        growth1 > growth2 * 1.2,
+        "PEMS1 must degrade with µ faster than PEMS2 ({growth1:.2}x vs {growth2:.2}x)"
+    );
+    assert!(
+        growth1 > 1.4,
+        "PEMS1 must degrade substantially over this µ range ({growth1:.2}x)"
+    );
+
+    let dir = results_dir();
+    write_series(&format!("{dir}/fig8_7_mu_scaling.dat"), "Fig 8.7", &[s1, s2, k1, k2]).unwrap();
+    println!("wrote {dir}/fig8_7_mu_scaling.dat");
+}

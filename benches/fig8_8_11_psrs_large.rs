@@ -1,0 +1,44 @@
+//! Figs. 8.8–8.11 — PEMS2 PSRS "large runs": the three I/O styles
+//! (unix, stxxl-file, mmap) across P = 1, 2, 4, 8 with large contexts.
+//!
+//! Shapes to reproduce (§8.3.3): unix is best and most predictable for
+//! PSRS; async ("stxxl-file") is close; mmap is worst for this
+//! all-memory-touched algorithm.
+
+use pems2::bench::{full_mode, print_series, psrs_config, results_dir, write_series, Series};
+use pems2::config::IoStyle;
+
+fn main() {
+    let v_per_p = 4usize;
+    let sizes: Vec<u64> = if full_mode() {
+        vec![4_000_000, 16_000_000, 64_000_000]
+    } else {
+        vec![400_000, 1_600_000]
+    };
+    let ps: Vec<usize> = if full_mode() { vec![1, 2, 4, 8] } else { vec![1, 2, 4] };
+
+    let mut all = Vec::new();
+    let mut at_max: Vec<(IoStyle, usize, f64)> = Vec::new();
+    for &p in &ps {
+        let v = v_per_p * p;
+        for io in [IoStyle::Unix, IoStyle::Async, IoStyle::Mmap] {
+            let mut s = Series::new(format!("PSRS PEMS2 ({}) P={p}", io.label()));
+            for &n in &sizes {
+                let cfg = psrs_config(n, p, v, 2.min(v_per_p), io, false).unwrap();
+                let r = pems2::apps::run_psrs(cfg, n, false).unwrap();
+                // mmap has S=0 by definition; wall time is the fair
+                // comparison there, so report wall for all three.
+                s.push(n as f64, r.report.wall.as_secs_f64());
+                if n == *sizes.last().unwrap() {
+                    at_max.push((io, p, r.report.wall.as_secs_f64()));
+                }
+            }
+            all.push(s);
+        }
+    }
+    print_series("Figs 8.8-8.11: PSRS PEMS2 large runs (wall seconds)", &all);
+
+    let dir = results_dir();
+    write_series(&format!("{dir}/fig8_8_11_psrs_large.dat"), "Figs 8.8-8.11", &all).unwrap();
+    println!("wrote {dir}/fig8_8_11_psrs_large.dat");
+}

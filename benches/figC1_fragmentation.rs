@@ -1,0 +1,60 @@
+//! Fig. C.1 — ext3 vs ext4: file fragmentation.  Constant problem size,
+//! growing disk footprint (µ): with contiguous extents (ext4+fallocate)
+//! performance is flat; with fragmented allocation (ext3) every block is
+//! a seek and charged time degrades as the footprint grows.
+
+use pems2::bench::{print_series, results_dir, write_series, Series};
+use pems2::config::{FileAlloc, IoStyle, SimConfig};
+
+fn main() {
+    let n: u64 = 200_000;
+    let v = 4usize;
+    let mus: Vec<u64> = vec![4 << 20, 8 << 20, 16 << 20, 32 << 20];
+
+    let mut cost = pems2::config::CostCoeffs::default();
+    cost.stroke = 256 << 20; // scaled platter (see fig8_7)
+
+    let mut s_ext4 = Series::new("ext4 (contiguous extents)");
+    let mut s_ext3 = Series::new("ext3 (fragmented)");
+    for &mu in &mus {
+        for frag in [FileAlloc::Contiguous, FileAlloc::Fragmented] {
+            let cfg = SimConfig::builder()
+                .v(v)
+                .k(1)
+                .mu(mu)
+                .sigma(mu)
+                .cost(cost)
+                .block(64 << 10)
+                .io(IoStyle::Unix)
+                .file_alloc(frag)
+                .build()
+                .unwrap();
+            let r = pems2::apps::run_psrs(cfg, n, false).unwrap();
+            let series = match frag {
+                FileAlloc::Contiguous => &mut s_ext4,
+                FileAlloc::Fragmented => &mut s_ext3,
+            };
+            series.push((mu >> 20) as f64, r.report.charged.total());
+        }
+    }
+    print_series(
+        &format!("Fig C.1: fragmentation (n={n} const, x = µ MiB, y = charged s)"),
+        &[s_ext4.clone(), s_ext3.clone()],
+    );
+
+    // Shapes: ext4 flat; ext3 worse and degrading with footprint.
+    let e4_growth = s_ext4.points.last().unwrap().1 / s_ext4.points[0].1;
+    let e3_growth = s_ext3.points.last().unwrap().1 / s_ext3.points[0].1;
+    let worst_ratio = s_ext3.points.last().unwrap().1 / s_ext4.points.last().unwrap().1;
+    println!(
+        "\ngrowth over footprint: ext4 {e4_growth:.2}x, ext3 {e3_growth:.2}x; \
+         ext3/ext4 at max µ: {worst_ratio:.2}x"
+    );
+    assert!(worst_ratio > 1.5, "fragmented must be much slower at large footprint");
+    assert!(e4_growth < 1.5, "contiguous must stay (near) flat");
+
+    let dir = results_dir();
+    write_series(&format!("{dir}/figC1_fragmentation.dat"), "Fig C.1", &[s_ext4, s_ext3])
+        .unwrap();
+    println!("wrote {dir}/figC1_fragmentation.dat");
+}

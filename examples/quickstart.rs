@@ -1,0 +1,68 @@
+//! Quickstart: the smallest complete PEMS2 program.
+//!
+//! Simulates 8 virtual processors on 2 "real processors" with 2 cores
+//! each, runs one Alltoallv + one Reduce — the basic BSP shape — and
+//! prints the I/O accounting.  Run with:
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use pems2::comm::{self, ReduceOp};
+use pems2::prelude::*;
+
+fn main() -> pems2::Result<()> {
+    let cfg = SimConfig::builder()
+        .p(2) // 2 real processors (in-process nodes)
+        .v(8) // 8 virtual processors
+        .k(2) // 2 cores / memory partitions per node
+        .mu(4 << 20) // 4 MiB context per virtual processor
+        .sigma(4 << 20)
+        .block(256 << 10)
+        .io(IoStyle::Unix)
+        .build()?;
+
+    println!("simulating v={} on P={} nodes (k={} cores each)", cfg.v, cfg.p, cfg.k);
+    println!("disk per node: {} bytes", cfg.disk_space_per_node());
+
+    let report = run(cfg, |vp| {
+        let v = vp.nranks();
+        let me = vp.rank();
+
+        // Each VP allocates from its context (swapped to disk as needed).
+        let send = vp.alloc::<u32>(v * 1024)?;
+        let recv = vp.alloc::<u32>(v * 1024)?;
+        {
+            let s = vp.slice_mut(send)?;
+            for (i, x) in s.iter_mut().enumerate() {
+                *x = (me * 1_000_000 + i) as u32;
+            }
+        }
+
+        // BSP superstep 1: exchange 4 KiB with every other VP.
+        let mut c = Comm::new(vp);
+        c.alltoall(send, recv)?;
+
+        // Superstep 2: global sum of what we received.
+        let total = vp.alloc::<u64>(1)?;
+        let grand = vp.alloc::<u64>(1)?;
+        {
+            let sum: u64 = vp.slice(recv)?.iter().map(|&x| x as u64).sum();
+            vp.slice_mut(total)?[0] = sum;
+        }
+        comm::allreduce::<u64>(vp, ReduceOp::Sum, total.region(), grand.region())?;
+
+        if me == 0 {
+            println!("global checksum: {}", vp.slice(grand)?[0]);
+        }
+        Ok(())
+    })?;
+
+    println!("wall time      : {:?}", report.wall);
+    println!("swap I/O       : {} B", report.metrics.swap_bytes());
+    println!("delivery I/O   : {} B", report.metrics.delivery_bytes());
+    println!("network        : {} B in {} h-relations", report.metrics.net_bytes, report.metrics.net_relations);
+    println!("supersteps     : {}", report.metrics.supersteps);
+    println!("charged time   : {:.3}s (2009-era disk/network model)", report.charged.total());
+    Ok(())
+}

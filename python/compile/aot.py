@@ -1,0 +1,86 @@
+"""AOT-lower the Layer-2 graphs to HLO text artifacts.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the Rust ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Artifacts land in ``artifacts/`` next to a plain-text ``manifest.txt``
+(parsed by ``rust/src/runtime/manifest.rs``), one line per artifact:
+
+    name dtype rows cols file
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (export name, model key, dtype, rows, cols).  Shapes are the per-call
+# chunk geometry the Rust runtime pads to; cols is a power of two for sort.
+DEFAULT_SPECS = [
+    ("scan_f32", "scan", "f32", 64, 1024),
+    ("scan_i32", "scan", "i32", 64, 1024),
+    ("reduce_sum_f32", "reduce_sum", "f32", 64, 1024),
+    ("reduce_max_f32", "reduce_max", "f32", 64, 1024),
+    ("reduce_min_f32", "reduce_min", "f32", 64, 1024),
+    ("reduce_sum_i32", "reduce_sum", "i32", 64, 1024),
+    ("sort_i32", "sort", "i32", 64, 1024),
+    ("sort_f32", "sort", "f32", 64, 1024),
+]
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(model_key: str, dtype: str, rows: int, cols: int) -> str:
+    fn, _ = model.EXPORTS[model_key]
+    spec = jax.ShapeDtypeStruct((rows, cols), _DTYPES[dtype])
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated export names to build"
+    )
+    args = ap.parse_args()
+
+    only = set(args.only.split(",")) if args.only else None
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name, key, dtype, rows, cols in DEFAULT_SPECS:
+        if only is not None and name not in only:
+            continue
+        text = lower_one(key, dtype, rows, cols)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name} {dtype} {rows} {cols} {fname}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest with {len(manifest_lines)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels for PEMS2 computation supersteps.
+
+Every kernel is written for ``interpret=True`` (the CPU PJRT plugin cannot
+execute Mosaic custom-calls); on a real TPU the same BlockSpecs express the
+HBM->VMEM schedule.  Correctness oracles live in ``ref.py``.
+"""

@@ -1,0 +1,59 @@
+"""Tiled reduction Pallas kernel.
+
+The computation half of EM-Reduce (thesis §7.4): each virtual processor
+reduces its local vector before any communication happens.  The kernel
+streams one row per grid step into VMEM and accumulates into a single
+(1, 1) output block that every grid step maps to — the standard TPU
+"revisited output block" accumulation pattern.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_INITS = {
+    "sum": lambda dt: jnp.zeros((), dt),
+    "max": lambda dt: jnp.array(jnp.finfo(dt).min if jnp.issubdtype(dt, jnp.floating) else jnp.iinfo(dt).min, dt),
+    "min": lambda dt: jnp.array(jnp.finfo(dt).max if jnp.issubdtype(dt, jnp.floating) else jnp.iinfo(dt).max, dt),
+}
+
+_COMBINE = {
+    "sum": jnp.add,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+}
+
+_ROWREDUCE = {
+    "sum": functools.partial(jnp.sum, axis=None),
+    "max": functools.partial(jnp.max, axis=None),
+    "min": functools.partial(jnp.min, axis=None),
+}
+
+
+def _reduce_kernel(x_ref, o_ref, *, op):
+    """Fold one row into the running scalar accumulator."""
+    r = pl.program_id(0)
+    part = _ROWREDUCE[op](x_ref[...]).astype(o_ref.dtype)
+
+    @pl.when(r == 0)
+    def _init():
+        o_ref[...] = jnp.full(o_ref.shape, _INITS[op](o_ref.dtype))
+
+    o_ref[...] = _COMBINE[op](o_ref[...], part)
+
+
+def tile_reduce(x, op="sum"):
+    """Reduce a (rows, cols) array to a (1, 1) result with operator ``op``."""
+    rows, cols = x.shape
+    kernel = functools.partial(_reduce_kernel, op=op)
+    out = pl.pallas_call(
+        kernel,
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, cols), lambda r: (r, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda r: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), x.dtype),
+        interpret=True,
+    )(x)
+    return out

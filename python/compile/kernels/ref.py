@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every kernel in this package must
+match its oracle bit-for-bit (integers) or to float tolerance (floats) under
+``interpret=True``.  They are deliberately written with plain jnp primitives
+and no Pallas machinery.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_block_scan(x):
+    """Row-wise inclusive prefix sum of a (rows, cols) array."""
+    return jnp.cumsum(x, axis=1, dtype=x.dtype)
+
+
+def ref_local_scan(x):
+    """Global inclusive prefix sum of a flattened (rows, cols) array.
+
+    This is the oracle for ``model.local_scan``: the rows are consecutive
+    chunks of one virtual processor's data, so the scan carries across rows.
+    """
+    flat = x.reshape(-1)
+    return jnp.cumsum(flat, dtype=x.dtype).reshape(x.shape)
+
+
+def ref_reduce(x, op="sum"):
+    """Full reduction of a (rows, cols) array to a scalar."""
+    if op == "sum":
+        return jnp.sum(x, dtype=x.dtype)
+    if op == "max":
+        return jnp.max(x)
+    if op == "min":
+        return jnp.min(x)
+    raise ValueError(f"unknown reduce op {op!r}")
+
+
+def ref_tile_sort(x):
+    """Row-wise (per-tile) ascending sort of a (tiles, tile_len) array."""
+    return jnp.sort(x, axis=1)

@@ -1,0 +1,69 @@
+"""Block prefix-sum (scan) Pallas kernels.
+
+The computation superstep of the CGM prefix-sum application (thesis §8.4.2)
+is a local inclusive scan of one virtual processor's chunk.  On TPU the
+natural shape is *scan-then-propagate*:
+
+  1. ``block_scan_kernel``  — grid over rows; each row (one VMEM block) is
+     scanned independently and its total is emitted to a sums vector.
+  2. (L2, tiny)             — exclusive scan of the per-row sums.
+  3. ``add_offsets_kernel`` — grid over rows; add each row's carry-in.
+
+Rows are the HBM->VMEM streaming unit (BlockSpec selects one row per grid
+step), so the working set is one row regardless of the total chunk size.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def block_scan_kernel(x_ref, o_ref, sums_ref):
+    """Scan one row; emit the row total.
+
+    x_ref/o_ref: (1, cols) VMEM blocks.  sums_ref: (1,) per-row total.
+    """
+    row = x_ref[...]
+    scanned = jnp.cumsum(row, axis=1, dtype=row.dtype)
+    o_ref[...] = scanned
+    sums_ref[...] = scanned[:, -1]
+
+
+def add_offsets_kernel(x_ref, carry_ref, o_ref):
+    """Add a scalar carry-in to one row."""
+    o_ref[...] = x_ref[...] + carry_ref[...]
+
+
+def block_scan(x):
+    """Row-wise inclusive scan + per-row totals of a (rows, cols) array."""
+    rows, cols = x.shape
+    return pl.pallas_call(
+        block_scan_kernel,
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, cols), lambda r: (r, 0))],
+        out_specs=[
+            pl.BlockSpec((1, cols), lambda r: (r, 0)),
+            pl.BlockSpec((1,), lambda r: (r,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, cols), x.dtype),
+            jax.ShapeDtypeStruct((rows,), x.dtype),
+        ],
+        interpret=True,
+    )(x)
+
+
+def add_offsets(x, carries):
+    """Add ``carries[r]`` to every element of row ``r``."""
+    rows, cols = x.shape
+    return pl.pallas_call(
+        add_offsets_kernel,
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, cols), lambda r: (r, 0)),
+            pl.BlockSpec((1,), lambda r: (r,)),
+        ],
+        out_specs=pl.BlockSpec((1, cols), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        interpret=True,
+    )(x, carries)

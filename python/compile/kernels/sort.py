@@ -1,0 +1,67 @@
+"""Bitonic tile-sort Pallas kernel.
+
+The computation superstep of PSRS (thesis Alg. 8.3.1 line 1) is a local
+sort of each virtual processor's chunk.  A bitonic network is the natural
+TPU formulation: a fixed, data-independent sequence of vectorized
+compare-exchanges — pure VPU work, no data-dependent control flow, no
+gathers beyond a power-of-two shuffle.
+
+Each grid step sorts one tile (one VMEM block row) of power-of-two length.
+The Rust coordinator (L3) merges sorted tiles; merging is branchy/serial
+and belongs on the scalar side, exactly the split the thesis uses between
+"computation superstep" and coordination.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compare_exchange(x, j, k):
+    """One bitonic stage over the last axis (vectorized).
+
+    Lane ``i`` pairs with lane ``i ^ j``; the pair sorts ascending iff
+    ``i & k == 0``.  Implemented as a reshape-free partner gather so it
+    vectorizes to VPU selects.
+    """
+    n = x.shape[-1]
+    i = jnp.arange(n, dtype=jnp.int32)
+    partner = i ^ j
+    px = jnp.take(x, partner, axis=-1)
+    ascending = (i & k) == 0
+    keep_small = (i < partner) == ascending
+    small = jnp.minimum(x, px)
+    large = jnp.maximum(x, px)
+    return jnp.where(keep_small, small, large)
+
+
+def bitonic_sort_1d(x):
+    """Sort the last axis (power-of-two length) ascending."""
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, f"bitonic length must be a power of two, got {n}"
+    log_n = n.bit_length() - 1
+    # The network is static: unroll at trace time (log^2 n stages).
+    for kk in range(1, log_n + 1):
+        k = 1 << kk
+        for jj in range(kk - 1, -1, -1):
+            j = 1 << jj
+            x = _compare_exchange(x, j, k)
+    return x
+
+
+def tile_sort_kernel(x_ref, o_ref):
+    """Sort one (1, tile_len) VMEM block ascending."""
+    o_ref[...] = bitonic_sort_1d(x_ref[...])
+
+
+def tile_sort(x):
+    """Row-wise ascending sort of a (tiles, tile_len) array (pow-2 cols)."""
+    tiles, tile_len = x.shape
+    return pl.pallas_call(
+        tile_sort_kernel,
+        grid=(tiles,),
+        in_specs=[pl.BlockSpec((1, tile_len), lambda t: (t, 0))],
+        out_specs=pl.BlockSpec((1, tile_len), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,61 @@
+"""Layer-2 JAX compute graphs for PEMS2 computation supersteps.
+
+Each function here is what one *virtual processor* computes between
+superstep barriers.  They compose the Layer-1 Pallas kernels and are
+AOT-lowered by ``aot.py`` to HLO text, which the Rust coordinator loads via
+PJRT and invokes on the request path (Python never runs at simulation time).
+
+Shapes are fixed at lowering time; the Rust side chunks/pads VP data to the
+exported shape (recorded in the artifact manifest).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import scan as scan_k
+from .kernels import reduce as reduce_k
+from .kernels import sort as sort_k
+
+
+def local_scan(x):
+    """Inclusive prefix sum over a VP chunk laid out as (rows, cols).
+
+    Scan-then-propagate: Pallas per-row scan, tiny jnp carry scan, Pallas
+    carry add.  The carry scan is O(rows) work — negligible, and XLA fuses
+    it between the two pallas calls.
+    """
+    scanned, row_sums = scan_k.block_scan(x)
+    carries = jnp.cumsum(row_sums, dtype=x.dtype) - row_sums  # exclusive
+    return scan_k.add_offsets(scanned, carries)
+
+
+def local_reduce_sum(x):
+    """Sum-reduce a VP chunk (rows, cols) to a (1, 1) scalar."""
+    return reduce_k.tile_reduce(x, op="sum")
+
+
+def local_reduce_max(x):
+    """Max-reduce a VP chunk (rows, cols) to a (1, 1) scalar."""
+    return reduce_k.tile_reduce(x, op="max")
+
+
+def local_reduce_min(x):
+    """Min-reduce a VP chunk (rows, cols) to a (1, 1) scalar."""
+    return reduce_k.tile_reduce(x, op="min")
+
+
+def local_tile_sort(x):
+    """Sort each row (tile) of a VP chunk ascending (bitonic, pow-2 cols).
+
+    L3 merges the sorted tiles into the VP's fully sorted run.
+    """
+    return sort_k.tile_sort(x)
+
+
+#: name -> (fn, n_outputs).  aot.py exports each of these.
+EXPORTS = {
+    "scan": (local_scan, 1),
+    "reduce_sum": (local_reduce_sum, 1),
+    "reduce_max": (local_reduce_max, 1),
+    "reduce_min": (local_reduce_min, 1),
+    "sort": (local_tile_sort, 1),
+}

@@ -1,0 +1,141 @@
+"""Kernel-vs-oracle correctness: the CORE signal for Layer 1.
+
+Hypothesis sweeps shapes/dtypes/value ranges; every Pallas kernel
+(interpret=True) must match the pure-jnp oracle in ``kernels/ref.py``.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels import scan as scan_k
+from compile.kernels import reduce as reduce_k
+from compile.kernels import sort as sort_k
+from compile import model
+
+# Interpret-mode Pallas is slow; keep hypothesis example counts modest but
+# meaningful, and deadline off (JIT warmup spikes).
+SET = settings(max_examples=20, deadline=None)
+
+dims = st.tuples(st.integers(1, 8), st.integers(1, 64))
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    if dtype == np.float32:
+        return rng.standard_normal(shape, dtype=np.float32)
+    return rng.integers(-1000, 1000, size=shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------- scan ----
+
+
+@SET
+@given(dims=dims, seed=st.integers(0, 2**31 - 1))
+def test_block_scan_f32_matches_ref(dims, seed):
+    x = _rand(dims, np.float32, seed)
+    got, sums = scan_k.block_scan(jnp.asarray(x))
+    want = ref.ref_block_scan(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(sums), np.asarray(want[:, -1]), rtol=1e-5
+    )
+
+
+@SET
+@given(dims=dims, seed=st.integers(0, 2**31 - 1))
+def test_block_scan_i32_exact(dims, seed):
+    x = _rand(dims, np.int32, seed)
+    got, sums = scan_k.block_scan(jnp.asarray(x))
+    want = ref.ref_block_scan(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(sums), np.asarray(want[:, -1]))
+
+
+@SET
+@given(dims=dims, seed=st.integers(0, 2**31 - 1))
+def test_local_scan_carries_across_rows_i32(dims, seed):
+    x = _rand(dims, np.int32, seed)
+    got = model.local_scan(jnp.asarray(x))
+    want = ref.ref_local_scan(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_local_scan_f32_large_chunk():
+    x = _rand((64, 1024), np.float32, 7)
+    got = model.local_scan(jnp.asarray(x))
+    want = ref.ref_local_scan(jnp.asarray(x))
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3
+    )
+
+
+# -------------------------------------------------------------- reduce ----
+
+
+@SET
+@given(dims=dims, seed=st.integers(0, 2**31 - 1), op=st.sampled_from(["sum", "max", "min"]))
+def test_tile_reduce_i32_exact(dims, seed, op):
+    x = _rand(dims, np.int32, seed)
+    got = reduce_k.tile_reduce(jnp.asarray(x), op=op)
+    want = ref.ref_reduce(jnp.asarray(x), op=op)
+    assert np.asarray(got).reshape(()) == np.asarray(want)
+
+
+@SET
+@given(dims=dims, seed=st.integers(0, 2**31 - 1))
+def test_tile_reduce_sum_f32(dims, seed):
+    x = _rand(dims, np.float32, seed)
+    got = reduce_k.tile_reduce(jnp.asarray(x), op="sum")
+    want = ref.ref_reduce(jnp.asarray(x), op="sum")
+    np.testing.assert_allclose(
+        np.asarray(got).reshape(()), np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------- sort ----
+
+
+@SET
+@given(
+    tiles=st.integers(1, 6),
+    log_len=st.integers(0, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tile_sort_i32_matches_ref(tiles, log_len, seed):
+    x = _rand((tiles, 1 << log_len), np.int32, seed)
+    got = sort_k.tile_sort(jnp.asarray(x))
+    want = ref.ref_tile_sort(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@SET
+@given(log_len=st.integers(0, 9), seed=st.integers(0, 2**31 - 1))
+def test_tile_sort_f32_matches_ref(log_len, seed):
+    x = _rand((2, 1 << log_len), np.float32, seed)
+    got = sort_k.tile_sort(jnp.asarray(x))
+    want = ref.ref_tile_sort(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_tile_sort_is_permutation():
+    x = _rand((4, 256), np.int32, 3)
+    got = np.asarray(sort_k.tile_sort(jnp.asarray(x)))
+    for r in range(4):
+        assert sorted(x[r].tolist()) == got[r].tolist()
+
+
+def test_tile_sort_rejects_non_pow2():
+    with pytest.raises(AssertionError):
+        sort_k.bitonic_sort_1d(jnp.zeros((1, 3), jnp.int32))
+
+
+def test_sort_with_duplicates_and_extremes():
+    x = np.array(
+        [[2**31 - 1, -(2**31), 0, 0, 5, 5, -1, 1]], dtype=np.int32
+    )
+    got = np.asarray(sort_k.tile_sort(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, np.sort(x, axis=1))

@@ -1,0 +1,101 @@
+//! PEMS1 bump-pointer allocator (§2.1, Fig. 2.1).
+
+use super::{ContextAlloc, ALLOC_ALIGN};
+use crate::error::{Error, Result};
+use crate::util::align::align_up;
+
+/// Append-only allocator: a single end pointer, no free.
+///
+/// This is PEMS1's scheme; "memory consumption will continue to increase
+/// until available space is exhausted" (§2.3.4).  Swapping always covers
+/// the whole allocated prefix `[0, end)`.
+#[derive(Debug)]
+pub struct BumpAlloc {
+    mu: u64,
+    end: u64,
+}
+
+impl BumpAlloc {
+    /// New empty bump allocator over `[0, mu)`.
+    pub fn new(mu: u64) -> Self {
+        BumpAlloc { mu, end: 0 }
+    }
+}
+
+impl ContextAlloc for BumpAlloc {
+    fn alloc(&mut self, size: u64) -> Result<u64> {
+        if size == 0 {
+            return Err(Error::alloc("zero-size allocation"));
+        }
+        let off = self.end;
+        let new_end = align_up(off + size, ALLOC_ALIGN);
+        if new_end > self.mu {
+            return Err(Error::alloc(format!(
+                "bump allocator exhausted: want {size} at {off}, mu={}",
+                self.mu
+            )));
+        }
+        self.end = new_end;
+        Ok(off)
+    }
+
+    fn free(&mut self, _off: u64) -> Result<()> {
+        // PEMS1: freeing is not possible; accept and ignore (the thesis
+        // notes programs "leak" under PEMS1 — we keep that behaviour
+        // observable via allocated_bytes()).
+        Ok(())
+    }
+
+    fn allocated_regions(&self) -> Vec<(u64, u64)> {
+        if self.end == 0 {
+            Vec::new()
+        } else {
+            vec![(0, self.end)]
+        }
+    }
+
+    fn allocated_bytes(&self) -> u64 {
+        self.end
+    }
+
+    fn capacity(&self) -> u64 {
+        self.mu
+    }
+
+    fn reset(&mut self) {
+        self.end = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn free_does_not_reclaim() {
+        let mut a = BumpAlloc::new(1024);
+        let x = a.alloc(512).unwrap();
+        a.free(x).unwrap();
+        // Still exhausted by the next big allocation: PEMS1 semantics.
+        assert!(a.alloc(768).is_err());
+        assert_eq!(a.allocated_bytes(), 512);
+    }
+
+    #[test]
+    fn whole_prefix_is_one_region() {
+        let mut a = BumpAlloc::new(4096);
+        a.alloc(100).unwrap();
+        a.alloc(100).unwrap();
+        // 100 -> 112 (aligned), second at 112 ends 212 -> 224 aligned.
+        assert_eq!(a.allocated_regions(), vec![(0, 224)]);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut a = BumpAlloc::new(1024);
+        a.alloc(100).unwrap();
+        a.reset();
+        assert_eq!(a.allocated_bytes(), 0);
+        assert!(a.alloc(1024).is_ok());
+    }
+}

@@ -1,0 +1,208 @@
+//! PEMS2 free-list allocator (§6.6, Figs. 6.4/6.5).
+//!
+//! Allocation records (offset, size) live in an ordered map ("a simple
+//! balanced binary search tree" in the thesis — `BTreeMap` here).  The
+//! allocation algorithm is first-fit from the lowest address; deallocation
+//! merges with adjacent free chunks.  The payoff over [`super::BumpAlloc`]
+//! is (a) reuse of freed memory and (b) swap I/O restricted to currently
+//! allocated regions.
+
+use super::{ContextAlloc, ALLOC_ALIGN};
+use crate::error::{Error, Result};
+use crate::util::align::align_up;
+use std::collections::BTreeMap;
+
+/// First-fit free-list allocator with coalescing.
+#[derive(Debug)]
+pub struct FreeListAlloc {
+    mu: u64,
+    /// offset -> padded length of live allocations.
+    allocated: BTreeMap<u64, u64>,
+    /// offset -> length of free chunks (coalesced, never adjacent).
+    free: BTreeMap<u64, u64>,
+    allocated_bytes: u64,
+}
+
+impl FreeListAlloc {
+    /// New empty allocator over `[0, mu)`.
+    pub fn new(mu: u64) -> Self {
+        let mut free = BTreeMap::new();
+        if mu > 0 {
+            free.insert(0, mu);
+        }
+        FreeListAlloc { mu, allocated: BTreeMap::new(), free, allocated_bytes: 0 }
+    }
+
+    /// Number of free fragments (fragmentation diagnostic).
+    pub fn free_fragments(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Largest allocatable size right now.
+    pub fn largest_free(&self) -> u64 {
+        self.free.values().copied().max().unwrap_or(0)
+    }
+}
+
+impl ContextAlloc for FreeListAlloc {
+    fn alloc(&mut self, size: u64) -> Result<u64> {
+        if size == 0 {
+            return Err(Error::alloc("zero-size allocation"));
+        }
+        let padded = align_up(size, ALLOC_ALIGN);
+        // First fit: search from the lowest address (§6.6).
+        let hit = self
+            .free
+            .iter()
+            .find(|&(_, &len)| len >= padded)
+            .map(|(&off, &len)| (off, len));
+        let (off, len) = hit.ok_or_else(|| {
+            Error::alloc(format!(
+                "out of context memory: want {padded} B, largest free {} B, mu {}",
+                self.largest_free(),
+                self.mu
+            ))
+        })?;
+        // Split the start of the chunk.
+        self.free.remove(&off);
+        if len > padded {
+            self.free.insert(off + padded, len - padded);
+        }
+        self.allocated.insert(off, padded);
+        self.allocated_bytes += padded;
+        Ok(off)
+    }
+
+    fn free(&mut self, off: u64) -> Result<()> {
+        let len = self
+            .allocated
+            .remove(&off)
+            .ok_or_else(|| Error::alloc(format!("free of unallocated offset {off}")))?;
+        self.allocated_bytes -= len;
+        // Merge with the next free chunk if adjacent.
+        let mut start = off;
+        let mut total = len;
+        if let Some(&next_len) = self.free.get(&(off + len)) {
+            self.free.remove(&(off + len));
+            total += next_len;
+        }
+        // Merge with the previous free chunk if adjacent.
+        if let Some((&prev_off, &prev_len)) = self.free.range(..off).next_back() {
+            if prev_off + prev_len == off {
+                self.free.remove(&prev_off);
+                start = prev_off;
+                total += prev_len;
+            }
+        }
+        self.free.insert(start, total);
+        Ok(())
+    }
+
+    fn allocated_regions(&self) -> Vec<(u64, u64)> {
+        // Coalesce adjacent live allocations so swap I/O is maximal-extent.
+        let mut out: Vec<(u64, u64)> = Vec::new();
+        for (&off, &len) in &self.allocated {
+            if let Some(last) = out.last_mut() {
+                if last.0 + last.1 == off {
+                    last.1 += len;
+                    continue;
+                }
+            }
+            out.push((off, len));
+        }
+        out
+    }
+
+    fn allocated_bytes(&self) -> u64 {
+        self.allocated_bytes
+    }
+
+    fn capacity(&self) -> u64 {
+        self.mu
+    }
+
+    fn reset(&mut self) {
+        self.allocated.clear();
+        self.free.clear();
+        if self.mu > 0 {
+            self.free.insert(0, self.mu);
+        }
+        self.allocated_bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn free_then_realloc_reuses_lowest() {
+        let mut a = FreeListAlloc::new(4096);
+        let x = a.alloc(512).unwrap();
+        let _y = a.alloc(512).unwrap();
+        a.free(x).unwrap();
+        let z = a.alloc(256).unwrap();
+        assert_eq!(z, x, "first-fit should reuse the lowest freed chunk");
+    }
+
+    #[test]
+    fn double_free_errors() {
+        let mut a = FreeListAlloc::new(1024);
+        let x = a.alloc(64).unwrap();
+        a.free(x).unwrap();
+        assert!(a.free(x).is_err());
+    }
+
+    #[test]
+    fn free_unknown_offset_errors() {
+        let mut a = FreeListAlloc::new(1024);
+        assert!(a.free(128).is_err());
+    }
+
+    #[test]
+    fn coalescing_merges_three_way() {
+        let mut a = FreeListAlloc::new(4096);
+        let x = a.alloc(1024).unwrap();
+        let y = a.alloc(1024).unwrap();
+        let z = a.alloc(1024).unwrap();
+        // Free outer two, then middle: all three must coalesce.
+        a.free(x).unwrap();
+        a.free(z).unwrap();
+        // x-hole + (z-hole merged with the tail chunk) = 2 fragments.
+        assert_eq!(a.free_fragments(), 2);
+        a.free(y).unwrap();
+        assert_eq!(a.free_fragments(), 1);
+        assert_eq!(a.largest_free(), 4096);
+    }
+
+    #[test]
+    fn allocated_regions_coalesce_adjacent() {
+        let mut a = FreeListAlloc::new(4096);
+        a.alloc(512).unwrap();
+        a.alloc(512).unwrap();
+        assert_eq!(a.allocated_regions(), vec![(0, 1024)]);
+    }
+
+    #[test]
+    fn regions_reflect_holes() {
+        let mut a = FreeListAlloc::new(4096);
+        let _x = a.alloc(512).unwrap();
+        let y = a.alloc(512).unwrap();
+        let _z = a.alloc(512).unwrap();
+        a.free(y).unwrap();
+        let regions = a.allocated_regions();
+        assert_eq!(regions, vec![(0, 512), (1024, 512)]);
+    }
+
+    #[test]
+    fn swap_volume_shrinks_after_free() {
+        // The §6.6 point: allocated_bytes (= swap volume) drops on free.
+        let mut a = FreeListAlloc::new(1 << 20);
+        let offs: Vec<u64> = (0..16).map(|_| a.alloc(4096).unwrap()).collect();
+        assert_eq!(a.allocated_bytes(), 16 * 4096);
+        for &o in offs.iter().take(8) {
+            a.free(o).unwrap();
+        }
+        assert_eq!(a.allocated_bytes(), 8 * 4096);
+    }
+}

@@ -1,0 +1,299 @@
+//! MPI-like user API (thesis Appendix D, Fig. D.1).
+//!
+//! PEMS2's selling point is that MPI programs compile against it
+//! unmodified.  Rust has no MPI heritage to mimic syntactically, so this
+//! layer provides the same *surface*: a [`Comm`] wrapper over a [`Vp`]
+//! whose methods mirror the Fig. D.1 function set with typed buffers
+//! ([`VpMem<T>`] handles instead of raw pointers).  `malloc`/`realloc`/
+//! `free` interception maps to [`Comm::malloc`]/[`Comm::free`] serving
+//! from the VP context, exactly as the thesis describes.
+//!
+//! Supported set (Fig. D.1): Allgather(v), Allreduce, Alltoall(v), Bcast,
+//! Gather(v), Reduce, Scatter, Barrier, Wtime, plus rank/size queries
+//! (Comm_rank/Comm_size) and Init/Finalize analogues (engine-managed).
+
+use crate::comm::{self, Region};
+use crate::error::{Error, Result};
+use crate::util::bytes::Pod;
+use crate::vp::{Vp, VpMem};
+
+/// MPI-like communicator handle wrapping a virtual processor.
+pub struct Comm<'a> {
+    vp: &'a mut Vp,
+}
+
+impl<'a> Comm<'a> {
+    /// Wrap a VP handle.
+    pub fn new(vp: &'a mut Vp) -> Comm<'a> {
+        Comm { vp }
+    }
+
+    /// Underlying VP.
+    pub fn vp(&mut self) -> &mut Vp {
+        self.vp
+    }
+
+    // ------------------------------------------------------------ queries
+
+    /// MPI_Comm_rank.
+    pub fn rank(&self) -> usize {
+        self.vp.rank()
+    }
+
+    /// MPI_Comm_size (the number of *virtual* processors).
+    pub fn size(&self) -> usize {
+        self.vp.nranks()
+    }
+
+    /// MPI_Wtime.
+    pub fn wtime() -> f64 {
+        use std::time::{SystemTime, UNIX_EPOCH};
+        SystemTime::now().duration_since(UNIX_EPOCH).unwrap().as_secs_f64()
+    }
+
+    // ------------------------------------------------------------- memory
+
+    /// malloc interception: allocate from the VP context.
+    pub fn malloc<T: Pod>(&mut self, n: usize) -> Result<VpMem<T>> {
+        self.vp.alloc(n)
+    }
+
+    /// free interception.
+    pub fn free<T: Pod>(&mut self, mem: VpMem<T>) {
+        self.vp.free(mem)
+    }
+
+    /// Typed read access.
+    pub fn slice<T: Pod>(&mut self, mem: VpMem<T>) -> Result<&[T]> {
+        self.vp.slice(mem)
+    }
+
+    /// Typed write access.
+    pub fn slice_mut<T: Pod>(&mut self, mem: VpMem<T>) -> Result<&mut [T]> {
+        self.vp.slice_mut(mem)
+    }
+
+    // -------------------------------------------------------- collectives
+
+    /// MPI_Barrier.
+    pub fn barrier(&mut self) -> Result<()> {
+        comm::barrier(self.vp)
+    }
+
+    /// MPI_Bcast: `buf` is the root's payload and everyone's destination.
+    pub fn bcast<T: Pod>(&mut self, root: usize, buf: VpMem<T>) -> Result<()> {
+        comm::bcast(self.vp, root, buf.region(), buf.region())
+    }
+
+    /// MPI_Gather: fixed-size `send` from every rank into the root's
+    /// `recv` (length `v * send.len()`; ignored elsewhere).
+    pub fn gather<T: Pod>(
+        &mut self,
+        root: usize,
+        send: VpMem<T>,
+        recv: Option<VpMem<T>>,
+    ) -> Result<()> {
+        let r = self.root_region(root, recv, send.len() * self.size())?;
+        comm::gather(self.vp, root, send.region(), r)
+    }
+
+    /// MPI_Gatherv: per-rank send sizes may differ.  Implemented over
+    /// Alltoallv (the thesis treats it as a restricted case).
+    pub fn gatherv<T: Pod>(
+        &mut self,
+        root: usize,
+        send: VpMem<T>,
+        recv: Option<VpMem<T>>,
+        recv_counts: &[usize],
+    ) -> Result<()> {
+        let v = self.size();
+        let me = self.rank();
+        let mut sends: Vec<Region> = vec![(0, 0); v];
+        sends[root] = send.region();
+        let mut recvs: Vec<Region> = vec![(0, 0); v];
+        if me == root {
+            let recv = recv.ok_or_else(|| Error::comm("gatherv: root needs recv"))?;
+            if recv_counts.len() != v {
+                return Err(Error::comm("gatherv: recv_counts must have v entries"));
+            }
+            let mut off = recv.byte_off();
+            for (i, &c) in recv_counts.iter().enumerate() {
+                let bytes = (c * T::SIZE) as u64;
+                recvs[i] = (off, bytes);
+                off += bytes;
+            }
+        }
+        self.vp.alltoallv_regions(&sends, &recvs)
+    }
+
+    /// MPI_Scatter: root's `send` (length `v * recv.len()`) to everyone's
+    /// `recv`.
+    pub fn scatter<T: Pod>(
+        &mut self,
+        root: usize,
+        send: Option<VpMem<T>>,
+        recv: VpMem<T>,
+    ) -> Result<()> {
+        let s = self.root_region(root, send, recv.len() * self.size())?;
+        comm::scatter(self.vp, root, s, recv.region())
+    }
+
+    /// MPI_Reduce with operator `op`.
+    pub fn reduce<T: comm::ReduceElem>(
+        &mut self,
+        root: usize,
+        op: comm::ReduceOp,
+        send: VpMem<T>,
+        recv: Option<VpMem<T>>,
+    ) -> Result<()> {
+        let r = self.root_region(root, recv, send.len())?;
+        comm::reduce::<T>(self.vp, root, op, send.region(), r)
+    }
+
+    /// MPI_Allreduce.
+    pub fn allreduce<T: comm::ReduceElem>(
+        &mut self,
+        op: comm::ReduceOp,
+        send: VpMem<T>,
+        recv: VpMem<T>,
+    ) -> Result<()> {
+        comm::allreduce::<T>(self.vp, op, send.region(), recv.region())
+    }
+
+    /// MPI_Allgather.
+    pub fn allgather<T: Pod>(&mut self, send: VpMem<T>, recv: VpMem<T>) -> Result<()> {
+        if recv.len() < send.len() * self.size() {
+            return Err(Error::comm("allgather: recv too small"));
+        }
+        comm::allgather(self.vp, send.region(), recv.region())
+    }
+
+    /// MPI_Alltoall: uniform message size `send.len() / v` elements.
+    pub fn alltoall<T: Pod>(&mut self, send: VpMem<T>, recv: VpMem<T>) -> Result<()> {
+        let v = self.size();
+        if send.len() % v != 0 || recv.len() % v != 0 {
+            return Err(Error::comm("alltoall: buffer length must be a multiple of v"));
+        }
+        let each = (send.len() / v * T::SIZE) as u64;
+        comm::alltoall_counts(self.vp, send.region(), recv.region(), each)
+    }
+
+    /// MPI_Alltoallv: `send_counts[j]` elements go to rank `j` from
+    /// consecutive positions of `send`; `recv_counts[i]` land from rank
+    /// `i` into consecutive positions of `recv`.
+    pub fn alltoallv<T: Pod>(
+        &mut self,
+        send: VpMem<T>,
+        send_counts: &[usize],
+        recv: VpMem<T>,
+        recv_counts: &[usize],
+    ) -> Result<()> {
+        let v = self.size();
+        if send_counts.len() != v || recv_counts.len() != v {
+            return Err(Error::comm("alltoallv: counts must have v entries"));
+        }
+        if send_counts.iter().sum::<usize>() > send.len()
+            || recv_counts.iter().sum::<usize>() > recv.len()
+        {
+            return Err(Error::comm("alltoallv: counts exceed buffer sizes"));
+        }
+        let mut sends = Vec::with_capacity(v);
+        let mut off = send.byte_off();
+        for &c in send_counts {
+            let b = (c * T::SIZE) as u64;
+            sends.push((off, b));
+            off += b;
+        }
+        let mut recvs = Vec::with_capacity(v);
+        let mut off = recv.byte_off();
+        for &c in recv_counts {
+            let b = (c * T::SIZE) as u64;
+            recvs.push((off, b));
+            off += b;
+        }
+        self.vp.alltoallv_regions(&sends, &recvs)
+    }
+
+    /// MPI_Allgatherv: varying contribution sizes.
+    pub fn allgatherv<T: Pod>(
+        &mut self,
+        send: VpMem<T>,
+        recv: VpMem<T>,
+        counts: &[usize],
+    ) -> Result<()> {
+        let v = self.size();
+        if counts.len() != v {
+            return Err(Error::comm("allgatherv: counts must have v entries"));
+        }
+        // Everyone sends its vector to everyone (restricted Alltoallv).
+        let sends: Vec<Region> = (0..v).map(|_| send.region()).collect();
+        let mut recvs = Vec::with_capacity(v);
+        let mut off = recv.byte_off();
+        for &c in counts {
+            let b = (c * T::SIZE) as u64;
+            recvs.push((off, b));
+            off += b;
+        }
+        self.vp.alltoallv_regions(&sends, &recvs)
+    }
+
+    fn root_region<T: Pod>(
+        &self,
+        root: usize,
+        mem: Option<VpMem<T>>,
+        need: usize,
+    ) -> Result<Region> {
+        if self.rank() == root {
+            let m = mem.ok_or_else(|| Error::comm("root buffer required"))?;
+            if m.len() < need {
+                return Err(Error::comm(format!(
+                    "root buffer too small: {} < {need} elements",
+                    m.len()
+                )));
+            }
+            Ok(m.region())
+        } else {
+            Ok((0, 0))
+        }
+    }
+}
+
+/// The Fig. D.1 function list, for the API-coverage bench/test.
+pub const SUPPORTED_MPI_FUNCTIONS: &[&str] = &[
+    "MPI_Allgather",
+    "MPI_Allgatherv",
+    "MPI_Allreduce",
+    "MPI_Alltoall",
+    "MPI_Alltoallv",
+    "MPI_Bcast",
+    "MPI_Gather",
+    "MPI_Gatherv",
+    "MPI_Reduce",
+    "MPI_Scatter",
+    "MPI_Barrier",
+    "MPI_Wtime",
+    "MPI_Init",
+    "MPI_Finalize",
+    "MPI_Abort",
+    "MPI_Comm_rank",
+    "MPI_Comm_size",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig_d1_list_is_complete() {
+        assert_eq!(SUPPORTED_MPI_FUNCTIONS.len(), 17);
+        assert!(SUPPORTED_MPI_FUNCTIONS.contains(&"MPI_Alltoallv"));
+        assert!(SUPPORTED_MPI_FUNCTIONS.contains(&"MPI_Wtime"));
+    }
+
+    #[test]
+    fn wtime_is_monotonicish() {
+        let a = Comm::wtime();
+        let b = Comm::wtime();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,225 @@
+//! Euler tour of a forest on PEMS (thesis §8.4.3, Figs. 8.21–8.24).
+//!
+//! Every tree edge is doubled into two arcs; the classic successor
+//! function `next((u,v)) = (v, w)` — where `w` follows `u` in `v`'s
+//! circular adjacency order — links all arcs of a tree into one circuit.
+//! Cutting the circuit at each root's first arc turns it into a list, and
+//! *list ranking* (the dominant, communication-heavy phase, run on PEMS)
+//! yields each arc's tour position.
+//!
+//! As in CGMLib, the tour construction uses sorting + list ranking
+//! utilities; the adjacency/successor construction here is done by the
+//! driver (it is O(n) scan work), while the list ranking runs distributed.
+
+use crate::apps::list_ranking::{self, NIL};
+use crate::config::SimConfig;
+use crate::engine::{run_arc, RunReport};
+use crate::error::{Error, Result};
+use crate::util::XorShift64;
+use crate::vp::Vp;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A forest as a parent array: `parent[i] == i` marks a root.
+#[derive(Debug, Clone)]
+pub struct Forest {
+    /// Parent of each node (self for roots).
+    pub parent: Vec<usize>,
+}
+
+/// Outcome of an Euler-tour run.
+#[derive(Debug)]
+pub struct EulerTourResult {
+    /// Engine report (of the list-ranking phase).
+    pub report: RunReport,
+    /// Verified: every tree's tour is a valid Euler circuit.
+    pub verified: bool,
+    /// Number of arcs ranked.
+    pub arcs: u64,
+}
+
+/// Generate a random forest: `trees` trees of `nodes_per_tree` nodes each
+/// (random attachment, like the thesis' n trees of n² nodes shape).
+pub fn random_forest(trees: usize, nodes_per_tree: usize, seed: u64) -> Forest {
+    let mut rng = XorShift64::new(seed);
+    let total = trees * nodes_per_tree;
+    let mut parent = vec![0usize; total];
+    for t in 0..trees {
+        let base = t * nodes_per_tree;
+        parent[base] = base; // root
+        for i in 1..nodes_per_tree {
+            parent[base + i] = base + rng.range(0, i); // attach to earlier node
+        }
+    }
+    Forest { parent }
+}
+
+/// Build the doubled-arc list and its Euler-tour successor array.
+///
+/// Arc `2e` is (child -> parent) and `2e+1` is (parent -> child) for tree
+/// edge `e` (node i>root has edge to parent[i]).  Returns (succ, arc
+/// endpoints (from, to)).  The circuit is cut at each root's first
+/// outgoing arc, making each tree's tour a NIL-terminated list.
+pub fn build_successor(forest: &Forest) -> (Vec<u64>, Vec<(usize, usize)>) {
+    let n = forest.parent.len();
+    // Edges: (i, parent[i]) for non-roots; arc ids as documented.
+    let mut edge_of_node: Vec<Option<usize>> = vec![None; n];
+    let mut edges = Vec::new();
+    for i in 0..n {
+        if forest.parent[i] != i {
+            edge_of_node[i] = Some(edges.len());
+            edges.push((i, forest.parent[i]));
+        }
+    }
+    let m = edges.len();
+    let mut arcs = Vec::with_capacity(2 * m);
+    for &(c, p) in &edges {
+        arcs.push((c, p)); // 2e: up-arc
+        arcs.push((p, c)); // 2e+1: down-arc
+    }
+    // Adjacency: for each node, its incident arcs *leaving* it, in a fixed
+    // circular order.
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (a, &(from, _to)) in arcs.iter().enumerate() {
+        adj[from].push(a);
+    }
+    // Position of each arc within adj[from] for O(1) "next around" lookup:
+    // succ of arc (u,v) is the arc after (v,u) in adj[v]'s circular order.
+    let mut pos_in_adj = vec![0usize; 2 * m];
+    for (node, list) in adj.iter().enumerate() {
+        let _ = node;
+        for (i, &a) in list.iter().enumerate() {
+            pos_in_adj[a] = i;
+        }
+    }
+    let twin = |a: usize| -> usize { a ^ 1 };
+    let mut succ = vec![NIL; 2 * m];
+    for a in 0..2 * m {
+        let (_, v) = arcs[a];
+        let t = twin(a); // arc (v, u)
+        let list = &adj[v];
+        let next = list[(pos_in_adj[t] + 1) % list.len()];
+        succ[a] = next as u64;
+    }
+    // Cut each tree's circuit at the root's first outgoing arc so list
+    // ranking terminates.
+    for (node, list) in adj.iter().enumerate() {
+        if forest.parent[node] == node && !list.is_empty() {
+            let first = list[0];
+            // Find the arc whose successor is `first` and cut it.
+            // first = succ of the arc entering the root just before it:
+            // that is the twin of first's predecessor around the root...
+            // Simpler: scan arcs into `node` and cut the one pointing at
+            // `first`.
+            for &a in list {
+                let t = twin(a); // arc entering the root
+                if succ[t] == first as u64 {
+                    succ[t] = NIL;
+                }
+            }
+        }
+    }
+    (succ, arcs)
+}
+
+/// Sequential tour oracle: follow `succ` from each tree's head arc; the
+/// tour is valid iff every arc is visited exactly once per tree.
+pub fn verify_tour(succ: &[u64], ranks: &[u64]) -> bool {
+    // ranks[a] = distance to tail.  Along any list, rank must decrease by
+    // exactly 1 per hop, and every non-tail arc's successor exists.
+    for (a, &s) in succ.iter().enumerate() {
+        if s == NIL {
+            if ranks[a] != 0 {
+                return false;
+            }
+        } else if ranks[a] != ranks[s as usize] + 1 {
+            return false;
+        }
+    }
+    true
+}
+
+/// Run the Euler tour: build arcs + successor centrally, rank the arc
+/// list on PEMS, verify.
+pub fn run_euler_tour(
+    cfg: SimConfig,
+    trees: usize,
+    nodes_per_tree: usize,
+    verify: bool,
+) -> Result<EulerTourResult> {
+    let forest = random_forest(trees, nodes_per_tree, cfg.seed);
+    let (succ, _arcs) = build_successor(&forest);
+    let arcs = succ.len() as u64;
+    if arcs == 0 {
+        return Err(Error::config("euler tour: empty forest"));
+    }
+    if list_ranking::required_mu(arcs, cfg.v) > cfg.mu {
+        return Err(Error::config(format!(
+            "euler tour needs mu >= {} B (configured {})",
+            list_ranking::required_mu(arcs, cfg.v),
+            cfg.mu
+        )));
+    }
+    let succ = Arc::new(succ);
+    let succ2 = succ.clone();
+    let ok = Arc::new(AtomicBool::new(true));
+    let _ok2 = ok.clone();
+    let ranks_shared = Arc::new(std::sync::Mutex::new(vec![0u64; succ.len()]));
+    let ranks2 = ranks_shared.clone();
+    let report = run_arc(
+        cfg,
+        Arc::new(move |vp: &mut Vp| {
+            let ranks = list_ranking::list_rank_vp(vp, &succ2)?;
+            let (start, _) = list_ranking::slice_of(succ2.len() as u64, vp.nranks(), vp.rank());
+            let mut all = ranks2.lock().unwrap();
+            for (i, &r) in ranks.iter().enumerate() {
+                all[start as usize + i] = r;
+            }
+            Ok(())
+        }),
+    )?;
+    if verify && !verify_tour(&succ, &ranks_shared.lock().unwrap()) {
+        ok.store(false, Ordering::SeqCst);
+    }
+    Ok(EulerTourResult { report, verified: ok.load(Ordering::SeqCst), arcs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn successor_covers_all_arcs_once() {
+        let f = random_forest(2, 8, 3);
+        let (succ, arcs) = build_successor(&f);
+        assert_eq!(succ.len(), arcs.len());
+        assert_eq!(arcs.len(), 2 * (2 * 8 - 2)); // 2 trees x (n-1) edges x 2
+        // Each tree's list: one NIL per tree; all arcs reachable.
+        let nil_count = succ.iter().filter(|&&s| s == NIL).count();
+        assert_eq!(nil_count, 2);
+        let ranks = crate::apps::list_ranking::rank_oracle(&succ);
+        assert!(verify_tour(&succ, &ranks));
+    }
+
+    #[test]
+    fn single_path_tree_tour() {
+        // Path 0 - 1 - 2 (root 0): tour must traverse 4 arcs.
+        let f = Forest { parent: vec![0, 0, 1] };
+        let (succ, _) = build_successor(&f);
+        let ranks = crate::apps::list_ranking::rank_oracle(&succ);
+        assert!(verify_tour(&succ, &ranks));
+        // One complete circuit of length 4: ranks are {0,1,2,3}.
+        let mut r = ranks.clone();
+        r.sort_unstable();
+        assert_eq!(r, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn verify_tour_rejects_bad_ranks() {
+        let f = Forest { parent: vec![0, 0] };
+        let (succ, _) = build_successor(&f);
+        let mut ranks = crate::apps::list_ranking::rank_oracle(&succ);
+        ranks[0] = ranks[0].wrapping_add(5);
+        assert!(!verify_tour(&succ, &ranks));
+    }
+}

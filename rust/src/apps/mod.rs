@@ -1,0 +1,27 @@
+//! BSP applications running on PEMS (thesis Ch. 8).
+//!
+//! * [`psrs`] — Parallel Sorting by Regular Sampling (Alg. 8.3.1), the
+//!   main benchmark of §8.3.
+//! * [`cgm_sort`] — the CGMLib-style deterministic sample sort (§8.4.1),
+//!   with the higher memory constant the thesis discusses.
+//! * [`prefix_sum`] — CGM prefix sum (§8.4.2); computation supersteps can
+//!   run on the XLA scan kernel.
+//! * [`list_ranking`] — pointer-jumping CGM list ranking (a CGMLib
+//!   utility used by the Euler tour).
+//! * [`euler_tour`] — Euler tour of a forest (§8.4.3) via successor
+//!   construction + list ranking.
+//!
+//! Each app is an SPMD function over a [`crate::vp::Vp`] plus a driver
+//! that generates the workload, runs the engine, and verifies the result.
+
+pub mod cgm_sort;
+pub mod euler_tour;
+pub mod list_ranking;
+pub mod prefix_sum;
+pub mod psrs;
+
+pub use cgm_sort::run_cgm_sort;
+pub use euler_tour::run_euler_tour;
+pub use list_ranking::run_list_ranking;
+pub use prefix_sum::run_prefix_sum;
+pub use psrs::run_psrs;

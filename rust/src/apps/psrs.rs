@@ -1,0 +1,318 @@
+//! Parallel Sorting by Regular Sampling on PEMS (thesis Alg. 8.3.1, §8.3).
+//!
+//! The thesis' main benchmark: four communication supersteps (gather
+//! splitter samples, bcast global splitters, alltoall bucket counts,
+//! alltoallv buckets), with coarse granularity — the ideal PEMS workload.
+//! The local sort (computation superstep) runs on the XLA bitonic
+//! tile-sort kernel when `cfg.use_xla` and artifacts are present.
+
+use crate::config::SimConfig;
+use crate::engine::{run_arc, RunReport};
+use crate::error::{Error, Result};
+use crate::util::XorShift64;
+use crate::vp::Vp;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Outcome of a PSRS run.
+#[derive(Debug)]
+pub struct PsrsResult {
+    /// Engine report (wall time, I/O counters, charged time).
+    pub report: RunReport,
+    /// Whether global sortedness + element conservation verified.
+    pub verified: bool,
+    /// Total elements sorted.
+    pub n: u64,
+}
+
+/// Per-VP chunk length for a total of `n` elements over `v` VPs.
+pub fn chunk_len(n: u64, v: usize, rank: usize) -> usize {
+    let base = (n / v as u64) as usize;
+    let rem = (n % v as u64) as usize;
+    base + usize::from(rank < rem)
+}
+
+/// Context bytes PSRS needs per VP for `n` elements over `v` VPs
+/// (data + samples + splitters + counts + receive + merge buffers).
+pub fn required_mu(n: u64, v: usize) -> u64 {
+    let chunk = (n / v as u64) + 1;
+    let cap = 2 * chunk + 4 * v as u64 + 64;
+    // data + recv + out (u32) + counts/samples/splitters + root samples.
+    4 * (chunk + 2 * cap) + 4 * (4 * v as u64) + 4 * (v * v) as u64 + 4096
+}
+
+/// Run PSRS over `n` random u32 keys.  `verify` adds checksum/sortedness
+/// supersteps (off for timing runs to keep the paper's superstep count).
+pub fn run_psrs(cfg: SimConfig, n: u64, verify: bool) -> Result<PsrsResult> {
+    let v = cfg.v;
+    if required_mu(n, v) > cfg.mu {
+        return Err(Error::config(format!(
+            "PSRS needs mu >= {} B for n={n}, v={v} (configured {})",
+            required_mu(n, v),
+            cfg.mu
+        )));
+    }
+    let ok = Arc::new(AtomicBool::new(true));
+    let sum_in = Arc::new(AtomicU64::new(0));
+    let sum_out = Arc::new(AtomicU64::new(0));
+    let count_out = Arc::new(AtomicU64::new(0));
+    let seed = cfg.seed;
+    let ok2 = ok.clone();
+    let sum_in2 = sum_in.clone();
+    let sum_out2 = sum_out.clone();
+    let count_out2 = count_out.clone();
+
+    let program = move |vp: &mut Vp| -> Result<()> {
+        psrs_vp(vp, n, seed, verify, &ok2, &sum_in2, &sum_out2, &count_out2)
+    };
+    let report = run_arc(cfg, Arc::new(program))?;
+
+    let verified = if verify {
+        ok.load(Ordering::SeqCst)
+            && sum_in.load(Ordering::SeqCst) == sum_out.load(Ordering::SeqCst)
+            && count_out.load(Ordering::SeqCst) == n
+    } else {
+        true
+    };
+    Ok(PsrsResult { report, verified, n })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn psrs_vp(
+    vp: &mut Vp,
+    n: u64,
+    seed: u64,
+    verify: bool,
+    ok: &AtomicBool,
+    sum_in: &AtomicU64,
+    sum_out: &AtomicU64,
+    count_out: &AtomicU64,
+) -> Result<()> {
+    let v = vp.nranks();
+    let me = vp.rank();
+    let chunk = chunk_len(n, v, me);
+    let cap = 2 * (n / v as u64) as usize + 4 * v + 64;
+
+    // ---- Allocation ----
+    // Buffers are allocated as late as possible and freed as early as
+    // possible: with the PEMS2 allocator, swap I/O touches only live
+    // regions (§6.6), so the splitter supersteps swap ~1× the chunk
+    // instead of 5×.  (Under the PEMS1 bump allocator this makes no
+    // difference — freeing is a no-op — which is part of the measured
+    // PEMS1/PEMS2 gap.)
+    let data = vp.alloc_uninit::<u32>(chunk.max(1))?;
+    let samples = vp.alloc::<u32>(v)?;
+    let all_samples = if me == 0 { Some(vp.alloc::<u32>(v * v)?) } else { None };
+    let splitters = vp.alloc::<u32>(v)?; // v-1 used
+    let send_counts = vp.alloc::<u32>(v)?;
+    let recv_counts = vp.alloc::<u32>(v)?;
+
+    // ---- Generate workload ----
+    {
+        let mut rng = XorShift64::new(seed ^ (me as u64).wrapping_mul(0x9E37_79B9));
+        let d = vp.slice_mut(data)?;
+        rng.fill_u32(d);
+        if verify {
+            let s: u64 = d.iter().map(|&x| x as u64).sum();
+            sum_in.fetch_add(s, Ordering::SeqCst);
+        }
+    }
+
+    // ---- Step 1: local sort (computation superstep; XLA if enabled) ----
+    {
+        let compute = vp.shared().compute.clone();
+        let d = vp.slice_mut(data)?;
+        compute.local_sort_u32(d);
+    }
+
+    // ---- Step 2: choose v equally spaced splitter samples ----
+    {
+        let (d, s) = vp.slice_pair_mut(data, samples)?;
+        for (j, sj) in s.iter_mut().enumerate() {
+            let idx = if chunk == 0 { 0 } else { j * chunk / v };
+            *sj = if chunk == 0 { 0 } else { d[idx.min(chunk - 1)] };
+        }
+    }
+
+    // ---- Step 3: gather all v^2 samples at the root ----
+    vp.gather_region(0, samples.region(), all_samples.map(|m| m.region()).unwrap_or((0, 0)))?;
+
+    // ---- Step 4: root sorts samples, picks v-1 global splitters ----
+    if me == 0 {
+        let all = all_samples.expect("root allocated");
+        let (a_im, spl) = vp.slice_pair_mut(all, splitters)?;
+        let mut a: Vec<u32> = a_im.to_vec();
+        a.sort_unstable();
+        for j in 0..v - 1 {
+            spl[j] = a[(j + 1) * v];
+        }
+        spl[v - 1] = u32::MAX;
+    }
+
+    // ---- Step 5: bcast splitters ----
+    vp.bcast_region(0, splitters.region(), splitters.region())?;
+
+    // ---- Step 6/7: locate splitters, compute bucket counts ----
+    let mut bounds = vec![0usize; v + 1];
+    {
+        let (d, spl) = {
+            let (d, s) = vp.slice_pair_mut(data, splitters)?;
+            (d, s)
+        };
+        // bounds[j] = first index with d[i] >= spl[j-1]; bucket j is
+        // [bounds[j], bounds[j+1]).
+        bounds[v] = chunk;
+        for j in 1..v {
+            bounds[j] = d.partition_point(|&x| x < spl[j - 1]);
+        }
+        let counts: Vec<u32> =
+            (0..v).map(|j| (bounds[j + 1] - bounds[j]) as u32).collect();
+        let sc = vp.slice_mut(send_counts)?;
+        sc.copy_from_slice(&counts);
+    }
+
+    // ---- Step 8: alltoall bucket counts ----
+    {
+        let sends: Vec<(u64, u64)> = (0..v)
+            .map(|j| (send_counts.byte_off() + 4 * j as u64, 4))
+            .collect();
+        let recvs: Vec<(u64, u64)> = (0..v)
+            .map(|i| (recv_counts.byte_off() + 4 * i as u64, 4))
+            .collect();
+        vp.alltoallv_regions(&sends, &recvs)?;
+    }
+
+    // ---- Step 9: alltoallv buckets ----
+    let rc: Vec<usize> = vp.slice(recv_counts)?.iter().map(|&c| c as usize).collect();
+    let total_in: usize = rc.iter().sum();
+    if total_in > cap {
+        return Err(Error::comm(format!(
+            "PSRS bucket imbalance: receiving {total_in} > capacity {cap}"
+        )));
+    }
+    let recv = vp.alloc_uninit::<u32>(cap)?;
+    if me == 0 {
+        // The splitter samples are no longer needed.
+        vp.free(all_samples.expect("root allocated"));
+    }
+    {
+        let sends: Vec<(u64, u64)> = (0..v)
+            .map(|j| {
+                (
+                    data.byte_off() + 4 * bounds[j] as u64,
+                    4 * (bounds[j + 1] - bounds[j]) as u64,
+                )
+            })
+            .collect();
+        let mut recvs: Vec<(u64, u64)> = Vec::with_capacity(v);
+        let mut off = recv.byte_off();
+        for &c in &rc {
+            recvs.push((off, 4 * c as u64));
+            off += 4 * c as u64;
+        }
+        vp.alltoallv_regions(&sends, &recvs)?;
+    }
+
+    // ---- Step 10: merge received (sorted) buckets ----
+    // The input chunk has been scattered to its destinations: free it so
+    // the merge buffer can reuse the space.
+    vp.free(data);
+    let out = vp.alloc_uninit::<u32>(cap)?;
+    {
+        let (r, o) = vp.slice_pair_mut(recv, out)?;
+        let mut runs: Vec<&[u32]> = Vec::with_capacity(v);
+        let mut at = 0;
+        for &c in &rc {
+            runs.push(&r[at..at + c]);
+            at += c;
+        }
+        merge_runs(&runs, &mut o[..total_in]);
+    }
+
+    // ---- Verification supersteps ----
+    if verify {
+        let o = vp.slice(out)?;
+        let sorted = o[..total_in].windows(2).all(|w| w[0] <= w[1]);
+        let s: u64 = o[..total_in].iter().map(|&x| x as u64).sum();
+        sum_out.fetch_add(s, Ordering::SeqCst);
+        count_out.fetch_add(total_in as u64, Ordering::SeqCst);
+        if !sorted {
+            ok.store(false, Ordering::SeqCst);
+        }
+        // Cross-VP boundary check: my max <= successor's min.  Exchange
+        // boundary values via alltoallv of 8-byte (min,max) pairs with
+        // neighbours.
+        let lo = if total_in > 0 { o[0] } else { u32::MAX };
+        let hi = if total_in > 0 { o[total_in - 1] } else { 0 };
+        let bound = vp.alloc::<u32>(2)?;
+        let nbr = vp.alloc::<u32>(2)?;
+        {
+            let b = vp.slice_mut(bound)?;
+            b[0] = lo;
+            b[1] = hi;
+        }
+        // Send my (lo,hi) to my successor; receive predecessor's.
+        let mut sends = vec![(0u64, 0u64); v];
+        let mut recvs = vec![(0u64, 0u64); v];
+        if me + 1 < v {
+            sends[me + 1] = bound.region();
+        }
+        if me > 0 {
+            recvs[me - 1] = nbr.region();
+        }
+        vp.alltoallv_regions(&sends, &recvs)?;
+        if me > 0 && total_in > 0 {
+            let p = vp.slice(nbr)?;
+            let pred_hi = p[1];
+            let pred_nonempty = !(p[0] == u32::MAX && p[1] == 0);
+            if pred_nonempty && pred_hi > lo {
+                ok.store(false, Ordering::SeqCst);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// k-way merge of sorted runs into `out`.
+fn merge_runs(runs: &[&[u32]], out: &mut [u32]) {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut heap: BinaryHeap<Reverse<(u32, usize, usize)>> = BinaryHeap::new();
+    for (r, run) in runs.iter().enumerate() {
+        if !run.is_empty() {
+            heap.push(Reverse((run[0], r, 0)));
+        }
+    }
+    for slot in out.iter_mut() {
+        let Reverse((val, r, i)) = heap.pop().expect("merge sized correctly");
+        *slot = val;
+        if i + 1 < runs[r].len() {
+            heap.push(Reverse((runs[r][i + 1], r, i + 1)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_lens_sum_to_n() {
+        for (n, v) in [(100u64, 7usize), (5, 8), (64, 4)] {
+            let total: usize = (0..v).map(|r| chunk_len(n, v, r)).sum();
+            assert_eq!(total as u64, n);
+        }
+    }
+
+    #[test]
+    fn merge_runs_produces_sorted() {
+        let mut out = vec![0u32; 7];
+        merge_runs(&[&[1, 5, 9], &[2, 2], &[0, 10]], &mut out);
+        assert_eq!(out, vec![0, 1, 2, 2, 5, 9, 10]);
+    }
+
+    #[test]
+    fn required_mu_is_sane() {
+        assert!(required_mu(1 << 20, 8) > (1 << 20) / 8 * 4);
+    }
+}

@@ -1,0 +1,12 @@
+//! Hand-crafted EM baselines (the "stxxl" line in the thesis plots).
+//!
+//! STXXL itself is not available offline; [`stxxl_sort`] implements the
+//! same algorithm its sorter uses — run formation + D-striped multiway
+//! merge — on this crate's disk layer, so the comparison uses identical
+//! I/O accounting.  For the thesis' problem-size/RAM ratios this is a
+//! 2-pass sort: read+write for run formation, read+write for the merge
+//! (4n total I/O volume), the bound PEMS2 is measured against.
+
+pub mod stxxl_sort;
+
+pub use stxxl_sort::{run_stxxl_sort, StxxlSortResult};

@@ -1,0 +1,194 @@
+//! Benchmark-harness library: micro-workloads, parameter sweeps, and
+//! gnuplot/CSV emitters used by the `benches/` binaries (one per thesis
+//! table/figure — see DESIGN.md §5) and by `pems2 alltoallv`.
+
+use crate::config::SimConfig;
+use crate::engine::{run_arc, RunReport};
+use crate::error::Result;
+use crate::util::XorShift64;
+use crate::vp::Vp;
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Result of a micro-benchmark run.
+#[derive(Debug)]
+pub struct MicroResult {
+    /// Engine report.
+    pub report: RunReport,
+    /// Payload integrity check.
+    pub verified: bool,
+}
+
+/// The Fig. 7.2 micro-workload: a single Alltoallv over the complete data
+/// set (`elems` u32 per VP, split evenly over all `v` destinations), no
+/// other computation.
+pub fn alltoallv_once(cfg: SimConfig, elems: usize) -> Result<MicroResult> {
+    let ok = Arc::new(AtomicBool::new(true));
+    let ok2 = ok.clone();
+    let seed = cfg.seed;
+    let report = run_arc(
+        cfg,
+        Arc::new(move |vp: &mut Vp| {
+            let v = vp.nranks();
+            let me = vp.rank();
+            let per = elems / v;
+            let send = vp.alloc::<u32>(elems.max(1))?;
+            let recv = vp.alloc::<u32>(elems.max(1))?;
+            {
+                // Message to j: tagged values so the receiver can verify
+                // provenance.
+                let s = vp.slice_mut(send)?;
+                let mut rng = XorShift64::new(seed ^ me as u64);
+                for j in 0..v {
+                    for i in 0..per {
+                        s[j * per + i] = ((me * v + j) as u32) << 16
+                            | (rng.next_u32() & 0xFFFF).min(0xFFFE);
+                    }
+                }
+            }
+            let sends: Vec<(u64, u64)> = (0..v)
+                .map(|j| (send.byte_off() + (j * per * 4) as u64, (per * 4) as u64))
+                .collect();
+            let recvs: Vec<(u64, u64)> = (0..v)
+                .map(|i| (recv.byte_off() + (i * per * 4) as u64, (per * 4) as u64))
+                .collect();
+            vp.alltoallv_regions(&sends, &recvs)?;
+            {
+                let r = vp.slice(recv)?;
+                for i in 0..v {
+                    for x in &r[i * per..(i + 1) * per] {
+                        if (x >> 16) as usize != i * v + me {
+                            ok2.store(false, Ordering::SeqCst);
+                        }
+                    }
+                }
+            }
+            Ok(())
+        }),
+    )?;
+    Ok(MicroResult { report, verified: ok.load(Ordering::SeqCst) })
+}
+
+/// A sweep data series for gnuplot: label + (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    /// Plot label ("PSRS PEMS2 (unix) P=2").
+    pub label: String,
+    /// (x, y) points.
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    /// New empty series.
+    pub fn new(label: impl Into<String>) -> Series {
+        Series { label: label.into(), points: Vec::new() }
+    }
+
+    /// Append a point.
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+}
+
+/// Write series in gnuplot "index" format (blank-line separated blocks)
+/// plus a CSV next to it; the thesis' benchmark system emits
+/// gnuplot-compatible files (§1.4).
+pub fn write_series(path: &str, title: &str, series: &[Series]) -> Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "# {title}")?;
+    for s in series {
+        writeln!(f, "\n\n# {}", s.label)?;
+        for (x, y) in &s.points {
+            writeln!(f, "{x} {y}")?;
+        }
+    }
+    // CSV twin for easy inspection.
+    let csv = format!("{path}.csv");
+    let mut f = std::fs::File::create(&csv)?;
+    writeln!(f, "series,x,y")?;
+    for s in series {
+        for (x, y) in &s.points {
+            writeln!(f, "{},{x},{y}", s.label)?;
+        }
+    }
+    Ok(())
+}
+
+/// Print a series table to stdout (the bench binaries' default output).
+pub fn print_series(title: &str, series: &[Series]) {
+    println!("== {title} ==");
+    for s in series {
+        println!("-- {}", s.label);
+        for (x, y) in &s.points {
+            println!("{x:>14.1} {y:>12.4}");
+        }
+    }
+}
+
+/// Build a PSRS-ready config (µ sized automatically from n and v).
+pub fn psrs_config(
+    n: u64,
+    p: usize,
+    v: usize,
+    k: usize,
+    io: crate::config::IoStyle,
+    pems1: bool,
+) -> Result<SimConfig> {
+    let mu = crate::apps::psrs::required_mu(n, v).next_power_of_two();
+    let mut b = SimConfig::builder()
+        .p(p)
+        .v(v)
+        .k(k)
+        .mu(mu)
+        .sigma(mu)
+        .block(64 << 10)
+        .io(io);
+    if io == crate::config::IoStyle::Mmap {
+        b = b.layout(crate::config::Layout::PerVpDisk);
+    }
+    if pems1 {
+        b = b
+            .delivery(crate::config::DeliveryMode::Pems1Indirect)
+            .alloc(crate::config::AllocPolicy::Bump)
+            // Bound on the bucket message: ~2 n/v^2 elements (+ slack).
+            .indirect_slot(((8 * n / (v * v) as u64) * 4).max(64 << 10));
+    }
+    b.build()
+}
+
+/// Standard bench output directory.
+pub fn results_dir() -> String {
+    std::env::var("PEMS2_RESULTS_DIR").unwrap_or_else(|_| "results".to_string())
+}
+
+/// Quick/full switch: benches default to quick sizes; set PEMS2_BENCH_FULL=1
+/// for thesis-scale sweeps.
+pub fn full_mode() -> bool {
+    std::env::var("PEMS2_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_round_trip_to_file() {
+        let mut s = Series::new("test");
+        s.push(1.0, 2.0);
+        s.push(2.0, 4.0);
+        let dir = std::env::temp_dir().join(format!("pems2-bench-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.dat");
+        write_series(path.to_str().unwrap(), "t", &[s]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("# test"));
+        assert!(text.contains("1 2"));
+        let csv = std::fs::read_to_string(format!("{}.csv", path.display())).unwrap();
+        assert!(csv.contains("test,1,2"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

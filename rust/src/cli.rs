@@ -1,0 +1,204 @@
+//! Command-line parsing for the `pems2` binary.
+//!
+//! All simulation parameters are run-time flags (thesis §1.4: "All
+//! parameters of PEMS2 can be passed at run-time ... simplifying automated
+//! or manual experimentation").  `clap` is not in the offline crate set;
+//! this is a small hand-rolled parser.
+
+use crate::config::{AllocPolicy, DeliveryMode, FileAlloc, IoStyle, Layout, SimConfig};
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand, positional args, and `--key value`
+/// options.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    /// Subcommand (first non-flag argument).
+    pub command: String,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+    /// `--key value` / `--flag` options.
+    pub options: HashMap<String, String>,
+}
+
+impl Cli {
+    /// Parse from an argument iterator (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut positional = Vec::new();
+        let mut options = HashMap::new();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare `--flag`.
+                if let Some((k, v)) = key.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    options.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Ok(Cli { command, positional, options })
+    }
+
+    /// Get an option parsed as `T`.
+    pub fn get<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|_| Error::usage(format!("invalid value for --{key}: '{s}'"))),
+        }
+    }
+
+    /// Get an option or a default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        Ok(self.get(key)?.unwrap_or(default))
+    }
+
+    /// Is a boolean flag set?
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.options.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// Build a [`SimConfig`] from the standard simulation flags:
+    /// `--p --v --k --mu --d --sigma --alpha --io --pems1 --alloc
+    /// --layout --fragmented --indirect-slot --block --timeline --xla
+    /// --seed --disk-dir --unordered`.
+    ///
+    /// Sizes accept suffixes `k`/`m`/`g` (binary).
+    pub fn sim_config(&self) -> Result<SimConfig> {
+        let mut b = SimConfig::builder()
+            .p(self.get_or("p", 1)?)
+            .v(self.get_or("v", 4)?)
+            .k(self.get_or("k", 1)?)
+            .mu(parse_size(&self.get_or("mu", "16m".to_string())?)?)
+            .d(self.get_or("d", 1)?)
+            .sigma(parse_size(&self.get_or("sigma", "16m".to_string())?)?)
+            .alpha(self.get_or("alpha", 4)?)
+            .block(parse_size(&self.get_or("block", "256k".to_string())?)?)
+            .seed(self.get_or("seed", 0xF00D)?)
+            .record_timeline(self.flag("timeline"))
+            .use_xla(self.flag("xla"))
+            .ordered_rounds(!self.flag("unordered"));
+        if let Some(io) = self.options.get("io") {
+            b = b.io(IoStyle::parse(io)?);
+        }
+        if self.flag("pems1") {
+            b = b
+                .delivery(DeliveryMode::Pems1Indirect)
+                .alloc(AllocPolicy::Bump)
+                .indirect_slot(parse_size(&self.get_or("indirect-slot", "1m".to_string())?)?);
+        } else if let Some(s) = self.options.get("indirect-slot") {
+            b = b.indirect_slot(parse_size(s)?);
+        }
+        if let Some(a) = self.options.get("alloc") {
+            b = b.alloc(match a.as_str() {
+                "bump" => AllocPolicy::Bump,
+                "freelist" | "list" => AllocPolicy::FreeList,
+                other => return Err(Error::usage(format!("unknown allocator '{other}'"))),
+            });
+        }
+        if let Some(l) = self.options.get("layout") {
+            b = b.layout(match l.as_str() {
+                "striped" => Layout::Striped,
+                "per-vp" | "pervp" => Layout::PerVpDisk,
+                other => return Err(Error::usage(format!("unknown layout '{other}'"))),
+            });
+        }
+        if self.options.get("io").map(|s| s == "mmap").unwrap_or(false)
+            && !self.options.contains_key("layout")
+        {
+            b = b.layout(Layout::PerVpDisk);
+        }
+        if self.flag("fragmented") {
+            b = b.file_alloc(FileAlloc::Fragmented);
+        }
+        if let Some(dir) = self.options.get("disk-dir") {
+            b = b.disk_dir(dir.clone());
+        }
+        b.build()
+    }
+}
+
+/// Parse a size with optional binary suffix: `4096`, `256k`, `16m`, `2g`.
+pub fn parse_size(s: &str) -> Result<u64> {
+    let s = s.trim().to_lowercase();
+    let (num, mult) = match s.chars().last() {
+        Some('k') => (&s[..s.len() - 1], 1u64 << 10),
+        Some('m') => (&s[..s.len() - 1], 1 << 20),
+        Some('g') => (&s[..s.len() - 1], 1 << 30),
+        _ => (s.as_str(), 1),
+    };
+    num.parse::<u64>()
+        .map(|n| n * mult)
+        .map_err(|_| Error::usage(format!("invalid size '{s}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parse_command_and_options() {
+        let c = Cli::parse(args("psrs --n 1000 --v 8 --io mmap --timeline")).unwrap();
+        assert_eq!(c.command, "psrs");
+        assert_eq!(c.get::<u64>("n").unwrap(), Some(1000));
+        assert!(c.flag("timeline"));
+        assert_eq!(c.options.get("io").unwrap(), "mmap");
+    }
+
+    #[test]
+    fn parse_key_equals_value() {
+        let c = Cli::parse(args("run --mu=64m --k=4")).unwrap();
+        assert_eq!(c.get_or("k", 0usize).unwrap(), 4);
+        assert_eq!(parse_size(c.options.get("mu").unwrap()).unwrap(), 64 << 20);
+    }
+
+    #[test]
+    fn parse_sizes() {
+        assert_eq!(parse_size("4096").unwrap(), 4096);
+        assert_eq!(parse_size("256k").unwrap(), 256 << 10);
+        assert_eq!(parse_size("16M").unwrap(), 16 << 20);
+        assert_eq!(parse_size("2g").unwrap(), 2 << 30);
+        assert!(parse_size("abc").is_err());
+    }
+
+    #[test]
+    fn sim_config_from_flags() {
+        let c = Cli::parse(args(
+            "x --p 2 --v 8 --k 2 --mu 1m --io stxxl-file --alpha 2 --block 64k",
+        ))
+        .unwrap();
+        let cfg = c.sim_config().unwrap();
+        assert_eq!(cfg.p, 2);
+        assert_eq!(cfg.v, 8);
+        assert_eq!(cfg.io, IoStyle::Async);
+        assert_eq!(cfg.block(), 64 << 10);
+    }
+
+    #[test]
+    fn pems1_flags_switch_everything() {
+        let c = Cli::parse(args("x --pems1 --v 4")).unwrap();
+        let cfg = c.sim_config().unwrap();
+        assert_eq!(cfg.delivery, DeliveryMode::Pems1Indirect);
+        assert_eq!(cfg.alloc, AllocPolicy::Bump);
+        assert!(cfg.indirect_slot > 0);
+    }
+
+    #[test]
+    fn mmap_defaults_to_per_vp_layout() {
+        let c = Cli::parse(args("x --io mmap --v 4")).unwrap();
+        let cfg = c.sim_config().unwrap();
+        assert_eq!(cfg.layout, Layout::PerVpDisk);
+    }
+}

@@ -1,0 +1,374 @@
+//! EM-Alltoallv with direct message delivery (thesis Algs. 7.1.1–7.1.3).
+//!
+//! The PEMS2 strategy (§6.2): receivers publish their receive offsets in
+//! the shared table `T`; senders write message *interiors* directly into
+//! receiver contexts **on disk** and deposit the unaligned message ends in
+//! the boundary-block cache; receivers flush their boundary blocks in a
+//! final internal superstep.  No indirect area exists — the disk-space and
+//! seek-traffic elimination of §6.3.
+//!
+//! Internal supersteps (explicit I/O):
+//! 1. record offsets + seed border blocks; swap out everything *except*
+//!    receive regions; deliver messages whose receivers have already
+//!    recorded offsets (`E[i]`);
+//! 2. swap the remaining messages back in and deliver them; when `P > 1`,
+//!    exchange remote messages in `α`-chunks per round of `k` threads
+//!    (Alg. 7.1.3), the round's last thread driving the node-level
+//!    exchange and delivering on behalf of local peers;
+//! 3. flush boundary blocks.
+//!
+//! With mmap/mem stores, delivery is a straight memcpy into the receiver's
+//! context and swaps are no-ops; the synchronisation structure is
+//! identical.
+
+use super::Region;
+use crate::error::{Error, Result};
+use crate::metrics::IoClass;
+use crate::util::align::Aligned;
+use crate::vp::{NodeShared, Vp};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// Perform an Alltoallv: `sends[j]`/`recvs[i]` are byte regions in this
+/// VP's context for the message to global VP `j` / from global VP `i`
+/// (length 0 = no message).  One virtual superstep.
+pub fn alltoallv(vp: &mut Vp, sends: &[Region], recvs: &[Region]) -> Result<()> {
+    let sh = vp.shared().clone();
+    let cfg = sh.cfg.clone();
+    let v = cfg.v;
+    if sends.len() != v || recvs.len() != v {
+        return Err(Error::comm(format!(
+            "alltoallv: sends/recvs must have v={v} entries (got {}/{})",
+            sends.len(),
+            recvs.len()
+        )));
+    }
+    let local = vp.local_rank();
+    let explicit = sh.store.is_explicit();
+
+    vp.ensure_resident()?;
+    let mem = vp_mem_ptr(&sh, local);
+
+    // ---------- Internal superstep 1 ----------
+    // Record incoming offsets in T (T[local][src] valid afterwards).
+    {
+        let mut t = sh.comm.table.lock().unwrap();
+        t[local].copy_from_slice(recvs);
+    }
+    if explicit {
+        seed_border_blocks(&sh, local, recvs, mem)?;
+    }
+    sh.comm.executed[local].store(true, Ordering::Release);
+    // Synchronise with the k−1 other currently running threads so the
+    // whole round's offsets count as "executed" (matches the δ analysis).
+    if cfg.ordered_rounds && cfg.k > 1 {
+        vp.round_barrier();
+    }
+
+    // Swap out everything except the receive regions (Alg. 7.1.1 line 4).
+    if explicit {
+        let except: Vec<Region> = recvs.iter().copied().filter(|&(_, l)| l > 0).collect();
+        vp.swap_out_except(&except)?;
+    }
+
+    // Deliver local messages whose receiver has recorded its offsets.
+    let me = vp.rank();
+    let my_node = vp.node();
+    let mut deferred: Vec<usize> = Vec::new();
+    for (j, &(soff, slen)) in sends.iter().enumerate() {
+        if slen == 0 {
+            continue;
+        }
+        let (dst_node, dst_local) = vp.locate(j);
+        if dst_node != my_node {
+            continue; // remote: superstep 2
+        }
+        if sh.comm.executed[dst_local].load(Ordering::Acquire) {
+            let payload = unsafe {
+                std::slice::from_raw_parts(mem.add(soff as usize), slen as usize)
+            };
+            deliver_local(&sh, dst_local, me, payload)?;
+        } else {
+            deferred.push(j);
+        }
+    }
+    vp.resident = false;
+    vp.release();
+    vp.internal_barrier();
+
+    // ---------- Internal superstep 2 ----------
+    vp.acquire();
+    // Regions needed in memory: deferred local messages + all remote
+    // messages ("Swap message in", Alg. 7.1.1 line 13).
+    let mut needed: Vec<Region> = deferred.iter().map(|&j| sends[j]).collect();
+    let mut remote: Vec<usize> = Vec::new();
+    if cfg.p > 1 {
+        for (j, &(_, slen)) in sends.iter().enumerate() {
+            if slen > 0 && vp.locate(j).0 != my_node {
+                remote.push(j);
+                needed.push(sends[j]);
+            }
+        }
+    }
+    if explicit && !needed.is_empty() {
+        vp.swap_in_regions(&needed)?;
+    }
+    // Deliver the deferred local messages.
+    for &j in &deferred {
+        let (soff, slen) = sends[j];
+        let (_, dst_local) = vp.locate(j);
+        let payload =
+            unsafe { std::slice::from_raw_parts(mem.add(soff as usize), slen as usize) };
+        deliver_local(&sh, dst_local, me, payload)?;
+    }
+    // Remote exchange in α-chunks (Alg. 7.1.3).
+    if cfg.p > 1 {
+        par_comm(vp, &sh, &remote, sends, mem)?;
+    }
+    vp.release();
+    vp.internal_barrier();
+
+    // ---------- Internal superstep 3: flush boundary blocks ----------
+    if explicit {
+        flush_borders(&sh, local)?;
+    }
+    // Reset my execution state for the next Alltoallv.
+    sh.comm.executed[local].store(false, Ordering::Release);
+    vp.superstep_end();
+    Ok(())
+}
+
+/// Raw pointer to the memory a local VP computes in.
+fn vp_mem_ptr(sh: &Arc<NodeShared>, local: usize) -> *mut u8 {
+    sh.store.vp_memory(local, sh.cfg.k, sh.cfg.mu)
+}
+
+/// Seed the boundary blocks of this VP's receive regions from its current
+/// (resident) memory so non-message bytes survive the block flush.
+fn seed_border_blocks(
+    sh: &Arc<NodeShared>,
+    local: usize,
+    recvs: &[Region],
+    mem: *mut u8,
+) -> Result<()> {
+    let b = sh.cfg.block();
+    let mu = sh.cfg.mu;
+    let base = sh.store.ctx_base(local);
+    for &(off, len) in recvs {
+        if len == 0 {
+            continue;
+        }
+        if off + len > mu {
+            return Err(Error::comm(format!(
+                "receive region ({off}, {len}) exceeds context size {mu}"
+            )));
+        }
+        let abs = base + off;
+        let a = Aligned::new(abs, abs + len, b);
+        for (fs, fl) in [a.head(), a.tail()] {
+            if fl == 0 {
+                continue;
+            }
+            // Seed every block the fragment touches (≤ 2 for the whole
+            // message).
+            let mut blk = crate::util::align::align_down(fs, b);
+            while blk < fs + fl {
+                let ctx_off = blk - base; // block-aligned, within slot
+                let avail = mu.saturating_sub(ctx_off).min(b);
+                let init = unsafe {
+                    std::slice::from_raw_parts(mem.add(ctx_off as usize), avail as usize)
+                };
+                sh.comm.border.seed_block(blk, init);
+                blk += b;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Deliver one message into a **local** receiver's context on disk:
+/// block-aligned interior directly, unaligned ends via the border cache
+/// (explicit I/O) or a plain memcpy (mmap/mem stores).
+pub(crate) fn deliver_local(
+    sh: &Arc<NodeShared>,
+    dst_local: usize,
+    src_global: usize,
+    payload: &[u8],
+) -> Result<()> {
+    let (roff, rlen) = {
+        let t = sh.comm.table.lock().unwrap();
+        t[dst_local][src_global]
+    };
+    if rlen as usize != payload.len() {
+        return Err(Error::comm(format!(
+            "alltoallv size mismatch: {src_global} -> local {dst_local}: send {} B, recv {} B",
+            payload.len(),
+            rlen
+        )));
+    }
+    if payload.is_empty() {
+        return Ok(());
+    }
+    if !sh.store.is_explicit() {
+        return sh.store.write_to_context(dst_local, roff, payload, IoClass::Delivery);
+    }
+    let b = sh.cfg.block();
+    let base = sh.store.ctx_base(dst_local);
+    let abs = base + roff;
+    let a = Aligned::new(abs, abs + rlen, b);
+    let (is, il) = a.interior();
+    if il > 0 {
+        let p0 = (is - abs) as usize;
+        sh.store.write_to_context(
+            dst_local,
+            is - base,
+            &payload[p0..p0 + il as usize],
+            IoClass::Delivery,
+        )?;
+    }
+    for (fs, fl) in [a.head(), a.tail()] {
+        if fl == 0 {
+            continue;
+        }
+        // A fragment may straddle a block boundary only when the message
+        // has no interior; split per block.
+        let mut cur = fs;
+        let end = fs + fl;
+        while cur < end {
+            let blk_end = crate::util::align::align_down(cur, b) + b;
+            let take = blk_end.min(end) - cur;
+            let p0 = (cur - abs) as usize;
+            sh.comm.border.write_fragment(cur, &payload[p0..p0 + take as usize]);
+            cur += take;
+        }
+    }
+    Ok(())
+}
+
+/// EM-Alltoallv-Par-Comm (Alg. 7.1.3): the `k` threads of a round exchange
+/// their remote messages with all other nodes in `α`-chunks; the last
+/// thread of the round performs the node-level exchange and delivers the
+/// received messages to local contexts using `T`.
+fn par_comm(
+    vp: &mut Vp,
+    sh: &Arc<NodeShared>,
+    remote: &[usize],
+    sends: &[Region],
+    mem: *mut u8,
+) -> Result<()> {
+    let cfg = &sh.cfg;
+    let vpp = sh.v_per_p();
+    let alpha = cfg.alpha.min(vpp);
+    let chunks = vpp.div_ceil(alpha);
+    let me = vp.rank();
+    let my_node = vp.node();
+    for c in 0..chunks {
+        let lo = c * alpha;
+        let hi = ((c + 1) * alpha).min(vpp);
+        // Assemble my messages for destination local threads [lo, hi) on
+        // every other node into the shared staging area.
+        {
+            let mut staging = sh.comm.pems1_staging.lock().unwrap();
+            for &j in remote {
+                let (_, dst_local) = vp.locate(j);
+                if dst_local < lo || dst_local >= hi {
+                    continue;
+                }
+                let (soff, slen) = sends[j];
+                let payload = unsafe {
+                    std::slice::from_raw_parts(mem.add(soff as usize), slen as usize)
+                };
+                staging.push((me, j, payload.to_vec()));
+            }
+            let bytes: usize = staging.iter().map(|(_, _, p)| p.len() + 16).sum();
+            sh.comm.note_shared_use(bytes);
+        }
+        // Rendezvous the round; the last arrival drives the exchange.
+        let leader = sh.round_barriers[vp.round()].wait();
+        if leader {
+            let staged = std::mem::take(&mut *sh.comm.pems1_staging.lock().unwrap());
+            let mut out: Vec<Vec<u8>> = (0..cfg.p).map(|_| Vec::new()).collect();
+            for (src, dst, payload) in staged {
+                let (dst_node, _) = vp.locate(dst);
+                debug_assert_ne!(dst_node, my_node);
+                encode_msg(&mut out[dst_node], src, dst, &payload);
+            }
+            let received = sh.switch.alltoallv(my_node, out);
+            for buf in received {
+                let mut cur = 0usize;
+                while cur < buf.len() {
+                    let (src, dst, payload, next) = decode_msg(&buf, cur)?;
+                    let (dst_node, dst_local) = vp.locate(dst);
+                    if dst_node != my_node {
+                        return Err(Error::comm("misrouted remote message"));
+                    }
+                    deliver_local(sh, dst_local, src, payload)?;
+                    cur = next;
+                }
+            }
+        }
+        sh.round_barriers[vp.round()].wait();
+    }
+    Ok(())
+}
+
+fn encode_msg(out: &mut Vec<u8>, src: usize, dst: usize, payload: &[u8]) {
+    out.extend_from_slice(&(src as u32).to_le_bytes());
+    out.extend_from_slice(&(dst as u32).to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+fn decode_msg(buf: &[u8], at: usize) -> Result<(usize, usize, &[u8], usize)> {
+    if at + 16 > buf.len() {
+        return Err(Error::comm("truncated remote message header"));
+    }
+    let src = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap()) as usize;
+    let dst = u32::from_le_bytes(buf[at + 4..at + 8].try_into().unwrap()) as usize;
+    let len = u64::from_le_bytes(buf[at + 8..at + 16].try_into().unwrap()) as usize;
+    if at + 16 + len > buf.len() {
+        return Err(Error::comm("truncated remote message payload"));
+    }
+    Ok((src, dst, &buf[at + 16..at + 16 + len], at + 16 + len))
+}
+
+/// Flush this VP's boundary blocks to its context on disk (internal
+/// superstep 3).
+fn flush_borders(sh: &Arc<NodeShared>, local: usize) -> Result<()> {
+    let base = sh.store.ctx_base(local);
+    let slot = sh.store.ctx_slot();
+    let mu = sh.cfg.mu;
+    for (blk, data) in sh.comm.border.drain_range(base, base + slot) {
+        let ctx_off = blk - base;
+        let len = mu.saturating_sub(ctx_off).min(data.len() as u64);
+        if len > 0 {
+            sh.store.write_to_context(local, ctx_off, &data[..len as usize], IoClass::Delivery)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_codec_round_trips() {
+        let mut buf = Vec::new();
+        encode_msg(&mut buf, 3, 17, &[1, 2, 3, 4, 5]);
+        encode_msg(&mut buf, 9, 2, &[]);
+        let (src, dst, payload, next) = decode_msg(&buf, 0).unwrap();
+        assert_eq!((src, dst, payload), (3, 17, &[1u8, 2, 3, 4, 5][..]));
+        let (src2, dst2, payload2, next2) = decode_msg(&buf, next).unwrap();
+        assert_eq!((src2, dst2, payload2.len()), (9, 2, 0));
+        assert_eq!(next2, buf.len());
+    }
+
+    #[test]
+    fn msg_codec_rejects_truncation() {
+        let mut buf = Vec::new();
+        encode_msg(&mut buf, 1, 2, &[7; 100]);
+        assert!(decode_msg(&buf[..50], 0).is_err());
+        assert!(decode_msg(&buf[..10], 0).is_err());
+    }
+}

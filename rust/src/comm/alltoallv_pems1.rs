@@ -1,0 +1,215 @@
+//! PEMS1 baseline Alltoallv (thesis Alg. 2.2.1, §2.2–§2.3).
+//!
+//! Messages are staged through the *indirect area*: a statically
+//! partitioned disk region with one slot of `indirect_slot` bytes per
+//! (local receiver, global sender) pair.  Two internal supersteps:
+//!
+//! 1. every VP writes its outgoing messages to the receivers' indirect
+//!    slots, then swaps its **whole** context out;
+//! 2. every VP swaps its whole context back in, reads its incoming
+//!    messages from its indirect slots into its receive buffers, and swaps
+//!    out again.
+//!
+//! Total I/O `4vµ + 2v²ω` (Lem. 2.2.1) vs PEMS2's
+//! `vµ + (v²−vk)/2·ω + 2v²B` — the overhead PEMS2 eliminates.  With
+//! `P > 1`, remote messages take the deterministic-routing path of §2.3.3:
+//! sender → intermediary node (network) → intermediary's transit area
+//! (disk write + read) → receiver node (network) → receiver's indirect
+//! area (disk) → receiver context (via the superstep-2 read + swap), i.e.
+//! each remote message crosses the network twice and disk four times.
+
+use super::Region;
+use crate::error::{Error, Result};
+use crate::metrics::IoClass;
+use crate::vp::{NodeShared, Vp};
+use std::sync::Arc;
+
+/// Logical offset of the indirect slot for (`dst_local`, `src_global`).
+fn indirect_slot_off(sh: &Arc<NodeShared>, dst_local: usize, src_global: usize) -> u64 {
+    let cfg = &sh.cfg;
+    let slot = crate::util::align::align_up(cfg.indirect_slot.max(1), cfg.block());
+    let contexts = sh.v_per_p() as u64 * sh.store.ctx_slot();
+    contexts + (dst_local as u64 * cfg.v as u64 + src_global as u64) * slot
+}
+
+/// Logical offset of the transit slot (intermediary routing, `P > 1`).
+fn transit_slot_off(sh: &Arc<NodeShared>, idx: usize) -> u64 {
+    let cfg = &sh.cfg;
+    let slot = crate::util::align::align_up(cfg.indirect_slot.max(1), cfg.block());
+    let contexts = sh.v_per_p() as u64 * sh.store.ctx_slot();
+    let indirect = sh.v_per_p() as u64 * cfg.v as u64 * slot;
+    contexts + indirect + idx as u64 * slot
+}
+
+/// PEMS1 Alltoallv.  Same interface as [`super::alltoallv`]; requires
+/// `cfg.indirect_slot >= max message length` (the static bound PEMS1 users
+/// had to configure, §2.3).
+pub fn alltoallv_pems1(vp: &mut Vp, sends: &[Region], recvs: &[Region]) -> Result<()> {
+    let sh = vp.shared().clone();
+    let cfg = sh.cfg.clone();
+    let v = cfg.v;
+    if sends.len() != v || recvs.len() != v {
+        return Err(Error::comm("alltoallv: sends/recvs must have v entries"));
+    }
+    let slot_cap = cfg.indirect_slot;
+    for &(_, l) in sends {
+        if l > slot_cap {
+            return Err(Error::comm(format!(
+                "PEMS1 message of {l} B exceeds indirect slot bound {slot_cap} B \
+                 (configure a larger --indirect-slot)"
+            )));
+        }
+    }
+    let me = vp.rank();
+    let my_node = vp.node();
+    let local = vp.local_rank();
+    let mem = sh.store.vp_memory(local, cfg.k, cfg.mu);
+
+    vp.ensure_resident()?;
+
+    // ---------- Internal superstep 1: send ----------
+    // Local destinations: write message to the receiver's indirect slot.
+    for (j, &(soff, slen)) in sends.iter().enumerate() {
+        if slen == 0 {
+            continue;
+        }
+        let (dst_node, dst_local) = vp.locate(j);
+        let payload =
+            unsafe { std::slice::from_raw_parts(mem.add(soff as usize), slen as usize) };
+        if dst_node == my_node {
+            write_indirect(&sh, dst_local, me, payload)?;
+        } else {
+            // Stage for intermediary routing; the superstep-1 leader
+            // performs the two network hops.
+            sh.comm.pems1_staging.lock().unwrap().push((me, j, payload.to_vec()));
+        }
+    }
+    // Swap the whole context out (PEMS1 has no partial swaps).
+    vp.swap_out_all()?;
+    vp.resident = false;
+    vp.release();
+
+    // Leader performs the deterministic-routing network phase (§2.3.3):
+    // hop 1 to intermediaries, transit-disk write+read, hop 2 to final
+    // nodes, indirect-area write at the receiver.
+    let sh2 = sh.clone();
+    let _vpp = sh.v_per_p();
+    sh.barrier_with(|| {
+        if cfg.p > 1 {
+            route_remote_via_intermediaries(&sh2).expect("pems1 remote routing failed");
+        }
+        sh2.store.flush().expect("flush failed");
+        for g in &sh2.gates {
+            g.reset_turns();
+        }
+    });
+
+    // ---------- Internal superstep 2: receive ----------
+    vp.acquire();
+    // Swap the whole context in.
+    vp.ensure_resident()?;
+    for (i, &(roff, rlen)) in recvs.iter().enumerate() {
+        if rlen == 0 {
+            continue;
+        }
+        let off = indirect_slot_off(&sh, local, i);
+        let dst =
+            unsafe { std::slice::from_raw_parts_mut(mem.add(roff as usize), rlen as usize) };
+        read_indirect(&sh, off, dst)?;
+        // Raw-pointer write: tell the dirty tracker so the following
+        // swap-out persists the received message.
+        vp.mark_dirty(roff, rlen);
+    }
+    // Swap out again (the context on disk must reflect received data).
+    vp.swap_out_all()?;
+    vp.resident = false;
+    vp.release();
+    vp.superstep_end();
+    Ok(())
+}
+
+/// Write a message into the indirect area (aligned to the slot).
+fn write_indirect(
+    sh: &Arc<NodeShared>,
+    dst_local: usize,
+    src_global: usize,
+    payload: &[u8],
+) -> Result<()> {
+    let off = indirect_slot_off(sh, dst_local, src_global);
+    sh.store_raw_write(off, payload, IoClass::Delivery)
+}
+
+fn read_indirect(sh: &Arc<NodeShared>, off: u64, out: &mut [u8]) -> Result<()> {
+    sh.store_raw_read(off, out, IoClass::Delivery)
+}
+
+/// §2.3.3 deterministic routing: every remote message goes through an
+/// intermediary node chosen round-robin, which persists it to its transit
+/// area and forwards it.  Runs on the superstep-1 barrier leader of each
+/// node; all nodes participate in two lockstep exchanges.
+fn route_remote_via_intermediaries(sh: &Arc<NodeShared>) -> Result<()> {
+    let cfg = &sh.cfg;
+    let p = cfg.p;
+    let my_node = sh.node;
+    let staged = std::mem::take(&mut *sh.comm.pems1_staging.lock().unwrap());
+
+    // Hop 1: sender -> intermediary ((src + dst) mod P, round-robin-ish).
+    let mut out: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
+    for (src, dst, payload) in staged {
+        let inter = (src + dst) % p;
+        encode(&mut out[inter], src, dst, &payload);
+    }
+    let received = sh.switch.alltoallv(my_node, out);
+
+    // Intermediary: write each message to the transit area, read it back,
+    // forward to the destination node (steps 2-4 of §2.3.3).
+    let mut fwd: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
+    let mut tidx = 0usize;
+    for buf in received {
+        let mut cur = 0;
+        while cur < buf.len() {
+            let (src, dst, payload, next) = decode(&buf, cur)?;
+            let toff = transit_slot_off(sh, tidx % (sh.v_per_p() * cfg.v));
+            tidx += 1;
+            sh.store_raw_write(toff, payload, IoClass::Delivery)?;
+            let mut back = vec![0u8; payload.len()];
+            sh.store_raw_read(toff, &mut back, IoClass::Delivery)?;
+            let dst_node = dst / sh.v_per_p();
+            encode(&mut fwd[dst_node], src, dst, &back);
+            cur = next;
+        }
+    }
+    let finals = sh.switch.alltoallv(my_node, fwd);
+
+    // Receiver node: write into the indirect area (step 5).
+    for buf in finals {
+        let mut cur = 0;
+        while cur < buf.len() {
+            let (src, dst, payload, next) = decode(&buf, cur)?;
+            let dst_local = dst % sh.v_per_p();
+            write_indirect(sh, dst_local, src, payload)?;
+            cur = next;
+        }
+    }
+    Ok(())
+}
+
+fn encode(out: &mut Vec<u8>, src: usize, dst: usize, payload: &[u8]) {
+    out.extend_from_slice(&(src as u32).to_le_bytes());
+    out.extend_from_slice(&(dst as u32).to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+fn decode(buf: &[u8], at: usize) -> Result<(usize, usize, &[u8], usize)> {
+    if at + 16 > buf.len() {
+        return Err(Error::comm("truncated pems1 routed message"));
+    }
+    let src = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap()) as usize;
+    let dst = u32::from_le_bytes(buf[at + 4..at + 8].try_into().unwrap()) as usize;
+    let len = u64::from_le_bytes(buf[at + 8..at + 16].try_into().unwrap()) as usize;
+    if at + 16 + len > buf.len() {
+        return Err(Error::comm("truncated pems1 routed payload"));
+    }
+    Ok((src, dst, &buf[at + 16..at + 16 + len], at + 16 + len))
+}

@@ -1,0 +1,108 @@
+//! EM-Bcast (thesis Alg. 7.2.1, §7.2).
+//!
+//! The root copies its message to the shared buffer and signals; local
+//! threads use *rooted synchronisation* (only threads sharing the root's
+//! partition swap out); remote nodes receive via one node-level broadcast
+//! performed by each node's *first* thread.  Time
+//! `S·2vµ/(PkB) + G·vω/(PDB) + g·ω/b + l + L` (Thm. 7.2.3).
+
+use super::Region;
+use crate::error::{Error, Result};
+use crate::metrics::IoClass;
+use crate::sync::{em_first_thread, em_signal_threads, em_wait_for_root};
+use crate::vp::Vp;
+
+/// Broadcast `send` (valid at the root only) into every VP's `recv`
+/// region.  `root` is a global VP rank.  One virtual superstep.
+pub fn bcast(vp: &mut Vp, root: usize, send: Region, recv: Region) -> Result<()> {
+    let sh = vp.shared().clone();
+    let cfg = sh.cfg.clone();
+    let v_per_p = sh.v_per_p();
+    let me = vp.rank();
+    let my_node = vp.node();
+    let (root_node, root_local) = vp.locate(root);
+    let omega = if me == root { send.1 } else { recv.1 };
+    if recv.1 as usize > cfg.sigma as usize {
+        return Err(Error::comm(format!(
+            "bcast message of {} B exceeds shared buffer σ = {} B",
+            recv.1, cfg.sigma
+        )));
+    }
+
+    if me == root {
+        // Root: copy S into the shared buffer, signal local threads, and
+        // broadcast to other nodes.
+        vp.ensure_resident()?;
+        let data = vp.slice::<u8>(crate::vp::VpMem::from_raw(send.0, send.1 as usize))?.to_vec();
+        {
+            let mut buf = sh.comm.shared_buf.lock().unwrap();
+            buf[..data.len()].copy_from_slice(&data);
+            sh.comm.note_shared_use(data.len());
+        }
+        em_signal_threads(&sh.comm.sig_root, v_per_p, true);
+        if cfg.p > 1 {
+            sh.switch.bcast(my_node, root_node, Some(data.clone()));
+        }
+        // Root also delivers to its own receive region (MPI semantics:
+        // root's recv = its send; copy only if regions differ).
+        if recv.1 > 0 && recv.0 != send.0 {
+            let dst = vp.slice_mut::<u8>(crate::vp::VpMem::from_raw(recv.0, recv.1 as usize))?;
+            dst.copy_from_slice(&data);
+        }
+    } else if root_node == my_node {
+        // Same node as the root: rooted synchronisation.
+        vp.ensure_resident()?;
+        let swapped = em_wait_for_root(&sh.comm.sig_root, vp, root_local, v_per_p)?;
+        deliver_from_shared(vp, recv, swapped)?;
+    } else {
+        // Remote node: the first thread receives into the shared buffer.
+        if cfg.p > 1 && em_first_thread(&sh.comm.sig_first, v_per_p) {
+            let data = sh.switch.bcast(my_node, root_node, None);
+            {
+                let mut buf = sh.comm.shared_buf.lock().unwrap();
+                buf[..data.len()].copy_from_slice(&data);
+                sh.comm.note_shared_use(data.len());
+            }
+            em_signal_threads(&sh.comm.sig_first, v_per_p, false);
+        }
+        vp.ensure_resident()?;
+        deliver_from_shared(vp, recv, false)?;
+    }
+    let _ = omega;
+
+    // End of virtual superstep.
+    if vp.resident {
+        vp.swap_out_all()?;
+        vp.resident = false;
+    }
+    vp.release();
+    vp.superstep_end();
+    Ok(())
+}
+
+/// Copy the broadcast payload from the shared buffer into this VP's
+/// receive region: into partition memory when resident, directly to the
+/// context on disk when the VP yielded its partition to the root
+/// (the G·vω/(PDB) delivery term of Lem. 7.2.1).
+fn deliver_from_shared(vp: &mut Vp, recv: Region, swapped: bool) -> Result<()> {
+    let sh = vp.shared().clone();
+    if recv.1 == 0 {
+        return Ok(());
+    }
+    let data = {
+        let buf = sh.comm.shared_buf.lock().unwrap();
+        buf[..recv.1 as usize].to_vec()
+    };
+    if swapped || !vp.resident {
+        // Context is on disk: deliver directly (no swap-in needed).
+        sh.store.write_to_context(vp.local_rank(), recv.0, &data, IoClass::Delivery)?;
+        // The rest of the context on disk is current (it was swapped out
+        // when yielding), so residency stays false; the next superstep
+        // swaps in a consistent image.
+        vp.resident = false;
+    } else {
+        let dst = vp.slice_mut::<u8>(crate::vp::VpMem::from_raw(recv.0, recv.1 as usize))?;
+        dst.copy_from_slice(&data);
+    }
+    Ok(())
+}

@@ -1,0 +1,199 @@
+//! The boundary-block cache `M` (thesis §6.2).
+//!
+//! Direct message delivery writes the largest block-aligned *interior* of
+//! each message straight to the receiver's context on disk; the unaligned
+//! first/last fragments ("message ends") go through this cache.  Key
+//! observation: a message has at most 2 unaligned blocks, so a receiver
+//! caches at most `2v` blocks — `2v²B/P` bytes per node in total
+//! (Lem. 7.1.5), dramatically less than buffering whole messages.
+//!
+//! Life cycle per Alltoallv:
+//! 1. The *receiver*, while still resident, seeds the cache blocks that
+//!    its receive regions' edges touch with its current memory content
+//!    (so non-message bytes inside a boundary block stay correct).
+//! 2. *Senders* overlay their fragments (they are resident; the
+//!    read-modify-write cycle of generic buffered I/O is avoided).
+//! 3. The *receiver* flushes its blocks to its context on disk in the
+//!    final internal superstep — plain aligned writes, ≤ 2v per VP.
+
+use crate::util::align::align_down;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One cached block.
+#[derive(Debug)]
+struct Block {
+    data: Vec<u8>,
+}
+
+/// Node-level boundary-block cache, keyed by node-logical block base
+/// offset (context slots are block-aligned, so block membership in a
+/// context is unambiguous).
+#[derive(Debug)]
+pub struct BorderCache {
+    block: u64,
+    blocks: Mutex<HashMap<u64, Block>>,
+    hwm: AtomicUsize,
+}
+
+impl BorderCache {
+    /// New cache for block size `block`.
+    pub fn new(block: u64) -> BorderCache {
+        BorderCache { block, blocks: Mutex::new(HashMap::new()), hwm: AtomicUsize::new(0) }
+    }
+
+    /// Block size.
+    pub fn block_size(&self) -> u64 {
+        self.block
+    }
+
+    /// Seed the block containing logical offset `at` from `init`, the
+    /// receiver's in-memory bytes for that whole block (clamped: `init`
+    /// may be shorter than a block at the end of the context).  No-op if
+    /// the block is already cached.
+    pub fn seed_block(&self, at: u64, init: &[u8]) {
+        let base = align_down(at, self.block);
+        let mut m = self.blocks.lock().unwrap();
+        let n = m.len();
+        m.entry(base).or_insert_with(|| {
+            let mut data = vec![0u8; self.block as usize];
+            let l = init.len().min(self.block as usize);
+            data[..l].copy_from_slice(&init[..l]);
+            self.hwm.fetch_max(n + 1, Ordering::Relaxed);
+            Block { data }
+        });
+    }
+
+    /// Overlay a message fragment at logical offset `at`.  The fragment
+    /// must lie within one block and the block must have been seeded by
+    /// the receiver (enforced — delivering to an unseeded block is a
+    /// protocol error).
+    pub fn write_fragment(&self, at: u64, frag: &[u8]) {
+        if frag.is_empty() {
+            return;
+        }
+        let base = align_down(at, self.block);
+        let off = (at - base) as usize;
+        assert!(
+            off + frag.len() <= self.block as usize,
+            "fragment crosses block boundary"
+        );
+        let mut m = self.blocks.lock().unwrap();
+        let b = m
+            .get_mut(&base)
+            .expect("border block not seeded by receiver before sender fragment");
+        b.data[off..off + frag.len()].copy_from_slice(frag);
+    }
+
+    /// Drain all cached blocks whose base lies in `[lo, hi)` — the
+    /// receiver's context slot — returning (base, data) pairs for flushing.
+    pub fn drain_range(&self, lo: u64, hi: u64) -> Vec<(u64, Vec<u8>)> {
+        let mut m = self.blocks.lock().unwrap();
+        let keys: Vec<u64> = m.keys().copied().filter(|&b| b >= lo && b < hi).collect();
+        keys.into_iter()
+            .map(|k| {
+                let b = m.remove(&k).unwrap();
+                (k, b.data)
+            })
+            .collect()
+    }
+
+    /// Number of blocks currently cached.
+    pub fn len(&self) -> usize {
+        self.blocks.lock().unwrap().len()
+    }
+
+    /// True if no blocks cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// High-water mark of cached blocks (Lem. 7.1.5 validation).
+    pub fn high_water_mark(&self) -> usize {
+        self.hwm.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_then_fragment_then_drain() {
+        let c = BorderCache::new(512);
+        let seed: Vec<u8> = (0..512u32).map(|i| (i % 7) as u8).collect();
+        c.seed_block(1024, &seed);
+        c.write_fragment(1024 + 100, &[0xAA; 50]);
+        let drained = c.drain_range(1024, 1536);
+        assert_eq!(drained.len(), 1);
+        let (base, data) = &drained[0];
+        assert_eq!(*base, 1024);
+        // Seeded bytes outside the fragment preserved.
+        assert_eq!(data[0], seed[0]);
+        assert_eq!(data[99], seed[99]);
+        // Fragment applied.
+        assert_eq!(data[100], 0xAA);
+        assert_eq!(data[149], 0xAA);
+        // Tail preserved.
+        assert_eq!(data[150], seed[150]);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn seed_is_idempotent() {
+        let c = BorderCache::new(512);
+        c.seed_block(0, &[1; 512]);
+        c.write_fragment(10, &[9; 5]);
+        c.seed_block(0, &[2; 512]); // must NOT clobber
+        let d = c.drain_range(0, 512);
+        assert_eq!(d[0].1[10], 9);
+        assert_eq!(d[0].1[0], 1);
+    }
+
+    #[test]
+    fn short_seed_zero_pads() {
+        let c = BorderCache::new(512);
+        c.seed_block(0, &[3; 100]); // context shorter than block
+        let d = c.drain_range(0, 512);
+        assert_eq!(d[0].1[99], 3);
+        assert_eq!(d[0].1[100], 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not seeded")]
+    fn fragment_without_seed_panics() {
+        let c = BorderCache::new(512);
+        c.write_fragment(0, &[1; 10]);
+    }
+
+    #[test]
+    #[should_panic(expected = "crosses block boundary")]
+    fn cross_block_fragment_panics() {
+        let c = BorderCache::new(512);
+        c.seed_block(0, &[0; 512]);
+        c.write_fragment(500, &[1; 50]);
+    }
+
+    #[test]
+    fn drain_respects_range() {
+        let c = BorderCache::new(512);
+        c.seed_block(0, &[0; 512]);
+        c.seed_block(512, &[0; 512]);
+        c.seed_block(2048, &[0; 512]);
+        let d = c.drain_range(0, 1024);
+        assert_eq!(d.len(), 2);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn hwm_tracks_peak() {
+        let c = BorderCache::new(512);
+        for i in 0..5 {
+            c.seed_block(i * 512, &[0; 512]);
+        }
+        c.drain_range(0, 5 * 512);
+        assert_eq!(c.high_water_mark(), 5);
+        assert!(c.is_empty());
+    }
+}

@@ -1,0 +1,77 @@
+//! Derived collectives: allgather, allreduce, alltoall, barrier.
+//!
+//! MPI composes these from the primitives; so does PEMS2 (§1.4: "several
+//! common collective communication primitives are merely restricted cases
+//! of Alltoallv").  Each derived call is still a constant number of
+//! virtual supersteps.
+
+use super::{Region, ReduceElem, ReduceOp};
+use crate::error::Result;
+use crate::vp::Vp;
+
+/// MPI_Barrier: a pure superstep barrier (plus node-level sync).
+pub fn barrier(vp: &mut Vp) -> Result<()> {
+    let sh = vp.shared().clone();
+    if vp.resident {
+        vp.swap_out_all()?;
+        vp.resident = false;
+    }
+    vp.release();
+    // One thread per node performs the network barrier.
+    let sh2 = sh.clone();
+    sh.barrier_with(|| {
+        sh2.switch.barrier();
+        sh2.store.flush().expect("flush failed at barrier");
+        for g in &sh2.gates {
+            g.reset_turns();
+        }
+        if sh2.node == 0 {
+            sh2.metrics.superstep();
+        }
+    });
+    vp.resident = false;
+    sh.timeline.mark(vp.rank());
+    Ok(())
+}
+
+/// MPI_Allgather: gather everyone's `send` to rank 0, then broadcast the
+/// concatenation into every VP's `recv` (two virtual supersteps).
+pub fn allgather(vp: &mut Vp, send: Region, recv: Region) -> Result<()> {
+    let v = vp.nranks();
+    let omega = send.1;
+    debug_assert!(recv.1 >= omega * v as u64, "allgather recv too small");
+    // Stage the gathered vector in rank 0's recv region, then bcast it.
+    super::gather(vp, 0, send, if vp.rank() == 0 { recv } else { (0, 0) })?;
+    super::bcast(vp, 0, if vp.rank() == 0 { recv } else { (0, 0) }, recv)?;
+    Ok(())
+}
+
+/// MPI_Allreduce: reduce to rank 0, then broadcast (two supersteps).
+pub fn allreduce<T: ReduceElem>(
+    vp: &mut Vp,
+    op: ReduceOp,
+    send: Region,
+    recv: Region,
+) -> Result<()> {
+    super::reduce::<T>(vp, 0, op, send, recv)?;
+    super::bcast(vp, 0, if vp.rank() == 0 { recv } else { (0, 0) }, recv)?;
+    Ok(())
+}
+
+/// MPI_Alltoall with uniform message size: thin wrapper over Alltoallv.
+/// `send`/`recv` are `v` consecutive messages of `bytes_each`.
+pub fn alltoall_counts(
+    vp: &mut Vp,
+    send: Region,
+    recv: Region,
+    bytes_each: u64,
+) -> Result<()> {
+    let v = vp.nranks();
+    let sends: Vec<Region> = (0..v)
+        .map(|j| (send.0 + j as u64 * bytes_each, bytes_each))
+        .collect();
+    let recvs: Vec<Region> = (0..v)
+        .map(|i| (recv.0 + i as u64 * bytes_each, bytes_each))
+        .collect();
+    vp.alltoallv_regions(&sends, &recvs)
+}

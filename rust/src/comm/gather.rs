@@ -1,0 +1,146 @@
+//! EM-Gather (thesis Alg. 7.3.1, §7.3).
+//!
+//! Every VP sends one message to the root.  Non-root threads copy their
+//! message into their slot of the shared buffer and report via
+//! *final synchronisation* (EM-Thread-Finished); the root waits for all
+//! (yielding its partition — and swapping — only if it arrives early),
+//! then collects the assembled buffer into its receive region.  With
+//! `P > 1`, each node's last thread forwards its node's assembled slab to
+//! the root's node in a single node-level gather.
+//!
+//! Time `S(µ+ω)/(BD) + g·vω/(Pb) + l·v/P + L` (Thm. 7.3.3) — one extra
+//! swap at most (the root's), no per-thread swaps.
+
+use super::Region;
+use crate::error::{Error, Result};
+use crate::metrics::IoClass;
+use crate::sync::{em_all_threads_finished, em_thread_finished, em_wait_threads};
+use crate::vp::Vp;
+
+/// Gather each VP's `send` region to the root's `recv` region (valid at
+/// root only; laid out as `v` consecutive messages ordered by rank).  All
+/// `send` regions must have equal length.  One virtual superstep.
+pub fn gather(vp: &mut Vp, root: usize, send: Region, recv: Region) -> Result<()> {
+    let sh = vp.shared().clone();
+    let cfg = sh.cfg.clone();
+    let v_per_p = sh.v_per_p();
+    let me = vp.rank();
+    let my_node = vp.node();
+    let (root_node, _root_local) = vp.locate(root);
+    let omega = send.1;
+    let node_slab = omega as usize * v_per_p;
+    if node_slab > cfg.sigma as usize {
+        return Err(Error::comm(format!(
+            "gather: node slab {} B exceeds shared buffer σ = {} B",
+            node_slab, cfg.sigma
+        )));
+    }
+    if me == root && (recv.1 as usize) < omega as usize * cfg.v {
+        return Err(Error::comm("gather: root receive region too small"));
+    }
+
+    // Everyone (root included) deposits its message in the shared buffer.
+    vp.ensure_resident()?;
+    {
+        let slot = vp.local_rank() * omega as usize;
+        let data =
+            vp.slice::<u8>(crate::vp::VpMem::from_raw(send.0, send.1 as usize))?.to_vec();
+        let mut buf = sh.comm.shared_buf.lock().unwrap();
+        buf[slot..slot + data.len()].copy_from_slice(&data);
+        sh.comm.note_shared_use(node_slab);
+    }
+
+    if me == root {
+        // Final synchronisation: wait for all local threads.
+        let mut swapped = false;
+        if !em_all_threads_finished(&sh.comm.sig_final, v_per_p) {
+            // Root arrived early: yield the partition (swap at most once).
+            em_wait_threads(&sh.comm.sig_final, vp, &mut swapped)?;
+        }
+        // Collect remote slabs.
+        let slabs: Option<Vec<Vec<u8>>> = if cfg.p > 1 {
+            let mine = sh.comm.shared_buf.lock().unwrap()[..node_slab].to_vec();
+            sh.switch.gather(my_node, root_node, mine)
+        } else {
+            None
+        };
+        // Assemble into R, ordered by global rank.
+        if swapped {
+            // Deliver directly to the context on disk (Lem. 7.3.1: the
+            // copy becomes a disk write of ω·v).
+            let assembled = assemble(&sh, node_slab, omega, slabs, cfg.v, v_per_p)?;
+            sh.store.write_to_context(vp.local_rank(), recv.0, &assembled, IoClass::Delivery)?;
+            vp.resident = false;
+        } else {
+            let assembled = assemble(&sh, node_slab, omega, slabs, cfg.v, v_per_p)?;
+            let dst =
+                vp.slice_mut::<u8>(crate::vp::VpMem::from_raw(recv.0, recv.1 as usize))?;
+            dst[..assembled.len()].copy_from_slice(&assembled);
+        }
+    } else if my_node == root_node {
+        // Root's node: report completion; the root does the collection.
+        em_thread_finished(&sh.comm.sig_final, v_per_p);
+    } else {
+        // Non-root node: no local root exists, so the *last* reporter
+        // forwards the node's assembled slab over the network.
+        let is_last = {
+            let s = &sh.comm.sig_final;
+            s.lock();
+            s.set_count(s.count() + 1);
+            let last = s.count() == v_per_p;
+            if last {
+                s.set_count(0); // reset for the next collective
+            }
+            s.unlock();
+            last
+        };
+        if is_last {
+            let mine = sh.comm.shared_buf.lock().unwrap()[..node_slab].to_vec();
+            sh.switch.gather(my_node, root_node, mine);
+        }
+    }
+
+    if vp.resident {
+        vp.swap_out_all()?;
+        vp.resident = false;
+    }
+    vp.release();
+    vp.superstep_end();
+    Ok(())
+}
+
+/// Interleave local + remote slabs into rank order.
+fn assemble(
+    sh: &std::sync::Arc<crate::vp::NodeShared>,
+    node_slab: usize,
+    omega: u64,
+    slabs: Option<Vec<Vec<u8>>>,
+    v: usize,
+    v_per_p: usize,
+) -> Result<Vec<u8>> {
+    let mut out = vec![0u8; omega as usize * v];
+    let local_slab = sh.comm.shared_buf.lock().unwrap()[..node_slab].to_vec();
+    let w = omega as usize;
+    match slabs {
+        None => {
+            out[..node_slab].copy_from_slice(&local_slab);
+        }
+        Some(slabs) => {
+            for (node, slab) in slabs.into_iter().enumerate() {
+                let slab = if node == sh.node { local_slab.clone() } else { slab };
+                if slab.len() != node_slab {
+                    return Err(Error::comm(format!(
+                        "gather: node {node} slab has {} B, expected {node_slab}",
+                        slab.len()
+                    )));
+                }
+                let base = node * v_per_p * w;
+                out[base..base + node_slab].copy_from_slice(&slab);
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[allow(dead_code)]
+fn _types(_: &dyn Fn(Region)) {}

@@ -1,0 +1,173 @@
+//! Collective communication (thesis Chs. 2, 6, 7).
+//!
+//! * [`alltoallv`] — the PEMS2 direct-delivery EM-Alltoallv
+//!   (Algs. 7.1.1/7.1.2/7.1.3): offset table, direct writes into receiver
+//!   contexts on disk, boundary-block cache, chunked `α` network exchange.
+//! * [`alltoallv_pems1`] — the PEMS1 baseline (Alg. 2.2.1): staging
+//!   through the statically partitioned *indirect area*, with
+//!   intermediary-routed network delivery (§2.3.3) when `P > 1`.
+//! * [`bcast`] / [`gather`] / [`scatter`] / [`reduce`] — the rooted
+//!   collectives of Ch. 7 using the Ch. 4 synchronisation primitives.
+//! * [`derived`] — allgather, allreduce, alltoall, barrier.
+//!
+//! Every collective is called by **all** VPs (SPMD) and constitutes one
+//! virtual superstep: it ends with the context swapped out, the partition
+//! released and the superstep barrier crossed; the next memory access
+//! lazily swaps back in.
+
+pub mod alltoallv;
+pub mod alltoallv_pems1;
+pub mod bcast;
+pub mod border;
+pub mod derived;
+pub mod gather;
+pub mod reduce;
+pub mod scatter;
+
+pub use alltoallv::alltoallv;
+pub use alltoallv_pems1::alltoallv_pems1;
+pub use bcast::bcast;
+pub use border::BorderCache;
+pub use derived::{allgather, allreduce, alltoall_counts, barrier};
+pub use gather::gather;
+pub use reduce::{reduce, ReduceElem, ReduceOp};
+pub use scatter::scatter;
+
+use crate::config::SimConfig;
+use crate::sync::EmSignal;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A message region inside a VP's context: (byte offset, byte length).
+pub type Region = (u64, u64);
+
+/// Per-node shared state used by the collectives.
+pub struct CommState {
+    /// Offset table `T`: `table[local_dst][global_src]` = receive region.
+    /// Sized `v/P × v`; rebuilt per Alltoallv call.
+    pub table: Mutex<Vec<Vec<Region>>>,
+    /// Execution states `E`: local VP has recorded its offsets (and
+    /// initialized its border blocks) this superstep.
+    pub executed: Vec<AtomicBool>,
+    /// Boundary-block cache `M` (§6.2).
+    pub border: BorderCache,
+    /// The shared buffer (σ bytes).
+    pub shared_buf: Mutex<Vec<u8>>,
+    /// Signal for rooted synchronisation.
+    pub sig_root: EmSignal,
+    /// Signal for initial synchronisation.
+    pub sig_first: EmSignal,
+    /// Signal for final synchronisation.
+    pub sig_final: EmSignal,
+    /// Staging area for remote messages (PEMS1 routing and the PEMS2
+    /// α-chunk exchange).
+    pub pems1_staging: Mutex<Vec<(usize, usize, Vec<u8>)>>,
+    /// Per-partition accumulator-slot init flags for EM-Reduce.
+    pub reduce_init: Vec<AtomicBool>,
+    /// High-water mark of shared-buffer usage (Fig. 7.7 validation).
+    pub shared_hwm: AtomicUsize,
+}
+
+impl CommState {
+    /// Build for one node.
+    pub fn new(cfg: &SimConfig) -> CommState {
+        let local = cfg.vps_per_node();
+        CommState {
+            table: Mutex::new(vec![vec![(0, 0); cfg.v]; local]),
+            executed: (0..local).map(|_| AtomicBool::new(false)).collect(),
+            border: BorderCache::new(cfg.block()),
+            shared_buf: Mutex::new(vec![0u8; cfg.sigma as usize]),
+            sig_root: EmSignal::new(),
+            sig_first: EmSignal::new(),
+            sig_final: EmSignal::new(),
+            pems1_staging: Mutex::new(Vec::new()),
+            reduce_init: (0..cfg.k).map(|_| AtomicBool::new(false)).collect(),
+            shared_hwm: AtomicUsize::new(0),
+        }
+    }
+
+    /// Record shared-buffer usage for the Fig. 7.7 buffer-space assertions.
+    pub fn note_shared_use(&self, bytes: usize) {
+        self.shared_hwm.fetch_max(bytes, Ordering::Relaxed);
+    }
+
+    /// Reset the per-call Alltoallv state (done by the first internal
+    /// barrier leader of the *next* call, via `reset_executed`).
+    pub fn reset_executed(&self) {
+        for e in &self.executed {
+            e.store(false, Ordering::Release);
+        }
+    }
+}
+
+impl std::fmt::Debug for CommState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CommState").finish()
+    }
+}
+
+impl crate::vp::Vp {
+    /// Alltoallv dispatching on the configured delivery mode (PEMS2 direct
+    /// vs the PEMS1 indirect baseline).
+    pub fn alltoallv_regions(&mut self, sends: &[Region], recvs: &[Region]) -> crate::Result<()> {
+        match self.config().delivery {
+            crate::config::DeliveryMode::Pems2Direct => alltoallv(self, sends, recvs),
+            crate::config::DeliveryMode::Pems1Indirect => alltoallv_pems1(self, sends, recvs),
+        }
+    }
+
+    /// EM-Bcast (Alg. 7.2.1).
+    pub fn bcast_region(&mut self, root: usize, send: Region, recv: Region) -> crate::Result<()> {
+        bcast(self, root, send, recv)
+    }
+
+    /// EM-Gather (Alg. 7.3.1).
+    pub fn gather_region(&mut self, root: usize, send: Region, recv: Region) -> crate::Result<()> {
+        gather(self, root, send, recv)
+    }
+
+    /// EM-Scatter.
+    pub fn scatter_region(&mut self, root: usize, send: Region, recv: Region) -> crate::Result<()> {
+        scatter(self, root, send, recv)
+    }
+
+    /// EM-Reduce (Alg. 7.4.1).
+    pub fn reduce_region<T: ReduceElem>(
+        &mut self,
+        root: usize,
+        op: ReduceOp,
+        send: Region,
+        recv: Region,
+    ) -> crate::Result<()> {
+        reduce::<T>(self, root, op, send, recv)
+    }
+
+    /// MPI_Barrier.
+    pub fn barrier_collective(&mut self) -> crate::Result<()> {
+        barrier(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comm_state_builds_with_config_sizes() {
+        let cfg = SimConfig::builder().v(8).p(2).k(2).sigma(1024).build().unwrap();
+        let cs = CommState::new(&cfg);
+        assert_eq!(cs.table.lock().unwrap().len(), 4);
+        assert_eq!(cs.table.lock().unwrap()[0].len(), 8);
+        assert_eq!(cs.shared_buf.lock().unwrap().len(), 1024);
+        assert_eq!(cs.executed.len(), 4);
+    }
+
+    #[test]
+    fn shared_hwm_tracks_max() {
+        let cfg = SimConfig::builder().build().unwrap();
+        let cs = CommState::new(&cfg);
+        cs.note_shared_use(100);
+        cs.note_shared_use(50);
+        assert_eq!(cs.shared_hwm.load(Ordering::Relaxed), 100);
+    }
+}

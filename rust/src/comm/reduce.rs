@@ -1,0 +1,197 @@
+//! EM-Reduce (thesis Alg. 7.4.1, §7.4).
+//!
+//! A vectorized reduction: each VP contributes `n` values; the root ends
+//! up with the element-wise reduction of all `v` contributions.  The
+//! shared buffer holds `k` accumulator slots of `n` values; each thread
+//! folds its vector into slot `t mod k` (k-way parallel, step 1 of
+//! Fig. 7.5); the last thread merges the `k` slots (step 2), the node
+//! results are combined across the network by a logarithmic tree
+//! (Lem. 7.4.3 / Fig. 7.6), and the root delivers the result to its
+//! context.  Time `G·nω/B + g·nω·lg(P)/b + l·lg(P) + n·lg(P) + nv/(Pk)
+//! + nk + L` (Thm. 7.4.4).
+//!
+//! Operators must be associative and commutative (the thesis' restriction).
+
+use super::Region;
+use crate::error::{Error, Result};
+use crate::metrics::IoClass;
+use crate::util::bytes::Pod;
+use crate::vp::Vp;
+use std::sync::atomic::Ordering;
+
+/// Reduction operator (MPI_SUM / MPI_MIN / MPI_MAX).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    /// Element-wise sum (wrapping for integers).
+    Sum,
+    /// Element-wise minimum.
+    Min,
+    /// Element-wise maximum.
+    Max,
+}
+
+/// Element types usable in [`reduce`].
+pub trait ReduceElem: Pod + PartialOrd {
+    /// Identity element for `op`.
+    fn identity(op: ReduceOp) -> Self;
+    /// Apply `op`.
+    fn combine(op: ReduceOp, a: Self, b: Self) -> Self;
+}
+
+macro_rules! impl_reduce_int {
+    ($($t:ty),*) => {$(
+        impl ReduceElem for $t {
+            fn identity(op: ReduceOp) -> Self {
+                match op {
+                    ReduceOp::Sum => 0,
+                    ReduceOp::Min => <$t>::MAX,
+                    ReduceOp::Max => <$t>::MIN,
+                }
+            }
+            fn combine(op: ReduceOp, a: Self, b: Self) -> Self {
+                match op {
+                    ReduceOp::Sum => a.wrapping_add(b),
+                    ReduceOp::Min => a.min(b),
+                    ReduceOp::Max => a.max(b),
+                }
+            }
+        }
+    )*};
+}
+impl_reduce_int!(u32, i32, u64, i64);
+
+macro_rules! impl_reduce_float {
+    ($($t:ty),*) => {$(
+        impl ReduceElem for $t {
+            fn identity(op: ReduceOp) -> Self {
+                match op {
+                    ReduceOp::Sum => 0.0,
+                    ReduceOp::Min => <$t>::INFINITY,
+                    ReduceOp::Max => <$t>::NEG_INFINITY,
+                }
+            }
+            fn combine(op: ReduceOp, a: Self, b: Self) -> Self {
+                match op {
+                    ReduceOp::Sum => a + b,
+                    ReduceOp::Min => a.min(b),
+                    ReduceOp::Max => a.max(b),
+                }
+            }
+        }
+    )*};
+}
+impl_reduce_float!(f32, f64);
+
+/// Reduce `send` (an `n`-vector of `T` in every VP) into the root's `recv`
+/// region with operator `op`.  One virtual superstep.
+pub fn reduce<T: ReduceElem>(
+    vp: &mut Vp,
+    root: usize,
+    op: ReduceOp,
+    send: Region,
+    recv: Region,
+) -> Result<()> {
+    let sh = vp.shared().clone();
+    let cfg = sh.cfg.clone();
+    let v_per_p = sh.v_per_p();
+    let k = cfg.k;
+    let me = vp.rank();
+    let my_node = vp.node();
+    let (root_node, _) = vp.locate(root);
+    let n = send.1 as usize / T::SIZE;
+    if send.1 as usize % T::SIZE != 0 {
+        return Err(Error::comm("reduce: send region not a multiple of element size"));
+    }
+    let slot_bytes = n * T::SIZE;
+    if slot_bytes * k > cfg.sigma as usize {
+        return Err(Error::comm(format!(
+            "reduce: k·n = {} B of accumulators exceed shared buffer σ = {} B",
+            slot_bytes * k,
+            cfg.sigma
+        )));
+    }
+
+    // Step 1: fold my vector into accumulator slot (t mod k).  The thread
+    // first swaps out (Alg. 7.4.1 line 2): after this its memory is not
+    // needed again this superstep.
+    vp.ensure_resident()?;
+    let mine: Vec<T> = vp
+        .slice::<T>(crate::vp::VpMem::from_raw(send.0, n))?
+        .to_vec();
+    vp.swap_out_all()?;
+    vp.resident = false;
+    {
+        let slot = vp.partition() * slot_bytes;
+        let mut buf = sh.comm.shared_buf.lock().unwrap();
+        sh.comm.note_shared_use(k * slot_bytes);
+        let acc: &mut [T] =
+            crate::util::bytes::cast_slice_mut(&mut buf[slot..slot + slot_bytes]);
+        // First contributor to this slot initializes it.
+        let init_flag = &sh.comm.reduce_init[vp.partition()];
+        if !init_flag.swap(true, Ordering::AcqRel) {
+            for (a, &m) in acc.iter_mut().zip(&mine) {
+                *a = m;
+            }
+        } else {
+            for (a, &m) in acc.iter_mut().zip(&mine) {
+                *a = T::combine(op, *a, m);
+            }
+        }
+    }
+    vp.release();
+    // All local threads must finish their folds.
+    vp.internal_barrier();
+
+    // Step 2 + 3: one thread per node merges the k slots and joins the
+    // network tree; the root delivers the final result.
+    let is_merger = if my_node == root_node { me == root } else { vp.local_rank() == 0 };
+    if is_merger {
+        let merged: Vec<T> = {
+            let buf = sh.comm.shared_buf.lock().unwrap();
+            let mut out = vec![T::identity(op); n];
+            let slots = k.min(v_per_p);
+            for s in 0..slots {
+                let acc: &[T] = crate::util::bytes::cast_slice(
+                    &buf[s * slot_bytes..(s + 1) * slot_bytes],
+                );
+                for (o, &a) in out.iter_mut().zip(acc) {
+                    *o = T::combine(op, *o, a);
+                }
+            }
+            out
+        };
+        // Reset slot-init flags for the next reduce.
+        for f in &sh.comm.reduce_init {
+            f.store(false, Ordering::Release);
+        }
+        let bytes = crate::util::bytes::as_bytes(&merged).to_vec();
+        let final_bytes = if cfg.p > 1 {
+            sh.switch.reduce(my_node, root_node, bytes, &|acc, other| {
+                let a: &mut [T] = crate::util::bytes::cast_slice_mut(acc);
+                let b: &[T] = crate::util::bytes::cast_slice(other);
+                for (x, &y) in a.iter_mut().zip(b) {
+                    *x = T::combine(op, *x, y);
+                }
+            })
+        } else {
+            Some(bytes)
+        };
+        if me == root {
+            let final_bytes = final_bytes.expect("root receives the reduction");
+            if (recv.1 as usize) < slot_bytes {
+                return Err(Error::comm("reduce: root receive region too small"));
+            }
+            // Deliver directly to the root's context on disk (the root is
+            // swapped out; G·nω/B of Lem. 7.4.2).
+            sh.store.write_to_context(
+                vp.local_rank(),
+                recv.0,
+                &final_bytes,
+                IoClass::Delivery,
+            )?;
+        }
+    }
+    vp.release();
+    vp.superstep_end();
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! EM-Scatter (MPI_Scatter; the dual of EM-Gather).
+//!
+//! The root splits its send region into `v` equal messages; VP `i`
+//! receives the `i`-th.  Rooted synchronisation as in EM-Bcast: the root
+//! copies the *local* portion into the shared buffer and signals; remote
+//! node slabs go out in a single node-level scatter received by each
+//! node's first thread.
+
+use super::Region;
+use crate::error::{Error, Result};
+use crate::metrics::IoClass;
+use crate::sync::{em_first_thread, em_signal_threads, em_wait_for_root};
+use crate::vp::Vp;
+
+/// Scatter the root's `send` region (`v` messages of `recv.1` bytes each,
+/// rank order) into every VP's `recv` region.  One virtual superstep.
+pub fn scatter(vp: &mut Vp, root: usize, send: Region, recv: Region) -> Result<()> {
+    let sh = vp.shared().clone();
+    let cfg = sh.cfg.clone();
+    let v_per_p = sh.v_per_p();
+    let me = vp.rank();
+    let my_node = vp.node();
+    let (root_node, root_local) = vp.locate(root);
+    let omega = recv.1;
+    let node_slab = omega as usize * v_per_p;
+    if node_slab > cfg.sigma as usize {
+        return Err(Error::comm(format!(
+            "scatter: node slab {} B exceeds shared buffer σ = {} B",
+            node_slab, cfg.sigma
+        )));
+    }
+
+    if me == root {
+        if (send.1 as usize) < omega as usize * cfg.v {
+            return Err(Error::comm("scatter: root send region too small"));
+        }
+        vp.ensure_resident()?;
+        let all =
+            vp.slice::<u8>(crate::vp::VpMem::from_raw(send.0, send.1 as usize))?.to_vec();
+        // Local slab into the shared buffer.
+        {
+            let base = root_node * v_per_p * omega as usize;
+            let mut buf = sh.comm.shared_buf.lock().unwrap();
+            buf[..node_slab].copy_from_slice(&all[base..base + node_slab]);
+            sh.comm.note_shared_use(node_slab);
+        }
+        em_signal_threads(&sh.comm.sig_root, v_per_p, true);
+        // Remote slabs via one node-level scatter.
+        if cfg.p > 1 {
+            let slabs: Vec<Vec<u8>> = (0..cfg.p)
+                .map(|n| {
+                    let base = n * v_per_p * omega as usize;
+                    all[base..base + node_slab].to_vec()
+                })
+                .collect();
+            sh.switch.scatter(my_node, root_node, Some(slabs));
+        }
+        // Root's own message.
+        copy_own_slot(vp, recv, omega)?;
+    } else if my_node == root_node {
+        vp.ensure_resident()?;
+        let swapped = em_wait_for_root(&sh.comm.sig_root, vp, root_local, v_per_p)?;
+        deliver_slot(vp, recv, omega, swapped)?;
+    } else {
+        if cfg.p > 1 && em_first_thread(&sh.comm.sig_first, v_per_p) {
+            let slab = sh.switch.scatter(my_node, root_node, None);
+            {
+                let mut buf = sh.comm.shared_buf.lock().unwrap();
+                buf[..slab.len()].copy_from_slice(&slab);
+                sh.comm.note_shared_use(slab.len());
+            }
+            em_signal_threads(&sh.comm.sig_first, v_per_p, false);
+        }
+        vp.ensure_resident()?;
+        deliver_slot(vp, recv, omega, false)?;
+    }
+
+    if vp.resident {
+        vp.swap_out_all()?;
+        vp.resident = false;
+    }
+    vp.release();
+    vp.superstep_end();
+    Ok(())
+}
+
+fn copy_own_slot(vp: &mut Vp, recv: Region, omega: u64) -> Result<()> {
+    let sh = vp.shared().clone();
+    if omega == 0 {
+        return Ok(());
+    }
+    let slot = vp.local_rank() * omega as usize;
+    let data = {
+        let buf = sh.comm.shared_buf.lock().unwrap();
+        buf[slot..slot + omega as usize].to_vec()
+    };
+    let dst = vp.slice_mut::<u8>(crate::vp::VpMem::from_raw(recv.0, recv.1 as usize))?;
+    dst.copy_from_slice(&data);
+    Ok(())
+}
+
+fn deliver_slot(vp: &mut Vp, recv: Region, omega: u64, swapped: bool) -> Result<()> {
+    let sh = vp.shared().clone();
+    if omega == 0 {
+        return Ok(());
+    }
+    let slot = vp.local_rank() * omega as usize;
+    let data = {
+        let buf = sh.comm.shared_buf.lock().unwrap();
+        buf[slot..slot + omega as usize].to_vec()
+    };
+    if swapped || !vp.resident {
+        sh.store.write_to_context(vp.local_rank(), recv.0, &data, IoClass::Delivery)?;
+        vp.resident = false;
+    } else {
+        let dst = vp.slice_mut::<u8>(crate::vp::VpMem::from_raw(recv.0, recv.1 as usize))?;
+        dst.copy_from_slice(&data);
+    }
+    Ok(())
+}

@@ -1,0 +1,467 @@
+//! Simulation configuration (Appendix B.3/B.4 parameters).
+//!
+//! A [`SimConfig`] captures everything the thesis exposes as run-time
+//! parameters: the simulation shape (`P`, `v`, `k`, `µ`, `D`, `σ`, `α`),
+//! the I/O style (Ch. 5), the message-delivery strategy (PEMS1 indirect vs
+//! PEMS2 direct, Ch. 6), the allocator, the disk layout, and the cost-model
+//! coefficients (`S`, `G`, `L`, `g`, `l`, `b`).
+
+use crate::error::{Error, Result};
+use std::path::PathBuf;
+
+/// I/O driver selection (thesis Fig. 8.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IoStyle {
+    /// Synchronous UNIX I/O (pread/pwrite) — PEMS1's only style.
+    Unix,
+    /// Asynchronous I/O with per-partition request queues (§5.1,
+    /// "stxxl-file" in the thesis plots).
+    Async,
+    /// Memory-mapped I/O (§5.2): supersteps cause no explicit swaps.
+    Mmap,
+    /// RAM-backed contexts, no disk at all (§9.1 "mem" driver).
+    Mem,
+}
+
+impl IoStyle {
+    /// Parse from the CLI names used in the thesis plots.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "unix" => Ok(IoStyle::Unix),
+            "async" | "stxxl-file" | "stxxl" => Ok(IoStyle::Async),
+            "mmap" => Ok(IoStyle::Mmap),
+            "mem" => Ok(IoStyle::Mem),
+            other => Err(Error::config(format!("unknown io style '{other}'"))),
+        }
+    }
+
+    /// Label used in plot/CSV output (matches the thesis).
+    pub fn label(&self) -> &'static str {
+        match self {
+            IoStyle::Unix => "unix",
+            IoStyle::Async => "stxxl-file",
+            IoStyle::Mmap => "mmap",
+            IoStyle::Mem => "mem",
+        }
+    }
+
+    /// True if swapping happens through explicit read/write calls.
+    pub fn is_explicit(&self) -> bool {
+        matches!(self, IoStyle::Unix | IoStyle::Async)
+    }
+}
+
+/// Message-delivery strategy: the central PEMS1 -> PEMS2 change (Ch. 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeliveryMode {
+    /// PEMS1: messages staged through a statically-partitioned *indirect
+    /// area* on disk (Alg. 2.2.1); requires an upper bound on message size.
+    Pems1Indirect,
+    /// PEMS2: direct delivery into receiver contexts on disk via the
+    /// offset table + boundary-block cache (Alg. 7.1.1/7.1.2).
+    Pems2Direct,
+}
+
+/// Context allocator choice (§2.3.4 / §6.6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocPolicy {
+    /// PEMS1 bump pointer: no free, whole-prefix swaps.
+    Bump,
+    /// PEMS2 free-list with coalescing; swaps touch only allocated regions.
+    FreeList,
+}
+
+/// On-disk placement of virtual processor contexts (§6.5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layout {
+    /// Each context resides wholly on disk `vp mod D` (needs `k >= D` and
+    /// ID-ordered scheduling for full disk parallelism, Def. 6.5.1).
+    PerVpDisk,
+    /// Contexts striped block-wise round-robin over all `D` disks.
+    Striped,
+}
+
+/// File allocation mode for the backing files (Appendix C.2, Fig. C.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FileAlloc {
+    /// Pre-allocated contiguous extents (ext4 + fallocate).
+    Contiguous,
+    /// Emulated fragmentation: logical blocks permuted across the file
+    /// (ext3-style), charging extra seeks in the disk model.
+    Fragmented,
+}
+
+/// Cost-model coefficients (Appendix B.4).  Units are seconds per block /
+/// per message / per superstep; defaults model a 2009-era SATA disk and
+/// gigabit ethernet so that *charged* times land in the thesis' regime.
+#[derive(Debug, Clone, Copy)]
+pub struct CostCoeffs {
+    /// Disk block size `B` in bytes.
+    pub block: u64,
+    /// `G`: seconds to read/write one block (message delivery I/O).
+    pub g_disk: f64,
+    /// `S`: seconds to read/write one block (swap I/O); 0 for mmap.
+    pub s_swap: f64,
+    /// Base seek penalty in seconds, charged per discontiguous access.
+    pub seek: f64,
+    /// Extra seconds per full-stroke of head travel (distance-dependent
+    /// seek component; Fig. 8.7's µ effect).
+    pub seek_extra: f64,
+    /// Full-stroke distance in bytes (platter span the data occupies).
+    pub stroke: u64,
+    /// `g`: seconds to deliver one network packet of size `b`.
+    pub g_net: f64,
+    /// `l`: seconds of overhead per network superstep.
+    pub l_net: f64,
+    /// `b`: minimum network message size (bytes) for rated throughput.
+    pub b_net: u64,
+    /// `L`: constant overhead per virtual superstep (seconds).
+    pub l_super: f64,
+}
+
+impl Default for CostCoeffs {
+    fn default() -> Self {
+        // ~2009 SATA: 100 MB/s sequential, 8 ms seek; GbE: ~110 MB/s, 50 µs.
+        let block = 512 * 1024u64; // 512 KiB logical block
+        CostCoeffs {
+            block,
+            g_disk: block as f64 / 100e6,
+            s_swap: block as f64 / 100e6,
+            seek: 4e-3,
+            seek_extra: 11e-3,
+            stroke: 200 << 30,
+            g_net: 64e3 / 110e6,
+            l_net: 50e-6,
+            b_net: 64 * 1024,
+            l_super: 1e-3,
+        }
+    }
+}
+
+/// Full simulation configuration.  Build via [`SimConfig::builder`].
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Number of real processors `P` (simulated as in-process nodes).
+    pub p: usize,
+    /// Total number of virtual processors `v` (multiple of `p`).
+    pub v: usize,
+    /// Concurrent threads (= memory partitions) per real processor `k`.
+    pub k: usize,
+    /// Context size `µ` in bytes (per virtual processor).
+    pub mu: u64,
+    /// Disks per real processor `D`.
+    pub d: usize,
+    /// Shared buffer size `σ` in bytes (per real processor).
+    pub sigma: u64,
+    /// Alltoallv network chunk size `α` (messages sent at once, §6.4).
+    pub alpha: usize,
+    /// I/O style (Ch. 5).
+    pub io: IoStyle,
+    /// Delivery strategy (Ch. 6) — selects PEMS1 vs PEMS2 behaviour.
+    pub delivery: DeliveryMode,
+    /// Context allocator (§6.6).
+    pub alloc: AllocPolicy,
+    /// Disk layout (§6.5).
+    pub layout: Layout,
+    /// Backing-file allocation mode (Appendix C.2).
+    pub file_alloc: FileAlloc,
+    /// PEMS1 only: indirect-area slot size (bytes) — the static upper bound
+    /// on a single virtual message (`ω` bound, §2.2).
+    pub indirect_slot: u64,
+    /// Enforce ID-ordered rounds (Def. 6.5.1).  Free-for-all when false.
+    pub ordered_rounds: bool,
+    /// Directory for backing files; temp dir when `None`.
+    pub disk_dir: Option<PathBuf>,
+    /// Cost-model coefficients.
+    pub cost: CostCoeffs,
+    /// Record per-thread per-superstep timelines (Figs. 8.12–8.14).
+    pub record_timeline: bool,
+    /// Use the XLA/PJRT artifacts for computation supersteps when available.
+    pub use_xla: bool,
+    /// Workload seed.
+    pub seed: u64,
+}
+
+impl SimConfig {
+    /// Start building a config (defaults: PEMS2, unix I/O, 1 node).
+    pub fn builder() -> SimConfigBuilder {
+        SimConfigBuilder::default()
+    }
+
+    /// Local virtual processors per node (`v/P`).
+    pub fn vps_per_node(&self) -> usize {
+        self.v / self.p
+    }
+
+    /// Disk block size `B`.
+    pub fn block(&self) -> u64 {
+        self.cost.block
+    }
+
+    /// Context slot size: `µ` rounded up to a block boundary, so context
+    /// bases stay block-aligned on disk.
+    pub fn ctx_slot(&self) -> u64 {
+        crate::util::align::align_up(self.mu, self.block())
+    }
+
+    /// Bytes of context space per node (`vµ/P`, slot-aligned).
+    pub fn context_space_per_node(&self) -> u64 {
+        self.vps_per_node() as u64 * self.ctx_slot()
+    }
+
+    /// Bytes of indirect area per node (PEMS1: slots for **all** `v`
+    /// senders × local receivers — the `vµ`-ish term of Fig. 6.2).
+    pub fn indirect_space_per_node(&self) -> u64 {
+        match self.delivery {
+            DeliveryMode::Pems2Direct => 0,
+            DeliveryMode::Pems1Indirect => {
+                // Each local receiver has a slot per (global) sender
+                // (slots are block-aligned), plus an equally sized transit
+                // area for intermediary routing when P > 1 (§2.3.3).
+                let slot = crate::util::align::align_up(self.indirect_slot.max(1), self.block());
+                let area = self.vps_per_node() as u64 * self.v as u64 * slot;
+                if self.p > 1 {
+                    area * 2
+                } else {
+                    area
+                }
+            }
+        }
+    }
+
+    /// Total backing-file bytes per node.
+    pub fn disk_space_per_node(&self) -> u64 {
+        self.context_space_per_node() + self.indirect_space_per_node()
+    }
+
+    /// Validate all constraints from the thesis.
+    pub fn validate(&self) -> Result<()> {
+        if self.p == 0 || self.v == 0 || self.k == 0 || self.d == 0 {
+            return Err(Error::config("p, v, k, d must all be >= 1"));
+        }
+        if self.v % self.p != 0 {
+            return Err(Error::config(format!(
+                "v ({}) must be a multiple of p ({})",
+                self.v, self.p
+            )));
+        }
+        if self.k > self.vps_per_node() {
+            return Err(Error::config(format!(
+                "k ({}) must be <= v/P ({})",
+                self.k,
+                self.vps_per_node()
+            )));
+        }
+        if self.mu == 0 {
+            return Err(Error::config("mu must be positive"));
+        }
+        if self.alpha == 0 {
+            return Err(Error::config("alpha must be >= 1"));
+        }
+        if self.delivery == DeliveryMode::Pems1Indirect && self.indirect_slot == 0 {
+            return Err(Error::config(
+                "PEMS1 indirect delivery requires indirect_slot (the static \
+                 message-size bound) to be set",
+            ));
+        }
+        if self.delivery == DeliveryMode::Pems1Indirect && !self.io.is_explicit() {
+            return Err(Error::config(
+                "PEMS1 indirect delivery requires an explicit I/O style (unix/async)",
+            ));
+        }
+        if self.io == IoStyle::Mmap && self.layout != Layout::PerVpDisk {
+            return Err(Error::config(
+                "mmap I/O requires layout=per-vp (contiguous contexts in one file)",
+            ));
+        }
+        if self.p > 1 && !self.ordered_rounds {
+            return Err(Error::config(
+                "multi-node runs require ordered rounds (the round structure \
+                 drives the lockstep network exchanges)",
+            ));
+        }
+        if self.layout == Layout::PerVpDisk && self.k < self.d && self.ordered_rounds {
+            // Def. 6.5.1: per-VP placement needs k >= D for full disk
+            // parallelism; allowed, but the cost model will show it.
+        }
+        Ok(())
+    }
+}
+
+/// Builder for [`SimConfig`].
+#[derive(Debug, Clone)]
+pub struct SimConfigBuilder {
+    cfg: SimConfig,
+}
+
+impl Default for SimConfigBuilder {
+    fn default() -> Self {
+        SimConfigBuilder {
+            cfg: SimConfig {
+                p: 1,
+                v: 4,
+                k: 1,
+                mu: 4 << 20,
+                d: 1,
+                sigma: 4 << 20,
+                alpha: 4,
+                io: IoStyle::Unix,
+                delivery: DeliveryMode::Pems2Direct,
+                alloc: AllocPolicy::FreeList,
+                layout: Layout::Striped,
+                file_alloc: FileAlloc::Contiguous,
+                indirect_slot: 0,
+                ordered_rounds: true,
+                disk_dir: None,
+                cost: CostCoeffs::default(),
+                record_timeline: false,
+                use_xla: false,
+                seed: 0xF00D,
+            },
+        }
+    }
+}
+
+macro_rules! setter {
+    ($($(#[$doc:meta])* $name:ident: $ty:ty),* $(,)?) => {
+        $($(#[$doc])*
+        pub fn $name(mut self, val: $ty) -> Self {
+            self.cfg.$name = val;
+            self
+        })*
+    };
+}
+
+impl SimConfigBuilder {
+    setter! {
+        /// Real processors `P`.
+        p: usize,
+        /// Virtual processors `v`.
+        v: usize,
+        /// Threads / memory partitions per node `k`.
+        k: usize,
+        /// Context size `µ` (bytes).
+        mu: u64,
+        /// Disks per node `D`.
+        d: usize,
+        /// Shared buffer `σ` (bytes).
+        sigma: u64,
+        /// Alltoallv chunk `α`.
+        alpha: usize,
+        /// I/O style.
+        io: IoStyle,
+        /// Delivery mode (PEMS1 vs PEMS2).
+        delivery: DeliveryMode,
+        /// Allocator policy.
+        alloc: AllocPolicy,
+        /// Disk layout.
+        layout: Layout,
+        /// File allocation mode.
+        file_alloc: FileAlloc,
+        /// PEMS1 indirect slot size (message bound, bytes).
+        indirect_slot: u64,
+        /// ID-ordered rounds.
+        ordered_rounds: bool,
+        /// Cost coefficients.
+        cost: CostCoeffs,
+        /// Record timelines.
+        record_timeline: bool,
+        /// Enable XLA compute path.
+        use_xla: bool,
+        /// Workload seed.
+        seed: u64,
+    }
+
+    /// Backing directory for context files.
+    pub fn disk_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.disk_dir = Some(dir.into());
+        self
+    }
+
+    /// Set block size `B` (bytes).  Per-block transfer times (`S`, `G`)
+    /// are rescaled to preserve the implied disk bandwidth.
+    pub fn block(mut self, b: u64) -> Self {
+        let old = self.cfg.cost.block.max(1) as f64;
+        let scale = b as f64 / old;
+        self.cfg.cost.g_disk *= scale;
+        self.cfg.cost.s_swap *= scale;
+        self.cfg.cost.block = b;
+        self
+    }
+
+    /// Finalize and validate.
+    pub fn build(self) -> Result<SimConfig> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_builds() {
+        let c = SimConfig::builder().build().unwrap();
+        assert_eq!(c.p, 1);
+        assert_eq!(c.vps_per_node(), 4);
+    }
+
+    #[test]
+    fn v_must_divide_p() {
+        assert!(SimConfig::builder().p(3).v(4).build().is_err());
+    }
+
+    #[test]
+    fn k_bounded_by_local_vps() {
+        assert!(SimConfig::builder().v(4).k(8).build().is_err());
+        assert!(SimConfig::builder().v(8).k(8).build().is_ok());
+    }
+
+    #[test]
+    fn pems1_requires_slot_bound() {
+        let r = SimConfig::builder()
+            .delivery(DeliveryMode::Pems1Indirect)
+            .build();
+        assert!(r.is_err());
+        let r = SimConfig::builder()
+            .delivery(DeliveryMode::Pems1Indirect)
+            .indirect_slot(4096)
+            .build();
+        assert!(r.is_ok());
+    }
+
+    #[test]
+    fn disk_space_matches_fig6_2_shape() {
+        // Fig. 6.2: PEMS1 per-node space grows with v; PEMS2 is flat v*mu/P.
+        let mk = |p: usize, delivery| {
+            SimConfig::builder()
+                .p(p)
+                .v(8 * p)
+                .mu(1 << 20)
+                .delivery(delivery)
+                .indirect_slot(1 << 17)
+                .build()
+                .unwrap()
+        };
+        let p2_1 = mk(1, DeliveryMode::Pems2Direct).disk_space_per_node();
+        let p2_4 = mk(4, DeliveryMode::Pems2Direct).disk_space_per_node();
+        assert_eq!(p2_1, p2_4); // PEMS2: constant per node as P scales
+        let p1_1 = mk(1, DeliveryMode::Pems1Indirect).disk_space_per_node();
+        let p1_4 = mk(4, DeliveryMode::Pems1Indirect).disk_space_per_node();
+        assert!(p1_4 > p1_1); // PEMS1: grows with total v
+    }
+
+    #[test]
+    fn io_style_parse_round_trip() {
+        for (s, want) in [
+            ("unix", IoStyle::Unix),
+            ("stxxl-file", IoStyle::Async),
+            ("mmap", IoStyle::Mmap),
+            ("mem", IoStyle::Mem),
+        ] {
+            assert_eq!(IoStyle::parse(s).unwrap(), want);
+        }
+        assert!(IoStyle::parse("floppy").is_err());
+    }
+}

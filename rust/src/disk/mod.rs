@@ -1,0 +1,456 @@
+//! Per-node disk model (thesis §6.3, §6.5, Appendix C.2).
+//!
+//! Each simulated real processor owns `D` disks, each backed by one real
+//! file.  A node exposes a single *logical* byte space:
+//!
+//! ```text
+//!   [0, vµ/P)                        virtual processor contexts
+//!   [vµ/P, vµ/P + indirect_space)    PEMS1 indirect area (PEMS2: empty)
+//! ```
+//!
+//! The [`Layout`] maps logical offsets to (disk, physical offset):
+//! * `PerVpDisk` — context `c` lives wholly on disk `c mod D` (Def. 6.5.1
+//!   requires `k >= D` + ID-ordered rounds for full parallelism);
+//! * `Striped` — block-wise round-robin over all disks (fully parallel for
+//!   any access of `>= BD` bytes).
+//!
+//! The model also carries the *seek accounting* and the emulated
+//! file-system fragmentation of Appendix C.2 (Fig. C.1): in `Fragmented`
+//! mode physical blocks are permuted by a deterministic bijection, so
+//! logically sequential access becomes physically scattered — the ext3
+//! behaviour the thesis warns about.
+
+use crate::config::{FileAlloc, Layout, SimConfig};
+use crate::error::Result;
+use crate::io::{DiskFile, IoDriver};
+use crate::metrics::{IoClass, Metrics};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// One node's set of `D` disks plus the logical-to-physical mapping.
+pub struct DiskSet {
+    disks: Vec<DiskState>,
+    driver: Arc<dyn IoDriver>,
+    metrics: Arc<Metrics>,
+    layout: Layout,
+    block: u64,
+    ctx_slot: u64,
+    d: usize,
+    contexts_len: u64,
+    /// Physical capacity (blocks) per disk — fragmentation permutes within.
+    blocks_per_disk: u64,
+    frag: FileAlloc,
+    dir: PathBuf,
+    owns_dir: bool,
+}
+
+struct DiskState {
+    file: DiskFile,
+    /// Last physical end offset, for seek detection.
+    head: Mutex<u64>,
+}
+
+/// A contiguous physical extent of one I/O operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Extent {
+    /// Disk index within the node.
+    pub disk: usize,
+    /// Physical byte offset in the disk file.
+    pub phys: u64,
+    /// Offset into the caller's buffer.
+    pub buf_off: usize,
+    /// Extent length in bytes.
+    pub len: usize,
+}
+
+impl DiskSet {
+    /// Create the disk files for one node.
+    pub fn create(
+        cfg: &SimConfig,
+        node: usize,
+        driver: Arc<dyn IoDriver>,
+        metrics: Arc<Metrics>,
+    ) -> Result<DiskSet> {
+        let (dir, owns_dir) = match &cfg.disk_dir {
+            Some(d) => (d.join(format!("node{node}")), false),
+            None => (
+                std::env::temp_dir().join(format!(
+                    "pems2-{}-{}-node{node}",
+                    std::process::id(),
+                    unique_serial()
+                )),
+                true,
+            ),
+        };
+        std::fs::create_dir_all(&dir)?;
+        let total = cfg.disk_space_per_node();
+        let blocks_total = total.div_ceil(cfg.block());
+        let blocks_per_disk = blocks_total.div_ceil(cfg.d as u64).max(1);
+        let per_disk_len = blocks_per_disk * cfg.block();
+        let mut disks = Vec::with_capacity(cfg.d);
+        for i in 0..cfg.d {
+            let path = dir.join(format!("disk{i}.dat"));
+            let file = std::fs::OpenOptions::new()
+                .create(true)
+                .read(true)
+                .write(true)
+                .truncate(true)
+                .open(&path)?;
+            file.set_len(per_disk_len)?;
+            disks.push(DiskState {
+                file: DiskFile { index: i, file },
+                head: Mutex::new(0),
+            });
+        }
+        Ok(DiskSet {
+            disks,
+            driver,
+            metrics,
+            layout: cfg.layout,
+            block: cfg.block(),
+            ctx_slot: cfg.ctx_slot(),
+            d: cfg.d,
+            contexts_len: cfg.context_space_per_node(),
+            blocks_per_disk,
+            frag: cfg.file_alloc,
+            dir,
+            owns_dir,
+        })
+    }
+
+    /// Logical bytes devoted to contexts.
+    pub fn contexts_len(&self) -> u64 {
+        self.contexts_len
+    }
+
+    /// Access a raw disk file (used by the mmap context store).
+    pub fn disk_file(&self, i: usize) -> &DiskFile {
+        &self.disks[i].file
+    }
+
+    /// Number of disks.
+    pub fn num_disks(&self) -> usize {
+        self.d
+    }
+
+    /// The backing directory.
+    pub fn dir(&self) -> &std::path::Path {
+        &self.dir
+    }
+
+    /// Fragmentation permutation: map a physical block index to its
+    /// "on-platter" location.  Identity for contiguous allocation; an
+    /// affine bijection mod the disk's block count for fragmented mode.
+    fn permute_block(&self, block_idx: u64) -> u64 {
+        match self.frag {
+            FileAlloc::Contiguous => block_idx,
+            FileAlloc::Fragmented => {
+                let n = self.blocks_per_disk;
+                // Odd multiplier is coprime to any power of two; for
+                // general n use a multiplier coprime to n by construction.
+                let mut a = 2_654_435_761u64 % n;
+                while n > 1 && gcd(a, n) != 1 {
+                    a = (a + 1) % n;
+                }
+                if n <= 1 {
+                    0
+                } else {
+                    (block_idx % n).wrapping_mul(a) % n
+                }
+            }
+        }
+    }
+
+    /// Split a logical `[off, off+len)` range into physical extents.
+    pub fn extents(&self, off: u64, len: usize) -> Vec<Extent> {
+        let mut out = Vec::new();
+        if len == 0 {
+            return out;
+        }
+        let end = off + len as u64;
+        let mut cur = off;
+        let mut buf_off = 0usize;
+        while cur < end {
+            let (disk, phys_block, in_block_off, span) = self.map_logical(cur, end);
+            let phys = self.permute_block(phys_block) * self.block + in_block_off;
+            // In fragmented mode each block is its own extent; in
+            // contiguous mode merge with the previous extent if adjacent.
+            let ext = Extent { disk, phys, buf_off, len: span as usize };
+            if let Some(last) = out.last_mut() {
+                let l: &mut Extent = last;
+                if l.disk == ext.disk
+                    && l.phys + l.len as u64 == ext.phys
+                    && l.buf_off + l.len == ext.buf_off
+                {
+                    l.len += ext.len;
+                    cur += span;
+                    buf_off += span as usize;
+                    continue;
+                }
+            }
+            out.push(ext);
+            cur += span;
+            buf_off += span as usize;
+        }
+        out
+    }
+
+    /// Map one logical offset to (disk, physical block index, offset within
+    /// block, contiguous span until the next mapping boundary or `end`).
+    fn map_logical(&self, off: u64, end: u64) -> (usize, u64, u64, u64) {
+        match self.layout {
+            Layout::Striped => {
+                let bi = off / self.block;
+                let within = off % self.block;
+                let disk = (bi % self.d as u64) as usize;
+                let phys_block = bi / self.d as u64;
+                let span = (self.block - within).min(end - off);
+                (disk, phys_block, within, span)
+            }
+            Layout::PerVpDisk => {
+                if off < self.contexts_len {
+                    // Context region: context c on disk c mod D, packed.
+                    let c = off / self.ctx_slot;
+                    let within_ctx = off % self.ctx_slot;
+                    let disk = (c % self.d as u64) as usize;
+                    let ordinal = c / self.d as u64;
+                    let phys = ordinal * self.ctx_slot + within_ctx;
+                    let phys_block = phys / self.block;
+                    let within = phys % self.block;
+                    let span = (self.block - within)
+                        .min(self.ctx_slot - within_ctx)
+                        .min(end - off);
+                    (disk, phys_block, within, span)
+                } else {
+                    // Indirect area (PEMS1): striped after the context space.
+                    let rel = off - self.contexts_len;
+                    let bi = rel / self.block;
+                    let within = rel % self.block;
+                    let disk = (bi % self.d as u64) as usize;
+                    let ctx_blocks_per_disk =
+                        (self.contexts_len.div_ceil(self.d as u64)).div_ceil(self.block);
+                    let phys_block = ctx_blocks_per_disk + bi / self.d as u64;
+                    let span = (self.block - within).min(end - off);
+                    (disk, phys_block, within, span)
+                }
+            }
+        }
+    }
+
+    fn account(&self, ext: &Extent) {
+        let mut head = self.disks[ext.disk].head.lock().unwrap();
+        if *head != ext.phys {
+            self.metrics.seek(head.abs_diff(ext.phys));
+        }
+        *head = ext.phys + ext.len as u64;
+    }
+
+    /// Read logical range into `buf`, charging `class` I/O.
+    pub fn read(&self, class: IoClass, off: u64, buf: &mut [u8]) -> Result<()> {
+        for ext in self.extents(off, buf.len()) {
+            self.account(&ext);
+            self.driver.read_at(
+                &self.disks[ext.disk].file,
+                ext.phys,
+                &mut buf[ext.buf_off..ext.buf_off + ext.len],
+            )?;
+            self.metrics.read(class, ext.len as u64);
+        }
+        Ok(())
+    }
+
+    /// Write logical range from `data`, charging `class` I/O.
+    pub fn write(&self, class: IoClass, off: u64, data: &[u8]) -> Result<()> {
+        for ext in self.extents(off, data.len()) {
+            self.account(&ext);
+            self.driver.write_at(
+                &self.disks[ext.disk].file,
+                ext.phys,
+                &data[ext.buf_off..ext.buf_off + ext.len],
+            )?;
+            self.metrics.write(class, ext.len as u64);
+        }
+        Ok(())
+    }
+
+    /// Wait for deferred writes (async driver) to complete.
+    pub fn flush(&self) -> Result<()> {
+        self.driver.flush_all()
+    }
+
+    /// Driver in use.
+    pub fn driver_name(&self) -> &'static str {
+        self.driver.name()
+    }
+}
+
+impl Drop for DiskSet {
+    fn drop(&mut self) {
+        // Best-effort cleanup of backing files.
+        let _ = self.driver.flush_all();
+        if self.owns_dir {
+            let _ = std::fs::remove_dir_all(&self.dir);
+        }
+    }
+}
+
+impl std::fmt::Debug for DiskSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DiskSet")
+            .field("d", &self.d)
+            .field("layout", &self.layout)
+            .field("dir", &self.dir)
+            .finish()
+    }
+}
+
+fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+fn unique_serial() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SERIAL: AtomicU64 = AtomicU64::new(0);
+    SERIAL.fetch_add(1, Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::io::unix::UnixIo;
+
+    fn mk(layout: Layout, d: usize, frag: FileAlloc) -> DiskSet {
+        let cfg = SimConfig::builder()
+            .v(4)
+            .mu(1 << 16)
+            .d(d)
+            .layout(layout)
+            .file_alloc(frag)
+            .block(4096)
+            .build()
+            .unwrap();
+        DiskSet::create(&cfg, 0, Arc::new(UnixIo::new()), Arc::new(Metrics::new())).unwrap()
+    }
+
+    #[test]
+    fn striped_round_trip_multi_disk() {
+        let ds = mk(Layout::Striped, 3, FileAlloc::Contiguous);
+        let data: Vec<u8> = (0..40_000u32).map(|i| (i % 251) as u8).collect();
+        ds.write(IoClass::Swap, 1234, &data).unwrap();
+        let mut back = vec![0u8; data.len()];
+        ds.read(IoClass::Swap, 1234, &mut back).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn per_vp_round_trip() {
+        let ds = mk(Layout::PerVpDisk, 2, FileAlloc::Contiguous);
+        // Write into the middle of context 3 (disk 3 mod 2 = 1).
+        let off = 3 * (1 << 16) + 77;
+        let data = vec![0x5A; 9000];
+        ds.write(IoClass::Delivery, off, &data).unwrap();
+        let mut back = vec![0u8; data.len()];
+        ds.read(IoClass::Delivery, off, &mut back).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn fragmented_round_trip() {
+        let ds = mk(Layout::Striped, 2, FileAlloc::Fragmented);
+        let data: Vec<u8> = (0..30_000u32).map(|i| (i % 13) as u8).collect();
+        ds.write(IoClass::Swap, 4096, &data).unwrap();
+        let mut back = vec![0u8; data.len()];
+        ds.read(IoClass::Swap, 4096, &mut back).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn striped_extents_round_robin() {
+        let ds = mk(Layout::Striped, 2, FileAlloc::Contiguous);
+        let exts = ds.extents(0, 3 * 4096);
+        assert_eq!(exts.len(), 3);
+        assert_eq!(exts[0].disk, 0);
+        assert_eq!(exts[1].disk, 1);
+        assert_eq!(exts[2].disk, 0);
+        assert_eq!(exts[2].phys, 4096); // second block on disk 0
+    }
+
+    #[test]
+    fn per_vp_extents_stay_on_one_disk() {
+        let ds = mk(Layout::PerVpDisk, 2, FileAlloc::Contiguous);
+        // Whole context 1 lives on disk 1.
+        let exts = ds.extents(1 << 16, 1 << 16);
+        assert!(exts.iter().all(|e| e.disk == 1));
+    }
+
+    #[test]
+    fn fragmented_mode_causes_more_seeks() {
+        let cfg = |frag| {
+            SimConfig::builder()
+                .v(4)
+                .mu(1 << 20)
+                .d(1)
+                .layout(Layout::Striped)
+                .file_alloc(frag)
+                .block(4096)
+                .build()
+                .unwrap()
+        };
+        let seq_seeks = |frag| {
+            let metrics = Arc::new(Metrics::new());
+            let ds = DiskSet::create(
+                &cfg(frag),
+                0,
+                Arc::new(UnixIo::new()),
+                metrics.clone(),
+            )
+            .unwrap();
+            let data = vec![0u8; 1 << 18];
+            ds.write(IoClass::Swap, 0, &data).unwrap();
+            metrics.snapshot().seeks
+        };
+        let contiguous = seq_seeks(FileAlloc::Contiguous);
+        let fragmented = seq_seeks(FileAlloc::Fragmented);
+        assert!(contiguous <= 2, "contiguous sequential write should not seek, got {contiguous}");
+        assert!(
+            fragmented > contiguous * 10,
+            "fragmented should seek per block: {fragmented} vs {contiguous}"
+        );
+    }
+
+    #[test]
+    fn sequential_writes_do_not_seek() {
+        let metrics = Arc::new(Metrics::new());
+        let cfg = SimConfig::builder()
+            .v(4)
+            .mu(1 << 16)
+            .d(1)
+            .block(4096)
+            .build()
+            .unwrap();
+        let ds = DiskSet::create(&cfg, 0, Arc::new(UnixIo::new()), metrics.clone()).unwrap();
+        ds.write(IoClass::Swap, 0, &vec![0u8; 8192]).unwrap();
+        ds.write(IoClass::Swap, 8192, &vec![0u8; 8192]).unwrap();
+        // First access counts one seek (head at 0 matches only by luck of
+        // initialization); the second is contiguous.
+        let seeks = metrics.snapshot().seeks;
+        assert!(seeks <= 1, "expected <=1 seek, got {seeks}");
+    }
+
+    #[test]
+    fn cleanup_removes_dir() {
+        let dir;
+        {
+            let ds = mk(Layout::Striped, 1, FileAlloc::Contiguous);
+            dir = ds.dir().to_path_buf();
+            assert!(dir.exists());
+        }
+        assert!(!dir.exists());
+    }
+}

@@ -1,0 +1,258 @@
+//! The simulation engine: builds the nodes and runs a BSP program over
+//! all `v` virtual processors.
+//!
+//! [`run`] is the main entry point: it constructs the `P` in-process
+//! "real processors" (disk sets, context stores, partitions, signals, the
+//! switch), spawns one OS thread per virtual processor, executes the
+//! user's SPMD program, and returns a [`RunReport`] with wall-clock time,
+//! measured I/O/network counters and model-charged time.
+
+use crate::alloc::make_alloc;
+use crate::comm::CommState;
+use crate::config::{IoStyle, SimConfig};
+use crate::disk::DiskSet;
+use crate::error::{Error, Result};
+use crate::io::{aio::AsyncIo, unix::UnixIo, IoDriver};
+use crate::metrics::{cost::ChargedTime, CostModel, Metrics, MetricsSnapshot, Timeline};
+use crate::net::Switch;
+use crate::runtime::Compute;
+use crate::sync::SuperstepBarrier;
+use crate::vp::{NodeShared, PartitionGate, Store, Vp};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Result of a simulation run.
+#[derive(Debug)]
+pub struct RunReport {
+    /// Wall-clock duration of the whole simulation.
+    pub wall: std::time::Duration,
+    /// Measured counters.
+    pub metrics: MetricsSnapshot,
+    /// Model-charged time (Appendix B.4 coefficients).
+    pub charged: ChargedTime,
+    /// Per-thread per-superstep timelines (if recording was enabled).
+    pub timelines: Option<Vec<Vec<f64>>>,
+    /// Shared-buffer high-water mark per node (Fig. 7.7 validation).
+    pub shared_buf_hwm: Vec<usize>,
+    /// Border-cache high-water mark (blocks) per node (Lem. 7.1.5).
+    pub border_hwm: Vec<usize>,
+    /// Whether the XLA compute path was active.
+    pub xla_active: bool,
+}
+
+/// Run `program` on every virtual processor under `cfg`.
+///
+/// The program is SPMD: each of the `v` VP threads gets its own [`Vp`]
+/// handle.  Panics inside a VP become [`Error::VpPanic`].
+pub fn run<F>(cfg: SimConfig, program: F) -> Result<RunReport>
+where
+    F: Fn(&mut Vp) -> Result<()> + Send + Sync + 'static,
+{
+    run_arc(cfg, Arc::new(program))
+}
+
+/// [`run`] with a pre-wrapped program (for reuse across runs).
+pub fn run_arc(
+    cfg: SimConfig,
+    program: Arc<dyn Fn(&mut Vp) -> Result<()> + Send + Sync>,
+) -> Result<RunReport> {
+    cfg.validate()?;
+    let metrics = Arc::new(Metrics::new());
+    let timeline = Arc::new(Timeline::new(cfg.v, cfg.record_timeline));
+    let switch = Switch::new(cfg.p, metrics.clone());
+    let compute = Arc::new(Compute::auto("artifacts", cfg.use_xla));
+
+    // Build the nodes.
+    let mut nodes: Vec<Arc<NodeShared>> = Vec::with_capacity(cfg.p);
+    for node in 0..cfg.p {
+        let driver: Arc<dyn IoDriver> = match cfg.io {
+            IoStyle::Async => Arc::new(AsyncIo::new(cfg.d.max(2))),
+            _ => Arc::new(UnixIo::new()),
+        };
+        let disks = if cfg.io == IoStyle::Mem {
+            None
+        } else {
+            Some(Arc::new(DiskSet::create(&cfg, node, driver, metrics.clone())?))
+        };
+        let store = Store::create(&cfg, disks, metrics.clone())?;
+        let vpp = cfg.vps_per_node();
+        let rounds = vpp.div_ceil(cfg.k);
+        let shared = NodeShared {
+            cfg: cfg.clone(),
+            node,
+            store,
+            gates: (0..cfg.k).map(|_| PartitionGate::new(cfg.ordered_rounds)).collect(),
+            barrier: SuperstepBarrier::new(vpp),
+            round_barriers: (0..rounds)
+                .map(|r| SuperstepBarrier::new(vpp.min((r + 1) * cfg.k) - r * cfg.k))
+                .collect(),
+            allocs: (0..vpp).map(|_| Mutex::new(make_alloc(cfg.alloc, cfg.mu))).collect(),
+            metrics: metrics.clone(),
+            timeline: timeline.clone(),
+            switch: switch.clone(),
+            comm: CommState::new(&cfg),
+            compute: compute.clone(),
+        };
+        nodes.push(Arc::new(shared));
+    }
+
+    // Spawn one thread per virtual processor.
+    let start = Instant::now();
+    let mut handles = Vec::with_capacity(cfg.v);
+    for node in nodes.iter() {
+        for local in 0..cfg.vps_per_node() {
+            let node = node.clone();
+            let program = program.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("vp-{}-{}", node.node, local))
+                    .stack_size(4 << 20)
+                    .spawn(move || -> Result<()> {
+                        let mut vp = Vp::new(node, local);
+                        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || program(&mut vp),
+                        ));
+                        // Persist the final context image so post-run
+                        // inspection (and metrics) see a consistent state,
+                        // then release the partition and retire from
+                        // turn-taking so siblings make progress.
+                        if vp.resident && matches!(r, Ok(Ok(()))) {
+                            let _ = crate::sync::PartitionYield::swap_out(&mut vp);
+                        }
+                        vp.release();
+                        vp.retire();
+                        match r {
+                            Ok(inner) => inner,
+                            Err(p) => {
+                                let msg = p
+                                    .downcast_ref::<String>()
+                                    .cloned()
+                                    .or_else(|| {
+                                        p.downcast_ref::<&str>().map(|s| s.to_string())
+                                    })
+                                    .unwrap_or_else(|| "<non-string panic>".into());
+                                Err(Error::VpPanic(vp.rank(), msg))
+                            }
+                        }
+                    })
+                    .expect("spawn vp thread"),
+            );
+        }
+    }
+
+    let mut first_err: Option<Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
+            Err(_) => first_err = first_err.or(Some(Error::comm("vp thread crashed"))),
+        }
+    }
+    let wall = start.elapsed();
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+
+    // Final flush so deferred writes are counted.
+    for node in &nodes {
+        node.store.flush()?;
+    }
+
+    let snapshot = metrics.snapshot();
+    // P nodes each drive D disks concurrently: the charged-time divisor
+    // for disk terms is D·P (network/superstep terms are already
+    // counted per-relation / per-superstep globally).
+    let mut model = CostModel::new(cfg.cost, cfg.d);
+    model.disk_parallelism = (cfg.d * cfg.p) as f64;
+    Ok(RunReport {
+        wall,
+        metrics: snapshot,
+        charged: model.charge(&snapshot),
+        timelines: if cfg.record_timeline { Some(timeline.series()) } else { None },
+        shared_buf_hwm: nodes
+            .iter()
+            .map(|n| n.comm.shared_hwm.load(std::sync::atomic::Ordering::Relaxed))
+            .collect(),
+        border_hwm: nodes.iter().map(|n| n.comm.border.high_water_mark()).collect(),
+        xla_active: compute.xla_active(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_program_runs() {
+        let cfg = SimConfig::builder().v(4).k(2).mu(1 << 16).block(4096).build().unwrap();
+        let report = run(cfg, |_vp| Ok(())).unwrap();
+        assert_eq!(report.metrics.supersteps, 0);
+    }
+
+    #[test]
+    fn ranks_are_unique_and_complete() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let seen = Arc::new(AtomicU64::new(0));
+        let seen2 = seen.clone();
+        let cfg = SimConfig::builder()
+            .p(2)
+            .v(8)
+            .k(2)
+            .mu(1 << 16)
+            .block(4096)
+            .build()
+            .unwrap();
+        run(cfg, move |vp| {
+            assert!(vp.rank() < 8);
+            assert_eq!(vp.nranks(), 8);
+            seen2.fetch_or(1 << vp.rank(), Ordering::Relaxed);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen.load(Ordering::Relaxed), 0xFF);
+    }
+
+    #[test]
+    fn vp_panic_is_reported() {
+        let cfg = SimConfig::builder().v(2).mu(1 << 16).block(4096).build().unwrap();
+        let err = run(cfg, |vp| {
+            if vp.rank() == 1 {
+                panic!("boom");
+            }
+            // rank 0 must not hang even though rank 1 died: no collective
+            // is in flight here.
+            Ok(())
+        })
+        .unwrap_err();
+        match err {
+            Error::VpPanic(rank, msg) => {
+                assert_eq!(rank, 1);
+                assert!(msg.contains("boom"));
+            }
+            other => panic!("unexpected error {other}"),
+        }
+    }
+
+    #[test]
+    fn alloc_write_read_across_residency() {
+        let cfg = SimConfig::builder().v(4).k(2).mu(1 << 16).block(4096).build().unwrap();
+        let report = run(cfg, |vp| {
+            let m = vp.alloc::<u32>(100)?;
+            let rank = vp.rank() as u32;
+            vp.slice_mut(m)?.iter_mut().enumerate().for_each(|(i, x)| {
+                *x = rank * 1000 + i as u32;
+            });
+            // Force a swap-out/in cycle through a barrier collective.
+            vp.barrier_collective()?;
+            let s = vp.slice(m)?;
+            for (i, &x) in s.iter().enumerate() {
+                assert_eq!(x, rank * 1000 + i as u32);
+            }
+            Ok(())
+        })
+        .unwrap();
+        // Data went to disk and came back.
+        assert!(report.metrics.swap_bytes() > 0);
+        assert_eq!(report.metrics.supersteps, 1);
+    }
+}

@@ -1,0 +1,98 @@
+//! Error type for the PEMS2 crate.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error enum.
+#[derive(Debug)]
+pub enum Error {
+    /// Invalid simulation configuration (constraint text inside).
+    Config(String),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+    /// Virtual-processor context allocator out of memory / bad free.
+    Alloc(String),
+    /// Communication misuse (size mismatch, bad rank, buffer overflow).
+    Comm(String),
+    /// XLA runtime failure (artifact missing, compile/execute error).
+    Runtime(String),
+    /// A simulated virtual processor panicked.
+    VpPanic(usize, String),
+    /// CLI / harness usage error.
+    Usage(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(s) => write!(f, "config error: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Alloc(s) => write!(f, "allocation error: {s}"),
+            Error::Comm(s) => write!(f, "communication error: {s}"),
+            Error::Runtime(s) => write!(f, "xla runtime error: {s}"),
+            Error::VpPanic(vp, s) => write!(f, "virtual processor {vp} panicked: {s}"),
+            Error::Usage(s) => write!(f, "usage error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl Error {
+    /// Shorthand constructor for [`Error::Config`].
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    /// Shorthand constructor for [`Error::Comm`].
+    pub fn comm(msg: impl Into<String>) -> Self {
+        Error::Comm(msg.into())
+    }
+    /// Shorthand constructor for [`Error::Alloc`].
+    pub fn alloc(msg: impl Into<String>) -> Self {
+        Error::Alloc(msg.into())
+    }
+    /// Shorthand constructor for [`Error::Runtime`].
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+    /// Shorthand constructor for [`Error::Usage`].
+    pub fn usage(msg: impl Into<String>) -> Self {
+        Error::Usage(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::config("bad v");
+        assert_eq!(e.to_string(), "config error: bad v");
+        let e = Error::VpPanic(3, "boom".into());
+        assert!(e.to_string().contains("processor 3"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

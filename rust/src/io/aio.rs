@@ -1,0 +1,198 @@
+//! Asynchronous I/O driver (thesis §5.1, plot label "stxxl-file").
+//!
+//! Writes are *write-behind*: the call copies the buffer, enqueues a
+//! request on the worker thread that owns the target disk, and returns
+//! immediately, letting the virtual processor overlap computation and
+//! communication with disk I/O.  Reads are ordered after pending writes to
+//! the same disk (the barrier semantics of §5.1.2: a thread only ever waits
+//! for requests whose results it needs).
+
+use crate::error::Result;
+use crate::io::{DiskFile, IoDriver};
+use std::collections::HashMap;
+use std::fs::File;
+use std::os::unix::fs::FileExt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+struct WriteReq {
+    file: Arc<File>,
+    off: u64,
+    data: Vec<u8>,
+    disk: usize,
+}
+
+struct Shared {
+    /// Outstanding requests per disk index.
+    pending: Mutex<HashMap<usize, usize>>,
+    cv: Condvar,
+    errors: Mutex<Vec<String>>,
+}
+
+/// Write-behind async I/O with per-disk ordered queues.
+pub struct AsyncIo {
+    senders: Vec<Sender<WriteReq>>,
+    shared: Arc<Shared>,
+    files: Mutex<HashMap<usize, Arc<File>>>,
+    inflight_hwm: AtomicUsize,
+    _workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for AsyncIo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AsyncIo").field("workers", &self.senders.len()).finish()
+    }
+}
+
+impl AsyncIo {
+    /// Create a driver with `workers` I/O threads.  Requests for one disk
+    /// always land on the same worker, preserving per-disk write order.
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            pending: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+            errors: Mutex::new(Vec::new()),
+        });
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (tx, rx) = channel::<WriteReq>();
+            let sh = shared.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Ok(req) = rx.recv() {
+                    if let Err(e) = req.file.write_all_at(&req.data, req.off) {
+                        sh.errors.lock().unwrap().push(e.to_string());
+                    }
+                    let mut p = sh.pending.lock().unwrap();
+                    let c = p.get_mut(&req.disk).expect("pending entry exists");
+                    *c -= 1;
+                    if *c == 0 {
+                        sh.cv.notify_all();
+                    }
+                }
+            }));
+            senders.push(tx);
+        }
+        AsyncIo {
+            senders,
+            shared,
+            files: Mutex::new(HashMap::new()),
+            inflight_hwm: AtomicUsize::new(0),
+            _workers: handles,
+        }
+    }
+
+    fn handle_for(&self, disk: &DiskFile) -> Result<Arc<File>> {
+        let mut files = self.files.lock().unwrap();
+        if let Some(f) = files.get(&disk.index) {
+            return Ok(f.clone());
+        }
+        let f = Arc::new(disk.file.try_clone()?);
+        files.insert(disk.index, f.clone());
+        Ok(f)
+    }
+
+    fn wait_disk(&self, disk_index: usize) -> Result<()> {
+        let mut p = self.shared.pending.lock().unwrap();
+        while p.get(&disk_index).copied().unwrap_or(0) > 0 {
+            p = self.shared.cv.wait(p).unwrap();
+        }
+        drop(p);
+        self.check_errors()
+    }
+
+    fn check_errors(&self) -> Result<()> {
+        let mut errs = self.shared.errors.lock().unwrap();
+        if let Some(e) = errs.pop() {
+            errs.clear();
+            return Err(crate::error::Error::Io(std::io::Error::other(e)));
+        }
+        Ok(())
+    }
+
+    /// High-water mark of in-flight requests (for perf diagnostics).
+    pub fn inflight_high_water_mark(&self) -> usize {
+        self.inflight_hwm.load(Ordering::Relaxed)
+    }
+}
+
+impl IoDriver for AsyncIo {
+    fn read_at(&self, disk: &DiskFile, off: u64, buf: &mut [u8]) -> Result<()> {
+        // Order after pending writes to this disk.
+        self.wait_disk(disk.index)?;
+        disk.file.read_exact_at(buf, off)?;
+        Ok(())
+    }
+
+    fn write_at(&self, disk: &DiskFile, off: u64, data: &[u8]) -> Result<()> {
+        let file = self.handle_for(disk)?;
+        {
+            let mut p = self.shared.pending.lock().unwrap();
+            let c = p.entry(disk.index).or_insert(0);
+            *c += 1;
+            let total: usize = p.values().sum();
+            self.inflight_hwm.fetch_max(total, Ordering::Relaxed);
+        }
+        let req = WriteReq { file, off, data: data.to_vec(), disk: disk.index };
+        self.senders[disk.index % self.senders.len()]
+            .send(req)
+            .map_err(|_| crate::error::Error::Io(std::io::Error::other("io worker died")))?;
+        Ok(())
+    }
+
+    fn flush_disk(&self, disk_index: usize) -> Result<()> {
+        self.wait_disk(disk_index)
+    }
+
+    fn flush_all(&self) -> Result<()> {
+        let mut p = self.shared.pending.lock().unwrap();
+        while p.values().any(|&c| c > 0) {
+            p = self.shared.cv.wait(p).unwrap();
+        }
+        drop(p);
+        self.check_errors()
+    }
+
+    fn name(&self) -> &'static str {
+        "stxxl-file"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flush_all_with_no_requests_is_instant() {
+        let d = AsyncIo::new(2);
+        d.flush_all().unwrap();
+    }
+
+    #[test]
+    fn many_interleaved_writes_keep_order_per_disk() {
+        let dir = std::env::temp_dir().join(format!("pems2-aio-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ordered.dat");
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .truncate(true)
+            .open(&path)
+            .unwrap();
+        file.set_len(4096).unwrap();
+        let disk = DiskFile { index: 0, file };
+        let d = AsyncIo::new(1);
+        // Overlapping writes to the same offset: last must win.
+        for i in 0..100u8 {
+            d.write_at(&disk, 0, &[i; 64]).unwrap();
+        }
+        d.flush_all().unwrap();
+        let mut buf = [0u8; 64];
+        d.read_at(&disk, 0, &mut buf).unwrap();
+        assert_eq!(buf, [99u8; 64]);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,121 @@
+//! I/O drivers (thesis Ch. 5).
+//!
+//! PEMS2 routes all explicit disk traffic through a small [`IoDriver`]
+//! trait so drivers can be swapped at run time:
+//!
+//! * [`unix::UnixIo`] — synchronous positional read/write (PEMS1's style).
+//! * [`aio::AsyncIo`] — write-behind queues with per-disk worker threads
+//!   (the thesis' "stxxl-file" driver; STXXL itself is not available, and
+//!   tokio is not in the offline crate set, so the request-queue design of
+//!   §5.1.2 is implemented directly).
+//!
+//! The `mmap` and `mem` styles of Ch. 5 do not perform explicit I/O at all;
+//! they are implemented by the context-store layer in [`crate::vp`], not as
+//! `IoDriver`s.
+
+pub mod aio;
+pub mod unix;
+
+use crate::error::Result;
+use std::fs::File;
+
+/// A single backing file standing in for one physical disk.
+#[derive(Debug)]
+pub struct DiskFile {
+    /// Index of this disk within its node.
+    pub index: usize,
+    /// The backing file.
+    pub file: File,
+}
+
+/// Abstract positional I/O to one disk file.
+///
+/// All offsets are *physical* (post-layout, post-fragmentation-permutation);
+/// the [`crate::disk::DiskSet`] layer handles logical mapping and metrics.
+pub trait IoDriver: Send + Sync {
+    /// Blocking positional read.
+    fn read_at(&self, disk: &DiskFile, off: u64, buf: &mut [u8]) -> Result<()>;
+
+    /// Positional write; may complete asynchronously (write-behind).  The
+    /// driver owns a copy of `data` if it defers.
+    fn write_at(&self, disk: &DiskFile, off: u64, data: &[u8]) -> Result<()>;
+
+    /// Wait for all outstanding deferred operations on `disk`.
+    fn flush_disk(&self, disk_index: usize) -> Result<()>;
+
+    /// Wait for all outstanding deferred operations on all disks.
+    fn flush_all(&self) -> Result<()>;
+
+    /// Driver name for reports.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::aio::AsyncIo;
+    use crate::io::unix::UnixIo;
+    use std::io::Read;
+
+    fn tmpfile() -> (std::path::PathBuf, DiskFile) {
+        let dir = std::env::temp_dir().join(format!(
+            "pems2-io-test-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("d0.dat");
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .open(&path)
+            .unwrap();
+        file.set_len(1 << 20).unwrap();
+        (path, DiskFile { index: 0, file })
+    }
+
+    fn round_trip(driver: &dyn IoDriver) {
+        let (path, disk) = tmpfile();
+        let data = vec![0xAB; 4096];
+        driver.write_at(&disk, 8192, &data).unwrap();
+        driver.flush_all().unwrap();
+        let mut back = vec![0u8; 4096];
+        driver.read_at(&disk, 8192, &mut back).unwrap();
+        assert_eq!(back, data);
+        // Verify it actually hit the file.
+        let mut f = std::fs::File::open(&path).unwrap();
+        let mut all = Vec::new();
+        f.read_to_end(&mut all).unwrap();
+        assert_eq!(&all[8192..8192 + 4096], &data[..]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unix_round_trip() {
+        round_trip(&UnixIo::new());
+    }
+
+    #[test]
+    fn async_round_trip() {
+        round_trip(&AsyncIo::new(2));
+    }
+
+    #[test]
+    fn async_read_sees_pending_writes() {
+        let driver = AsyncIo::new(1);
+        let (_path, disk) = tmpfile();
+        // Many deferred writes, then an immediate read: the driver must
+        // flush before reading.
+        for i in 0..64u64 {
+            driver.write_at(&disk, i * 128, &[i as u8; 128]).unwrap();
+        }
+        let mut buf = [0u8; 128];
+        driver.read_at(&disk, 63 * 128, &mut buf).unwrap();
+        assert_eq!(buf, [63u8; 128]);
+        driver.flush_all().unwrap();
+    }
+}

@@ -1,0 +1,40 @@
+//! Synchronous UNIX I/O driver (`pread`/`pwrite`), thesis §5 "unix" style.
+
+use crate::error::Result;
+use crate::io::{DiskFile, IoDriver};
+use std::os::unix::fs::FileExt;
+
+/// Blocking positional I/O; the behaviour PEMS1 used exclusively.
+#[derive(Debug, Default)]
+pub struct UnixIo;
+
+impl UnixIo {
+    /// Create the driver.
+    pub fn new() -> Self {
+        UnixIo
+    }
+}
+
+impl IoDriver for UnixIo {
+    fn read_at(&self, disk: &DiskFile, off: u64, buf: &mut [u8]) -> Result<()> {
+        disk.file.read_exact_at(buf, off)?;
+        Ok(())
+    }
+
+    fn write_at(&self, disk: &DiskFile, off: u64, data: &[u8]) -> Result<()> {
+        disk.file.write_all_at(data, off)?;
+        Ok(())
+    }
+
+    fn flush_disk(&self, _disk_index: usize) -> Result<()> {
+        Ok(()) // nothing deferred
+    }
+
+    fn flush_all(&self) -> Result<()> {
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "unix"
+    }
+}

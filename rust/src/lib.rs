@@ -1,0 +1,63 @@
+//! # PEMS2 — Parallel External Memory System
+//!
+//! A reproduction of *Practical Parallel External Memory Algorithms via
+//! Simulation of Parallel Algorithms* (D. E. Robillard, Carleton University,
+//! 2009).  PEMS2 executes Bulk-Synchronous Parallel (BSP / BSP\* / CGM)
+//! algorithms in an External Memory context: `v` *virtual processors* whose
+//! combined memory exceeds RAM are simulated on `P` *real processors* with
+//! `k` cores and `D` disks each, swapping virtual-processor contexts between
+//! `k` in-RAM memory partitions and disk.
+//!
+//! Layering (see `DESIGN.md`):
+//! * **L3 (this crate)** — the simulation engine: scheduler, partitions,
+//!   swapping, I/O drivers, the direct-delivery communication algorithms of
+//!   the thesis (Ch. 6–7), the PEMS1 baseline, applications (Ch. 8) and the
+//!   benchmark harness.
+//! * **L2/L1 (python/, build-time only)** — JAX + Pallas kernels for the
+//!   computation supersteps (local sort / scan / reduce), AOT-lowered to HLO
+//!   text and executed from [`runtime`] via PJRT.  Python never runs on the
+//!   simulation path.
+//!
+//! Quickstart:
+//! ```no_run
+//! use pems2::prelude::*;
+//! let cfg = SimConfig::builder().v(8).k(2).mu(1 << 20).build().unwrap();
+//! let report = pems2::engine::run(cfg, |vp| {
+//!     let mem = vp.alloc::<u32>(1024)?;
+//!     // ... BSP program using vp.alltoallv / bcast / gather / reduce ...
+//!     vp.free(mem);
+//!     Ok(())
+//! }).unwrap();
+//! println!("swap I/O: {} bytes", report.metrics.swap_bytes());
+//! ```
+
+pub mod alloc;
+pub mod api;
+pub mod apps;
+pub mod baseline;
+pub mod bench;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod disk;
+pub mod engine;
+pub mod error;
+pub mod io;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod sync;
+pub mod util;
+pub mod vp;
+
+pub use config::{IoStyle, SimConfig};
+pub use error::{Error, Result};
+
+/// Convenient re-exports for user programs.
+pub mod prelude {
+    pub use crate::api::Comm;
+    pub use crate::config::{DeliveryMode, IoStyle, Layout, SimConfig};
+    pub use crate::engine::{run, RunReport};
+    pub use crate::error::{Error, Result};
+    pub use crate::vp::{Vp, VpMem};
+}

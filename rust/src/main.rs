@@ -1,0 +1,221 @@
+//! `pems2` — the PEMS2 command-line launcher.
+//!
+//! Subcommands run the thesis' applications and baselines with all
+//! simulation parameters as run-time flags (§1.4).  Examples:
+//!
+//! ```text
+//! pems2 psrs --n 4000000 --v 16 --k 4 --mu 16m --io unix
+//! pems2 psrs --n 4000000 --v 16 --pems1 --indirect-slot 1m
+//! pems2 prefix-sum --n 1000000 --v 8 --io mmap --xla
+//! pems2 euler-tour --trees 4 --nodes 64 --v 8
+//! pems2 stxxl-sort --n 4000000 --mu 16m --k 4
+//! pems2 alltoallv --elems 65536 --v 8 --k 4 --io unix
+//! ```
+
+use pems2::cli::Cli;
+use pems2::error::Result;
+use pems2::util::bytes::human_bytes;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match real_main(args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("pems2: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn real_main(args: Vec<String>) -> Result<()> {
+    let cli = Cli::parse(args)?;
+    match cli.command.as_str() {
+        "psrs" => cmd_psrs(&cli),
+        "cgm-sort" => cmd_cgm_sort(&cli),
+        "prefix-sum" => cmd_prefix_sum(&cli),
+        "list-ranking" => cmd_list_ranking(&cli),
+        "euler-tour" => cmd_euler_tour(&cli),
+        "stxxl-sort" => cmd_stxxl_sort(&cli),
+        "alltoallv" => cmd_alltoallv(&cli),
+        "info" => cmd_info(&cli),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(pems2::error::Error::usage(format!(
+            "unknown command '{other}' (try `pems2 help`)"
+        ))),
+    }
+}
+
+const HELP: &str = "\
+pems2 — Parallel External Memory System (thesis reproduction)
+
+USAGE: pems2 <command> [--flags]
+
+COMMANDS
+  psrs          PSRS sort on PEMS (thesis §8.3)
+  cgm-sort      CGMLib-style sample sort (§8.4.1)
+  prefix-sum    CGM prefix sum (§8.4.2); --xla uses the Pallas scan kernel
+  list-ranking  CGM list ranking (pointer jumping)
+  euler-tour    Euler tour of a random forest (§8.4.3)
+  stxxl-sort    hand-crafted EM multiway-merge sort baseline
+  alltoallv     a single Alltoallv over the whole data set (Fig. 7.2)
+  info          print the resolved configuration and disk-space needs
+
+SIMULATION FLAGS (Appendix B.3)
+  --p N           real processors (in-process nodes)       [1]
+  --v N           virtual processors                       [4]
+  --k N           threads / memory partitions per node     [1]
+  --mu SIZE       context size per VP (e.g. 64m)           [16m]
+  --d N           disks per node                           [1]
+  --sigma SIZE    shared buffer per node                   [16m]
+  --alpha N       alltoallv network chunk                  [4]
+  --block SIZE    disk block B                             [256k]
+  --io STYLE      unix | stxxl-file | mmap | mem           [unix]
+  --pems1         PEMS1 mode (indirect delivery + bump allocator)
+  --indirect-slot SIZE   PEMS1 message bound               [1m]
+  --alloc A       bump | freelist
+  --layout L      striped | per-vp
+  --fragmented    emulate ext3-style file fragmentation (Fig. C.1)
+  --unordered     disable ID-ordered rounds (Def. 6.5.1)
+  --timeline      record per-thread superstep timelines (Figs. 8.12-8.14)
+  --xla           run computation supersteps on the AOT XLA kernels
+  --seed N        workload seed
+  --disk-dir PATH backing files location (default: temp dir)
+
+WORKLOAD FLAGS
+  --n N           elements (psrs, cgm-sort, prefix-sum, list-ranking, stxxl-sort)
+  --trees N --nodes N   forest shape (euler-tour)
+  --elems N       elements per VP (alltoallv)
+  --verify        verify the result (extra supersteps)
+  --timeline-out FILE   write the gnuplot timeline here
+";
+
+fn finish(report: &pems2::engine::RunReport, cli: &Cli, verified: bool) -> Result<()> {
+    let m = &report.metrics;
+    println!("wall_seconds       {:.3}", report.wall.as_secs_f64());
+    println!("charged_seconds    {:.3}", report.charged.total());
+    println!("  swap             {:.3}", report.charged.swap);
+    println!("  delivery         {:.3}", report.charged.delivery);
+    println!("  seeks            {:.3}", report.charged.seeks);
+    println!("  network          {:.3}", report.charged.network);
+    println!("  supersteps       {:.3}", report.charged.supersteps);
+    println!("swap_io            {}", human_bytes(m.swap_bytes()));
+    println!("delivery_io        {}", human_bytes(m.delivery_bytes()));
+    println!("seeks              {}", m.seeks);
+    println!("net_bytes          {}", human_bytes(m.net_bytes));
+    println!("net_relations      {}", m.net_relations);
+    println!("supersteps         {}", m.supersteps);
+    println!("mmap_touched       {}", human_bytes(m.mmap_touched_bytes));
+    println!("xla_active         {}", report.xla_active);
+    println!("verified           {verified}");
+    if let Some(path) = cli.options.get("timeline-out") {
+        if let Some(series) = &report.timelines {
+            let tl = series;
+            let mut f = std::fs::File::create(path)?;
+            use std::io::Write;
+            writeln!(f, "# superstep timelines ({} threads)", tl.len())?;
+            let steps = tl.iter().map(Vec::len).max().unwrap_or(0);
+            for s in 0..steps {
+                write!(f, "{s}")?;
+                for row in tl {
+                    match row.get(s) {
+                        Some(t) => write!(f, " {t:.6}")?,
+                        None => write!(f, " -")?,
+                    }
+                }
+                writeln!(f)?;
+            }
+            println!("timeline written to {path}");
+        }
+    }
+    if !verified {
+        return Err(pems2::error::Error::comm("verification FAILED"));
+    }
+    Ok(())
+}
+
+fn cmd_psrs(cli: &Cli) -> Result<()> {
+    let cfg = cli.sim_config()?;
+    let n: u64 = cli.get_or("n", 1_000_000)?;
+    let verify = cli.flag("verify");
+    let r = pems2::apps::run_psrs(cfg, n, verify)?;
+    println!("app                psrs");
+    println!("n                  {}", r.n);
+    finish(&r.report, cli, r.verified)
+}
+
+fn cmd_cgm_sort(cli: &Cli) -> Result<()> {
+    let cfg = cli.sim_config()?;
+    let n: u64 = cli.get_or("n", 1_000_000)?;
+    let r = pems2::apps::run_cgm_sort(cfg, n, cli.flag("verify"))?;
+    println!("app                cgm-sort");
+    println!("n                  {}", r.n);
+    finish(&r.report, cli, r.verified)
+}
+
+fn cmd_prefix_sum(cli: &Cli) -> Result<()> {
+    let cfg = cli.sim_config()?;
+    let n: u64 = cli.get_or("n", 1_000_000)?;
+    let r = pems2::apps::run_prefix_sum(cfg, n, cli.flag("verify"))?;
+    println!("app                prefix-sum");
+    println!("n                  {}", r.n);
+    finish(&r.report, cli, r.verified)
+}
+
+fn cmd_list_ranking(cli: &Cli) -> Result<()> {
+    let cfg = cli.sim_config()?;
+    let n: u64 = cli.get_or("n", 100_000)?;
+    let succ = std::sync::Arc::new(pems2::apps::list_ranking::random_list(n, cfg.seed));
+    let r = pems2::apps::run_list_ranking(cfg, succ, cli.flag("verify"))?;
+    println!("app                list-ranking");
+    println!("n                  {}", r.n);
+    finish(&r.report, cli, r.verified)
+}
+
+fn cmd_euler_tour(cli: &Cli) -> Result<()> {
+    let cfg = cli.sim_config()?;
+    let trees: usize = cli.get_or("trees", 4)?;
+    let nodes: usize = cli.get_or("nodes", 256)?;
+    let r = pems2::apps::run_euler_tour(cfg, trees, nodes, cli.flag("verify"))?;
+    println!("app                euler-tour");
+    println!("arcs               {}", r.arcs);
+    finish(&r.report, cli, r.verified)
+}
+
+fn cmd_stxxl_sort(cli: &Cli) -> Result<()> {
+    let cfg = cli.sim_config()?;
+    let n: u64 = cli.get_or("n", 1_000_000)?;
+    let r = pems2::baseline::run_stxxl_sort(&cfg, n, cli.flag("verify"))?;
+    println!("app                stxxl-sort");
+    println!("n                  {}", r.n);
+    println!("wall_seconds       {:.3}", r.wall);
+    println!("charged_seconds    {:.3}", r.charged);
+    println!("io_volume          {}", human_bytes(r.metrics.total_disk_bytes()));
+    println!("seeks              {}", r.metrics.seeks);
+    println!("verified           {}", r.verified);
+    if !r.verified {
+        return Err(pems2::error::Error::comm("verification FAILED"));
+    }
+    Ok(())
+}
+
+fn cmd_alltoallv(cli: &Cli) -> Result<()> {
+    let cfg = cli.sim_config()?;
+    let elems: usize = cli.get_or("elems", 65_536)?;
+    let r = pems2::bench::alltoallv_once(cfg, elems)?;
+    println!("app                alltoallv");
+    println!("elems_per_vp       {elems}");
+    finish(&r.report, cli, r.verified)
+}
+
+fn cmd_info(cli: &Cli) -> Result<()> {
+    let cfg = cli.sim_config()?;
+    println!("{cfg:#?}");
+    println!("context_space/node {}", human_bytes(cfg.context_space_per_node()));
+    println!("indirect/node      {}", human_bytes(cfg.indirect_space_per_node()));
+    println!("disk/node          {}", human_bytes(cfg.disk_space_per_node()));
+    println!("RAM/node           {}", human_bytes(cfg.k as u64 * cfg.mu + cfg.sigma));
+    Ok(())
+}

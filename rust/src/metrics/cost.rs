@@ -1,0 +1,193 @@
+//! Analytic cost model (Appendix B.4).
+//!
+//! Converts measured I/O and network counts into *charged time* using the
+//! thesis' coefficients: swap blocks cost `S`, delivery blocks cost `G`,
+//! network h-relations cost `g·(size/b) + l`, virtual supersteps cost `L`,
+//! and each discontiguous disk access costs one seek.
+//!
+//! This is the substitution layer for the paper's spinning-disk testbed
+//! (see DESIGN.md §3): on page-cached SSDs wall clock alone cannot show
+//! seek-dominated effects (Figs. 8.7, C.1), so benches report both wall
+//! clock and charged time.
+
+use crate::config::CostCoeffs;
+use crate::metrics::counters::MetricsSnapshot;
+
+/// Cost model wrapping a coefficient set.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    coeffs: CostCoeffs,
+    /// Effective disk parallelism divisor (`D` when fully parallel).
+    pub disk_parallelism: f64,
+}
+
+/// Charged-time breakdown, seconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ChargedTime {
+    /// Swap I/O time (`S` terms).
+    pub swap: f64,
+    /// Message delivery I/O time (`G` terms).
+    pub delivery: f64,
+    /// Seek time.
+    pub seeks: f64,
+    /// Network time (`g`/`l` terms).
+    pub network: f64,
+    /// Superstep overhead (`L` terms).
+    pub supersteps: f64,
+}
+
+impl ChargedTime {
+    /// Total charged seconds.
+    pub fn total(&self) -> f64 {
+        self.swap + self.delivery + self.seeks + self.network + self.supersteps
+    }
+}
+
+impl CostModel {
+    /// Model with full disk parallelism over `d` disks.
+    pub fn new(coeffs: CostCoeffs, d: usize) -> Self {
+        CostModel { coeffs, disk_parallelism: d as f64 }
+    }
+
+    /// Underlying coefficients.
+    pub fn coeffs(&self) -> &CostCoeffs {
+        &self.coeffs
+    }
+
+    /// Charge a metrics snapshot.
+    pub fn charge(&self, m: &MetricsSnapshot) -> ChargedTime {
+        let b = self.coeffs.block as f64;
+        let dp = self.disk_parallelism.max(1.0);
+        // Volume -> blocks -> seconds; ops below one block still cost one
+        // block of time (Thm. 2.2.2 discussion).
+        let blocks = |bytes: u64, ops: u64| -> f64 {
+            let by_volume = (bytes as f64 / b).ceil();
+            by_volume.max(ops as f64)
+        };
+        ChargedTime {
+            swap: self.coeffs.s_swap
+                * blocks(m.swap_read_bytes + m.swap_write_bytes, m.swap_ops)
+                / dp,
+            delivery: self.coeffs.g_disk
+                * blocks(m.deliv_read_bytes + m.deliv_write_bytes, m.deliv_ops)
+                / dp,
+            seeks: (self.coeffs.seek * m.seeks as f64
+                + self.coeffs.seek_extra * m.seek_distance as f64
+                    / self.coeffs.stroke.max(1) as f64)
+                / dp,
+            network: self.coeffs.g_net
+                * (m.net_bytes as f64 / self.coeffs.b_net as f64)
+                + self.coeffs.l_net * m.net_relations as f64,
+            supersteps: self.coeffs.l_super * m.supersteps as f64,
+        }
+    }
+
+    // ----- closed forms from the thesis, for validation tests -----
+
+    /// Lem. 2.2.1: PEMS1 single-processor Alltoallv total I/O volume
+    /// `4vµ + 2v²ω` (bytes).
+    pub fn pems1_alltoallv_seq_io(v: u64, mu: u64, omega: u64) -> u64 {
+        4 * v * mu + 2 * v * v * omega
+    }
+
+    /// Lem. 7.1.3: PEMS2 single-processor Alltoallv explicit I/O volume
+    /// `vµ + (v² - vk)/2 · ω + 2v²B` (bytes).
+    pub fn pems2_alltoallv_seq_io(v: u64, k: u64, mu: u64, omega: u64, b: u64) -> u64 {
+        v * mu + (v * v - v * k) / 2 * omega + 2 * v * v * b
+    }
+
+    /// Cor. 7.1.4: improvement of PEMS2 over PEMS1 per virtual superstep,
+    /// `2vµ + (3v² + vk)/2 · ω - 2v²B` (bytes; may be negative for tiny ω).
+    pub fn alltoallv_improvement(v: u64, k: u64, mu: u64, omega: u64, b: u64) -> i64 {
+        2 * (v * mu) as i64 + ((3 * v * v + v * k) / 2 * omega) as i64
+            - (2 * v * v * b) as i64
+    }
+
+    /// Thm. 2.2.3: PEMS1 seq Alltoallv disk space `vµ + v²ω` (bytes).
+    pub fn pems1_disk_space(v: u64, mu: u64, omega: u64) -> u64 {
+        v * mu + v * v * omega
+    }
+
+    /// Lem. 7.1.5: PEMS2 Alltoallv shared buffer bound `2v²B/P` (bytes).
+    pub fn alltoallv_buffer_bound(v: u64, b: u64, p: u64) -> u64 {
+        2 * v * v * b / p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CostCoeffs;
+
+    fn snap() -> MetricsSnapshot {
+        MetricsSnapshot {
+            swap_read_bytes: 10 << 20,
+            swap_write_bytes: 10 << 20,
+            deliv_write_bytes: 5 << 20,
+            swap_ops: 4,
+            deliv_ops: 2,
+            seeks: 10,
+            net_bytes: 1 << 20,
+            net_relations: 2,
+            supersteps: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn charge_is_positive_and_decomposes() {
+        let m = CostModel::new(CostCoeffs::default(), 1);
+        let c = m.charge(&snap());
+        assert!(c.swap > 0.0 && c.delivery > 0.0 && c.seeks > 0.0);
+        assert!(c.network > 0.0 && c.supersteps > 0.0);
+        let sum = c.swap + c.delivery + c.seeks + c.network + c.supersteps;
+        assert!((c.total() - sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disk_parallelism_divides_io_time() {
+        let c1 = CostModel::new(CostCoeffs::default(), 1).charge(&snap());
+        let c4 = CostModel::new(CostCoeffs::default(), 4).charge(&snap());
+        assert!((c1.swap / c4.swap - 4.0).abs() < 1e-9);
+        // Network unaffected by disks.
+        assert!((c1.network - c4.network).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sub_block_ops_cost_a_block_each() {
+        let coeffs = CostCoeffs::default();
+        let m = CostModel::new(coeffs, 1);
+        let s = MetricsSnapshot {
+            deliv_write_bytes: 10, // 10 bytes...
+            deliv_ops: 5,          // ...across 5 ops: 5 block-times
+            ..Default::default()
+        };
+        let c = m.charge(&s);
+        assert!((c.delivery - 5.0 * coeffs.g_disk).abs() < 1e-12);
+    }
+
+    #[test]
+    fn closed_forms_match_hand_calcs() {
+        // v=4, k=1, mu=100, omega=10, B=8
+        assert_eq!(CostModel::pems1_alltoallv_seq_io(4, 100, 10), 1600 + 320);
+        assert_eq!(
+            CostModel::pems2_alltoallv_seq_io(4, 1, 100, 10, 8),
+            400 + (16 - 4) / 2 * 10 + 2 * 16 * 8
+        );
+        assert_eq!(CostModel::pems1_disk_space(4, 100, 10), 400 + 160);
+        assert_eq!(CostModel::alltoallv_buffer_bound(4, 8, 2), 2 * 16 * 8 / 2);
+    }
+
+    #[test]
+    fn improvement_positive_for_realistic_params() {
+        // Realistic: mu >> v*B, omega coarse-grained.
+        let impr = CostModel::alltoallv_improvement(
+            16,
+            4,
+            64 << 20,
+            1 << 20,
+            512 * 1024,
+        );
+        assert!(impr > 0);
+    }
+}

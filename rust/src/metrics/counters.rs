@@ -1,0 +1,242 @@
+//! Atomic counters for I/O volume, I/O operations, seeks and network
+//! traffic, split by class (swap vs message delivery, Appendix B: `S` vs
+//! `G` terms are kept separate throughout the thesis).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Classification of disk traffic, mirroring the thesis' split between
+/// swap terms (`S`) and message-delivery terms (`G`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoClass {
+    /// Context swap in/out.
+    Swap,
+    /// Message delivery (direct writes, indirect area, border flushes).
+    Delivery,
+}
+
+/// Shared atomic counters.  One instance per simulation run; cheap to
+/// update from all VP threads.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    swap_read_bytes: AtomicU64,
+    swap_write_bytes: AtomicU64,
+    deliv_read_bytes: AtomicU64,
+    deliv_write_bytes: AtomicU64,
+    swap_ops: AtomicU64,
+    deliv_ops: AtomicU64,
+    seeks: AtomicU64,
+    seek_distance: AtomicU64,
+    net_bytes: AtomicU64,
+    net_relations: AtomicU64,
+    supersteps: AtomicU64,
+    mmap_touched_bytes: AtomicU64,
+}
+
+impl Metrics {
+    /// Fresh zeroed counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a disk read of `n` bytes in `class`.
+    pub fn read(&self, class: IoClass, n: u64) {
+        match class {
+            IoClass::Swap => {
+                self.swap_read_bytes.fetch_add(n, Ordering::Relaxed);
+                self.swap_ops.fetch_add(1, Ordering::Relaxed);
+            }
+            IoClass::Delivery => {
+                self.deliv_read_bytes.fetch_add(n, Ordering::Relaxed);
+                self.deliv_ops.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Record a disk write of `n` bytes in `class`.
+    pub fn write(&self, class: IoClass, n: u64) {
+        match class {
+            IoClass::Swap => {
+                self.swap_write_bytes.fetch_add(n, Ordering::Relaxed);
+                self.swap_ops.fetch_add(1, Ordering::Relaxed);
+            }
+            IoClass::Delivery => {
+                self.deliv_write_bytes.fetch_add(n, Ordering::Relaxed);
+                self.deliv_ops.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Record one disk head seek (discontiguous access) of `dist`
+    /// physical bytes of head travel (Fig. 8.7 / Fig. C.1 are
+    /// distance-driven effects).
+    pub fn seek(&self, dist: u64) {
+        self.seeks.fetch_add(1, Ordering::Relaxed);
+        self.seek_distance.fetch_add(dist, Ordering::Relaxed);
+    }
+
+    /// Record network traffic: an h-relation of `bytes` total volume.
+    pub fn net_relation(&self, bytes: u64) {
+        self.net_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.net_relations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a (virtual or internal) superstep barrier crossing.
+    pub fn superstep(&self) {
+        self.supersteps.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record bytes *touched* through an mmap'd context (kernel-paged I/O;
+    /// not explicit, but the analysis in §5.2 needs the volume).
+    pub fn mmap_touch(&self, n: u64) {
+        self.mmap_touched_bytes.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Total swap I/O volume (read + write), bytes.
+    pub fn swap_bytes(&self) -> u64 {
+        self.swap_read_bytes.load(Ordering::Relaxed)
+            + self.swap_write_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Total delivery I/O volume (read + write), bytes.
+    pub fn delivery_bytes(&self) -> u64 {
+        self.deliv_read_bytes.load(Ordering::Relaxed)
+            + self.deliv_write_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Grab a consistent-enough snapshot for reporting.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            swap_read_bytes: self.swap_read_bytes.load(Ordering::Relaxed),
+            swap_write_bytes: self.swap_write_bytes.load(Ordering::Relaxed),
+            deliv_read_bytes: self.deliv_read_bytes.load(Ordering::Relaxed),
+            deliv_write_bytes: self.deliv_write_bytes.load(Ordering::Relaxed),
+            swap_ops: self.swap_ops.load(Ordering::Relaxed),
+            deliv_ops: self.deliv_ops.load(Ordering::Relaxed),
+            seeks: self.seeks.load(Ordering::Relaxed),
+            seek_distance: self.seek_distance.load(Ordering::Relaxed),
+            net_bytes: self.net_bytes.load(Ordering::Relaxed),
+            net_relations: self.net_relations.load(Ordering::Relaxed),
+            supersteps: self.supersteps.load(Ordering::Relaxed),
+            mmap_touched_bytes: self.mmap_touched_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data snapshot of [`Metrics`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    /// Swap bytes read from disk.
+    pub swap_read_bytes: u64,
+    /// Swap bytes written to disk.
+    pub swap_write_bytes: u64,
+    /// Delivery bytes read from disk.
+    pub deliv_read_bytes: u64,
+    /// Delivery bytes written to disk.
+    pub deliv_write_bytes: u64,
+    /// Number of swap I/O operations.
+    pub swap_ops: u64,
+    /// Number of delivery I/O operations.
+    pub deliv_ops: u64,
+    /// Disk head seeks.
+    pub seeks: u64,
+    /// Total head travel distance (physical bytes).
+    pub seek_distance: u64,
+    /// Network bytes moved.
+    pub net_bytes: u64,
+    /// Network h-relations performed.
+    pub net_relations: u64,
+    /// Superstep barriers crossed.
+    pub supersteps: u64,
+    /// Bytes touched via mmap'd contexts.
+    pub mmap_touched_bytes: u64,
+}
+
+impl MetricsSnapshot {
+    /// Total disk volume (all classes), bytes.
+    pub fn total_disk_bytes(&self) -> u64 {
+        self.swap_read_bytes
+            + self.swap_write_bytes
+            + self.deliv_read_bytes
+            + self.deliv_write_bytes
+    }
+
+    /// Total swap volume, bytes.
+    pub fn swap_bytes(&self) -> u64 {
+        self.swap_read_bytes + self.swap_write_bytes
+    }
+
+    /// Total delivery volume, bytes.
+    pub fn delivery_bytes(&self) -> u64 {
+        self.deliv_read_bytes + self.deliv_write_bytes
+    }
+
+    /// Difference (self - earlier), for per-phase accounting.
+    pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            swap_read_bytes: self.swap_read_bytes - earlier.swap_read_bytes,
+            swap_write_bytes: self.swap_write_bytes - earlier.swap_write_bytes,
+            deliv_read_bytes: self.deliv_read_bytes - earlier.deliv_read_bytes,
+            deliv_write_bytes: self.deliv_write_bytes - earlier.deliv_write_bytes,
+            swap_ops: self.swap_ops - earlier.swap_ops,
+            deliv_ops: self.deliv_ops - earlier.deliv_ops,
+            seeks: self.seeks - earlier.seeks,
+            seek_distance: self.seek_distance - earlier.seek_distance,
+            net_bytes: self.net_bytes - earlier.net_bytes,
+            net_relations: self.net_relations - earlier.net_relations,
+            supersteps: self.supersteps - earlier.supersteps,
+            mmap_touched_bytes: self.mmap_touched_bytes - earlier.mmap_touched_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_accumulate_separately() {
+        let m = Metrics::new();
+        m.read(IoClass::Swap, 100);
+        m.write(IoClass::Swap, 50);
+        m.write(IoClass::Delivery, 30);
+        assert_eq!(m.swap_bytes(), 150);
+        assert_eq!(m.delivery_bytes(), 30);
+        let s = m.snapshot();
+        assert_eq!(s.swap_ops, 2);
+        assert_eq!(s.deliv_ops, 1);
+        assert_eq!(s.total_disk_bytes(), 180);
+    }
+
+    #[test]
+    fn delta_subtracts() {
+        let m = Metrics::new();
+        m.write(IoClass::Swap, 10);
+        let a = m.snapshot();
+        m.write(IoClass::Swap, 25);
+        m.seek(100);
+        let b = m.snapshot();
+        let d = b.delta(&a);
+        assert_eq!(d.swap_write_bytes, 25);
+        assert_eq!(d.seeks, 1);
+        assert_eq!(d.seek_distance, 100);
+    }
+
+    #[test]
+    fn concurrent_updates_are_lossless() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.write(IoClass::Delivery, 3);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(m.delivery_bytes(), 8 * 1000 * 3);
+    }
+}

@@ -1,0 +1,16 @@
+//! Measurement infrastructure.
+//!
+//! The thesis ships an "integrated benchmarking system" that records either
+//! the overall run time of a simulation or a per-superstep breakdown per
+//! thread, written to gnuplot-compatible files (§1.4, Figs. 8.12–8.14).
+//! This module reproduces that, and adds the *accounting* layer every I/O
+//! and network operation flows through, so analytic I/O formulas
+//! (Fig. 7.8) can be validated against measured counts.
+
+pub mod cost;
+pub mod counters;
+pub mod timeline;
+
+pub use cost::CostModel;
+pub use counters::{IoClass, Metrics, MetricsSnapshot};
+pub use timeline::Timeline;

@@ -1,0 +1,109 @@
+//! Per-thread per-superstep elapsed-time timelines (Figs. 8.12–8.14).
+//!
+//! Each virtual processor records its cumulative elapsed time at every
+//! superstep barrier; dumped as a gnuplot-compatible data file where each
+//! thread is one line (column 1 = superstep index, column 2.. = seconds
+//! per thread), matching the thesis' internal benchmarking system.
+
+use std::io::Write;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Shared timeline recorder.
+#[derive(Debug)]
+pub struct Timeline {
+    start: Instant,
+    /// `rows[vp]` = cumulative seconds at each barrier crossing.
+    rows: Mutex<Vec<Vec<f64>>>,
+    enabled: bool,
+}
+
+impl Timeline {
+    /// Create a recorder for `v` virtual processors.
+    pub fn new(v: usize, enabled: bool) -> Self {
+        Timeline {
+            start: Instant::now(),
+            rows: Mutex::new(vec![Vec::new(); v]),
+            enabled,
+        }
+    }
+
+    /// Record that `vp` just crossed a superstep barrier.
+    pub fn mark(&self, vp: usize) {
+        if !self.enabled {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let mut rows = self.rows.lock().unwrap();
+        rows[vp].push(t);
+    }
+
+    /// Number of barriers recorded by the busiest thread.
+    pub fn max_steps(&self) -> usize {
+        self.rows.lock().unwrap().iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Per-thread series (vp -> cumulative seconds per superstep).
+    pub fn series(&self) -> Vec<Vec<f64>> {
+        self.rows.lock().unwrap().clone()
+    }
+
+    /// Write a gnuplot-compatible data file: one row per superstep, one
+    /// column per thread ("" for threads that recorded fewer steps).
+    pub fn write_gnuplot(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        let rows = self.rows.lock().unwrap();
+        let steps = rows.iter().map(Vec::len).max().unwrap_or(0);
+        writeln!(w, "# superstep {}", (0..rows.len()).map(|i| format!("vp{i}")).collect::<Vec<_>>().join(" "))?;
+        for s in 0..steps {
+            write!(w, "{s}")?;
+            for r in rows.iter() {
+                match r.get(s) {
+                    Some(t) => write!(w, " {t:.6}")?,
+                    None => write!(w, " -")?,
+                }
+            }
+            writeln!(w)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let t = Timeline::new(2, false);
+        t.mark(0);
+        assert_eq!(t.max_steps(), 0);
+    }
+
+    #[test]
+    fn marks_accumulate_monotonically() {
+        let t = Timeline::new(2, true);
+        t.mark(0);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.mark(0);
+        t.mark(1);
+        let s = t.series();
+        assert_eq!(s[0].len(), 2);
+        assert!(s[0][1] >= s[0][0]);
+        assert_eq!(s[1].len(), 1);
+    }
+
+    #[test]
+    fn gnuplot_output_shape() {
+        let t = Timeline::new(3, true);
+        t.mark(0);
+        t.mark(1);
+        t.mark(0);
+        let mut buf = Vec::new();
+        t.write_gnuplot(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert!(lines[0].starts_with("# superstep"));
+        assert_eq!(lines.len(), 1 + 2); // header + 2 steps (vp0 has 2 marks)
+        assert!(lines[2].contains('-')); // vp1/vp2 missing at step 1
+    }
+}

@@ -1,0 +1,377 @@
+//! The inter-node "network" (substitute for MPI over gigabit ethernet).
+//!
+//! The thesis runs on a cluster of `P` machines connected by a switched
+//! ethernet network, using MPI collectives for node-to-node traffic.  Here
+//! the `P` real processors are in-process nodes, and this module is the
+//! switch between them: a rendezvous-based exchange with BSP\* cost
+//! accounting (`g`, `l`, `b` — Appendix B.4).  The *algorithmic* structure
+//! (which node sends what to whom, in how many h-relations) is identical
+//! to the MPI version; only the transport differs (memcpy instead of TCP),
+//! and the cost model charges the h-relations the thesis' analysis counts.
+//!
+//! Every collective must be invoked exactly once per node (by exactly one
+//! thread of that node) and in the same order on all nodes, mirroring MPI
+//! semantics.
+
+use crate::metrics::Metrics;
+use crate::sync::SuperstepBarrier;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// The switch connecting `P` nodes.
+pub struct Switch {
+    p: usize,
+    /// P×P message grid for the current exchange.
+    grid: Mutex<Vec<Vec<Option<Vec<u8>>>>>,
+    barrier: SuperstepBarrier,
+    /// Simple rendezvous slot for rooted ops.
+    slot: Mutex<Option<Vec<u8>>>,
+    slot_cv: Condvar,
+    metrics: Arc<Metrics>,
+}
+
+impl std::fmt::Debug for Switch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Switch").field("p", &self.p).finish()
+    }
+}
+
+impl Switch {
+    /// A switch over `p` nodes.
+    pub fn new(p: usize, metrics: Arc<Metrics>) -> Arc<Switch> {
+        Arc::new(Switch {
+            p,
+            grid: Mutex::new(vec![(0..p).map(|_| None).collect(); p]),
+            barrier: SuperstepBarrier::new(p),
+            slot: Mutex::new(None),
+            slot_cv: Condvar::new(),
+            metrics,
+        })
+    }
+
+    /// Number of nodes.
+    pub fn nodes(&self) -> usize {
+        self.p
+    }
+
+    /// Node-level barrier (MPI_Barrier).
+    pub fn barrier(&self) {
+        if self.p > 1 {
+            self.barrier.wait();
+        }
+    }
+
+    /// Node-level Alltoallv: `out[j]` is this node's message for node `j`.
+    /// Returns `in_[i]` = node `i`'s message for this node.  Charges one
+    /// h-relation of size `max_j(total bytes sent by node j)`.
+    pub fn alltoallv(&self, me: usize, out: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        assert_eq!(out.len(), self.p);
+        if self.p == 1 {
+            self.metrics.net_relation(0); // local only: no network traffic
+            return out;
+        }
+        {
+            let mut grid = self.grid.lock().unwrap();
+            for (j, msg) in out.into_iter().enumerate() {
+                grid[me][j] = Some(msg);
+            }
+        }
+        // All deposits visible after the barrier.
+        self.barrier.wait_leader(Some(|| {
+            // Leader charges the h-relation: h = max per-node volume.
+            let grid = self.grid.lock().unwrap();
+            let h = grid
+                .iter()
+                .map(|row| {
+                    row.iter().map(|m| m.as_ref().map_or(0, |v| v.len() as u64)).sum::<u64>()
+                })
+                .max()
+                .unwrap_or(0);
+            self.metrics.net_relation(h);
+        }));
+        let mut result = Vec::with_capacity(self.p);
+        {
+            let mut grid = self.grid.lock().unwrap();
+            for i in 0..self.p {
+                result.push(grid[i][me].take().expect("grid slot filled"));
+            }
+        }
+        // Ensure everyone took their column before the next exchange reuses
+        // the grid.
+        self.barrier.wait();
+        result
+    }
+
+    /// Node-level broadcast from `root`'s thread; non-root nodes pass
+    /// `None` and receive the payload.
+    pub fn bcast(&self, me: usize, root: usize, payload: Option<Vec<u8>>) -> Vec<u8> {
+        if self.p == 1 {
+            return payload.expect("root payload");
+        }
+        if me == root {
+            let data = payload.expect("root payload");
+            self.metrics.net_relation(data.len() as u64 * (self.p as u64 - 1));
+            let mut slot = self.slot.lock().unwrap();
+            *slot = Some(data);
+            self.slot_cv.notify_all();
+            drop(slot);
+            // Wait until all nodes copied out.
+            self.barrier.wait();
+            let data = {
+                let mut slot = self.slot.lock().unwrap();
+                slot.take().expect("payload still present")
+            };
+            self.barrier.wait();
+            data
+        } else {
+            let data = {
+                let mut slot = self.slot.lock().unwrap();
+                while slot.is_none() {
+                    slot = self.slot_cv.wait(slot).unwrap();
+                }
+                slot.as_ref().unwrap().clone()
+            };
+            self.barrier.wait();
+            self.barrier.wait();
+            data
+        }
+    }
+
+    /// Node-level gather to `root`: every node contributes `data`; the
+    /// root receives all `P` contributions (indexed by node).
+    pub fn gather(&self, me: usize, root: usize, data: Vec<u8>) -> Option<Vec<Vec<u8>>> {
+        if self.p == 1 {
+            return Some(vec![data]);
+        }
+        let mut out: Vec<Vec<u8>> = (0..self.p).map(|_| Vec::new()).collect();
+        out[root] = data;
+        let cols = self.alltoallv(me, out);
+        if me == root {
+            Some(cols)
+        } else {
+            None
+        }
+    }
+
+    /// Node-level scatter from `root`: root provides one payload per node.
+    pub fn scatter(&self, me: usize, root: usize, data: Option<Vec<Vec<u8>>>) -> Vec<u8> {
+        if self.p == 1 {
+            return data.expect("root payloads").into_iter().next().unwrap();
+        }
+        let out = if me == root {
+            data.expect("root payloads")
+        } else {
+            (0..self.p).map(|_| Vec::new()).collect()
+        };
+        let mut cols = self.alltoallv(me, out);
+        std::mem::take(&mut cols[root])
+    }
+
+    /// Node-level allgather: every node contributes `data`, every node
+    /// receives all `P` contributions.
+    pub fn allgather(&self, me: usize, data: Vec<u8>) -> Vec<Vec<u8>> {
+        if self.p == 1 {
+            return vec![data];
+        }
+        let out: Vec<Vec<u8>> = (0..self.p).map(|_| data.clone()).collect();
+        self.alltoallv(me, out)
+    }
+
+    /// Node-level reduce to `root` with a byte-level combiner: a logarithmic
+    /// tree reduction (Fig. 7.6).  `combine(acc, other)` folds `other` into
+    /// `acc`; payloads must be equal length on all nodes.
+    pub fn reduce(
+        &self,
+        me: usize,
+        root: usize,
+        data: Vec<u8>,
+        combine: &dyn Fn(&mut [u8], &[u8]),
+    ) -> Option<Vec<u8>> {
+        if self.p == 1 {
+            return Some(data);
+        }
+        // Tree reduction in lg(P) rounds, re-rooted so `root` is rank 0.
+        let rank = (me + self.p - root) % self.p;
+        let mut acc = Some(data);
+        let mut stride = 1usize;
+        while stride < self.p {
+            // Pair (rank, rank+stride); implemented over alltoallv so all
+            // nodes participate in each round (MPI-like lockstep).
+            let mut out: Vec<Vec<u8>> = (0..self.p).map(|_| Vec::new()).collect();
+            let active = rank % (2 * stride) == 0;
+            let sender = rank % (2 * stride) == stride;
+            if sender {
+                let dst_rank = rank - stride;
+                let dst = (dst_rank + root) % self.p;
+                out[dst] = acc.take().expect("sender holds data");
+            }
+            let cols = self.alltoallv(me, out);
+            if active {
+                let src_rank = rank + stride;
+                if src_rank < self.p {
+                    let src = (src_rank + root) % self.p;
+                    let other = &cols[src];
+                    if !other.is_empty() {
+                        combine(acc.as_mut().expect("active holds acc"), other);
+                    }
+                }
+            }
+            stride *= 2;
+        }
+        if me == root {
+            acc
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_nodes<F, R>(p: usize, f: F) -> Vec<R>
+    where
+        F: Fn(usize, Arc<Switch>) -> R + Send + Sync + 'static,
+        R: Send + 'static,
+    {
+        let sw = Switch::new(p, Arc::new(Metrics::new()));
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..p)
+            .map(|me| {
+                let sw = sw.clone();
+                let f = f.clone();
+                std::thread::spawn(move || f(me, sw))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn alltoallv_delivers_matrix() {
+        let results = run_nodes(4, |me, sw| {
+            let out: Vec<Vec<u8>> = (0..4).map(|j| vec![(me * 10 + j) as u8; 3]).collect();
+            sw.alltoallv(me, out)
+        });
+        for (me, cols) in results.iter().enumerate() {
+            for (i, col) in cols.iter().enumerate() {
+                assert_eq!(col, &vec![(i * 10 + me) as u8; 3]);
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_exchanges_do_not_cross_talk() {
+        let results = run_nodes(3, |me, sw| {
+            let mut got = Vec::new();
+            for round in 0..5u8 {
+                let out: Vec<Vec<u8>> = (0..3).map(|_| vec![round * 10 + me as u8]).collect();
+                got.push(sw.alltoallv(me, out));
+            }
+            got
+        });
+        for cols_by_round in results {
+            for (round, cols) in cols_by_round.iter().enumerate() {
+                for (i, col) in cols.iter().enumerate() {
+                    assert_eq!(col, &vec![round as u8 * 10 + i as u8]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bcast_all_nodes_receive() {
+        let results = run_nodes(4, |me, sw| {
+            let payload = if me == 2 { Some(vec![7, 8, 9]) } else { None };
+            sw.bcast(me, 2, payload)
+        });
+        for r in results {
+            assert_eq!(r, vec![7, 8, 9]);
+        }
+    }
+
+    #[test]
+    fn gather_root_collects() {
+        let results = run_nodes(3, |me, sw| sw.gather(me, 1, vec![me as u8; me + 1]));
+        for (me, r) in results.iter().enumerate() {
+            if me == 1 {
+                let cols = r.as_ref().unwrap();
+                for (i, c) in cols.iter().enumerate() {
+                    assert_eq!(c, &vec![i as u8; i + 1]);
+                }
+            } else {
+                assert!(r.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_distributes() {
+        let results = run_nodes(3, |me, sw| {
+            let data = if me == 0 {
+                Some((0..3).map(|j| vec![j as u8 + 100; 2]).collect())
+            } else {
+                None
+            };
+            sw.scatter(me, 0, data)
+        });
+        for (me, r) in results.iter().enumerate() {
+            assert_eq!(r, &vec![me as u8 + 100; 2]);
+        }
+    }
+
+    #[test]
+    fn allgather_everyone_gets_everything() {
+        let results = run_nodes(4, |me, sw| sw.allgather(me, vec![me as u8]));
+        for r in results {
+            for (i, c) in r.iter().enumerate() {
+                assert_eq!(c, &vec![i as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_tree_sums_u64() {
+        for root in 0..3 {
+            let results = run_nodes(3, move |me, sw| {
+                let data = (me as u64 + 1).to_le_bytes().to_vec();
+                sw.reduce(me, root, data, &|acc, other| {
+                    let a = u64::from_le_bytes(acc.try_into().unwrap());
+                    let b = u64::from_le_bytes(other.try_into().unwrap());
+                    acc.copy_from_slice(&(a + b).to_le_bytes());
+                })
+            });
+            for (me, r) in results.iter().enumerate() {
+                if me == root {
+                    let v = u64::from_le_bytes(r.as_ref().unwrap()[..].try_into().unwrap());
+                    assert_eq!(v, 1 + 2 + 3);
+                } else {
+                    assert!(r.is_none());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_node_short_circuits() {
+        let sw = Switch::new(1, Arc::new(Metrics::new()));
+        sw.barrier();
+        let r = sw.alltoallv(0, vec![vec![1, 2, 3]]);
+        assert_eq!(r[0], vec![1, 2, 3]);
+        assert_eq!(sw.bcast(0, 0, Some(vec![5])), vec![5]);
+    }
+
+    #[test]
+    fn metrics_charge_h_relations() {
+        let m = Arc::new(Metrics::new());
+        let sw = Switch::new(2, m.clone());
+        let sw2 = sw.clone();
+        let t = std::thread::spawn(move || {
+            sw2.alltoallv(1, vec![vec![0; 100], vec![0; 50]]);
+        });
+        sw.alltoallv(0, vec![vec![0; 10], vec![0; 20]]);
+        t.join().unwrap();
+        let s = m.snapshot();
+        assert_eq!(s.net_relations, 1);
+        assert_eq!(s.net_bytes, 150); // max per-node volume
+    }
+}

@@ -1,0 +1,125 @@
+//! Artifact manifest parsing (`artifacts/manifest.txt`).
+//!
+//! Plain-text, one artifact per line: `name dtype rows cols file`.
+//! (serde is not in the offline crate set; the format is deliberately
+//! trivial.)
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One artifact's geometry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// Export name (e.g. `sort_i32`).
+    pub name: String,
+    /// `f32` or `i32`.
+    pub dtype: String,
+    /// Chunk rows.
+    pub rows: usize,
+    /// Chunk cols.
+    pub cols: usize,
+    /// HLO text filename relative to the artifact dir.
+    pub file: String,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Default, Clone)]
+pub struct Manifest {
+    entries: HashMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load and parse.
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            Error::runtime(format!("manifest {:?}: {e} (run `make artifacts`)", path.as_ref()))
+        })?;
+        Manifest::parse(&text)
+    }
+
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut entries = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 5 {
+                return Err(Error::runtime(format!(
+                    "manifest line {}: expected 5 fields, got {}",
+                    lineno + 1,
+                    parts.len()
+                )));
+            }
+            let entry = ManifestEntry {
+                name: parts[0].to_string(),
+                dtype: parts[1].to_string(),
+                rows: parts[2]
+                    .parse()
+                    .map_err(|_| Error::runtime("manifest: bad rows"))?,
+                cols: parts[3]
+                    .parse()
+                    .map_err(|_| Error::runtime("manifest: bad cols"))?,
+                file: parts[4].to_string(),
+            };
+            entries.insert(entry.name.clone(), entry);
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Look up an artifact.
+    pub fn get(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.get(name)
+    }
+
+    /// Number of artifacts.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True if no artifacts.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Iterate over entries.
+    pub fn iter(&self) -> impl Iterator<Item = &ManifestEntry> {
+        self.entries.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trip() {
+        let m = Manifest::parse(
+            "sort_i32 i32 64 1024 sort_i32.hlo.txt\n\
+             # comment\n\
+             \n\
+             scan_f32 f32 64 1024 scan_f32.hlo.txt\n",
+        )
+        .unwrap();
+        assert_eq!(m.len(), 2);
+        let e = m.get("sort_i32").unwrap();
+        assert_eq!((e.rows, e.cols), (64, 1024));
+        assert_eq!(e.dtype, "i32");
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Manifest::parse("sort_i32 i32 64").is_err());
+        assert!(Manifest::parse("sort_i32 i32 x y f.hlo").is_err());
+    }
+
+    #[test]
+    fn load_missing_file_mentions_make_artifacts() {
+        let e = Manifest::load("/nonexistent/manifest.txt").unwrap_err();
+        assert!(e.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,386 @@
+//! PJRT runtime: load and execute the AOT-compiled L1/L2 artifacts.
+//!
+//! `python/compile/aot.py` lowers the JAX + Pallas computation-superstep
+//! graphs (local sort / scan / reduce) to **HLO text** in `artifacts/`
+//! with a `manifest.txt` (name dtype rows cols file).  This module loads
+//! them through the `xla` crate (`PjRtClient::cpu` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`) — Python
+//! never runs on the simulation path.
+//!
+//! [`Compute`] exposes the operations with a pure-Rust fallback so the
+//! simulator works without artifacts (`use_xla = false` or artifacts
+//! missing); the E2E examples exercise the XLA path.
+
+pub mod manifest;
+
+pub use manifest::{Manifest, ManifestEntry};
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Which backend executed an operation (for reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT-compiled XLA executable via PJRT.
+    Xla,
+    /// Pure-Rust fallback.
+    Rust,
+}
+
+/// Requests serviced by the dedicated XLA worker thread.  The `xla`
+/// crate's PJRT handles are not `Send` (they hold `Rc`s), so one thread
+/// owns the client and all executables; VP threads talk to it over a
+/// channel.  Calls are infrequent and chunky (one per computation
+/// superstep chunk), so the channel hop is noise.
+enum Req {
+    Exec {
+        name: String,
+        input: Vec<i32>,
+        reply: std::sync::mpsc::Sender<Result<Vec<i32>>>,
+    },
+    Geometry {
+        name: String,
+        reply: std::sync::mpsc::Sender<Option<(usize, usize)>>,
+    },
+}
+
+/// Computation-superstep backend.
+pub struct Compute {
+    tx: Option<Mutex<std::sync::mpsc::Sender<Req>>>,
+    enabled: bool,
+}
+
+impl std::fmt::Debug for Compute {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Compute").field("enabled", &self.enabled).finish()
+    }
+}
+
+fn xla_worker(
+    dir: PathBuf,
+    manifest: Manifest,
+    ready: std::sync::mpsc::Sender<Result<()>>,
+    rx: std::sync::mpsc::Receiver<Req>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(Error::runtime(format!("PjRtClient::cpu: {e}"))));
+            return;
+        }
+    };
+    let mut executables: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Geometry { name, reply } => {
+                let _ = reply.send(manifest.get(&name).map(|e| (e.rows, e.cols)));
+            }
+            Req::Exec { name, input, reply } => {
+                let r = (|| -> Result<Vec<i32>> {
+                    let entry = manifest
+                        .get(&name)
+                        .ok_or_else(|| {
+                            Error::runtime(format!("artifact '{name}' not in manifest"))
+                        })?
+                        .clone();
+                    if input.len() != entry.rows * entry.cols {
+                        return Err(Error::runtime(format!(
+                            "artifact '{name}' expects {}x{} elements, got {}",
+                            entry.rows,
+                            entry.cols,
+                            input.len()
+                        )));
+                    }
+                    if !executables.contains_key(&name) {
+                        let path = dir.join(&entry.file);
+                        let proto = xla::HloModuleProto::from_text_file(&path)
+                            .map_err(|e| Error::runtime(format!("load {path:?}: {e}")))?;
+                        let comp = xla::XlaComputation::from_proto(&proto);
+                        let exe = client
+                            .compile(&comp)
+                            .map_err(|e| Error::runtime(format!("compile '{name}': {e}")))?;
+                        executables.insert(name.clone(), exe);
+                    }
+                    let exe = &executables[&name];
+                    let lit = xla::Literal::vec1(&input)
+                        .reshape(&[entry.rows as i64, entry.cols as i64])
+                        .map_err(|e| Error::runtime(format!("reshape: {e}")))?;
+                    let result = exe
+                        .execute::<xla::Literal>(&[lit])
+                        .map_err(|e| Error::runtime(format!("execute '{name}': {e}")))?;
+                    let out = result[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| Error::runtime(format!("to_literal: {e}")))?;
+                    // aot.py lowers with return_tuple=True.
+                    let out = out
+                        .to_tuple1()
+                        .map_err(|e| Error::runtime(format!("to_tuple1: {e}")))?;
+                    out.to_vec::<i32>()
+                        .map_err(|e| Error::runtime(format!("to_vec: {e}")))
+                })();
+                let _ = reply.send(r);
+            }
+        }
+    }
+}
+
+impl Compute {
+    /// A disabled backend (always uses the Rust fallback).
+    pub fn disabled() -> Compute {
+        Compute { tx: None, enabled: false }
+    }
+
+    /// Load the artifact manifest from `dir` and start the PJRT worker.
+    pub fn from_artifacts(dir: impl AsRef<Path>) -> Result<Compute> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.txt"))?;
+        let (tx, rx) = std::sync::mpsc::channel();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel();
+        std::thread::Builder::new()
+            .name("pems2-xla".into())
+            .spawn(move || xla_worker(dir, manifest, ready_tx, rx))
+            .map_err(|e| Error::runtime(format!("spawn xla worker: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::runtime("xla worker died during startup"))??;
+        Ok(Compute { tx: Some(Mutex::new(tx)), enabled: true })
+    }
+
+    /// Load artifacts if the directory exists, else return the fallback.
+    pub fn auto(dir: impl AsRef<Path>, want_xla: bool) -> Compute {
+        if !want_xla {
+            return Compute::disabled();
+        }
+        match Compute::from_artifacts(&dir) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!(
+                    "pems2: XLA artifacts unavailable ({e}); using Rust compute fallback"
+                );
+                Compute::disabled()
+            }
+        }
+    }
+
+    /// True if the XLA path is active.
+    pub fn xla_active(&self) -> bool {
+        self.enabled
+    }
+
+    /// Execute artifact `name` on an i32 input of shape (rows, cols);
+    /// returns the flattened i32 output(s).
+    fn exec_i32(&self, name: &str, input: &[i32]) -> Result<Vec<i32>> {
+        let tx = self.tx.as_ref().ok_or_else(|| Error::runtime("xla disabled"))?;
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        tx.lock()
+            .unwrap()
+            .send(Req::Exec { name: name.to_string(), input: input.to_vec(), reply: reply_tx })
+            .map_err(|_| Error::runtime("xla worker gone"))?;
+        reply_rx.recv().map_err(|_| Error::runtime("xla worker gone"))?
+    }
+
+    /// Geometry of an artifact (rows, cols), if loaded.
+    fn geometry(&self, name: &str) -> Option<(usize, usize)> {
+        let tx = self.tx.as_ref()?;
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        tx.lock()
+            .unwrap()
+            .send(Req::Geometry { name: name.to_string(), reply: reply_tx })
+            .ok()?;
+        reply_rx.recv().ok()?
+    }
+
+    // ------------------------------------------------------------ user ops
+
+    /// Sort `data` ascending.  XLA path: bitonic tile-sort kernel on
+    /// (rows × cols) chunks + k-way merge; fallback: `sort_unstable`.
+    /// Returns the backend used.
+    pub fn local_sort_u32(&self, data: &mut [u32]) -> Backend {
+        if self.enabled {
+            if let Some((rows, cols)) = self.geometry("sort_i32") {
+                if self.xla_sort_u32(data, rows, cols).is_ok() {
+                    return Backend::Xla;
+                }
+            }
+        }
+        data.sort_unstable();
+        Backend::Rust
+    }
+
+    fn xla_sort_u32(&self, data: &mut [u32], rows: usize, cols: usize) -> Result<()> {
+        let chunk = rows * cols;
+        let n = data.len();
+        let mut runs: Vec<Vec<u32>> = Vec::new();
+        let mut at = 0;
+        while at < n {
+            let take = chunk.min(n - at);
+            // Order-preserving u32 -> i32 map (x ^ 0x8000_0000), padding
+            // with i32::MAX so pad elements sort last within each tile.
+            let mut buf = vec![i32::MAX; chunk];
+            for (b, &x) in buf.iter_mut().zip(&data[at..at + take]) {
+                *b = (x ^ 0x8000_0000) as i32;
+            }
+            let sorted = self.exec_i32("sort_i32", &buf)?;
+            // Each row (tile) is sorted; merge the rows of this chunk.
+            let tiles: Vec<&[i32]> = sorted.chunks(cols).collect();
+            let merged = merge_sorted_i32(&tiles, take);
+            for (d, m) in data[at..at + take].iter_mut().zip(merged) {
+                *d = (m as u32) ^ 0x8000_0000;
+            }
+            runs.push(data[at..at + take].to_vec());
+            at += take;
+        }
+        if runs.len() > 1 {
+            // Merge the per-chunk runs.
+            let refs: Vec<&[u32]> = runs.iter().map(|r| r.as_slice()).collect();
+            let merged = merge_sorted_u32(&refs, n);
+            data.copy_from_slice(&merged);
+        }
+        Ok(())
+    }
+
+    /// Inclusive prefix sum (wrapping i32/u32 semantics shared with the
+    /// Pallas kernel).  Returns the backend used.
+    pub fn local_scan_i32(&self, data: &mut [i32]) -> Backend {
+        if self.enabled {
+            if let Some((rows, cols)) = self.geometry("scan_i32") {
+                if self.xla_scan_i32(data, rows, cols).is_ok() {
+                    return Backend::Xla;
+                }
+            }
+        }
+        let mut acc = 0i32;
+        for x in data.iter_mut() {
+            acc = acc.wrapping_add(*x);
+            *x = acc;
+        }
+        Backend::Rust
+    }
+
+    fn xla_scan_i32(&self, data: &mut [i32], rows: usize, cols: usize) -> Result<()> {
+        let chunk = rows * cols;
+        let mut carry = 0i32;
+        let n = data.len();
+        let mut at = 0;
+        while at < n {
+            let take = chunk.min(n - at);
+            let mut buf = vec![0i32; chunk]; // zero padding is scan-neutral
+            buf[..take].copy_from_slice(&data[at..at + take]);
+            let scanned = self.exec_i32("scan_i32", &buf)?;
+            for (d, s) in data[at..at + take].iter_mut().zip(&scanned[..take]) {
+                *d = s.wrapping_add(carry);
+            }
+            carry = data[at + take - 1];
+            at += take;
+        }
+        Ok(())
+    }
+
+    /// Sum-reduce.  Returns (sum, backend).
+    pub fn local_reduce_sum_i32(&self, data: &[i32]) -> (i32, Backend) {
+        if self.enabled {
+            if let Some((rows, cols)) = self.geometry("reduce_sum_i32") {
+                if let Ok(s) = self.xla_reduce_sum_i32(data, rows, cols) {
+                    return (s, Backend::Xla);
+                }
+            }
+        }
+        (data.iter().fold(0i32, |a, &b| a.wrapping_add(b)), Backend::Rust)
+    }
+
+    fn xla_reduce_sum_i32(&self, data: &[i32], rows: usize, cols: usize) -> Result<i32> {
+        let chunk = rows * cols;
+        let mut total = 0i32;
+        let mut at = 0;
+        while at < data.len() {
+            let take = chunk.min(data.len() - at);
+            let mut buf = vec![0i32; chunk];
+            buf[..take].copy_from_slice(&data[at..at + take]);
+            let out = self.exec_i32("reduce_sum_i32", &buf)?;
+            total = total.wrapping_add(out[0]);
+            at += take;
+        }
+        Ok(total)
+    }
+}
+
+/// k-way merge of sorted i32 slices, taking the first `n` elements.
+fn merge_sorted_i32(runs: &[&[i32]], n: usize) -> Vec<i32> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut heap: BinaryHeap<Reverse<(i32, usize, usize)>> = BinaryHeap::new();
+    for (r, run) in runs.iter().enumerate() {
+        if !run.is_empty() {
+            heap.push(Reverse((run[0], r, 0)));
+        }
+    }
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let Reverse((val, r, i)) = heap.pop().expect("enough elements");
+        out.push(val);
+        if i + 1 < runs[r].len() {
+            heap.push(Reverse((runs[r][i + 1], r, i + 1)));
+        }
+    }
+    out
+}
+
+/// k-way merge of sorted u32 slices.
+fn merge_sorted_u32(runs: &[&[u32]], n: usize) -> Vec<u32> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut heap: BinaryHeap<Reverse<(u32, usize, usize)>> = BinaryHeap::new();
+    for (r, run) in runs.iter().enumerate() {
+        if !run.is_empty() {
+            heap.push(Reverse((run[0], r, 0)));
+        }
+    }
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let Reverse((val, r, i)) = heap.pop().expect("enough elements");
+        out.push(val);
+        if i + 1 < runs[r].len() {
+            heap.push(Reverse((runs[r][i + 1], r, i + 1)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64;
+
+    #[test]
+    fn fallback_sort_scan_reduce() {
+        let c = Compute::disabled();
+        let mut rng = XorShift64::new(1);
+        let mut v = vec![0u32; 1000];
+        rng.fill_u32(&mut v);
+        assert_eq!(c.local_sort_u32(&mut v), Backend::Rust);
+        assert!(v.windows(2).all(|w| w[0] <= w[1]));
+
+        let mut s = vec![1i32; 10];
+        assert_eq!(c.local_scan_i32(&mut s), Backend::Rust);
+        assert_eq!(s, (1..=10).collect::<Vec<i32>>());
+
+        let (sum, b) = c.local_reduce_sum_i32(&[1, 2, 3, 4]);
+        assert_eq!((sum, b), (10, Backend::Rust));
+    }
+
+    #[test]
+    fn merge_sorted_merges() {
+        let merged = merge_sorted_u32(&[&[1, 4, 7], &[2, 5], &[0, 9]], 7);
+        assert_eq!(merged, vec![0, 1, 2, 4, 5, 7, 9]);
+        let merged = merge_sorted_i32(&[&[-5, 0], &[-10, 20]], 4);
+        assert_eq!(merged, vec![-10, -5, 0, 20]);
+    }
+
+    // XLA-backed tests live in rust/tests/xla_runtime.rs (they require
+    // `make artifacts` to have run).
+}

@@ -1,0 +1,398 @@
+//! The EM synchronisation primitives (thesis Algs. 4.3.1–4.3.5).
+//!
+//! All are called while the thread holds its memory-partition lock; they
+//! swap a context out **only** when that thread blocks the partition
+//! another thread needs — the minimal-I/O goal of §4.3.  Partition and swap
+//! operations are abstracted behind [`PartitionYield`] so the primitives
+//! are testable without the full engine.
+//!
+//! Three synchronisation styles (§4.3):
+//! 1. *Initial* — wait for the first thread: [`em_first_thread`] +
+//!    [`em_signal_threads`]`(.., false)`.
+//! 2. *Rooted* — wait for a specific root: [`em_wait_for_root`] +
+//!    [`em_signal_threads`]`(.., true)`.
+//! 3. *Final* — a root waits for all other threads:
+//!    [`em_all_threads_finished`] / [`em_wait_threads`] on the root side,
+//!    [`em_thread_finished`] on the others (as used by EM-Gather,
+//!    Alg. 7.3.1).
+
+use crate::error::Result;
+use crate::sync::signal::EmSignal;
+
+/// Operations the calling thread can perform on its memory partition.
+///
+/// Implemented by the engine's VP handle; tests use lightweight mocks.
+pub trait PartitionYield {
+    /// Swap this thread's context out to disk.
+    fn swap_out(&mut self) -> Result<()>;
+    /// Release this thread's partition lock.
+    fn unlock_partition(&mut self);
+    /// Re-acquire this thread's partition lock.
+    fn lock_partition(&mut self);
+    /// Memory partition index of thread `t` (`t mod k`).
+    fn partition_of(&self, thread: usize) -> usize;
+    /// This thread's local ID.
+    fn thread_id(&self) -> usize;
+}
+
+/// Alg. 4.3.1 EM-Wait-For-Root: block until the root thread signals.
+///
+/// Swaps out only if this thread occupies the partition the root needs.
+/// Returns `true` iff the context was swapped out (caller must swap in
+/// before touching its memory again).  The root must not call this; it
+/// does its work and calls [`em_signal_threads`]`(.., true)`.
+pub fn em_wait_for_root(
+    s: &EmSignal,
+    ops: &mut dyn PartitionYield,
+    root: usize,
+    v_per_p: usize,
+) -> Result<bool> {
+    let t = ops.thread_id();
+    debug_assert_ne!(t, root, "root must not wait for itself");
+    let mut result = false;
+    s.lock();
+    if !s.flag() {
+        // Root has not signalled yet.
+        let shares = ops.partition_of(t) == ops.partition_of(root);
+        if shares {
+            // Yield the partition to the root.
+            result = true;
+            ops.swap_out()?;
+            ops.unlock_partition();
+        }
+        s.wait(); // wait for the root's broadcast
+        if shares {
+            // Re-acquire the partition; release the signal lock first to
+            // prevent deadlock (Alg. 4.3.1 lines 11-13).
+            s.unlock();
+            ops.lock_partition();
+            s.lock();
+        }
+    }
+    s.set_count(s.count() + 1);
+    if s.count() == v_per_p {
+        // All non-root threads finished waiting: reset the signal.
+        s.set_count(0);
+        s.set_flag(false);
+    }
+    s.unlock();
+    Ok(result)
+}
+
+/// Alg. 4.3.2 EM-First-Thread: returns `true` for exactly one (the first)
+/// caller, which must do its work and then call
+/// [`em_signal_threads`]`(.., false)`.  **The signal lock is still held
+/// when `true` is returned**; other callers block until the first thread
+/// signals and return `false`.
+pub fn em_first_thread(s: &EmSignal, v_per_p: usize) -> bool {
+    s.lock();
+    if s.count() == 0 {
+        s.set_flag(false);
+        return true; // keep the signal lock (count incremented by signal)
+    }
+    s.set_count((s.count() + 1) % v_per_p);
+    if !s.flag() {
+        s.wait();
+    }
+    if s.count() == 0 {
+        // Last thread: reset the flag for reuse.
+        s.set_flag(false);
+    }
+    s.unlock();
+    false
+}
+
+/// Non-root half of *final synchronisation* (EM-Thread-Finished in
+/// Alg. 7.3.1): report completion; the (v/P − 1)-th reporter raises the
+/// flag and wakes a waiting root.
+pub fn em_thread_finished(s: &EmSignal, v_per_p: usize) {
+    s.lock();
+    s.set_count(s.count() + 1);
+    if s.count() == v_per_p - 1 {
+        s.set_flag(true);
+        s.broadcast();
+    }
+    s.unlock();
+}
+
+/// Alg. 4.3.3 EM-All-Threads-Finished (root only): returns `true` iff all
+/// `v/P − 1` other threads already called [`em_thread_finished`] — the
+/// root may then do the collected work immediately.  On `false` the caller
+/// must invoke [`em_wait_threads`].
+pub fn em_all_threads_finished(s: &EmSignal, v_per_p: usize) -> bool {
+    s.lock();
+    if s.count() == v_per_p - 1 {
+        // Everyone already finished: reset and proceed.
+        s.set_count(0);
+        s.set_flag(false);
+        s.unlock();
+        return true;
+    }
+    s.unlock();
+    false
+}
+
+/// Alg. 4.3.4 EM-Wait-Threads (root only): yield the partition (swapping
+/// out at most once across cascaded calls, tracked by `swapped`) and block
+/// until the flag is raised; then reset the signal and re-acquire the
+/// partition.
+pub fn em_wait_threads(
+    s: &EmSignal,
+    ops: &mut dyn PartitionYield,
+    swapped: &mut bool,
+) -> Result<()> {
+    if !*swapped {
+        ops.swap_out()?;
+        *swapped = true;
+    }
+    ops.unlock_partition();
+    s.lock();
+    if !s.flag() {
+        s.wait();
+    }
+    // Reset the signal.
+    s.set_flag(false);
+    s.set_count(0);
+    s.unlock();
+    ops.lock_partition();
+    Ok(())
+}
+
+/// Alg. 4.3.5 EM-Signal-Threads: the root/first thread publishes "work
+/// done".  `take_lock` is `true` in the rooted case (the caller does not
+/// hold the signal lock) and `false` in the initial case (the caller kept
+/// the lock from [`em_first_thread`]).
+pub fn em_signal_threads(s: &EmSignal, v_per_p: usize, take_lock: bool) {
+    if take_lock {
+        s.lock();
+    }
+    s.set_count((s.count() + 1) % v_per_p);
+    s.set_flag(true); // for threads yet to run
+    s.broadcast(); // for the k-1 other currently running threads
+    s.unlock();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Arc, Mutex};
+
+    /// Mock partitions: `k` RawLocks; records swap-outs.
+    struct MockNode {
+        k: usize,
+        locks: Vec<crate::sync::RawLock>,
+        swaps: AtomicUsize,
+    }
+
+    struct MockVp {
+        node: Arc<MockNode>,
+        t: usize,
+    }
+
+    impl MockVp {
+        fn new(node: Arc<MockNode>, t: usize) -> Self {
+            node.locks[t % node.k].lock();
+            MockVp { node, t }
+        }
+        fn finish(self) {
+            self.node.locks[self.t % self.node.k].unlock();
+        }
+    }
+
+    impl PartitionYield for MockVp {
+        fn swap_out(&mut self) -> Result<()> {
+            self.node.swaps.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        }
+        fn unlock_partition(&mut self) {
+            self.node.locks[self.t % self.node.k].unlock();
+        }
+        fn lock_partition(&mut self) {
+            self.node.locks[self.t % self.node.k].lock();
+        }
+        fn partition_of(&self, thread: usize) -> usize {
+            thread % self.node.k
+        }
+        fn thread_id(&self) -> usize {
+            self.t
+        }
+    }
+
+    fn mock(k: usize) -> Arc<MockNode> {
+        Arc::new(MockNode {
+            k,
+            locks: (0..k).map(|_| crate::sync::RawLock::new()).collect(),
+            swaps: AtomicUsize::new(0),
+        })
+    }
+
+    #[test]
+    fn wait_for_root_only_partition_sharers_swap() {
+        // v/P = 4 threads, k = 2 partitions, root = 0 (partition 0).
+        // Thread 2 shares partition 0; threads 1,3 do not.
+        let node = mock(2);
+        let s = Arc::new(EmSignal::new());
+        let v_per_p = 4;
+        let root = 0usize;
+        let mut handles = Vec::new();
+        for t in 1..v_per_p {
+            let node = node.clone();
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut vp = MockVp::new(node, t);
+                let swapped = em_wait_for_root(&s, &mut vp, root, v_per_p).unwrap();
+                vp.finish();
+                (t, swapped)
+            }));
+        }
+        // Root: take partition 0 (waits for thread 2 to yield), do "work",
+        // then signal.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let root_vp = MockVp::new(node.clone(), root);
+        em_signal_threads(&s, v_per_p, true);
+        root_vp.finish();
+        let mut swapped_threads = Vec::new();
+        for h in handles {
+            let (t, sw) = h.join().unwrap();
+            if sw {
+                swapped_threads.push(t);
+            }
+        }
+        // Only thread 2 (partition 0) should have swapped out.
+        assert_eq!(swapped_threads, vec![2]);
+        assert_eq!(node.swaps.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn first_thread_exactly_one_wins() {
+        let s = Arc::new(EmSignal::new());
+        let v_per_p = 6;
+        let winners = Arc::new(AtomicUsize::new(0));
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for t in 0..v_per_p {
+            let s = s.clone();
+            let winners = winners.clone();
+            let order = order.clone();
+            handles.push(std::thread::spawn(move || {
+                if em_first_thread(&s, v_per_p) {
+                    winners.fetch_add(1, Ordering::Relaxed);
+                    order.lock().unwrap().push(("first", t));
+                    // Simulate work, then release the others.
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                    em_signal_threads(&s, v_per_p, false);
+                } else {
+                    order.lock().unwrap().push(("follower", t));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(winners.load(Ordering::Relaxed), 1);
+        // The winner's entry must be first in arrival order.
+        assert_eq!(order.lock().unwrap()[0].0, "first");
+    }
+
+    #[test]
+    fn first_thread_is_reusable_across_rounds() {
+        let s = Arc::new(EmSignal::new());
+        let v_per_p = 4;
+        for _round in 0..3 {
+            let winners = Arc::new(AtomicUsize::new(0));
+            let handles: Vec<_> = (0..v_per_p)
+                .map(|_| {
+                    let s = s.clone();
+                    let w = winners.clone();
+                    std::thread::spawn(move || {
+                        if em_first_thread(&s, v_per_p) {
+                            w.fetch_add(1, Ordering::Relaxed);
+                            em_signal_threads(&s, v_per_p, false);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(winners.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn final_sync_root_last_fast_path() {
+        // All non-roots finish before the root checks: no root swap.
+        let s = EmSignal::new();
+        let v_per_p = 4;
+        for _ in 0..v_per_p - 1 {
+            em_thread_finished(&s, v_per_p);
+        }
+        assert!(em_all_threads_finished(&s, v_per_p));
+        // Signal fully reset: a new round works.
+        for _ in 0..v_per_p - 1 {
+            em_thread_finished(&s, v_per_p);
+        }
+        assert!(em_all_threads_finished(&s, v_per_p));
+    }
+
+    #[test]
+    fn final_sync_root_waits_and_swaps_once() {
+        let node = mock(2);
+        let s = Arc::new(EmSignal::new());
+        let v_per_p = 4;
+        let root = 0usize;
+
+        // Root arrives first: not all finished -> waits via em_wait_threads.
+        let s_root = s.clone();
+        let node_root = node.clone();
+        let root_h = std::thread::spawn(move || {
+            let mut vp = MockVp::new(node_root, root);
+            let mut swapped = false;
+            if !em_all_threads_finished(&s_root, v_per_p) {
+                em_wait_threads(&s_root, &mut vp, &mut swapped).unwrap();
+            }
+            vp.finish();
+            swapped
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // Non-roots finish (thread 2 shares the root's partition — the
+        // root has yielded it by swapping out, so no deadlock).
+        let mut handles = Vec::new();
+        for t in 1..v_per_p {
+            let node = node.clone();
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let vp = MockVp::new(node, t);
+                em_thread_finished(&s, v_per_p);
+                vp.finish();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let swapped = root_h.join().unwrap();
+        assert!(swapped, "early root must yield its partition (swap out)");
+        assert_eq!(node.swaps.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn wait_for_root_no_flag_fast_path() {
+        // If the root signalled before a waiter arrives, the waiter must
+        // not block or swap.
+        let node = mock(1);
+        let s = Arc::new(EmSignal::new());
+        let v_per_p = 2;
+        // Root (thread 0) signals first.
+        {
+            let root_vp = MockVp::new(node.clone(), 0);
+            em_signal_threads(&s, v_per_p, true);
+            root_vp.finish();
+        }
+        let mut vp = MockVp::new(node.clone(), 1);
+        let swapped = em_wait_for_root(&s, &mut vp, 0, v_per_p).unwrap();
+        vp.finish();
+        assert!(!swapped);
+        assert_eq!(node.swaps.load(Ordering::Relaxed), 0);
+    }
+}

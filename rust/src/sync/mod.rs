@@ -1,0 +1,117 @@
+//! Thread synchronisation (thesis Ch. 4).
+//!
+//! The composite *signal* structure (§4.3) and the five EM synchronisation
+//! primitives built on it (Algs. 4.3.1–4.3.5), plus the raw partition lock
+//! and superstep barrier.
+//!
+//! A primitive pthreads signal is not persistent — only threads waiting at
+//! fire time are notified — and every running thread holds its memory
+//! partition lock, so naive signalling deadlocks or misses wakeups.  The
+//! composite signal pairs the primitive signal with a counter and a flag:
+//! the primitive part synchronises the `k` currently swapped-in threads,
+//! the counter/flag part synchronises the swapped-out ones.
+
+pub mod barrier;
+pub mod em;
+pub mod signal;
+
+pub use barrier::SuperstepBarrier;
+pub use em::{
+    em_all_threads_finished, em_first_thread, em_signal_threads, em_thread_finished,
+    em_wait_for_root, em_wait_threads, PartitionYield,
+};
+pub use signal::EmSignal;
+
+/// Raw explicit-acquire lock used for memory partitions.
+///
+/// `std::sync::Mutex` guards are lexically scoped; the thesis' algorithms
+/// unlock a partition in one function and re-lock it in another (e.g.
+/// EM-Wait-For-Root yields the partition to the root mid-call), so we need
+/// lock/unlock as plain calls.
+#[derive(Debug, Default)]
+pub struct RawLock {
+    state: std::sync::Mutex<bool>,
+    cv: std::sync::Condvar,
+}
+
+impl RawLock {
+    /// New unlocked lock.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Block until the lock is acquired.
+    pub fn lock(&self) {
+        let mut locked = self.state.lock().unwrap();
+        while *locked {
+            locked = self.cv.wait(locked).unwrap();
+        }
+        *locked = true;
+    }
+
+    /// Release the lock.  Panics if not locked (programming error).
+    pub fn unlock(&self) {
+        let mut locked = self.state.lock().unwrap();
+        assert!(*locked, "unlock of unlocked RawLock");
+        *locked = false;
+        drop(locked);
+        self.cv.notify_one();
+    }
+
+    /// Try to acquire without blocking.
+    pub fn try_lock(&self) -> bool {
+        let mut locked = self.state.lock().unwrap();
+        if *locked {
+            false
+        } else {
+            *locked = true;
+            true
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn raw_lock_excludes() {
+        let l = Arc::new(RawLock::new());
+        let counter = Arc::new(std::sync::Mutex::new(0u64));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let l = l.clone();
+            let c = counter.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    l.lock();
+                    // Non-atomic read-modify-write protected by RawLock.
+                    let v = *c.lock().unwrap();
+                    *c.lock().unwrap() = v + 1;
+                    l.unlock();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*counter.lock().unwrap(), 4000);
+    }
+
+    #[test]
+    fn try_lock_fails_when_held() {
+        let l = RawLock::new();
+        assert!(l.try_lock());
+        assert!(!l.try_lock());
+        l.unlock();
+        assert!(l.try_lock());
+        l.unlock();
+    }
+
+    #[test]
+    #[should_panic(expected = "unlock of unlocked")]
+    fn unlock_unlocked_panics() {
+        RawLock::new().unlock();
+    }
+}

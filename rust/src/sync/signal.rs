@@ -1,0 +1,190 @@
+//! The composite signal structure (thesis §4.3).
+//!
+//! A signal is a primitive condition variable plus a counter and a flag,
+//! with an explicitly acquired lock (the algorithms unlock it across
+//! partition operations).  `wait` has pthreads condition semantics:
+//! atomically release the signal lock and sleep until a broadcast, then
+//! re-acquire.
+
+use std::sync::{Condvar, Mutex};
+
+#[derive(Debug, Default)]
+struct Inner {
+    locked: bool,
+    count: usize,
+    flag: bool,
+    generation: u64,
+}
+
+/// Composite signal: primitive cv + counter + flag (§4.3).
+#[derive(Debug, Default)]
+pub struct EmSignal {
+    inner: Mutex<Inner>,
+    /// Wakes threads waiting to acquire the signal lock.
+    cv_lock: Condvar,
+    /// Wakes threads blocked in [`EmSignal::wait`].
+    cv_sig: Condvar,
+}
+
+impl EmSignal {
+    /// New unlocked signal with count 0 and flag false.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Acquire the signal lock (`s.lock()` in the algorithms).
+    pub fn lock(&self) {
+        let mut g = self.inner.lock().unwrap();
+        while g.locked {
+            g = self.cv_lock.wait(g).unwrap();
+        }
+        g.locked = true;
+    }
+
+    /// Release the signal lock (`s.unlock()`).
+    pub fn unlock(&self) {
+        let mut g = self.inner.lock().unwrap();
+        assert!(g.locked, "unlock of unlocked EmSignal");
+        g.locked = false;
+        drop(g);
+        self.cv_lock.notify_one();
+    }
+
+    /// Atomically release the lock, sleep until the next broadcast, then
+    /// re-acquire (`s.wait()`).  Must be called holding the lock.
+    pub fn wait(&self) {
+        let mut g = self.inner.lock().unwrap();
+        assert!(g.locked, "wait without holding EmSignal lock");
+        let gen = g.generation;
+        g.locked = false;
+        self.cv_lock.notify_one();
+        while g.generation == gen {
+            g = self.cv_sig.wait(g).unwrap();
+        }
+        // Re-acquire the signal lock.
+        while g.locked {
+            g = self.cv_lock.wait(g).unwrap();
+        }
+        g.locked = true;
+    }
+
+    /// Wake all current waiters (`s.broadcast()`).  Must hold the lock.
+    pub fn broadcast(&self) {
+        let mut g = self.inner.lock().unwrap();
+        assert!(g.locked, "broadcast without holding EmSignal lock");
+        g.generation = g.generation.wrapping_add(1);
+        drop(g);
+        self.cv_sig.notify_all();
+    }
+
+    /// Read the counter.  Must hold the lock.
+    pub fn count(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        debug_assert!(g.locked);
+        g.count
+    }
+
+    /// Write the counter.  Must hold the lock.
+    pub fn set_count(&self, c: usize) {
+        let mut g = self.inner.lock().unwrap();
+        debug_assert!(g.locked);
+        g.count = c;
+    }
+
+    /// Read the flag.  Must hold the lock.
+    pub fn flag(&self) -> bool {
+        let g = self.inner.lock().unwrap();
+        debug_assert!(g.locked);
+        g.flag
+    }
+
+    /// Write the flag.  Must hold the lock.
+    pub fn set_flag(&self, f: bool) {
+        let mut g = self.inner.lock().unwrap();
+        debug_assert!(g.locked);
+        g.flag = f;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn lock_unlock_counter() {
+        let s = EmSignal::new();
+        s.lock();
+        s.set_count(3);
+        assert_eq!(s.count(), 3);
+        s.set_flag(true);
+        assert!(s.flag());
+        s.unlock();
+    }
+
+    #[test]
+    fn wait_wakes_on_broadcast() {
+        let s = Arc::new(EmSignal::new());
+        let s2 = s.clone();
+        let waiter = std::thread::spawn(move || {
+            s2.lock();
+            s2.wait(); // releases lock; sleeps
+            let c = s2.count();
+            s2.unlock();
+            c
+        });
+        // Give the waiter time to park, then signal.
+        std::thread::sleep(Duration::from_millis(20));
+        s.lock();
+        s.set_count(7);
+        s.broadcast();
+        s.unlock();
+        assert_eq!(waiter.join().unwrap(), 7);
+    }
+
+    #[test]
+    fn broadcast_wakes_all_waiters() {
+        let s = Arc::new(EmSignal::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    s.lock();
+                    s.wait();
+                    s.unlock();
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(30));
+        s.lock();
+        s.broadcast();
+        s.unlock();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn late_waiter_is_not_woken_by_old_broadcast() {
+        // Signals are NOT persistent (the thesis' point): a wait after the
+        // broadcast must not return.  We verify by timing out.
+        let s = Arc::new(EmSignal::new());
+        s.lock();
+        s.broadcast();
+        s.unlock();
+        let s2 = s.clone();
+        let waiter = std::thread::spawn(move || {
+            s2.lock();
+            s2.wait();
+            s2.unlock();
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!waiter.is_finished(), "late waiter must still be blocked");
+        // Release it so the test ends cleanly.
+        s.lock();
+        s.broadcast();
+        s.unlock();
+        waiter.join().unwrap();
+    }
+}

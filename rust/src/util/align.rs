@@ -1,0 +1,157 @@
+//! Block-alignment arithmetic.
+//!
+//! Mirrors the thesis' Appendix B.2 notation:
+//! * `⌊x⌋` — [`align_down`]: `x` rounded down to a block boundary.
+//! * `⌈x⌉` — [`align_up`] (written `[[x]]` in Ch. 2): rounded up.
+//! * `⌈r⌉` over a range — the smallest aligned region containing `r`.
+//! * `⌊r⌋` over a range — the largest aligned region within `r`
+//!   ([`Aligned::interior`]).
+
+/// Round `x` down to a multiple of `b` (`b` need not be a power of two).
+pub fn align_down(x: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    x - (x % b)
+}
+
+/// Round `x` up to a multiple of `b`.
+pub fn align_up(x: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    let r = x % b;
+    if r == 0 {
+        x
+    } else {
+        x + (b - r)
+    }
+}
+
+/// Decomposition of a byte range `[start, end)` relative to block size `B`:
+/// an unaligned *head* fragment, a block-aligned *interior*, and an
+/// unaligned *tail* fragment.  Any of the three may be empty.
+///
+/// This is the geometry behind direct message delivery (§6.2): the interior
+/// is written straight to the destination context on disk; head and tail go
+/// through the boundary-block cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Aligned {
+    /// Range start (bytes).
+    pub start: u64,
+    /// Range end (bytes, exclusive).
+    pub end: u64,
+    /// Start of the aligned interior (`align_up(start)` clamped to `end`).
+    pub mid_start: u64,
+    /// End of the aligned interior (`align_down(end)` clamped to `start`).
+    pub mid_end: u64,
+}
+
+impl Aligned {
+    /// Decompose `[start, end)` against block size `b`.
+    pub fn new(start: u64, end: u64, b: u64) -> Aligned {
+        debug_assert!(start <= end);
+        let mut mid_start = align_up(start, b);
+        let mut mid_end = align_down(end, b);
+        if mid_start >= mid_end {
+            // No full block inside: the whole range is "boundary".
+            mid_start = start;
+            mid_end = start;
+        }
+        Aligned { start, end, mid_start, mid_end }
+    }
+
+    /// The largest aligned region within the range (`⌊r⌋`), as (start, len).
+    pub fn interior(&self) -> (u64, u64) {
+        (self.mid_start, self.mid_end - self.mid_start)
+    }
+
+    /// Unaligned head fragment as (start, len); empty if none.
+    pub fn head(&self) -> (u64, u64) {
+        (self.start, self.mid_start - self.start)
+    }
+
+    /// Unaligned tail fragment as (start, len); empty if none.
+    pub fn tail(&self) -> (u64, u64) {
+        (self.mid_end, self.end - self.mid_end)
+    }
+
+    /// Number of *boundary blocks* this range touches (0, 1, or 2).
+    ///
+    /// The key observation of §6.2: at most the first and last block of a
+    /// message are unaligned, so each receiver caches at most `2v` blocks.
+    pub fn boundary_blocks(&self, b: u64) -> usize {
+        let mut blocks = std::collections::BTreeSet::new();
+        for (s, l) in [self.head(), self.tail()] {
+            if l > 0 {
+                let first = align_down(s, b);
+                let last = align_down(s + l - 1, b);
+                let mut x = first;
+                loop {
+                    blocks.insert(x);
+                    if x >= last {
+                        break;
+                    }
+                    x += b;
+                }
+            }
+        }
+        blocks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn align_basics() {
+        assert_eq!(align_down(0, 512), 0);
+        assert_eq!(align_down(511, 512), 0);
+        assert_eq!(align_down(512, 512), 512);
+        assert_eq!(align_up(0, 512), 0);
+        assert_eq!(align_up(1, 512), 512);
+        assert_eq!(align_up(512, 512), 512);
+        assert_eq!(align_up(513, 512), 1024);
+    }
+
+    #[test]
+    fn aligned_full_block_range() {
+        let a = Aligned::new(512, 2048, 512);
+        assert_eq!(a.interior(), (512, 1536));
+        assert_eq!(a.head(), (512, 0));
+        assert_eq!(a.tail(), (2048, 0));
+        assert_eq!(a.boundary_blocks(512), 0);
+    }
+
+    #[test]
+    fn aligned_straddling_range() {
+        let a = Aligned::new(100, 1100, 512);
+        assert_eq!(a.interior(), (512, 512));
+        assert_eq!(a.head(), (100, 412));
+        assert_eq!(a.tail(), (1024, 76));
+        assert_eq!(a.boundary_blocks(512), 2);
+    }
+
+    #[test]
+    fn aligned_subblock_range() {
+        // Entirely inside one block: no interior, one boundary block.
+        let a = Aligned::new(10, 50, 512);
+        assert_eq!(a.interior().1, 0);
+        assert_eq!(a.head(), (10, 0));
+        assert_eq!(a.tail(), (10, 40));
+        assert_eq!(a.boundary_blocks(512), 1);
+    }
+
+    #[test]
+    fn aligned_empty_range() {
+        let a = Aligned::new(64, 64, 512);
+        assert_eq!(a.interior().1, 0);
+        assert_eq!(a.boundary_blocks(512), 0);
+    }
+
+    #[test]
+    fn boundary_block_count_two_blocks_short_message() {
+        // Range spanning a block border but with no full block: head in
+        // block 0, tail in block 1 -> 2 boundary blocks.
+        let a = Aligned::new(500, 600, 512);
+        assert_eq!(a.interior().1, 0);
+        assert_eq!(a.boundary_blocks(512), 2);
+    }
+}

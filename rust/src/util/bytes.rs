@@ -1,0 +1,106 @@
+//! Typed views over byte buffers.
+//!
+//! Virtual-processor contexts are raw byte regions (they live on disk and in
+//! memory partitions); user programs work with typed slices.  These helpers
+//! perform the safe reinterpretation for plain-old-data element types.
+
+/// Marker for types that are valid for any bit pattern and have no padding.
+///
+/// # Safety
+/// Implementors must be plain-old-data: any byte pattern is a valid value
+/// and the type contains no padding bytes or pointers.
+pub unsafe trait Pod: Copy + Send + Sync + 'static {
+    /// Element size in bytes (= `size_of::<Self>()`, kept explicit for use
+    /// in const contexts).
+    const SIZE: usize;
+}
+
+macro_rules! impl_pod {
+    ($($t:ty),*) => {
+        $(unsafe impl Pod for $t { const SIZE: usize = std::mem::size_of::<$t>(); })*
+    };
+}
+impl_pod!(u8, i8, u16, i16, u32, i32, u64, i64, f32, f64, usize);
+
+/// Reinterpret a byte slice as a slice of `T`.  Panics if the length is not
+/// a multiple of `T::SIZE` or the pointer is misaligned for `T`.
+pub fn cast_slice<T: Pod>(bytes: &[u8]) -> &[T] {
+    assert_eq!(bytes.len() % T::SIZE, 0, "length not a multiple of element size");
+    assert_eq!(bytes.as_ptr() as usize % std::mem::align_of::<T>(), 0, "misaligned cast");
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const T, bytes.len() / T::SIZE) }
+}
+
+/// Mutable version of [`cast_slice`].
+pub fn cast_slice_mut<T: Pod>(bytes: &mut [u8]) -> &mut [T] {
+    assert_eq!(bytes.len() % T::SIZE, 0, "length not a multiple of element size");
+    assert_eq!(bytes.as_ptr() as usize % std::mem::align_of::<T>(), 0, "misaligned cast");
+    unsafe {
+        std::slice::from_raw_parts_mut(bytes.as_mut_ptr() as *mut T, bytes.len() / T::SIZE)
+    }
+}
+
+/// View a typed slice as bytes.
+pub fn as_bytes<T: Pod>(v: &[T]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * T::SIZE) }
+}
+
+/// Mutable version of [`as_bytes`].
+pub fn as_bytes_mut<T: Pod>(v: &mut [T]) -> &mut [u8] {
+    unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, v.len() * T::SIZE) }
+}
+
+/// Human-readable byte size (KiB/MiB/GiB), for reports.
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut val = n as f64;
+    let mut u = 0;
+    while val >= 1024.0 && u + 1 < UNITS.len() {
+        val /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{val:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_u32() {
+        let v: Vec<u32> = vec![1, 2, 3, 0xDEADBEEF];
+        let b = as_bytes(&v);
+        assert_eq!(b.len(), 16);
+        let back: &[u32] = cast_slice(b);
+        assert_eq!(back, &v[..]);
+    }
+
+    #[test]
+    fn cast_mut_writes_through() {
+        let mut bytes = vec![0u8; 8];
+        {
+            let v: &mut [u32] = cast_slice_mut(&mut bytes);
+            v[0] = 0x01020304;
+            v[1] = 0xAABBCCDD;
+        }
+        let v: &[u32] = cast_slice(&bytes);
+        assert_eq!(v, &[0x01020304, 0xAABBCCDD]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length not a multiple")]
+    fn bad_length_panics() {
+        let bytes = vec![0u8; 7];
+        let _: &[u32] = cast_slice(&bytes);
+    }
+
+    #[test]
+    fn human_bytes_formats() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+}

@@ -1,0 +1,11 @@
+//! Small shared utilities: block-alignment arithmetic (Appendix B.2
+//! notation), a deterministic PRNG, byte helpers, and a miniature
+//! property-testing harness (`proptest` is unavailable offline).
+
+pub mod align;
+pub mod bytes;
+pub mod proptest_mini;
+pub mod rng;
+
+pub use align::{align_down, align_up, Aligned};
+pub use rng::XorShift64;

@@ -1,0 +1,141 @@
+//! Miniature property-testing harness.
+//!
+//! `proptest` is not available in the offline crate set, so this module
+//! provides the 20% we need: run a property over many seeded random cases,
+//! and on failure *shrink* the failing case by retrying with smaller size
+//! parameters, reporting the smallest reproduction seed.
+//!
+//! Usage (`no_run`: doctest binaries miss the xla rpath in this image):
+//! ```no_run
+//! use pems2::util::proptest_mini::Prop;
+//! Prop::new("sum_commutes", 20).run(|g| {
+//!     let a = g.rng.next_u32() as u64;
+//!     let b = g.rng.next_u32() as u64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::XorShift64;
+
+/// Per-case generation context handed to the property closure.
+pub struct Gen {
+    /// Seeded PRNG for this case.
+    pub rng: XorShift64,
+    /// Size hint in `[1, max_size]`; properties should scale their inputs
+    /// by this so shrinking (re-running with smaller sizes) is meaningful.
+    pub size: usize,
+}
+
+impl Gen {
+    /// A random vector of `u32` scaled by the case size.
+    pub fn vec_u32(&mut self, max_len: usize) -> Vec<u32> {
+        let len = self.rng.range(0, max_len.min(self.size * 8).max(1) + 1);
+        let mut v = vec![0u32; len];
+        self.rng.fill_u32(&mut v);
+        v
+    }
+
+    /// A random usize in `[lo, hi)`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+}
+
+/// A named property with a case budget.
+pub struct Prop {
+    name: &'static str,
+    cases: usize,
+    max_size: usize,
+    seed: u64,
+}
+
+impl Prop {
+    /// New property with `cases` random cases.
+    pub fn new(name: &'static str, cases: usize) -> Self {
+        // Honor PEMS2_PROP_SEED for reproduction of CI failures.
+        let seed = std::env::var("PEMS2_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Prop { name, cases, max_size: 32, seed }
+    }
+
+    /// Override the maximum size hint.
+    pub fn max_size(mut self, s: usize) -> Self {
+        self.max_size = s;
+        self
+    }
+
+    /// Run the property; panics with the reproducing seed on failure.
+    pub fn run<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(&self, f: F) {
+        for case in 0..self.cases {
+            let case_seed = self.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            let size = 1 + case * self.max_size / self.cases.max(1);
+            let result = std::panic::catch_unwind(|| {
+                let mut g = Gen { rng: XorShift64::new(case_seed), size };
+                f(&mut g);
+            });
+            if let Err(payload) = result {
+                // Shrink: retry the same seed with progressively smaller
+                // sizes, reporting the smallest size that still fails.
+                let mut min_fail = size;
+                for s in 1..size {
+                    let r = std::panic::catch_unwind(|| {
+                        let mut g = Gen { rng: XorShift64::new(case_seed), size: s };
+                        f(&mut g);
+                    });
+                    if r.is_err() {
+                        min_fail = s;
+                        break;
+                    }
+                }
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".to_string());
+                panic!(
+                    "property '{}' failed (case {case}, seed {case_seed:#x}, \
+                     min failing size {min_fail}): {msg}\n\
+                     reproduce with PEMS2_PROP_SEED={}",
+                    self.name, self.seed
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Prop::new("rev_rev", 50).run(|g| {
+            let v = g.vec_u32(64);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails' failed")]
+    fn failing_property_reports() {
+        Prop::new("always_fails", 5).run(|_g| {
+            panic!("nope");
+        });
+    }
+
+    #[test]
+    fn sizes_scale_up() {
+        // Later cases should receive larger size hints.
+        let seen = std::sync::Mutex::new(Vec::new());
+        Prop::new("sizes", 10).run(|g| {
+            seen.lock().unwrap().push(g.size);
+        });
+        let s = seen.lock().unwrap();
+        assert!(s.first().unwrap() <= s.last().unwrap());
+    }
+}

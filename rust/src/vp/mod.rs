@@ -1,0 +1,635 @@
+//! Virtual processors: contexts, memory partitions, swapping, scheduling.
+//!
+//! Each of the `v` virtual processors is one OS thread (the pthreads
+//! driver of Ch. 4; the PEMS1 user-space-thread behaviour is the `k = 1`
+//! configuration).  A VP executes only while holding its memory
+//! partition's gate (partition `t mod k`, §4.1 — the static mapping that
+//! keeps user pointers/offsets stable across swaps).  Swap-in/out move the
+//! *allocated regions* of the context (§6.6) between the partition buffer
+//! and the context's slot on disk.
+//!
+//! Residency is lazy: a collective ends with the context swapped out and
+//! the partition released; the next memory access (or allocation) acquires
+//! the partition — in ID order when `ordered_rounds` (Def. 6.5.1) — and
+//! swaps back in.  This yields exactly one full swap-out + swap-in per
+//! virtual superstep (§6.1).
+
+pub mod gate;
+pub mod store;
+
+pub use gate::PartitionGate;
+pub use store::Store;
+
+use crate::alloc::ContextAlloc;
+use crate::comm::CommState;
+use crate::config::SimConfig;
+use crate::error::{Error, Result};
+use crate::metrics::{Metrics, Timeline};
+use crate::net::Switch;
+use crate::runtime::Compute;
+use crate::sync::{PartitionYield, SuperstepBarrier};
+use crate::util::bytes::Pod;
+use std::marker::PhantomData;
+use std::sync::{Arc, Mutex};
+
+/// Handle to an allocation in a VP's context: a stable (offset, length)
+/// pair, valid across swaps (the pointer-stability guarantee of §4.1 made
+/// memory-safe).  Cheap to copy; typed for ergonomic slice views.
+pub struct VpMem<T: Pod> {
+    pub(crate) off: u64,
+    pub(crate) len: usize,
+    _ph: PhantomData<T>,
+}
+
+impl<T: Pod> Clone for VpMem<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T: Pod> Copy for VpMem<T> {}
+
+impl<T: Pod> std::fmt::Debug for VpMem<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "VpMem(off={}, len={})", self.off, self.len)
+    }
+}
+
+impl<T: Pod> VpMem<T> {
+    /// Number of `T` elements.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+    /// True if zero elements.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+    /// Context byte offset.
+    pub fn byte_off(&self) -> u64 {
+        self.off
+    }
+    /// Length in bytes.
+    pub fn byte_len(&self) -> u64 {
+        (self.len * T::SIZE) as u64
+    }
+    /// A sub-range of this allocation, in elements.
+    pub fn slice(&self, start: usize, len: usize) -> VpMem<T> {
+        assert!(start + len <= self.len, "VpMem::slice out of range");
+        VpMem { off: self.off + (start * T::SIZE) as u64, len, _ph: PhantomData }
+    }
+    /// Byte region (off, len) of this allocation.
+    pub fn region(&self) -> (u64, u64) {
+        (self.off, self.byte_len())
+    }
+    /// Construct from a raw byte region (crate-internal).
+    pub(crate) fn from_raw(off: u64, len: usize) -> VpMem<T> {
+        VpMem { off, len, _ph: PhantomData }
+    }
+}
+
+/// Everything shared by the local VPs of one node.
+pub struct NodeShared {
+    /// Simulation configuration.
+    pub cfg: SimConfig,
+    /// Node index (real processor rank).
+    pub node: usize,
+    /// Context storage backend.
+    pub store: Store,
+    /// One gate per memory partition.
+    pub gates: Vec<PartitionGate>,
+    /// Superstep barrier over the `v/P` local threads.
+    pub barrier: SuperstepBarrier,
+    /// Per-round barriers (round `r` = local threads `rk..rk+k`).
+    pub round_barriers: Vec<SuperstepBarrier>,
+    /// Per-local-VP context allocators.
+    pub allocs: Vec<Mutex<Box<dyn ContextAlloc>>>,
+    /// Global metrics sink.
+    pub metrics: Arc<Metrics>,
+    /// Per-thread timeline recorder.
+    pub timeline: Arc<Timeline>,
+    /// The inter-node switch.
+    pub switch: Arc<Switch>,
+    /// Collective-communication shared state.
+    pub comm: CommState,
+    /// Computation-superstep backend (XLA artifacts or Rust fallback).
+    pub compute: Arc<Compute>,
+}
+
+impl NodeShared {
+    /// Local VPs on this node.
+    pub fn v_per_p(&self) -> usize {
+        self.cfg.vps_per_node()
+    }
+
+    /// Number of rounds per internal superstep.
+    pub fn rounds(&self) -> usize {
+        self.v_per_p().div_ceil(self.cfg.k)
+    }
+
+    /// Local barrier with a custom leader hook (runs once, before release).
+    pub fn barrier_with<F: FnOnce()>(&self, hook: F) {
+        self.barrier.wait_leader(Some(hook));
+    }
+
+    /// Raw write into this node's logical disk space (indirect/transit
+    /// areas; PEMS1 path).  Explicit-I/O stores only.
+    pub fn store_raw_write(
+        &self,
+        off: u64,
+        data: &[u8],
+        class: crate::metrics::IoClass,
+    ) -> Result<()> {
+        self.store.raw_write(off, data, class)
+    }
+
+    /// Raw read from this node's logical disk space.
+    pub fn store_raw_read(
+        &self,
+        off: u64,
+        out: &mut [u8],
+        class: crate::metrics::IoClass,
+    ) -> Result<()> {
+        self.store.raw_read(off, out, class)
+    }
+}
+
+impl std::fmt::Debug for NodeShared {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NodeShared").field("node", &self.node).finish()
+    }
+}
+
+/// The per-thread virtual processor handle passed to user programs.
+pub struct Vp {
+    pub(crate) shared: Arc<NodeShared>,
+    /// Global rank ρ in `[0, v)`.
+    global: usize,
+    /// Local thread id `t` in `[0, v/P)`.
+    local: usize,
+    /// Context currently valid in partition memory.
+    pub(crate) resident: bool,
+    /// Holding the partition gate.
+    pub(crate) holding: bool,
+    /// Byte ranges mutated since the last swap-in (swap-out writes only
+    /// these — clean regions already match the disk image).  Disabled
+    /// (always-all) under the PEMS1 bump allocator.
+    dirty: Vec<(u64, u64)>,
+}
+
+impl std::fmt::Debug for Vp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Vp(global={}, local={}, node={})", self.global, self.local, self.shared.node)
+    }
+}
+
+impl Vp {
+    /// Create the handle (engine-internal).
+    pub(crate) fn new(shared: Arc<NodeShared>, local: usize) -> Vp {
+        let global = shared.node * shared.v_per_p() + local;
+        Vp { shared, global, local, resident: false, holding: false, dirty: Vec::new() }
+    }
+
+    /// Record that `[off, off+len)` has been (potentially) mutated.
+    /// Crate-visible for collectives that fill VP memory through raw
+    /// pointers (e.g. the PEMS1 indirect-area reads).
+    pub(crate) fn mark_dirty(&mut self, off: u64, len: u64) {
+        if len == 0 {
+            return;
+        }
+        // Merge with the last range when adjacent/overlapping (the common
+        // append pattern); occasional full merge keeps the list small.
+        if let Some(last) = self.dirty.last_mut() {
+            if off <= last.0 + last.1 && last.0 <= off + len {
+                let end = (last.0 + last.1).max(off + len);
+                last.0 = last.0.min(off);
+                last.1 = end - last.0;
+                return;
+            }
+        }
+        self.dirty.push((off, len));
+        if self.dirty.len() > 64 {
+            self.dirty = coalesce_regions(&self.dirty);
+        }
+    }
+
+    // ------------------------------------------------------------ identity
+
+    /// Global rank ρ (0..v).
+    pub fn rank(&self) -> usize {
+        self.global
+    }
+    /// Total virtual processors `v`.
+    pub fn nranks(&self) -> usize {
+        self.shared.cfg.v
+    }
+    /// Local thread id `t` (0..v/P).
+    pub fn local_rank(&self) -> usize {
+        self.local
+    }
+    /// Node (real processor) index.
+    pub fn node(&self) -> usize {
+        self.shared.node
+    }
+    /// Memory partition index (`t mod k`).
+    pub fn partition(&self) -> usize {
+        self.local % self.shared.cfg.k
+    }
+    /// Round index (`t / k`).
+    pub fn round(&self) -> usize {
+        self.local / self.shared.cfg.k
+    }
+    /// The simulation configuration.
+    pub fn config(&self) -> &SimConfig {
+        &self.shared.cfg
+    }
+    /// Node-shared state (crate-internal use by collectives).
+    pub fn shared(&self) -> &Arc<NodeShared> {
+        &self.shared
+    }
+    /// Global rank of local thread `t` on this node.
+    pub fn global_of_local(&self, t: usize) -> usize {
+        self.shared.node * self.shared.v_per_p() + t
+    }
+    /// (node, local) of a global rank.
+    pub fn locate(&self, global: usize) -> (usize, usize) {
+        let vpp = self.shared.v_per_p();
+        (global / vpp, global % vpp)
+    }
+
+    // ------------------------------------------------------- gate/residency
+
+    /// Acquire the partition gate for a new internal superstep (ordered).
+    pub(crate) fn acquire(&mut self) {
+        if !self.holding {
+            self.shared.gates[self.partition()].acquire_turn(self.round());
+            self.holding = true;
+        }
+    }
+
+    /// Release the partition gate.
+    pub(crate) fn release(&mut self) {
+        if self.holding {
+            self.shared.gates[self.partition()].release();
+            self.holding = false;
+        }
+    }
+
+    /// Retire this VP from partition turn-taking (program finished).
+    pub(crate) fn retire(&mut self) {
+        self.shared.gates[self.partition()].retire(self.round());
+    }
+
+    /// Ensure the partition is held and the context is in memory.
+    pub fn ensure_resident(&mut self) -> Result<()> {
+        self.acquire();
+        if !self.resident {
+            let regions = self.allocated_regions();
+            self.shared.store.swap_in_regions(
+                self.local,
+                self.shared.cfg.k,
+                self.shared.cfg.mu,
+                &regions,
+            )?;
+            self.resident = true;
+            // Fresh from disk: nothing dirty yet.
+            self.dirty.clear();
+        }
+        Ok(())
+    }
+
+    /// The regions a swap-out must write: allocated ∩ dirty (under the
+    /// free-list allocator; the PEMS1 bump allocator always writes the
+    /// whole prefix, as the original system did).
+    fn swap_out_set(&self) -> Vec<(u64, u64)> {
+        let allocated = self.allocated_regions();
+        if self.shared.cfg.alloc == crate::config::AllocPolicy::Bump {
+            return allocated;
+        }
+        let dirty = coalesce_regions(&self.dirty);
+        intersect_regions(&allocated, &dirty)
+    }
+
+    /// Swap all (dirty) allocated regions out to disk.
+    pub(crate) fn swap_out_all(&mut self) -> Result<()> {
+        debug_assert!(self.holding);
+        let regions = self.swap_out_set();
+        self.shared.store.swap_out_regions(
+            self.local,
+            self.shared.cfg.k,
+            self.shared.cfg.mu,
+            &regions,
+        )?;
+        // Disk now matches memory for everything written (and clean
+        // regions matched already).
+        self.dirty.clear();
+        Ok(())
+    }
+
+    /// Swap out allocated regions minus `except` (receive buffers,
+    /// Alg. 7.1.1 line 4).
+    pub(crate) fn swap_out_except(&mut self, except: &[(u64, u64)]) -> Result<()> {
+        debug_assert!(self.holding);
+        let regions = subtract_regions(&self.swap_out_set(), except);
+        self.shared.store.swap_out_regions(
+            self.local,
+            self.shared.cfg.k,
+            self.shared.cfg.mu,
+            &regions,
+        )?;
+        // The excepted (receive) regions are about to be overwritten on
+        // disk by message delivery; everything else is now in sync.
+        self.dirty.clear();
+        Ok(())
+    }
+
+    /// Swap specific byte regions back in ("Swap message in").
+    pub(crate) fn swap_in_regions(&mut self, regions: &[(u64, u64)]) -> Result<()> {
+        debug_assert!(self.holding);
+        self.shared.store.swap_in_regions(
+            self.local,
+            self.shared.cfg.k,
+            self.shared.cfg.mu,
+            regions,
+        )
+    }
+
+    /// Currently allocated regions of this context.
+    pub(crate) fn allocated_regions(&self) -> Vec<(u64, u64)> {
+        self.shared.allocs[self.local].lock().unwrap().allocated_regions()
+    }
+
+    /// End the virtual superstep: context must already be swapped out and
+    /// the gate released by the caller (collective code); crosses the local
+    /// barrier (leader flushes deferred I/O and resets gate turns) and
+    /// marks metrics/timeline.
+    pub(crate) fn superstep_end(&mut self) {
+        debug_assert!(!self.holding, "superstep_end while holding partition");
+        let shared = self.shared.clone();
+        self.shared.barrier.wait_leader(Some(|| {
+            shared.store.flush().expect("flush failed at barrier");
+            for g in &shared.gates {
+                g.reset_turns();
+            }
+            // Node 0's leader counts the (global) virtual superstep; the
+            // cost model charges L once per superstep, matching the
+            // thesis' accounting.
+            if shared.node == 0 {
+                shared.metrics.superstep();
+            }
+        }));
+        self.resident = false;
+        self.shared.timeline.mark(self.global);
+    }
+
+    /// Internal barrier between internal supersteps of one collective.
+    pub(crate) fn internal_barrier(&mut self) {
+        debug_assert!(!self.holding);
+        let shared = self.shared.clone();
+        self.shared.barrier.wait_leader(Some(|| {
+            shared.store.flush().expect("flush failed at barrier");
+            for g in &shared.gates {
+                g.reset_turns();
+            }
+        }));
+    }
+
+    /// Barrier among the `k` threads of this VP's round (the
+    /// "synchronise with the k−1 other currently running threads" step).
+    pub(crate) fn round_barrier(&self) {
+        self.shared.round_barriers[self.round()].wait();
+    }
+
+    // ----------------------------------------------------------- memory API
+
+    /// Allocate `n` elements of `T` in this VP's context (zeroed).
+    pub fn alloc<T: Pod>(&mut self, n: usize) -> Result<VpMem<T>> {
+        let m = self.alloc_uninit(n)?;
+        unsafe {
+            let p = self.mem_ptr().add(m.off as usize);
+            std::ptr::write_bytes(p, 0, (n * T::SIZE).max(1));
+        }
+        self.mark_dirty(m.off, m.byte_len().max(1));
+        Ok(m)
+    }
+
+    /// Allocate without zeroing — for buffers that are fully overwritten
+    /// before being read (receive/staging buffers).  Contents are
+    /// arbitrary bytes (never uninitialized memory in the UB sense: the
+    /// partition buffers are always initialized), so this is safe but
+    /// non-deterministic if read before write.
+    ///
+    /// Perf note (§Perf in EXPERIMENTS.md): residency is established
+    /// *before* the allocator records the region, so the swap-in does not
+    /// read garbage from disk for the fresh region, and skipping the
+    /// memset removes the dominant kernel cost of allocation-heavy apps.
+    pub fn alloc_uninit<T: Pod>(&mut self, n: usize) -> Result<VpMem<T>> {
+        // Swap in the *current* regions first; the new region needs no I/O.
+        self.ensure_resident()?;
+        let bytes = ((n * T::SIZE) as u64).max(1);
+        let off = self.shared.allocs[self.local].lock().unwrap().alloc(bytes)?;
+        Ok(VpMem::from_raw(off, n))
+    }
+
+    /// Free an allocation (PEMS2 allocator reuses the space; the PEMS1
+    /// bump allocator accepts and ignores, as in the thesis).
+    pub fn free<T: Pod>(&mut self, mem: VpMem<T>) {
+        // Ignore errors from the bump allocator's no-op free.
+        let _ = self.shared.allocs[self.local].lock().unwrap().free(mem.off);
+    }
+
+    /// Bytes currently allocated in this context.
+    pub fn allocated_bytes(&self) -> u64 {
+        self.shared.allocs[self.local].lock().unwrap().allocated_bytes()
+    }
+
+    fn mem_ptr(&self) -> *mut u8 {
+        self.shared.store.vp_memory(self.local, self.shared.cfg.k, self.shared.cfg.mu)
+    }
+
+    /// Immutable typed view of an allocation.
+    pub fn slice<T: Pod>(&mut self, mem: VpMem<T>) -> Result<&[T]> {
+        self.ensure_resident()?;
+        let p = unsafe { self.mem_ptr().add(mem.off as usize) };
+        assert_eq!(p as usize % std::mem::align_of::<T>(), 0, "misaligned VpMem view");
+        Ok(unsafe { std::slice::from_raw_parts(p as *const T, mem.len) })
+    }
+
+    /// Mutable typed view of an allocation.
+    pub fn slice_mut<T: Pod>(&mut self, mem: VpMem<T>) -> Result<&mut [T]> {
+        self.ensure_resident()?;
+        self.mark_dirty(mem.off, mem.byte_len());
+        let p = unsafe { self.mem_ptr().add(mem.off as usize) };
+        assert_eq!(p as usize % std::mem::align_of::<T>(), 0, "misaligned VpMem view");
+        Ok(unsafe { std::slice::from_raw_parts_mut(p as *mut T, mem.len) })
+    }
+
+    /// Two disjoint views, one mutable (e.g. merge source -> destination).
+    pub fn slice_pair_mut<A: Pod, B: Pod>(
+        &mut self,
+        a: VpMem<A>,
+        b: VpMem<B>,
+    ) -> Result<(&[A], &mut [B])> {
+        self.ensure_resident()?;
+        self.mark_dirty(b.off, b.byte_len());
+        let (ao, al) = a.region();
+        let (bo, bl) = b.region();
+        if ao < bo + bl && bo < ao + al {
+            return Err(Error::comm("slice_pair_mut: overlapping regions"));
+        }
+        let base = self.mem_ptr();
+        unsafe {
+            let pa = base.add(a.off as usize) as *const A;
+            let pb = base.add(b.off as usize) as *mut B;
+            Ok((
+                std::slice::from_raw_parts(pa, a.len),
+                std::slice::from_raw_parts_mut(pb, b.len),
+            ))
+        }
+    }
+}
+
+impl PartitionYield for Vp {
+    fn swap_out(&mut self) -> Result<()> {
+        let r = self.swap_out_all();
+        self.resident = false;
+        r
+    }
+    fn unlock_partition(&mut self) {
+        self.release();
+    }
+    fn lock_partition(&mut self) {
+        self.shared.gates[self.partition()].acquire_free();
+        self.holding = true;
+    }
+    fn partition_of(&self, thread: usize) -> usize {
+        thread % self.shared.cfg.k
+    }
+    fn thread_id(&self) -> usize {
+        self.local
+    }
+}
+
+/// Sort + merge overlapping/adjacent (off, len) regions.
+pub(crate) fn coalesce_regions(regions: &[(u64, u64)]) -> Vec<(u64, u64)> {
+    let mut rs: Vec<(u64, u64)> = regions.iter().filter(|&&(_, l)| l > 0).copied().collect();
+    rs.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::with_capacity(rs.len());
+    for (off, len) in rs {
+        if let Some(last) = out.last_mut() {
+            if off <= last.0 + last.1 {
+                let end = (last.0 + last.1).max(off + len);
+                last.1 = end - last.0;
+                continue;
+            }
+        }
+        out.push((off, len));
+    }
+    out
+}
+
+/// Interval intersection of two coalesced, sorted region lists.
+pub(crate) fn intersect_regions(a: &[(u64, u64)], b: &[(u64, u64)]) -> Vec<(u64, u64)> {
+    let mut out = Vec::new();
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        let (ao, al) = a[i];
+        let (bo, bl) = b[j];
+        let lo = ao.max(bo);
+        let hi = (ao + al).min(bo + bl);
+        if lo < hi {
+            out.push((lo, hi - lo));
+        }
+        if ao + al < bo + bl {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    out
+}
+
+/// Interval subtraction: `base \ cuts`, both as (off, len) byte regions.
+pub(crate) fn subtract_regions(base: &[(u64, u64)], cuts: &[(u64, u64)]) -> Vec<(u64, u64)> {
+    let mut cuts: Vec<(u64, u64)> = cuts.iter().filter(|&&(_, l)| l > 0).copied().collect();
+    cuts.sort_unstable();
+    let mut out = Vec::new();
+    for &(off, len) in base {
+        let mut cur = off;
+        let end = off + len;
+        for &(coff, clen) in &cuts {
+            let cend = coff + clen;
+            if cend <= cur || coff >= end {
+                continue;
+            }
+            if coff > cur {
+                out.push((cur, coff - cur));
+            }
+            cur = cur.max(cend);
+            if cur >= end {
+                break;
+            }
+        }
+        if cur < end {
+            out.push((cur, end - cur));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subtract_regions_basics() {
+        // Cut in the middle.
+        assert_eq!(
+            subtract_regions(&[(0, 100)], &[(40, 20)]),
+            vec![(0, 40), (60, 40)]
+        );
+        // Cut covering everything.
+        assert_eq!(subtract_regions(&[(10, 50)], &[(0, 100)]), vec![]);
+        // Disjoint cut.
+        assert_eq!(subtract_regions(&[(0, 50)], &[(60, 10)]), vec![(0, 50)]);
+        // Multiple bases and cuts.
+        assert_eq!(
+            subtract_regions(&[(0, 10), (20, 10)], &[(5, 20)]),
+            vec![(0, 5), (25, 5)]
+        );
+        // Zero-length cuts ignored.
+        assert_eq!(subtract_regions(&[(0, 10)], &[(5, 0)]), vec![(0, 10)]);
+    }
+
+    #[test]
+    fn subtract_regions_edge_touching() {
+        // Cut exactly at the start / end.
+        assert_eq!(subtract_regions(&[(0, 100)], &[(0, 30)]), vec![(30, 70)]);
+        assert_eq!(subtract_regions(&[(0, 100)], &[(70, 30)]), vec![(0, 70)]);
+        // Adjacent (non-overlapping) cut.
+        assert_eq!(subtract_regions(&[(0, 100)], &[(100, 30)]), vec![(0, 100)]);
+    }
+
+    #[test]
+    fn subtract_regions_unsorted_cuts() {
+        assert_eq!(
+            subtract_regions(&[(0, 100)], &[(80, 10), (10, 10)]),
+            vec![(0, 10), (20, 60), (90, 10)]
+        );
+    }
+
+    #[test]
+    fn vpmem_slice_arithmetic() {
+        let m: VpMem<u32> = VpMem::from_raw(64, 100);
+        assert_eq!(m.byte_len(), 400);
+        let s = m.slice(10, 5);
+        assert_eq!(s.byte_off(), 64 + 40);
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.region(), (104, 20));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn vpmem_slice_oob_panics() {
+        let m: VpMem<u32> = VpMem::from_raw(0, 10);
+        let _ = m.slice(8, 5);
+    }
+}

@@ -1,0 +1,494 @@
+//! Context storage backends.
+//!
+//! Where a virtual processor's memory lives and what "swap" means:
+//!
+//! * [`Store::Explicit`] — contexts on disk, `k` partition buffers in RAM;
+//!   swap in/out copies *allocated regions* between them through the
+//!   [`DiskSet`] (unix/async drivers).  The PEMS1/PEMS2 common case.
+//! * [`Store::Mapped`] — the context files are `mmap`'d; a VP's memory *is*
+//!   its mapped context, swaps are no-ops and the kernel pages on demand
+//!   (§5.2).  Requires `Layout::PerVpDisk` so each context is contiguous in
+//!   one file.
+//! * [`Store::Mem`] — contexts are plain RAM vectors; no I/O at all (the
+//!   "mem" driver of §9.1).
+
+use crate::config::SimConfig;
+use crate::disk::DiskSet;
+use crate::error::{Error, Result};
+use crate::metrics::{IoClass, Metrics};
+use crate::util::align::align_up;
+use std::cell::UnsafeCell;
+use std::sync::Arc;
+
+/// A raw, engine-managed byte buffer; access is serialized by partition
+/// gates, which the type system cannot see.
+struct RawBuf {
+    ptr: *mut u8,
+    len: usize,
+    /// For owned (malloc'd) buffers.
+    #[allow(dead_code)] owned: Option<UnsafeCell<Vec<u8>>>, // keep-alive for the allocation
+}
+
+// SAFETY: access to the underlying bytes is serialized by partition gates
+// (one holder per partition / per context at any time).
+unsafe impl Send for RawBuf {}
+unsafe impl Sync for RawBuf {}
+
+impl RawBuf {
+    fn owned(len: usize) -> RawBuf {
+        let mut v = vec![0u8; len];
+        let ptr = v.as_mut_ptr();
+        RawBuf { ptr, len, owned: Some(UnsafeCell::new(v)) }
+    }
+}
+
+/// An active `mmap` region over one disk file (opaque).
+pub struct Mapping {
+    base: *mut libc::c_void,
+    len: usize,
+}
+
+// SAFETY: as RawBuf.
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        unsafe {
+            libc::munmap(self.base, self.len);
+        }
+    }
+}
+
+/// One node's context storage.
+pub enum Store {
+    /// Explicit swapping through a disk set.
+    Explicit {
+        /// `k` partition buffers of `µ` bytes.
+        partitions: Vec<RawBufHandle>,
+        /// The node's disks.
+        disks: Arc<DiskSet>,
+        /// Context slot size (µ aligned up to B).
+        ctx_slot: u64,
+        /// Metrics sink.
+        metrics: Arc<Metrics>,
+    },
+    /// Memory-mapped contexts.
+    Mapped {
+        maps: Vec<Mapping>,
+        /// (map index, byte offset) per local VP.
+        vp_loc: Vec<(usize, usize)>,
+        disks: Arc<DiskSet>,
+        ctx_slot: u64,
+        mu: u64,
+        metrics: Arc<Metrics>,
+    },
+    /// RAM-only contexts.
+    Mem {
+        contexts: Vec<RawBufHandle>,
+    },
+}
+
+/// Public, clonable view of a raw buffer (pointer + len).
+pub struct RawBufHandle(RawBuf);
+
+impl RawBufHandle {
+    /// Raw base pointer.
+    pub fn ptr(&self) -> *mut u8 {
+        self.0.ptr
+    }
+    /// Length in bytes.
+    pub fn len(&self) -> usize {
+        self.0.len
+    }
+    /// Whether empty.
+    pub fn is_empty(&self) -> bool {
+        self.0.len == 0
+    }
+}
+
+impl Store {
+    /// Build the store for a node.
+    pub fn create(
+        cfg: &SimConfig,
+        disks: Option<Arc<DiskSet>>,
+        metrics: Arc<Metrics>,
+    ) -> Result<Store> {
+        let local = cfg.vps_per_node();
+        let ctx_slot = align_up(cfg.mu, cfg.block());
+        match cfg.io {
+            crate::config::IoStyle::Unix | crate::config::IoStyle::Async => Ok(Store::Explicit {
+                partitions: (0..cfg.k)
+                    .map(|_| RawBufHandle(RawBuf::owned(cfg.mu as usize)))
+                    .collect(),
+                disks: disks.expect("explicit store requires disks"),
+                ctx_slot,
+                metrics,
+            }),
+            crate::config::IoStyle::Mmap => {
+                let disks = disks.expect("mmap store requires disks");
+                // Map each disk file; with PerVpDisk layout context `c`
+                // lives at ordinal (c / D) * ctx_slot in file (c mod D).
+                if cfg.layout != crate::config::Layout::PerVpDisk {
+                    return Err(Error::config(
+                        "mmap I/O requires Layout::PerVpDisk (contiguous contexts)",
+                    ));
+                }
+                let mut maps = Vec::new();
+                for i in 0..disks.num_disks() {
+                    use std::os::unix::io::AsRawFd;
+                    let f = &disks.disk_file(i).file;
+                    let len = f.metadata()?.len() as usize;
+                    let base = unsafe {
+                        libc::mmap(
+                            std::ptr::null_mut(),
+                            len.max(1),
+                            libc::PROT_READ | libc::PROT_WRITE,
+                            libc::MAP_SHARED,
+                            f.as_raw_fd(),
+                            0,
+                        )
+                    };
+                    if base == libc::MAP_FAILED {
+                        return Err(Error::Io(std::io::Error::last_os_error()));
+                    }
+                    maps.push(Mapping { base, len });
+                }
+                let d = disks.num_disks();
+                let vp_loc = (0..local)
+                    .map(|c| (c % d, (c / d) * ctx_slot as usize))
+                    .collect();
+                Ok(Store::Mapped { maps, vp_loc, disks, ctx_slot, mu: cfg.mu, metrics })
+            }
+            crate::config::IoStyle::Mem => Ok(Store::Mem {
+                contexts: (0..local)
+                    .map(|_| RawBufHandle(RawBuf::owned(cfg.mu as usize)))
+                    .collect(),
+            }),
+        }
+    }
+
+    /// Context slot size in the logical disk space (µ rounded up to B).
+    pub fn ctx_slot(&self) -> u64 {
+        match self {
+            Store::Explicit { ctx_slot, .. } | Store::Mapped { ctx_slot, .. } => *ctx_slot,
+            Store::Mem { .. } => 0,
+        }
+    }
+
+    /// Logical base offset of a local VP's context on disk.
+    pub fn ctx_base(&self, local_vp: usize) -> u64 {
+        local_vp as u64 * self.ctx_slot()
+    }
+
+    /// Pointer to the memory a VP uses while executing: its partition
+    /// buffer (explicit) or its context itself (mmap/mem).
+    ///
+    /// # Safety contract
+    /// Caller must hold the VP's partition gate; the returned region is
+    /// `µ` bytes.
+    pub fn vp_memory(&self, local_vp: usize, k: usize, mu: u64) -> *mut u8 {
+        match self {
+            Store::Explicit { partitions, .. } => partitions[local_vp % k].ptr(),
+            Store::Mapped { maps, vp_loc, .. } => {
+                let (m, off) = vp_loc[local_vp];
+                debug_assert!(off + mu as usize <= maps[m].len);
+                unsafe { (maps[m].base as *mut u8).add(off) }
+            }
+            Store::Mem { contexts } => contexts[local_vp].ptr(),
+        }
+    }
+
+    /// True if swapping is explicit I/O (unix/async).
+    pub fn is_explicit(&self) -> bool {
+        matches!(self, Store::Explicit { .. })
+    }
+
+    /// Swap selected regions of a VP's context **in** (disk -> partition).
+    pub fn swap_in_regions(
+        &self,
+        local_vp: usize,
+        k: usize,
+        mu: u64,
+        regions: &[(u64, u64)],
+    ) -> Result<()> {
+        match self {
+            Store::Explicit { partitions, disks, ctx_slot, .. } => {
+                let base = local_vp as u64 * ctx_slot;
+                let buf = partitions[local_vp % k].ptr();
+                for &(off, len) in regions {
+                    debug_assert!(off + len <= mu);
+                    let dst = unsafe {
+                        std::slice::from_raw_parts_mut(buf.add(off as usize), len as usize)
+                    };
+                    disks.read(IoClass::Swap, base + off, dst)?;
+                }
+                Ok(())
+            }
+            // mmap/mem: memory *is* the context.
+            _ => Ok(()),
+        }
+    }
+
+    /// Swap selected regions of a VP's context **out** (partition -> disk).
+    pub fn swap_out_regions(
+        &self,
+        local_vp: usize,
+        k: usize,
+        mu: u64,
+        regions: &[(u64, u64)],
+    ) -> Result<()> {
+        match self {
+            Store::Explicit { partitions, disks, ctx_slot, .. } => {
+                let base = local_vp as u64 * ctx_slot;
+                let buf = partitions[local_vp % k].ptr();
+                for &(off, len) in regions {
+                    debug_assert!(off + len <= mu);
+                    let src = unsafe {
+                        std::slice::from_raw_parts(buf.add(off as usize), len as usize)
+                    };
+                    disks.write(IoClass::Swap, base + off, src)?;
+                }
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Write `data` into a (possibly not resident) VP's context *on disk*
+    /// at context offset `off` — the direct message delivery primitive.
+    pub fn write_to_context(
+        &self,
+        local_vp: usize,
+        off: u64,
+        data: &[u8],
+        class: IoClass,
+    ) -> Result<()> {
+        match self {
+            Store::Explicit { disks, ctx_slot, .. } => {
+                disks.write(class, local_vp as u64 * ctx_slot + off, data)
+            }
+            Store::Mapped { maps, vp_loc, metrics, mu, .. } => {
+                debug_assert!(off + data.len() as u64 <= *mu);
+                let (m, base) = vp_loc[local_vp];
+                unsafe {
+                    let dst = (maps[m].base as *mut u8).add(base + off as usize);
+                    std::ptr::copy_nonoverlapping(data.as_ptr(), dst, data.len());
+                }
+                metrics.mmap_touch(data.len() as u64);
+                Ok(())
+            }
+            Store::Mem { contexts } => {
+                debug_assert!(off as usize + data.len() <= contexts[local_vp].len());
+                unsafe {
+                    let dst = contexts[local_vp].ptr().add(off as usize);
+                    std::ptr::copy_nonoverlapping(data.as_ptr(), dst, data.len());
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Read from a VP's context on disk at context offset `off`.
+    pub fn read_from_context(
+        &self,
+        local_vp: usize,
+        off: u64,
+        out: &mut [u8],
+        class: IoClass,
+    ) -> Result<()> {
+        match self {
+            Store::Explicit { disks, ctx_slot, .. } => {
+                disks.read(class, local_vp as u64 * ctx_slot + off, out)
+            }
+            Store::Mapped { maps, vp_loc, metrics, mu, .. } => {
+                debug_assert!(off + out.len() as u64 <= *mu);
+                let (m, base) = vp_loc[local_vp];
+                unsafe {
+                    let src = (maps[m].base as *const u8).add(base + off as usize);
+                    std::ptr::copy_nonoverlapping(src, out.as_mut_ptr(), out.len());
+                }
+                metrics.mmap_touch(out.len() as u64);
+                Ok(())
+            }
+            Store::Mem { contexts } => {
+                unsafe {
+                    let src = contexts[local_vp].ptr().add(off as usize);
+                    std::ptr::copy_nonoverlapping(src, out.as_mut_ptr(), out.len());
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Raw write at a node-logical offset (indirect/transit areas — PEMS1).
+    /// Only meaningful for explicit stores.
+    pub fn raw_write(&self, off: u64, data: &[u8], class: IoClass) -> Result<()> {
+        match self {
+            Store::Explicit { disks, .. } => disks.write(class, off, data),
+            _ => Err(Error::config("raw disk access requires an explicit I/O store")),
+        }
+    }
+
+    /// Raw read at a node-logical offset (PEMS1 indirect/transit areas).
+    pub fn raw_read(&self, off: u64, out: &mut [u8], class: IoClass) -> Result<()> {
+        match self {
+            Store::Explicit { disks, .. } => disks.read(class, off, out),
+            _ => Err(Error::config("raw disk access requires an explicit I/O store")),
+        }
+    }
+
+    /// Flush deferred I/O (async driver) — called at superstep barriers.
+    pub fn flush(&self) -> Result<()> {
+        match self {
+            Store::Explicit { disks, .. } | Store::Mapped { disks, .. } => disks.flush(),
+            Store::Mem { .. } => Ok(()),
+        }
+    }
+}
+
+impl std::fmt::Debug for Store {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Store::Explicit { partitions, .. } => {
+                write!(f, "Store::Explicit(k={})", partitions.len())
+            }
+            Store::Mapped { maps, .. } => write!(f, "Store::Mapped(maps={})", maps.len()),
+            Store::Mem { contexts } => write!(f, "Store::Mem(v={})", contexts.len()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{IoStyle, Layout, SimConfig};
+    use crate::io::unix::UnixIo;
+
+    fn mk(io: IoStyle) -> (SimConfig, Store, Arc<Metrics>) {
+        let cfg = SimConfig::builder()
+            .v(4)
+            .k(2)
+            .mu(1 << 16)
+            .block(4096)
+            .io(io)
+            .layout(if io == IoStyle::Mmap { Layout::PerVpDisk } else { Layout::Striped })
+            .build()
+            .unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let disks = if io == IoStyle::Mem {
+            None
+        } else {
+            Some(Arc::new(
+                DiskSet::create(&cfg, 0, Arc::new(UnixIo::new()), metrics.clone()).unwrap(),
+            ))
+        };
+        let store = Store::create(&cfg, disks, metrics.clone()).unwrap();
+        (cfg, store, metrics)
+    }
+
+    #[test]
+    fn explicit_swap_round_trip() {
+        let (cfg, store, metrics) = mk(IoStyle::Unix);
+        let mu = cfg.mu;
+        let k = cfg.k;
+        // Write pattern into vp 1's partition memory, swap out, clobber,
+        // swap in, verify.
+        let ptr = store.vp_memory(1, k, mu);
+        unsafe {
+            for i in 0..256 {
+                *ptr.add(i) = (i % 251) as u8;
+            }
+        }
+        store.swap_out_regions(1, k, mu, &[(0, 256)]).unwrap();
+        unsafe {
+            std::ptr::write_bytes(ptr, 0xFF, 256);
+        }
+        store.swap_in_regions(1, k, mu, &[(0, 256)]).unwrap();
+        unsafe {
+            for i in 0..256 {
+                assert_eq!(*ptr.add(i), (i % 251) as u8);
+            }
+        }
+        assert_eq!(metrics.swap_bytes(), 512);
+    }
+
+    #[test]
+    fn explicit_direct_delivery_lands_in_context() {
+        let (cfg, store, _m) = mk(IoStyle::Unix);
+        let payload = vec![0x7E; 1000];
+        store
+            .write_to_context(2, 100, &payload, IoClass::Delivery)
+            .unwrap();
+        // Receiver swaps in the covering region and sees the message.
+        let ptr = store.vp_memory(2, cfg.k, cfg.mu);
+        store.swap_in_regions(2, cfg.k, cfg.mu, &[(0, 2048)]).unwrap();
+        unsafe {
+            assert_eq!(*ptr.add(100), 0x7E);
+            assert_eq!(*ptr.add(1099), 0x7E);
+        }
+    }
+
+    #[test]
+    fn mmap_memory_is_persistent_without_swaps() {
+        let (cfg, store, metrics) = mk(IoStyle::Mmap);
+        let p0 = store.vp_memory(0, cfg.k, cfg.mu);
+        unsafe {
+            *p0 = 42;
+        }
+        // Swaps are no-ops...
+        store.swap_out_regions(0, cfg.k, cfg.mu, &[(0, 4096)]).unwrap();
+        store.swap_in_regions(0, cfg.k, cfg.mu, &[(0, 4096)]).unwrap();
+        unsafe {
+            assert_eq!(*p0, 42);
+        }
+        // ...and charge no explicit I/O.
+        assert_eq!(metrics.swap_bytes(), 0);
+        // Distinct VPs have distinct memory.
+        let p1 = store.vp_memory(1, cfg.k, cfg.mu);
+        assert_ne!(p0, p1);
+        unsafe {
+            assert_eq!(*p1, 0);
+        }
+    }
+
+    #[test]
+    fn mmap_delivery_via_memcpy() {
+        let (cfg, store, metrics) = mk(IoStyle::Mmap);
+        store
+            .write_to_context(3, 64, &[9u8; 128], IoClass::Delivery)
+            .unwrap();
+        let p = store.vp_memory(3, cfg.k, cfg.mu);
+        unsafe {
+            assert_eq!(*p.add(64), 9);
+            assert_eq!(*p.add(191), 9);
+        }
+        assert_eq!(metrics.snapshot().mmap_touched_bytes, 128);
+        assert_eq!(metrics.delivery_bytes(), 0); // no explicit I/O
+    }
+
+    #[test]
+    fn mem_store_no_files() {
+        let (cfg, store, metrics) = mk(IoStyle::Mem);
+        store.write_to_context(1, 0, &[5u8; 64], IoClass::Delivery).unwrap();
+        let p = store.vp_memory(1, cfg.k, cfg.mu);
+        unsafe {
+            assert_eq!(*p, 5);
+        }
+        assert_eq!(metrics.snapshot().total_disk_bytes(), 0);
+    }
+
+    #[test]
+    fn explicit_partition_shared_between_vps_mod_k() {
+        let (cfg, store, _m) = mk(IoStyle::Unix);
+        // vp 0 and vp 2 share partition 0 (k=2).
+        assert_eq!(
+            store.vp_memory(0, cfg.k, cfg.mu),
+            store.vp_memory(2, cfg.k, cfg.mu)
+        );
+        assert_ne!(
+            store.vp_memory(0, cfg.k, cfg.mu),
+            store.vp_memory(1, cfg.k, cfg.mu)
+        );
+    }
+}

@@ -1,0 +1,182 @@
+//! Integration tests: the Ch. 8 applications end-to-end with
+//! verification, across delivery modes, I/O styles and node counts.
+
+use pems2::apps;
+use pems2::config::{AllocPolicy, DeliveryMode, IoStyle, Layout, SimConfig};
+use std::sync::Arc;
+
+fn cfg(p: usize, v: usize, k: usize, io: IoStyle, mu: u64) -> SimConfig {
+    let mut b = SimConfig::builder()
+        .p(p)
+        .v(v)
+        .k(k)
+        .mu(mu)
+        .sigma(mu)
+        .block(4096)
+        .io(io);
+    if io == IoStyle::Mmap {
+        b = b.layout(Layout::PerVpDisk);
+    }
+    b.build().unwrap()
+}
+
+// ------------------------------------------------------------------ PSRS
+
+#[test]
+fn psrs_sorts_single_node() {
+    let r = apps::run_psrs(cfg(1, 4, 2, IoStyle::Unix, 1 << 20), 40_000, true).unwrap();
+    assert!(r.verified);
+    assert!(r.report.metrics.swap_bytes() > 0, "must actually swap");
+}
+
+#[test]
+fn psrs_sorts_multi_node() {
+    let r = apps::run_psrs(cfg(2, 8, 2, IoStyle::Unix, 1 << 20), 60_000, true).unwrap();
+    assert!(r.verified);
+    assert!(r.report.metrics.net_relations > 0, "must use the network");
+}
+
+#[test]
+fn psrs_sorts_four_nodes_k4() {
+    let r = apps::run_psrs(cfg(4, 16, 4, IoStyle::Unix, 1 << 20), 100_000, true).unwrap();
+    assert!(r.verified);
+}
+
+#[test]
+fn psrs_all_io_styles() {
+    for io in [IoStyle::Unix, IoStyle::Async, IoStyle::Mmap, IoStyle::Mem] {
+        let r = apps::run_psrs(cfg(1, 4, 2, io, 1 << 20), 20_000, true)
+            .unwrap_or_else(|e| panic!("{io:?}: {e}"));
+        assert!(r.verified, "{io:?} run not verified");
+    }
+}
+
+#[test]
+fn psrs_under_pems1() {
+    let mut c = cfg(1, 4, 1, IoStyle::Unix, 1 << 20);
+    c.delivery = DeliveryMode::Pems1Indirect;
+    c.alloc = AllocPolicy::Bump;
+    c.indirect_slot = 1 << 17; // generous bound for bucket messages
+    let r = apps::run_psrs(c, 20_000, true).unwrap();
+    assert!(r.verified);
+}
+
+#[test]
+fn psrs_pems2_less_io_than_pems1() {
+    let n = 60_000;
+    let p2 = apps::run_psrs(cfg(1, 4, 1, IoStyle::Unix, 1 << 21), n, false).unwrap();
+    let mut c1 = cfg(1, 4, 1, IoStyle::Unix, 1 << 21);
+    c1.delivery = DeliveryMode::Pems1Indirect;
+    c1.alloc = AllocPolicy::Bump;
+    c1.indirect_slot = 1 << 18;
+    let p1 = apps::run_psrs(c1, n, false).unwrap();
+    assert!(
+        p2.report.metrics.total_disk_bytes() < p1.report.metrics.total_disk_bytes(),
+        "PEMS2 {} !< PEMS1 {}",
+        p2.report.metrics.total_disk_bytes(),
+        p1.report.metrics.total_disk_bytes()
+    );
+}
+
+#[test]
+fn psrs_rejects_insufficient_mu() {
+    let e = apps::run_psrs(cfg(1, 4, 1, IoStyle::Unix, 1 << 12), 1_000_000, false);
+    assert!(e.is_err());
+}
+
+#[test]
+fn psrs_uneven_n() {
+    // n not divisible by v.
+    let r = apps::run_psrs(cfg(1, 4, 2, IoStyle::Unix, 1 << 20), 10_007, true).unwrap();
+    assert!(r.verified);
+}
+
+// ------------------------------------------------------------ prefix sum
+
+#[test]
+fn prefix_sum_verifies() {
+    let r = apps::run_prefix_sum(cfg(1, 4, 2, IoStyle::Unix, 1 << 20), 50_000, true).unwrap();
+    assert!(r.verified);
+}
+
+#[test]
+fn prefix_sum_multi_node_mmap() {
+    let r = apps::run_prefix_sum(cfg(2, 8, 2, IoStyle::Mmap, 1 << 20), 50_000, true).unwrap();
+    assert!(r.verified);
+}
+
+// ---------------------------------------------------------- list ranking
+
+#[test]
+fn list_ranking_random_list() {
+    let succ = Arc::new(apps::list_ranking::random_list(5_000, 42));
+    let r =
+        apps::run_list_ranking(cfg(1, 4, 2, IoStyle::Unix, 1 << 21), succ, true).unwrap();
+    assert!(r.verified);
+}
+
+#[test]
+fn list_ranking_multi_node() {
+    let succ = Arc::new(apps::list_ranking::random_list(8_000, 7));
+    let r =
+        apps::run_list_ranking(cfg(2, 8, 2, IoStyle::Unix, 1 << 21), succ, true).unwrap();
+    assert!(r.verified);
+}
+
+#[test]
+fn list_ranking_multiple_lists() {
+    // Several disjoint chains (cut a random list into pieces).
+    let mut succ = apps::list_ranking::random_list(4_000, 9);
+    for i in (0..4_000).step_by(400) {
+        // Cut the successor of node i (making several tails).
+        succ[i] = apps::list_ranking::NIL;
+    }
+    let r = apps::run_list_ranking(
+        cfg(1, 4, 2, IoStyle::Unix, 1 << 21),
+        Arc::new(succ),
+        true,
+    )
+    .unwrap();
+    assert!(r.verified);
+}
+
+// ------------------------------------------------------------ euler tour
+
+#[test]
+fn euler_tour_small_forest() {
+    let r = apps::run_euler_tour(cfg(1, 4, 2, IoStyle::Unix, 1 << 21), 4, 64, true).unwrap();
+    assert!(r.verified);
+    assert_eq!(r.arcs, 4 * 2 * 63);
+}
+
+#[test]
+fn euler_tour_multi_node() {
+    let r = apps::run_euler_tour(cfg(2, 8, 2, IoStyle::Unix, 1 << 21), 2, 128, true).unwrap();
+    assert!(r.verified);
+}
+
+#[test]
+fn euler_tour_mmap() {
+    let r = apps::run_euler_tour(cfg(1, 4, 2, IoStyle::Mmap, 1 << 21), 3, 32, true).unwrap();
+    assert!(r.verified);
+}
+
+// -------------------------------------------------------------- cgm sort
+
+#[test]
+fn cgm_sort_verifies() {
+    let r = apps::run_cgm_sort(cfg(1, 4, 2, IoStyle::Unix, 1 << 21), 40_000, true).unwrap();
+    assert!(r.verified);
+}
+
+#[test]
+fn cgm_sort_multi_node() {
+    let r = apps::run_cgm_sort(cfg(2, 8, 2, IoStyle::Unix, 1 << 21), 40_000, true).unwrap();
+    assert!(r.verified);
+}
+
+#[test]
+fn cgm_sort_uses_more_memory_than_psrs() {
+    // The §8.4.1 observation: CGMLib's constant factor is higher.
+    assert!(apps::cgm_sort::required_mu(1 << 20, 8) > apps::psrs::required_mu(1 << 20, 8));
+}

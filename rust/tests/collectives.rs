@@ -1,0 +1,488 @@
+//! Integration tests: every collective, across delivery modes, I/O
+//! styles, and node counts.
+
+use pems2::config::{DeliveryMode, IoStyle, Layout, SimConfig};
+use pems2::engine::run;
+use pems2::prelude::*;
+use std::sync::atomic::AtomicUsize;
+use std::sync::Arc;
+
+fn base_cfg(p: usize, v: usize, k: usize, io: IoStyle) -> SimConfig {
+    let mut b = SimConfig::builder()
+        .p(p)
+        .v(v)
+        .k(k)
+        .mu(1 << 18)
+        .sigma(1 << 18)
+        .block(4096)
+        .io(io);
+    if io == IoStyle::Mmap {
+        b = b.layout(Layout::PerVpDisk);
+    }
+    b.build().unwrap()
+}
+
+/// Alltoallv where vp i sends `i*v+j` tagged payloads to vp j; every
+/// receiver checks provenance and content.
+fn alltoallv_program(vp: &mut Vp) -> pems2::Result<()> {
+    let v = vp.nranks();
+    let me = vp.rank();
+    // Variable-size messages: to peer j send (1 + (me+j) % 5) * 7 u32s.
+    let size = |s: usize, d: usize| (1 + (s + d) % 5) * 7;
+    let send_total: usize = (0..v).map(|j| size(me, j)).sum();
+    let recv_total: usize = (0..v).map(|i| size(i, me)).sum();
+    let send = vp.alloc::<u32>(send_total)?;
+    let recv = vp.alloc::<u32>(recv_total)?;
+    // Also allocate a guard region after recv to detect overwrites.
+    let guard = vp.alloc::<u32>(16)?;
+    {
+        let g = vp.slice_mut(guard)?;
+        g.fill(0xDEAD_BEEF);
+    }
+    {
+        let s = vp.slice_mut(send)?;
+        let mut at = 0;
+        for j in 0..v {
+            for x in 0..size(me, j) {
+                s[at] = ((me as u32) << 20) | ((j as u32) << 10) | (x as u32 & 0x3FF);
+                at += 1;
+            }
+        }
+    }
+    let mut sends = Vec::new();
+    let mut off = send.byte_off();
+    for j in 0..v {
+        let b = (size(me, j) * 4) as u64;
+        sends.push((off, b));
+        off += b;
+    }
+    let mut recvs = Vec::new();
+    let mut off = recv.byte_off();
+    for i in 0..v {
+        let b = (size(i, me) * 4) as u64;
+        recvs.push((off, b));
+        off += b;
+    }
+    vp.alltoallv_regions(&sends, &recvs)?;
+    {
+        let r = vp.slice(recv)?;
+        let mut at = 0;
+        for i in 0..v {
+            for x in 0..size(i, me) {
+                let val = r[at];
+                assert_eq!(
+                    val,
+                    ((i as u32) << 20) | ((me as u32) << 10) | (x as u32 & 0x3FF),
+                    "vp {me}: bad value from {i} at {x}"
+                );
+                at += 1;
+            }
+        }
+        let g = vp.slice(guard)?;
+        assert!(g.iter().all(|&x| x == 0xDEAD_BEEF), "guard clobbered");
+    }
+    Ok(())
+}
+
+#[test]
+fn alltoallv_pems2_single_node_k1() {
+    run(base_cfg(1, 4, 1, IoStyle::Unix), alltoallv_program).unwrap();
+}
+
+#[test]
+fn alltoallv_pems2_single_node_k4() {
+    run(base_cfg(1, 8, 4, IoStyle::Unix), alltoallv_program).unwrap();
+}
+
+#[test]
+fn alltoallv_pems2_multi_node() {
+    run(base_cfg(2, 8, 2, IoStyle::Unix), alltoallv_program).unwrap();
+}
+
+#[test]
+fn alltoallv_pems2_four_nodes() {
+    run(base_cfg(4, 16, 2, IoStyle::Unix), alltoallv_program).unwrap();
+}
+
+#[test]
+fn alltoallv_async_io() {
+    run(base_cfg(2, 8, 2, IoStyle::Async), alltoallv_program).unwrap();
+}
+
+#[test]
+fn alltoallv_mmap_io() {
+    run(base_cfg(1, 8, 2, IoStyle::Mmap), alltoallv_program).unwrap();
+}
+
+#[test]
+fn alltoallv_mem_io() {
+    run(base_cfg(2, 8, 2, IoStyle::Mem), alltoallv_program).unwrap();
+}
+
+#[test]
+fn alltoallv_pems1_single_node() {
+    let mut cfg = base_cfg(1, 4, 1, IoStyle::Unix);
+    cfg.delivery = DeliveryMode::Pems1Indirect;
+    cfg.indirect_slot = 4096;
+    run(cfg, alltoallv_program).unwrap();
+}
+
+#[test]
+fn alltoallv_pems1_multi_node() {
+    let mut cfg = base_cfg(2, 8, 2, IoStyle::Unix);
+    cfg.delivery = DeliveryMode::Pems1Indirect;
+    cfg.indirect_slot = 4096;
+    run(cfg, alltoallv_program).unwrap();
+}
+
+#[test]
+fn alltoallv_pems1_rejects_oversized_message() {
+    let mut cfg = base_cfg(1, 4, 1, IoStyle::Unix);
+    cfg.delivery = DeliveryMode::Pems1Indirect;
+    cfg.indirect_slot = 16; // way below the ~140B messages
+    let err = run(cfg, alltoallv_program).unwrap_err();
+    assert!(err.to_string().contains("indirect slot"), "{err}");
+}
+
+#[test]
+fn alltoallv_repeated_calls() {
+    // Reuse of the offset table / border cache across calls.
+    run(base_cfg(1, 4, 2, IoStyle::Unix), |vp| {
+        for _ in 0..3 {
+            alltoallv_program(vp)?;
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn alltoallv_unaligned_small_messages_hit_border_cache() {
+    // Tiny sub-block messages: everything goes through boundary blocks.
+    let cfg = base_cfg(1, 4, 2, IoStyle::Unix);
+    let report = run(cfg, |vp| {
+        let v = vp.nranks();
+        let me = vp.rank();
+        let send = vp.alloc::<u32>(v)?;
+        let recv = vp.alloc::<u32>(v)?;
+        {
+            let s = vp.slice_mut(send)?;
+            for (j, x) in s.iter_mut().enumerate() {
+                *x = (me * 100 + j) as u32;
+            }
+        }
+        let sends: Vec<_> = (0..v).map(|j| (send.byte_off() + 4 * j as u64, 4)).collect();
+        let recvs: Vec<_> = (0..v).map(|i| (recv.byte_off() + 4 * i as u64, 4)).collect();
+        vp.alltoallv_regions(&sends, &recvs)?;
+        let r = vp.slice(recv)?;
+        for (i, &x) in r.iter().enumerate() {
+            assert_eq!(x, (i * 100 + me) as u32);
+        }
+        Ok(())
+    })
+    .unwrap();
+    assert!(report.border_hwm[0] > 0, "border cache unused?");
+}
+
+// ---------------------------------------------------------------- rooted
+
+#[test]
+fn bcast_from_every_root() {
+    for io in [IoStyle::Unix, IoStyle::Mem] {
+        for root in [0usize, 3, 5] {
+            let cfg = base_cfg(2, 8, 2, io);
+            run(cfg, move |vp| {
+                let buf = vp.alloc::<u32>(100)?;
+                if vp.rank() == root {
+                    let b = vp.slice_mut(buf)?;
+                    for (i, x) in b.iter_mut().enumerate() {
+                        *x = (root * 1000 + i) as u32;
+                    }
+                }
+                pems2::comm::bcast(vp, root, buf.region(), buf.region())?;
+                let b = vp.slice(buf)?;
+                for (i, &x) in b.iter().enumerate() {
+                    assert_eq!(x, (root * 1000 + i) as u32);
+                }
+                Ok(())
+            })
+            .unwrap();
+        }
+    }
+}
+
+#[test]
+fn gather_collects_in_rank_order() {
+    for root in [0usize, 2, 7] {
+        let cfg = base_cfg(2, 8, 2, IoStyle::Unix);
+        run(cfg, move |vp| {
+            let v = vp.nranks();
+            let me = vp.rank();
+            let send = vp.alloc::<u32>(8)?;
+            let recv = if me == root { Some(vp.alloc::<u32>(8 * v)?) } else { None };
+            {
+                let s = vp.slice_mut(send)?;
+                for (i, x) in s.iter_mut().enumerate() {
+                    *x = (me * 10 + i) as u32;
+                }
+            }
+            pems2::comm::gather(
+                vp,
+                root,
+                send.region(),
+                recv.map(|m| m.region()).unwrap_or((0, 0)),
+            )?;
+            if me == root {
+                let r = vp.slice(recv.unwrap())?;
+                for src in 0..v {
+                    for i in 0..8 {
+                        assert_eq!(r[src * 8 + i], (src * 10 + i) as u32);
+                    }
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+}
+
+#[test]
+fn scatter_distributes_in_rank_order() {
+    for root in [0usize, 5] {
+        let cfg = base_cfg(2, 8, 2, IoStyle::Unix);
+        run(cfg, move |vp| {
+            let v = vp.nranks();
+            let me = vp.rank();
+            let send = if me == root { Some(vp.alloc::<u32>(4 * v)?) } else { None };
+            let recv = vp.alloc::<u32>(4)?;
+            if me == root {
+                let s = vp.slice_mut(send.unwrap())?;
+                for (i, x) in s.iter_mut().enumerate() {
+                    *x = i as u32 * 3;
+                }
+            }
+            pems2::comm::scatter(
+                vp,
+                root,
+                send.map(|m| m.region()).unwrap_or((0, 0)),
+                recv.region(),
+            )?;
+            let r = vp.slice(recv)?;
+            for i in 0..4 {
+                assert_eq!(r[i], (me * 4 + i) as u32 * 3);
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+}
+
+#[test]
+fn reduce_sums_vectors() {
+    for (p, v, k) in [(1, 4, 1), (1, 8, 4), (2, 8, 2)] {
+        let cfg = base_cfg(p, v, k, IoStyle::Unix);
+        run(cfg, move |vp| {
+            let me = vp.rank();
+            let n = 16;
+            let send = vp.alloc::<u64>(n)?;
+            let recv = if me == 0 { Some(vp.alloc::<u64>(n)?) } else { None };
+            {
+                let s = vp.slice_mut(send)?;
+                for (i, x) in s.iter_mut().enumerate() {
+                    *x = (me + i) as u64;
+                }
+            }
+            pems2::comm::reduce::<u64>(
+                vp,
+                0,
+                pems2::comm::ReduceOp::Sum,
+                send.region(),
+                recv.map(|m| m.region()).unwrap_or((0, 0)),
+            )?;
+            if me == 0 {
+                let vv = vp.nranks() as u64;
+                let r = vp.slice(recv.unwrap())?;
+                for (i, &x) in r.iter().enumerate() {
+                    // sum over me of (me + i) = v*i + v(v-1)/2
+                    assert_eq!(x, vv * i as u64 + vv * (vv - 1) / 2);
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+}
+
+#[test]
+fn reduce_min_max() {
+    let cfg = base_cfg(1, 4, 2, IoStyle::Unix);
+    run(cfg, |vp| {
+        let me = vp.rank();
+        let send = vp.alloc::<i32>(4)?;
+        let recv = if me == 0 { Some(vp.alloc::<i32>(4)?) } else { None };
+        {
+            let s = vp.slice_mut(send)?;
+            for (i, x) in s.iter_mut().enumerate() {
+                *x = (me as i32 - 2) * (i as i32 + 1);
+            }
+        }
+        pems2::comm::reduce::<i32>(
+            vp,
+            0,
+            pems2::comm::ReduceOp::Min,
+            send.region(),
+            recv.map(|m| m.region()).unwrap_or((0, 0)),
+        )?;
+        if me == 0 {
+            let r = vp.slice(recv.unwrap())?;
+            // min over me of (me-2)(i+1): me=0 -> -2(i+1)
+            for (i, &x) in r.iter().enumerate() {
+                assert_eq!(x, -2 * (i as i32 + 1));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn barrier_counts_supersteps() {
+    let cfg = base_cfg(2, 8, 2, IoStyle::Mem);
+    let report = run(cfg, |vp| {
+        for _ in 0..5 {
+            vp.barrier_collective()?;
+        }
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(report.metrics.supersteps, 5);
+}
+
+#[test]
+fn derived_allgather_allreduce() {
+    let cfg = base_cfg(2, 8, 2, IoStyle::Unix);
+    run(cfg, |vp| {
+        let v = vp.nranks();
+        let me = vp.rank();
+        let send = vp.alloc::<u32>(2)?;
+        let recv = vp.alloc::<u32>(2 * v)?;
+        {
+            let s = vp.slice_mut(send)?;
+            s[0] = me as u32;
+            s[1] = me as u32 * 2;
+        }
+        pems2::comm::allgather(vp, send.region(), recv.region())?;
+        {
+            let r = vp.slice(recv)?;
+            for i in 0..v {
+                assert_eq!(r[2 * i], i as u32);
+                assert_eq!(r[2 * i + 1], i as u32 * 2);
+            }
+        }
+        // Allreduce.
+        let rsend = vp.alloc::<u64>(3)?;
+        let rrecv = vp.alloc::<u64>(3)?;
+        {
+            let s = vp.slice_mut(rsend)?;
+            s.fill(me as u64);
+        }
+        pems2::comm::allreduce::<u64>(
+            vp,
+            pems2::comm::ReduceOp::Sum,
+            rsend.region(),
+            rrecv.region(),
+        )?;
+        let r = vp.slice(rrecv)?;
+        let expect = (0..v as u64).sum::<u64>();
+        assert!(r.iter().all(|&x| x == expect));
+        Ok(())
+    })
+    .unwrap();
+}
+
+// -------------------------------------------------------------- ordering
+
+#[test]
+fn ordered_rounds_execute_in_id_order() {
+    let order = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let order2 = order.clone();
+    let counter = Arc::new(AtomicUsize::new(0));
+    let _ = counter;
+    let cfg = base_cfg(1, 8, 2, IoStyle::Mem);
+    run(cfg, move |vp| {
+        vp.ensure_resident()?; // ordered admission
+        order2.lock().unwrap().push(vp.rank());
+        vp.barrier_collective()?;
+        Ok(())
+    })
+    .unwrap();
+    let order = order.lock().unwrap();
+    // Threads of round r (ids 2r, 2r+1) must appear before round r+1.
+    let pos = |id: usize| order.iter().position(|&x| x == id).unwrap();
+    for r in 0..3 {
+        let max_this = pos(2 * r).max(pos(2 * r + 1));
+        let min_next = pos(2 * r + 2).min(pos(2 * r + 3));
+        assert!(max_this < min_next, "round {r} not before round {}", r + 1);
+    }
+}
+
+#[test]
+fn mmap_runs_have_zero_swap_io() {
+    let cfg = base_cfg(1, 4, 2, IoStyle::Mmap);
+    let report = run(cfg, alltoallv_program).unwrap();
+    assert_eq!(report.metrics.swap_bytes(), 0);
+    assert!(report.metrics.mmap_touched_bytes > 0);
+}
+
+/// Coarse-grained alltoallv (ω of several blocks — the CGM regime the
+/// thesis targets; Cor. 7.1.4's improvement is positive only there).
+fn coarse_alltoallv_program(vp: &mut Vp) -> pems2::Result<()> {
+    let v = vp.nranks();
+    let per = 4096usize; // u32 per message = 16 KiB = 4 blocks
+    let send = vp.alloc::<u32>(per * v)?;
+    let recv = vp.alloc::<u32>(per * v)?;
+    {
+        let me = vp.rank() as u32;
+        let s = vp.slice_mut(send)?;
+        for (i, x) in s.iter_mut().enumerate() {
+            *x = me.wrapping_mul(0x01000193) ^ i as u32;
+        }
+    }
+    let sends: Vec<_> = (0..v)
+        .map(|j| (send.byte_off() + (j * per * 4) as u64, (per * 4) as u64))
+        .collect();
+    let recvs: Vec<_> = (0..v)
+        .map(|i| (recv.byte_off() + (i * per * 4) as u64, (per * 4) as u64))
+        .collect();
+    vp.alltoallv_regions(&sends, &recvs)?;
+    let me = vp.rank();
+    let r = vp.slice(recv)?;
+    for (i, &x) in r.iter().enumerate() {
+        let src = (i / per) as u32;
+        let q = i % per;
+        let expect = src.wrapping_mul(0x01000193) ^ (me * per + q) as u32;
+        assert_eq!(x, expect, "vp {me} idx {i}");
+    }
+    Ok(())
+}
+
+#[test]
+fn pems2_beats_pems1_on_io_volume() {
+    // The headline claim, in the coarse-grained regime: same program,
+    // substantially less I/O (Cor. 7.1.4).
+    let mut cfg2 = base_cfg(1, 4, 1, IoStyle::Unix);
+    cfg2.mu = 1 << 20;
+    let p2 = run(cfg2, coarse_alltoallv_program).unwrap();
+    let mut cfg1 = base_cfg(1, 4, 1, IoStyle::Unix);
+    cfg1.mu = 1 << 20;
+    cfg1.delivery = DeliveryMode::Pems1Indirect;
+    cfg1.indirect_slot = 4096 * 4 + 4096;
+    cfg1.alloc = pems2::config::AllocPolicy::Bump;
+    let p1 = run(cfg1, coarse_alltoallv_program).unwrap();
+    assert!(
+        p2.metrics.total_disk_bytes() < p1.metrics.total_disk_bytes(),
+        "PEMS2 {} !< PEMS1 {}",
+        p2.metrics.total_disk_bytes(),
+        p1.metrics.total_disk_bytes()
+    );
+}

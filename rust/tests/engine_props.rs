@@ -1,0 +1,205 @@
+//! Engine-level property tests and failure injection.
+
+use pems2::config::{IoStyle, SimConfig};
+use pems2::engine::run;
+use pems2::prelude::*;
+use pems2::util::proptest_mini::Prop;
+use pems2::util::XorShift64;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Property: for random (v, k, message sizes), a PEMS2 alltoallv delivers
+/// every byte intact and clobbers nothing else.
+#[test]
+fn prop_alltoallv_random_shapes() {
+    Prop::new("alltoallv_shapes", 12).run(|g| {
+        let k = g.usize_in(1, 4);
+        let v = k * g.usize_in(1, 4);
+        let base = g.usize_in(1, 600);
+        let cfg = SimConfig::builder()
+            .v(v)
+            .k(k)
+            .mu(1 << 19)
+            .sigma(1 << 19)
+            .block(4096)
+            .io(IoStyle::Unix)
+            .build()
+            .unwrap();
+        run(cfg, move |vp| {
+            let vn = vp.nranks();
+            let me = vp.rank();
+            let size = |s: usize, d: usize| (1 + (s * 31 + d * 17 + base) % 777) * 4;
+            let st: usize = (0..vn).map(|j| size(me, j)).sum();
+            let rt: usize = (0..vn).map(|i| size(i, me)).sum();
+            let send = vp.alloc::<u8>(st)?;
+            let recv = vp.alloc::<u8>(rt)?;
+            {
+                let s = vp.slice_mut(send)?;
+                let mut at = 0;
+                for j in 0..vn {
+                    for x in 0..size(me, j) {
+                        s[at] = ((me * 7 + j * 13 + x) % 251) as u8;
+                        at += 1;
+                    }
+                }
+            }
+            let mut sends = Vec::new();
+            let mut off = send.byte_off();
+            for j in 0..vn {
+                sends.push((off, size(me, j) as u64));
+                off += size(me, j) as u64;
+            }
+            let mut recvs = Vec::new();
+            let mut off = recv.byte_off();
+            for i in 0..vn {
+                recvs.push((off, size(i, me) as u64));
+                off += size(i, me) as u64;
+            }
+            vp.alltoallv_regions(&sends, &recvs)?;
+            let r = vp.slice(recv)?;
+            let mut at = 0;
+            for i in 0..vn {
+                for x in 0..size(i, me) {
+                    assert_eq!(r[at], ((i * 7 + me * 13 + x) % 251) as u8);
+                    at += 1;
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+    });
+}
+
+/// Property: data survives arbitrary sequences of supersteps (swap
+/// round-trips) under every I/O style.
+#[test]
+fn prop_context_durability_across_supersteps() {
+    Prop::new("context_durability", 8).run(|g| {
+        let io = [IoStyle::Unix, IoStyle::Async, IoStyle::Mem][g.usize_in(0, 3)];
+        let steps = g.usize_in(1, 6);
+        let n = g.usize_in(1, 2000);
+        let cfg = SimConfig::builder()
+            .v(4)
+            .k(2)
+            .mu(1 << 18)
+            .sigma(1 << 16)
+            .block(4096)
+            .io(io)
+            .build()
+            .unwrap();
+        run(cfg, move |vp| {
+            let m = vp.alloc::<u32>(n)?;
+            let mut rng = XorShift64::new(vp.rank() as u64 + 1);
+            let mut expect = vec![0u32; n];
+            rng.fill_u32(&mut expect);
+            vp.slice_mut(m)?.copy_from_slice(&expect);
+            for _ in 0..steps {
+                vp.barrier_collective()?;
+                assert_eq!(vp.slice(m)?, &expect[..]);
+            }
+            Ok(())
+        })
+        .unwrap();
+    });
+}
+
+/// Failure injection: an erroring VP program propagates cleanly (no hang,
+/// no poisoned engine) as long as it fails before entering a collective.
+#[test]
+fn error_before_collective_propagates() {
+    let cfg = SimConfig::builder().v(4).k(2).mu(1 << 16).block(4096).build().unwrap();
+    let err = run(cfg, |vp| {
+        if vp.rank() == 2 {
+            return Err(pems2::error::Error::comm("injected"));
+        }
+        Ok(())
+    })
+    .unwrap_err();
+    assert!(err.to_string().contains("injected"));
+}
+
+/// Failure injection: allocator exhaustion inside a VP surfaces as an
+/// Alloc error, and other VPs complete.
+#[test]
+fn alloc_exhaustion_surfaces() {
+    let cfg = SimConfig::builder().v(2).k(1).mu(4096).block(4096).build().unwrap();
+    let done = Arc::new(AtomicU64::new(0));
+    let done2 = done.clone();
+    let err = run(cfg, move |vp| {
+        if vp.rank() == 0 {
+            let r = vp.alloc::<u8>(1 << 20);
+            assert!(r.is_err());
+            r?;
+        }
+        done2.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    })
+    .unwrap_err();
+    assert!(matches!(err, pems2::error::Error::Alloc(_)));
+    assert_eq!(done.load(Ordering::SeqCst), 1); // rank 1 completed
+}
+
+/// Mixed residency: VPs interleave allocation, frees and collectives;
+/// allocator state stays consistent (PEMS2 free-list path).
+#[test]
+fn prop_alloc_free_across_collectives() {
+    Prop::new("alloc_free_collectives", 6).run(|g| {
+        let rounds = g.usize_in(1, 4);
+        let cfg = SimConfig::builder()
+            .v(4)
+            .k(2)
+            .mu(1 << 18)
+            .sigma(1 << 16)
+            .block(4096)
+            .io(IoStyle::Unix)
+            .build()
+            .unwrap();
+        run(cfg, move |vp| {
+            let tag = vp.rank() as u64 * 1000;
+            let keep = vp.alloc::<u64>(64)?;
+            {
+                let s = vp.slice_mut(keep)?;
+                for (i, x) in s.iter_mut().enumerate() {
+                    *x = tag + i as u64;
+                }
+            }
+            for _ in 0..rounds {
+                let tmp = vp.alloc::<u64>(512)?;
+                vp.slice_mut(tmp)?.fill(0xAA);
+                vp.barrier_collective()?;
+                vp.free(tmp);
+                let s = vp.slice(keep)?;
+                for (i, &x) in s.iter().enumerate() {
+                    assert_eq!(x, tag + i as u64, "kept data corrupted");
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+    });
+}
+
+/// The engine is reusable: many runs back-to-back don't leak disk files
+/// or wedge global state.
+#[test]
+fn repeated_runs_are_independent() {
+    for seed in 0..5 {
+        let cfg = SimConfig::builder()
+            .v(4)
+            .k(2)
+            .mu(1 << 16)
+            .block(4096)
+            .seed(seed)
+            .build()
+            .unwrap();
+        let r = run(cfg, |vp| {
+            let m = vp.alloc::<u32>(16)?;
+            vp.slice_mut(m)?.fill(7);
+            vp.barrier_collective()?;
+            assert!(vp.slice(m)?.iter().all(|&x| x == 7));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(r.metrics.supersteps, 1);
+    }
+}

@@ -1,0 +1,113 @@
+//! XLA/PJRT runtime integration: load the AOT artifacts and check the
+//! Pallas-kernel-backed compute ops against Rust oracles, then run a full
+//! app with `use_xla`.
+//!
+//! Requires `make artifacts`; every test skips gracefully when the
+//! artifacts are absent so `cargo test` works standalone.
+
+use pems2::runtime::{Backend, Compute};
+use pems2::util::XorShift64;
+
+fn compute() -> Option<Compute> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Compute::from_artifacts("artifacts").expect("artifacts load"))
+}
+
+#[test]
+fn xla_sort_matches_rust() {
+    let Some(c) = compute() else { return };
+    let mut rng = XorShift64::new(11);
+    for n in [1usize, 100, 65_536, 100_000] {
+        let mut v = vec![0u32; n];
+        rng.fill_u32(&mut v);
+        let mut expect = v.clone();
+        expect.sort_unstable();
+        let backend = c.local_sort_u32(&mut v);
+        assert_eq!(backend, Backend::Xla, "xla path must be used");
+        assert_eq!(v, expect, "n={n}");
+    }
+}
+
+#[test]
+fn xla_sort_handles_extremes_and_duplicates() {
+    let Some(c) = compute() else { return };
+    let mut v = vec![u32::MAX, 0, 5, 5, 5, u32::MAX, 1, 0];
+    let mut expect = v.clone();
+    expect.sort_unstable();
+    assert_eq!(c.local_sort_u32(&mut v), Backend::Xla);
+    assert_eq!(v, expect);
+}
+
+#[test]
+fn xla_scan_matches_rust() {
+    let Some(c) = compute() else { return };
+    let mut rng = XorShift64::new(13);
+    for n in [1usize, 1000, 65_536, 70_001] {
+        let mut v: Vec<i32> = (0..n).map(|_| (rng.next_u32() % 100) as i32 - 50).collect();
+        let mut expect = v.clone();
+        let mut acc = 0i32;
+        for x in expect.iter_mut() {
+            acc = acc.wrapping_add(*x);
+            *x = acc;
+        }
+        let backend = c.local_scan_i32(&mut v);
+        assert_eq!(backend, Backend::Xla);
+        assert_eq!(v, expect, "n={n}");
+    }
+}
+
+#[test]
+fn xla_reduce_matches_rust() {
+    let Some(c) = compute() else { return };
+    let mut rng = XorShift64::new(17);
+    for n in [1usize, 4096, 65_536 + 3] {
+        let v: Vec<i32> = (0..n).map(|_| (rng.next_u32() % 1000) as i32 - 500).collect();
+        let expect = v.iter().fold(0i32, |a, &b| a.wrapping_add(b));
+        let (got, backend) = c.local_reduce_sum_i32(&v);
+        assert_eq!(backend, Backend::Xla);
+        assert_eq!(got, expect, "n={n}");
+    }
+}
+
+#[test]
+fn xla_psrs_end_to_end() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: artifacts/ missing");
+        return;
+    }
+    let cfg = pems2::SimConfig::builder()
+        .v(4)
+        .k(2)
+        .mu(1 << 20)
+        .sigma(1 << 20)
+        .block(4096)
+        .use_xla(true)
+        .build()
+        .unwrap();
+    let r = pems2::apps::run_psrs(cfg, 30_000, true).unwrap();
+    assert!(r.verified);
+    assert!(r.report.xla_active, "XLA path must be active");
+}
+
+#[test]
+fn xla_prefix_sum_end_to_end() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: artifacts/ missing");
+        return;
+    }
+    let cfg = pems2::SimConfig::builder()
+        .v(4)
+        .k(2)
+        .mu(1 << 20)
+        .sigma(1 << 20)
+        .block(4096)
+        .use_xla(true)
+        .build()
+        .unwrap();
+    let r = pems2::apps::run_prefix_sum(cfg, 50_000, true).unwrap();
+    assert!(r.verified);
+    assert!(r.report.xla_active);
+}
