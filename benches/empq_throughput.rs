@@ -1,0 +1,189 @@
+//! `empq` throughput: bulk vs element-at-a-time queue operation, and
+//! PQ-based vs sort-based message processing.
+//!
+//! Three comparisons, all against the same RAM budget `k·µ`:
+//!
+//! 1. *Bulk insert/extract* (`push_batch` / `extract_min_batch`) vs
+//!    single-element `push` / `extract_min` over the same random
+//!    workload — the Bingmann et al. motivation: batch operation
+//!    amortizes heap discipline and merge-tree replay.
+//! 2. *Time-forward processing* through the PQ, bulk vs single mode.
+//! 3. The PQ run vs the hand-crafted EM merge sort over the same *byte
+//!    volume* (u32 keys are 4 B vs 16 B entries, so the sort gets 4x the
+//!    keys) — a sort-based processor must sort the full message set at
+//!    least once, so `stxxl-sort` is its I/O floor.
+//!
+//! y-values are Melem/s (wall clock); measured I/O counters are printed
+//! per phase, since on page-cached SSDs charged time is the faithful
+//! signal (see metrics::cost).
+
+use pems2::apps::time_forward::run_time_forward;
+use pems2::baseline::run_stxxl_sort;
+use pems2::bench::{full_mode, print_series, results_dir, write_series, Series};
+use pems2::config::{IoStyle, SimConfig};
+use pems2::empq::{EmPq, Entry};
+use pems2::util::bytes::human_bytes;
+use pems2::util::XorShift64;
+
+fn cfg() -> SimConfig {
+    SimConfig::builder()
+        .v(2)
+        .k(2)
+        .mu(256 << 10) // 512 KiB RAM budget: tiny, so the PQ really spills
+        .d(2)
+        .block(64 << 10)
+        .io(IoStyle::Async)
+        .build()
+        .unwrap()
+}
+
+/// Push `n` random entries then drain them, in batches of `batch`
+/// (`batch == 1` means the element-at-a-time API).  Returns
+/// (push secs, extract secs, swap bytes, seeks).
+fn pq_round_trip(n: u64, batch: usize) -> (f64, f64, u64, u64) {
+    let cfg = cfg();
+    let mut pq = EmPq::new(&cfg, n).unwrap();
+    let mut rng = XorShift64::new(cfg.seed);
+
+    let t0 = std::time::Instant::now();
+    if batch <= 1 {
+        for _ in 0..n {
+            pq.push(Entry::new(rng.next_u64(), 0)).unwrap();
+        }
+    } else {
+        let mut buf = Vec::with_capacity(batch);
+        let mut left = n;
+        while left > 0 {
+            buf.clear();
+            let take = (batch as u64).min(left);
+            for _ in 0..take {
+                buf.push(Entry::new(rng.next_u64(), 0));
+            }
+            pq.push_batch(&buf).unwrap();
+            left -= take;
+        }
+    }
+    let push_secs = t0.elapsed().as_secs_f64();
+
+    let t1 = std::time::Instant::now();
+    let mut got = 0u64;
+    let mut prev = 0u64;
+    if batch <= 1 {
+        while let Some(e) = pq.extract_min().unwrap() {
+            assert!(e.key >= prev);
+            prev = e.key;
+            got += 1;
+        }
+    } else {
+        loop {
+            let chunk = pq.extract_min_batch(batch).unwrap();
+            if chunk.is_empty() {
+                break;
+            }
+            for e in &chunk {
+                assert!(e.key >= prev);
+                prev = e.key;
+            }
+            got += chunk.len() as u64;
+        }
+    }
+    let extract_secs = t1.elapsed().as_secs_f64();
+    assert_eq!(got, n, "element conservation");
+
+    let m = pq.metrics();
+    (push_secs, extract_secs, m.swap_bytes(), m.seeks)
+}
+
+fn main() {
+    let sizes: Vec<u64> = if full_mode() {
+        vec![1 << 20, 1 << 22, 1 << 24]
+    } else {
+        vec![1 << 16, 1 << 18]
+    };
+    let batch = 8192usize;
+
+    // ---- 1. raw queue throughput, bulk vs single ----
+    let mut push_series = Vec::new();
+    let mut extract_series = Vec::new();
+    let bulk_label = format!("bulk-{batch}");
+    for (label, b) in [("single", 1usize), (bulk_label.as_str(), batch)] {
+        let mut sp = Series::new(format!("push-{label}"));
+        let mut se = Series::new(format!("extract-{label}"));
+        for &n in &sizes {
+            let (push, extract, io, seeks) = pq_round_trip(n, b);
+            println!(
+                "n={n:>9} {label:<11} push {:>8.2} Melem/s  extract {:>8.2} Melem/s  \
+                 io {:>12}  seeks {seeks}",
+                n as f64 / push.max(1e-9) / 1e6,
+                n as f64 / extract.max(1e-9) / 1e6,
+                human_bytes(io),
+            );
+            sp.push(n as f64, n as f64 / push.max(1e-9) / 1e6);
+            se.push(n as f64, n as f64 / extract.max(1e-9) / 1e6);
+        }
+        push_series.push(sp);
+        extract_series.push(se);
+    }
+    print_series("empq push throughput (Melem/s)", &push_series);
+    print_series("empq extract throughput (Melem/s)", &extract_series);
+
+    // ---- 2. time-forward processing, bulk vs single ----
+    let nodes: u64 = if full_mode() { 1 << 20 } else { 1 << 15 };
+    let deg = 4u64;
+    let mut tf_series = Series::new("time-forward");
+    for (label, bulk) in [("bulk", true), ("single", false)] {
+        let r = run_time_forward(&cfg(), nodes, deg, bulk, true).unwrap();
+        assert!(r.verified);
+        println!(
+            "time-forward {label:<7} n={} edges={} wall {:.3}s charged {:.3}s \
+             io {} seeks {} runs {}",
+            r.n,
+            r.edges,
+            r.wall,
+            r.pq.charged,
+            human_bytes(r.pq.metrics.total_disk_bytes()),
+            r.pq.metrics.seeks,
+            r.pq.runs_created,
+        );
+        tf_series.push(
+            if bulk { 1.0 } else { 0.0 },
+            r.edges as f64 / r.wall.max(1e-9) / 1e6,
+        );
+    }
+
+    // ---- 3. PQ-based vs sort-based processing floor ----
+    let tf = run_time_forward(&cfg(), nodes, deg, true, false).unwrap();
+    // The sort baseline moves 4-byte u32 keys while the PQ moves 16-byte
+    // entries: sort 4x the keys so both sides move the same byte volume
+    // and the printed I/O lines are directly comparable.
+    let sort = run_stxxl_sort(&cfg(), (tf.edges * 4).max(1), false).unwrap();
+    println!(
+        "pq-based:   {} messages, wall {:.3}s, charged {:.3}s, io {}",
+        tf.edges,
+        tf.wall,
+        tf.pq.charged,
+        human_bytes(tf.pq.metrics.total_disk_bytes()),
+    );
+    println!(
+        "sort floor: {} keys,     wall {:.3}s, charged {:.3}s, io {}",
+        sort.n,
+        sort.wall,
+        sort.charged,
+        human_bytes(sort.metrics.total_disk_bytes()),
+    );
+
+    let dir = results_dir();
+    write_series(
+        &format!("{dir}/empq_throughput.dat"),
+        "empq bulk vs single throughput",
+        &[
+            push_series[0].clone(),
+            push_series[1].clone(),
+            extract_series[0].clone(),
+            extract_series[1].clone(),
+            tf_series,
+        ],
+    )
+    .unwrap();
+    println!("series written to {dir}/empq_throughput.dat");
+}

@@ -1,0 +1,213 @@
+//! Time-forward processing over a DAG — the canonical external-memory
+//! priority-queue workload (Chiang et al.; the motivating application in
+//! Bingmann, Keh & Sanders' bulk-parallel PQ paper, see PAPERS.md).
+//!
+//! The DAG's nodes are numbered in topological order (every edge goes
+//! from a lower to a higher id).  Each node computes
+//! `value(i) = init(i) + Σ value(pred)` and forwards its value along every
+//! out-edge as a *message* addressed to the target node, queued in the
+//! external PQ with the target id as priority.  Processing nodes in id
+//! order and popping messages with `key == i` implements the classic
+//! technique: the queue carries exactly the "time-forwarded" data
+//! crossing the current frontier, which can far exceed RAM.
+//!
+//! The graph itself is never materialized: out-edges are regenerated from
+//! a per-node seeded PRNG, so the only RAM the driver holds is the
+//! verification oracle (8 bytes/node, only when `verify` is on).
+
+use crate::config::SimConfig;
+use crate::empq::{EmPq, EmPqReport, Entry};
+use crate::error::{Error, Result};
+use crate::util::XorShift64;
+
+/// Outcome of a time-forward run.
+#[derive(Debug)]
+pub struct TimeForwardResult {
+    /// Nodes processed.
+    pub n: u64,
+    /// Messages routed through the queue (= edges).
+    pub edges: u64,
+    /// Wrapping checksum over all node values.
+    pub checksum: u64,
+    /// Checksum matched the in-RAM oracle (always true when `verify` is
+    /// off).
+    pub verified: bool,
+    /// Wall-clock seconds.
+    pub wall: f64,
+    /// Queue accounting (measured I/O counters + model-charged seconds).
+    pub pq: EmPqReport,
+    /// Whether the bulk (batch) operation path was used.
+    pub bulk: bool,
+}
+
+/// Per-node PRNG: deterministic, stateless across the run so edges can be
+/// regenerated instead of stored.
+fn node_rng(seed: u64, i: u64) -> XorShift64 {
+    XorShift64::new(seed ^ (i + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// A node's initial value.
+fn init_value(seed: u64, i: u64) -> u64 {
+    node_rng(seed ^ 0xA5A5_A5A5, i).next_u64()
+}
+
+/// Out-edges of node `i` (targets in `(i, n)`, mean degree `avg_deg`,
+/// multi-edges allowed).
+fn out_edges(seed: u64, i: u64, n: u64, avg_deg: u64) -> Vec<u64> {
+    let span = n - i - 1;
+    if span == 0 {
+        return Vec::new();
+    }
+    let mut rng = node_rng(seed, i);
+    let d = rng.below(2 * avg_deg + 1);
+    (0..d).map(|_| i + 1 + rng.below(span)).collect()
+}
+
+/// Total edge count for the given shape (one pass over the degree
+/// sequence, no edge storage).
+pub fn edge_count(seed: u64, n: u64, avg_deg: u64) -> u64 {
+    (0..n)
+        .map(|i| {
+            if n - i - 1 == 0 {
+                0
+            } else {
+                node_rng(seed, i).below(2 * avg_deg + 1)
+            }
+        })
+        .sum()
+}
+
+/// Run time-forward processing over a random DAG with `n` nodes and mean
+/// out-degree `avg_deg`, using the bulk (`push_batch` / batched extract)
+/// or element-at-a-time queue interface.
+pub fn run_time_forward(
+    cfg: &SimConfig,
+    n: u64,
+    avg_deg: u64,
+    bulk: bool,
+    verify: bool,
+) -> Result<TimeForwardResult> {
+    if n == 0 {
+        return Err(Error::config("time-forward needs n >= 1"));
+    }
+    let seed = cfg.seed;
+    let m = edge_count(seed, n, avg_deg);
+    let mut pq = EmPq::new(cfg, m.max(1))?;
+
+    let start = std::time::Instant::now();
+    let mut checksum = 0u64;
+    for i in 0..n {
+        let msgs = pq.extract_while_key_le(i)?;
+        debug_assert!(msgs.iter().all(|e| e.key == i), "late message detected");
+        let mut val = init_value(seed, i);
+        for e in &msgs {
+            val = val.wrapping_add(e.val);
+        }
+        checksum = checksum.wrapping_add(val.rotate_left((i % 63) as u32));
+        let targets = out_edges(seed, i, n, avg_deg);
+        if bulk {
+            let outbox: Vec<Entry> =
+                targets.iter().map(|&t| Entry::new(t, val)).collect();
+            pq.push_batch(&outbox)?;
+        } else {
+            for &t in &targets {
+                pq.push(Entry::new(t, val))?;
+            }
+        }
+    }
+    if !pq.is_empty() {
+        return Err(Error::comm(format!(
+            "time-forward: {} messages left in the queue after the last node",
+            pq.len()
+        )));
+    }
+    let wall = start.elapsed().as_secs_f64();
+
+    let verified = if verify {
+        checksum == oracle_checksum(seed, n, avg_deg)
+    } else {
+        true
+    };
+
+    Ok(TimeForwardResult {
+        n,
+        edges: m,
+        checksum,
+        verified,
+        wall,
+        pq: pq.report(),
+        bulk,
+    })
+}
+
+/// In-RAM oracle: same recurrence with a dense incoming-sum array
+/// (8 bytes/node — fine at test scale; the PQ path never allocates this).
+fn oracle_checksum(seed: u64, n: u64, avg_deg: u64) -> u64 {
+    let mut incoming = vec![0u64; n as usize];
+    let mut checksum = 0u64;
+    for i in 0..n {
+        let val = init_value(seed, i).wrapping_add(incoming[i as usize]);
+        checksum = checksum.wrapping_add(val.rotate_left((i % 63) as u32));
+        for t in out_edges(seed, i, n, avg_deg) {
+            incoming[t as usize] = incoming[t as usize].wrapping_add(val);
+        }
+    }
+    checksum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::IoStyle;
+
+    fn cfg() -> SimConfig {
+        SimConfig::builder()
+            .v(2)
+            .k(2)
+            .mu(16 << 10)
+            .d(2)
+            .block(4096)
+            .io(IoStyle::Async)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn edges_are_deterministic_and_forward() {
+        let n = 200;
+        for i in 0..n {
+            let a = out_edges(7, i, n, 4);
+            let b = out_edges(7, i, n, 4);
+            assert_eq!(a, b);
+            assert!(a.iter().all(|&t| t > i && t < n));
+        }
+        assert_eq!(
+            edge_count(7, n, 4),
+            (0..n).map(|i| out_edges(7, i, n, 4).len() as u64).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn bulk_run_verifies_against_oracle() {
+        let r = run_time_forward(&cfg(), 2_000, 4, true, true).unwrap();
+        assert!(r.verified, "checksum mismatch");
+        assert_eq!(r.edges, edge_count(cfg().seed, 2_000, 4));
+        assert!(r.pq.metrics.swap_bytes() > 0, "workload must spill through disk");
+    }
+
+    #[test]
+    fn single_element_run_matches_bulk() {
+        let a = run_time_forward(&cfg(), 500, 3, true, true).unwrap();
+        let b = run_time_forward(&cfg(), 500, 3, false, true).unwrap();
+        assert!(a.verified && b.verified);
+        assert_eq!(a.checksum, b.checksum);
+        assert_eq!(a.edges, b.edges);
+    }
+
+    #[test]
+    fn single_node_graph() {
+        let r = run_time_forward(&cfg(), 1, 4, true, true).unwrap();
+        assert!(r.verified);
+        assert_eq!(r.edges, 0);
+    }
+}

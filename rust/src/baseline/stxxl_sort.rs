@@ -7,10 +7,13 @@
 //! 1. *Run formation*: read M-sized chunks, sort in RAM (optionally via
 //!    the XLA tile-sort kernel), write sorted runs.
 //! 2. *Multiway merge*: merge all runs with per-run block buffers and a
-//!    tournament heap, writing the output through a block-sized buffer.
+//!    tournament (loser) tree — the machinery shared with the external
+//!    priority queue, see [`crate::empq::merge`] — writing the output
+//!    through a block-sized buffer.
 
 use crate::config::{IoStyle, SimConfig};
 use crate::disk::DiskSet;
+use crate::empq::merge::{MultiwayMerge, RunCursor};
 use crate::error::Result;
 use crate::io::{aio::AsyncIo, unix::UnixIo, IoDriver};
 use crate::metrics::{CostModel, IoClass, Metrics, MetricsSnapshot};
@@ -104,31 +107,22 @@ pub fn run_stxxl_sort(cfg: &SimConfig, n: u64, verify: bool) -> Result<StxxlSort
         disks.flush()?;
     }
 
-    // ---- Pass 2: multiway merge ----
+    // ---- Pass 2: multiway merge (shared tournament-tree machinery) ----
     {
         let r = runs.len().max(1);
         let per_run = ((mem_budget_bytes / 2) as usize / (r * 4)).max(1024);
-        let mut cursors: Vec<RunCursor> = runs
+        let cursors: Vec<RunCursor<u32>> = runs
             .iter()
-            .map(|&(off, len)| RunCursor::new(off, len, per_run))
+            .map(|&(off, len)| {
+                RunCursor::new(in_base + off * 4, len, per_run, IoClass::Swap)
+            })
             .collect();
-        use std::cmp::Reverse;
-        use std::collections::BinaryHeap;
-        let mut heap: BinaryHeap<Reverse<(u32, usize)>> = BinaryHeap::new();
-        for (i, c) in cursors.iter_mut().enumerate() {
-            if let Some(x) = c.peek(&disks)? {
-                heap.push(Reverse((x, i)));
-            }
-        }
+        let mut merge = MultiwayMerge::new(cursors, &disks)?;
         let out_cap = ((mem_budget_bytes / 2) as usize / 4).max(1024);
         let mut out_buf: Vec<u32> = Vec::with_capacity(out_cap);
         let mut out_at = 0u64;
-        while let Some(Reverse((x, i))) = heap.pop() {
+        while let Some(x) = merge.next(&disks)? {
             out_buf.push(x);
-            cursors[i].advance();
-            if let Some(nx) = cursors[i].peek(&disks)? {
-                heap.push(Reverse((nx, i)));
-            }
             if out_buf.len() == out_cap {
                 disks.write(
                     IoClass::Swap,
@@ -187,44 +181,6 @@ pub fn run_stxxl_sort(cfg: &SimConfig, n: u64, verify: bool) -> Result<StxxlSort
         verified,
         n,
     })
-}
-
-/// Buffered cursor over one sorted run on disk.
-struct RunCursor {
-    base: u64,
-    len: u64,
-    at: u64,
-    buf: Vec<u32>,
-    buf_at: usize,
-    buf_cap: usize,
-}
-
-impl RunCursor {
-    fn new(base: u64, len: u64, buf_cap: usize) -> RunCursor {
-        RunCursor { base, len, at: 0, buf: Vec::new(), buf_at: 0, buf_cap }
-    }
-
-    fn peek(&mut self, disks: &DiskSet) -> Result<Option<u32>> {
-        if self.buf_at >= self.buf.len() {
-            if self.at >= self.len {
-                return Ok(None);
-            }
-            let take = self.buf_cap.min((self.len - self.at) as usize);
-            self.buf.resize(take, 0);
-            disks.read(
-                IoClass::Swap,
-                (self.base + self.at) * 4,
-                crate::util::bytes::as_bytes_mut(&mut self.buf),
-            )?;
-            self.at += take as u64;
-            self.buf_at = 0;
-        }
-        Ok(Some(self.buf[self.buf_at]))
-    }
-
-    fn advance(&mut self) {
-        self.buf_at += 1;
-    }
 }
 
 /// Memory needed by the config for a given n (informational).

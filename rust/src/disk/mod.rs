@@ -41,7 +41,6 @@ pub struct DiskSet {
     blocks_per_disk: u64,
     frag: FileAlloc,
     dir: PathBuf,
-    owns_dir: bool,
 }
 
 struct DiskState {
@@ -71,16 +70,13 @@ impl DiskSet {
         driver: Arc<dyn IoDriver>,
         metrics: Arc<Metrics>,
     ) -> Result<DiskSet> {
-        let (dir, owns_dir) = match &cfg.disk_dir {
-            Some(d) => (d.join(format!("node{node}")), false),
-            None => (
-                std::env::temp_dir().join(format!(
-                    "pems2-{}-{}-node{node}",
-                    std::process::id(),
-                    unique_serial()
-                )),
-                true,
-            ),
+        let dir = match &cfg.disk_dir {
+            Some(d) => d.join(format!("node{node}")),
+            None => std::env::temp_dir().join(format!(
+                "pems2-{}-{}-node{node}",
+                std::process::id(),
+                unique_serial()
+            )),
         };
         std::fs::create_dir_all(&dir)?;
         let total = cfg.disk_space_per_node();
@@ -114,7 +110,6 @@ impl DiskSet {
             blocks_per_disk,
             frag: cfg.file_alloc,
             dir,
-            owns_dir,
         })
     }
 
@@ -286,11 +281,13 @@ impl DiskSet {
 
 impl Drop for DiskSet {
     fn drop(&mut self) {
-        // Best-effort cleanup of backing files.
+        // Best-effort cleanup: wait out deferred writes, then remove the
+        // backing files.  They are scratch state with no meaning across
+        // runs, so the per-node directory is always ours to delete — for
+        // a user-provided `disk_dir` that is the `node{N}` subdirectory
+        // we created (the parent itself is preserved).
         let _ = self.driver.flush_all();
-        if self.owns_dir {
-            let _ = std::fs::remove_dir_all(&self.dir);
-        }
+        let _ = std::fs::remove_dir_all(&self.dir);
     }
 }
 
@@ -452,5 +449,35 @@ mod tests {
             assert!(dir.exists());
         }
         assert!(!dir.exists());
+    }
+
+    #[test]
+    fn cleanup_removes_node_dir_under_user_disk_dir() {
+        // Regression: backing files must not survive drop even when the
+        // user names the parent directory (only node subdirs are ours).
+        let parent = std::env::temp_dir()
+            .join(format!("pems2-userdir-{}-{}", std::process::id(), unique_serial()));
+        std::fs::create_dir_all(&parent).unwrap();
+        let cfg = SimConfig::builder()
+            .v(4)
+            .mu(1 << 16)
+            .d(2)
+            .block(4096)
+            .disk_dir(parent.clone())
+            .build()
+            .unwrap();
+        let node_dir;
+        {
+            let ds =
+                DiskSet::create(&cfg, 0, Arc::new(UnixIo::new()), Arc::new(Metrics::new()))
+                    .unwrap();
+            node_dir = ds.dir().to_path_buf();
+            ds.write(IoClass::Swap, 0, &[1u8; 4096]).unwrap();
+            assert!(node_dir.exists());
+            assert!(node_dir.join("disk0.dat").exists());
+        }
+        assert!(!node_dir.exists(), "node dir must be removed on drop");
+        assert!(parent.exists(), "user-provided parent must be preserved");
+        std::fs::remove_dir_all(&parent).ok();
     }
 }

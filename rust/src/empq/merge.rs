@@ -1,0 +1,434 @@
+//! Shared external-memory multiway-merge machinery.
+//!
+//! Extracted from `baseline/stxxl_sort.rs` (where it was private and
+//! binary-heap based) so the bulk-parallel priority queue
+//! ([`crate::empq::EmPq`]) and the sort baseline share one implementation:
+//!
+//! * [`RunCursor`] — a block-buffered read cursor over one sorted run
+//!   stored in a [`DiskSet`]; refills charge the configured [`IoClass`] so
+//!   merge I/O shows up in the run accounting.
+//! * [`TournamentTree`] — a loser tree over `R` leaves: `O(log R)`
+//!   comparisons per extracted element, independent of how skewed the run
+//!   lengths are (the STXXL merger design, Bingmann et al. §4).
+//! * [`MultiwayMerge`] — cursors + tree + the head-key cache, supporting
+//!   mid-stream run insertion (needed by the priority queue, where spills
+//!   create new external arrays between extractions).
+
+use crate::disk::DiskSet;
+use crate::error::Result;
+use crate::metrics::IoClass;
+use crate::util::bytes::{as_bytes_mut, Pod};
+
+/// Block-buffered read cursor over one sorted run stored in a [`DiskSet`].
+///
+/// `base` is a *byte* offset into the disk set's logical space; `len` is in
+/// elements.  Refills read `buf_cap` elements at a time.
+pub struct RunCursor<T: Pod> {
+    base: u64,
+    len: u64,
+    /// Elements already fetched from disk into `buf`.
+    fetched: u64,
+    buf: Vec<T>,
+    buf_at: usize,
+    buf_cap: usize,
+    class: IoClass,
+}
+
+impl<T: Pod + Ord> RunCursor<T> {
+    /// Cursor over `len` elements starting at byte offset `base`.
+    pub fn new(base: u64, len: u64, buf_cap: usize, class: IoClass) -> RunCursor<T> {
+        RunCursor {
+            base,
+            len,
+            fetched: 0,
+            buf: Vec::new(),
+            buf_at: 0,
+            buf_cap: buf_cap.max(1),
+            class,
+        }
+    }
+
+    /// Cursor whose first buffer is already resident (the run was just
+    /// written from RAM, so its head block need not be read back — the
+    /// priority queue keeps every external array's head resident, as in
+    /// the bulk-parallel PQ design).
+    pub fn with_resident_head(
+        base: u64,
+        len: u64,
+        buf_cap: usize,
+        class: IoClass,
+        head: Vec<T>,
+    ) -> RunCursor<T> {
+        debug_assert!(head.len() as u64 <= len);
+        RunCursor {
+            base,
+            len,
+            fetched: head.len() as u64,
+            buf: head,
+            buf_at: 0,
+            buf_cap: buf_cap.max(1),
+            class,
+        }
+    }
+
+    /// Elements not yet consumed.
+    pub fn remaining(&self) -> u64 {
+        (self.len - self.fetched) + (self.buf.len() - self.buf_at) as u64
+    }
+
+    /// Next element without consuming it; refills the buffer from disk as
+    /// needed.  `None` once the run is exhausted.
+    pub fn peek(&mut self, disks: &DiskSet) -> Result<Option<T>> {
+        if self.buf_at >= self.buf.len() {
+            if self.fetched >= self.len {
+                return Ok(None);
+            }
+            let take = self.buf_cap.min((self.len - self.fetched) as usize);
+            self.buf.clear();
+            if self.buf.capacity() > self.buf_cap {
+                // The capacity may stem from a larger resident head or an
+                // earlier, larger buf_cap; release it so per-run RAM stays
+                // at buf_cap.
+                self.buf.shrink_to(self.buf_cap);
+            }
+            self.buf.resize(take, T::zeroed());
+            disks.read(
+                self.class,
+                self.base + self.fetched * T::SIZE as u64,
+                as_bytes_mut(&mut self.buf),
+            )?;
+            self.fetched += take as u64;
+            self.buf_at = 0;
+        }
+        Ok(Some(self.buf[self.buf_at]))
+    }
+
+    /// Consume the element last returned by [`RunCursor::peek`].
+    pub fn advance(&mut self) {
+        self.buf_at += 1;
+    }
+
+    /// Change the refill granularity.  Applies to future refills only;
+    /// already-buffered elements drain first.
+    pub fn set_buf_cap(&mut self, cap: usize) {
+        self.buf_cap = cap.max(1);
+    }
+}
+
+/// Tournament (loser) tree over `n` leaves.
+///
+/// Keys live with the caller as a `&[Option<K>]` slice (one slot per
+/// leaf); the tree stores only leaf indices.  `None` ranks as +infinity;
+/// ties break toward the lower leaf index, so merges are stable by run
+/// order.  After the winner's key changes, [`TournamentTree::update`]
+/// replays only the root path: `O(log n)` comparisons.
+pub struct TournamentTree {
+    /// Leaf count rounded up to a power of two (>= 1).
+    m: usize,
+    /// Real leaf count.
+    n: usize,
+    /// `losers[1..m]`: each internal node holds the losing leaf of its
+    /// match (index 0 unused).
+    losers: Vec<usize>,
+    /// Current overall winner (leaf index).
+    winner: usize,
+}
+
+impl TournamentTree {
+    /// Build the tree for `keys` (full `O(n)` tournament).
+    pub fn new<K: Ord>(keys: &[Option<K>]) -> TournamentTree {
+        let n = keys.len();
+        let m = n.next_power_of_two().max(1);
+        let mut t = TournamentTree { m, n, losers: vec![usize::MAX; m], winner: 0 };
+        t.rebuild(keys);
+        t
+    }
+
+    /// Leaf `a` beats leaf `b`?  (`None` = +inf; ties to the lower index.
+    /// Padding leaves `>= n` carry no key.)
+    fn less<K: Ord>(keys: &[Option<K>], a: usize, b: usize) -> bool {
+        let ka = keys.get(a).and_then(|k| k.as_ref());
+        let kb = keys.get(b).and_then(|k| k.as_ref());
+        match (ka, kb) {
+            (Some(x), Some(y)) => (x, a) < (y, b),
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => a < b,
+        }
+    }
+
+    /// Recompute the whole tree (used after adding a leaf or bulk key
+    /// changes).
+    pub fn rebuild<K: Ord>(&mut self, keys: &[Option<K>]) {
+        debug_assert_eq!(keys.len(), self.n);
+        if self.m == 1 {
+            self.winner = 0;
+            return;
+        }
+        self.winner = self.play(1, keys);
+    }
+
+    /// Play the subtree rooted at internal node `node`; returns the
+    /// winning leaf and records losers along the way.
+    fn play<K: Ord>(&mut self, node: usize, keys: &[Option<K>]) -> usize {
+        if node >= self.m {
+            return node - self.m; // leaf
+        }
+        let a = self.play(2 * node, keys);
+        let b = self.play(2 * node + 1, keys);
+        if Self::less(keys, a, b) {
+            self.losers[node] = b;
+            a
+        } else {
+            self.losers[node] = a;
+            b
+        }
+    }
+
+    /// Replay the root path after `keys[self.winner()]` changed.
+    pub fn update<K: Ord>(&mut self, keys: &[Option<K>]) {
+        if self.m == 1 {
+            return;
+        }
+        let mut w = self.winner;
+        let mut node = (self.m + w) / 2;
+        while node >= 1 {
+            let l = self.losers[node];
+            if Self::less(keys, l, w) {
+                self.losers[node] = w;
+                w = l;
+            }
+            node /= 2;
+        }
+        self.winner = w;
+    }
+
+    /// Current winning leaf index (its key may be `None` if all leaves are
+    /// exhausted).
+    pub fn winner(&self) -> usize {
+        self.winner
+    }
+
+    /// Number of (real) leaves.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True if the tree has no leaves.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+}
+
+/// A tournament-tree merge over block-buffered run cursors.
+///
+/// The [`DiskSet`] is passed per call (not stored) so the owner can keep
+/// both in one struct without self-references.
+pub struct MultiwayMerge<T: Pod + Ord> {
+    cursors: Vec<RunCursor<T>>,
+    /// Head element of each run (`None` = exhausted).
+    keys: Vec<Option<T>>,
+    tree: TournamentTree,
+}
+
+impl<T: Pod + Ord> MultiwayMerge<T> {
+    /// Build a merge over `cursors`; peeks every run (reading its head
+    /// block unless resident).
+    pub fn new(mut cursors: Vec<RunCursor<T>>, disks: &DiskSet) -> Result<MultiwayMerge<T>> {
+        let mut keys = Vec::with_capacity(cursors.len());
+        for c in cursors.iter_mut() {
+            keys.push(c.peek(disks)?);
+        }
+        let tree = TournamentTree::new(&keys);
+        Ok(MultiwayMerge { cursors, keys, tree })
+    }
+
+    /// Smallest element not yet extracted, if any (no I/O).
+    pub fn peek(&self) -> Option<T> {
+        self.keys.get(self.tree.winner()).copied().flatten()
+    }
+
+    /// Extract the smallest element.
+    pub fn next(&mut self, disks: &DiskSet) -> Result<Option<T>> {
+        let w = self.tree.winner();
+        let Some(val) = self.keys.get(w).copied().flatten() else {
+            return Ok(None);
+        };
+        self.cursors[w].advance();
+        self.keys[w] = self.cursors[w].peek(disks)?;
+        self.tree.update(&self.keys);
+        Ok(Some(val))
+    }
+
+    /// Add a new run mid-stream (rebuilds the tree: `O(R)`).
+    pub fn add_run(&mut self, mut cursor: RunCursor<T>, disks: &DiskSet) -> Result<()> {
+        self.keys.push(cursor.peek(disks)?);
+        self.cursors.push(cursor);
+        self.tree = TournamentTree::new(&self.keys);
+        Ok(())
+    }
+
+    /// Set every cursor's refill-buffer capacity (future refills only) —
+    /// lets an owner keep `runs × buffer` within a fixed RAM budget as
+    /// runs accumulate.
+    pub fn set_buf_caps(&mut self, cap: usize) {
+        for c in &mut self.cursors {
+            c.set_buf_cap(cap);
+        }
+    }
+
+    /// Total elements remaining across all runs.
+    pub fn remaining(&self) -> u64 {
+        self.cursors.iter().map(RunCursor::remaining).sum()
+    }
+
+    /// Number of runs (including exhausted ones).
+    pub fn num_runs(&self) -> usize {
+        self.cursors.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FileAlloc, Layout, SimConfig};
+    use crate::io::unix::UnixIo;
+    use crate::metrics::Metrics;
+    use crate::util::bytes::as_bytes;
+    use crate::util::XorShift64;
+    use std::sync::Arc;
+
+    fn mk_disks(space: u64) -> DiskSet {
+        let cfg = SimConfig::builder()
+            .v(1)
+            .mu(space)
+            .d(2)
+            .layout(Layout::Striped)
+            .file_alloc(FileAlloc::Contiguous)
+            .block(4096)
+            .build()
+            .unwrap();
+        DiskSet::create(&cfg, 0, Arc::new(UnixIo::new()), Arc::new(Metrics::new())).unwrap()
+    }
+
+    #[test]
+    fn tournament_tree_tracks_minimum() {
+        let mut keys: Vec<Option<u32>> = vec![Some(5), Some(3), Some(8), Some(1), Some(9)];
+        let mut tree = TournamentTree::new(&keys);
+        assert_eq!(tree.winner(), 3);
+        // Consume 1 -> leaf 3 advances to 7.
+        keys[3] = Some(7);
+        tree.update(&keys);
+        assert_eq!(tree.winner(), 1);
+        // Exhaust leaf 1.
+        keys[1] = None;
+        tree.update(&keys);
+        assert_eq!(tree.winner(), 0);
+    }
+
+    #[test]
+    fn tournament_tree_ties_break_by_leaf_index() {
+        let keys: Vec<Option<u32>> = vec![Some(4), Some(4), Some(4)];
+        let tree = TournamentTree::new(&keys);
+        assert_eq!(tree.winner(), 0);
+    }
+
+    #[test]
+    fn tournament_tree_handles_empty_and_single() {
+        let keys: Vec<Option<u32>> = Vec::new();
+        let tree = TournamentTree::new(&keys);
+        assert!(keys.get(tree.winner()).is_none());
+        let keys = vec![Some(42u32)];
+        let tree = TournamentTree::new(&keys);
+        assert_eq!(tree.winner(), 0);
+    }
+
+    #[test]
+    fn tournament_drain_yields_sorted_order() {
+        // Pure-RAM drain via the tree over many leaves with random keys.
+        let mut rng = XorShift64::new(77);
+        let mut remaining: Vec<Vec<u32>> = (0..13)
+            .map(|_| {
+                let mut v: Vec<u32> =
+                    (0..rng.range(0, 50)).map(|_| rng.next_u32() % 1000).collect();
+                v.sort_unstable();
+                v.reverse(); // pop from the back
+                v
+            })
+            .collect();
+        let mut keys: Vec<Option<u32>> =
+            remaining.iter().map(|r| r.last().copied()).collect();
+        let mut tree = TournamentTree::new(&keys);
+        let mut out = Vec::new();
+        while let Some(k) = keys.get(tree.winner()).copied().flatten() {
+            let w = tree.winner();
+            out.push(k);
+            remaining[w].pop();
+            keys[w] = remaining[w].last().copied();
+            tree.update(&keys);
+        }
+        let mut expect = out.clone();
+        expect.sort_unstable();
+        assert_eq!(out, expect);
+        assert!(remaining.iter().all(Vec::is_empty));
+    }
+
+    #[test]
+    fn multiway_merge_over_disk_runs() {
+        let disks = mk_disks(1 << 20);
+        let mut rng = XorShift64::new(3);
+        let mut all: Vec<u32> = Vec::new();
+        let mut cursors = Vec::new();
+        let mut at = 0u64;
+        for _ in 0..5 {
+            let mut run: Vec<u32> = (0..rng.range(1, 5000)).map(|_| rng.next_u32()).collect();
+            run.sort_unstable();
+            disks.write(IoClass::Swap, at, as_bytes(&run)).unwrap();
+            cursors.push(RunCursor::<u32>::new(at, run.len() as u64, 128, IoClass::Swap));
+            at += (run.len() * 4) as u64;
+            all.extend_from_slice(&run);
+        }
+        let mut merge = MultiwayMerge::new(cursors, &disks).unwrap();
+        assert_eq!(merge.remaining(), all.len() as u64);
+        let mut out = Vec::new();
+        while let Some(x) = merge.next(&disks).unwrap() {
+            out.push(x);
+        }
+        all.sort_unstable();
+        assert_eq!(out, all);
+        assert_eq!(merge.remaining(), 0);
+    }
+
+    #[test]
+    fn add_run_mid_stream() {
+        let disks = mk_disks(1 << 20);
+        let a: Vec<u32> = vec![1, 4, 9];
+        let b: Vec<u32> = vec![0, 2, 3];
+        disks.write(IoClass::Swap, 0, as_bytes(&a)).unwrap();
+        disks.write(IoClass::Swap, 64, as_bytes(&b)).unwrap();
+        let mut merge = MultiwayMerge::new(
+            vec![RunCursor::<u32>::new(0, 3, 8, IoClass::Swap)],
+            &disks,
+        )
+        .unwrap();
+        assert_eq!(merge.next(&disks).unwrap(), Some(1));
+        merge.add_run(RunCursor::new(64, 3, 8, IoClass::Swap), &disks).unwrap();
+        let mut rest = Vec::new();
+        while let Some(x) = merge.next(&disks).unwrap() {
+            rest.push(x);
+        }
+        assert_eq!(rest, vec![0, 2, 3, 4, 9]);
+    }
+
+    #[test]
+    fn resident_head_needs_no_read() {
+        let disks = mk_disks(1 << 20);
+        let run: Vec<u32> = vec![10, 20, 30];
+        disks.write(IoClass::Swap, 0, as_bytes(&run)).unwrap();
+        let mut c = RunCursor::with_resident_head(0, 3, 8, IoClass::Swap, run.clone());
+        assert_eq!(c.peek(&disks).unwrap(), Some(10));
+        c.advance();
+        assert_eq!(c.peek(&disks).unwrap(), Some(20));
+        assert_eq!(c.remaining(), 2);
+    }
+}

@@ -1,0 +1,609 @@
+//! Bulk-parallel external-memory priority queue (`empq`).
+//!
+//! After Bingmann, Keh & Sanders, *A Bulk-Parallel Priority Queue in
+//! External Memory with STXXL* (see PAPERS.md): the queue trades the
+//! strict heap discipline of a RAM PQ for *bulk* operation against
+//! external memory:
+//!
+//! * `k` **insertion heaps** (one per simulated core, `k = cfg.k`) absorb
+//!   pushes in RAM with no I/O;
+//! * when the in-RAM budget (half of `k·µ`) is exceeded, every heap is
+//!   drained, the union is sorted (one computation superstep) and written
+//!   as a sorted **external array** through the existing
+//!   [`DiskSet`]/[`crate::io::IoDriver`] layers — with write-behind when
+//!   `cfg.io` selects the [`crate::io::aio::AsyncIo`] driver;
+//! * a batch at least as large as the RAM budget bypasses the heaps and
+//!   becomes an external array directly (the bulk fast path);
+//! * `extract_min*` merges the external arrays with the shared
+//!   tournament-tree machinery ([`merge`]) and compares against the heap
+//!   minima, so extraction never forces a spill.
+//!
+//! Every byte of spill/refill traffic flows through [`Metrics`] (class
+//! [`IoClass::Swap`]) and is priced by the [`CostModel`], so an `empq`
+//! workload reports measured counters and model-charged seconds exactly
+//! like an engine [`crate::engine::RunReport`].
+
+pub mod merge;
+
+pub use merge::{MultiwayMerge, RunCursor, TournamentTree};
+
+use crate::config::{DeliveryMode, IoStyle, SimConfig};
+use crate::disk::DiskSet;
+use crate::error::{Error, Result};
+use crate::io::{aio::AsyncIo, unix::UnixIo, IoDriver};
+use crate::metrics::{CostModel, IoClass, Metrics, MetricsSnapshot};
+use crate::util::bytes::{as_bytes, Pod};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+/// A priority-queue element: ordered by `key` (then `val`), carrying a
+/// 64-bit payload.  16 bytes on disk, no padding.
+#[repr(C)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Entry {
+    /// Priority (smaller extracts first).
+    pub key: u64,
+    /// Payload.
+    pub val: u64,
+}
+
+impl Entry {
+    /// Construct an entry.
+    pub fn new(key: u64, val: u64) -> Entry {
+        Entry { key, val }
+    }
+}
+
+// SAFETY: `repr(C)` pair of u64 — no padding, any bit pattern valid.
+unsafe impl Pod for Entry {
+    const SIZE: usize = 16;
+}
+
+/// Accounting summary of a queue's lifetime I/O (RunReport-style).
+#[derive(Debug, Clone, Copy)]
+pub struct EmPqReport {
+    /// Measured counters (spills, refills, seeks).
+    pub metrics: MetricsSnapshot,
+    /// Model-charged seconds for those counters.
+    pub charged: f64,
+    /// External arrays created over the lifetime.
+    pub runs_created: u64,
+    /// High-water mark of live elements.
+    pub max_len: u64,
+}
+
+/// Bulk-parallel external-memory priority queue over [`Entry`] elements.
+///
+/// `new` sizes the spill arena for `capacity` *lifetime* pushes (elements
+/// are written to disk at most once, so the arena never needs more than
+/// `capacity * 16` bytes even though extraction interleaves with
+/// insertion).
+pub struct EmPq {
+    disks: DiskSet,
+    metrics: Arc<Metrics>,
+    cost: CostModel,
+    /// Per-core insertion heaps (min-heaps via `Reverse`).
+    heaps: Vec<BinaryHeap<Reverse<Entry>>>,
+    /// Elements currently across all insertion heaps.
+    ram_len: usize,
+    /// Heap elements tolerated before a spill.
+    ram_cap: usize,
+    /// Merge state over the external arrays.
+    ext: MultiwayMerge<Entry>,
+    /// Next free byte in the spill arena.
+    arena_at: u64,
+    /// Spill arena capacity (bytes).
+    arena_cap: u64,
+    /// Round-robin target for single-element pushes.
+    next_heap: usize,
+    /// Ceiling on a run's refill buffer (elements) — one disk block.
+    run_buf_cap: usize,
+    /// Total bytes budgeted for merge buffers (half the RAM budget);
+    /// per-run buffers shrink as runs accumulate so `runs × buffer`
+    /// never exceeds this (the stxxl per-run sizing).
+    merge_budget: usize,
+    len: u64,
+    max_len: u64,
+    runs_created: u64,
+}
+
+impl EmPq {
+    /// Create a queue: RAM budget `cfg.k * cfg.mu` (half for insertion
+    /// heaps, half for merge buffers), disks/layout/driver per `cfg`,
+    /// spill arena sized for `capacity` lifetime pushes.
+    pub fn new(cfg: &SimConfig, capacity: u64) -> Result<EmPq> {
+        let metrics = Arc::new(Metrics::new());
+        let driver: Arc<dyn IoDriver> = match cfg.io {
+            IoStyle::Async => Arc::new(AsyncIo::new(cfg.d.max(2))),
+            _ => Arc::new(UnixIo::new()),
+        };
+        let arena_cap = capacity.max(1) * Entry::SIZE as u64;
+        // Scratch single-VP config whose "context space" is the arena
+        // (same trick as the stxxl_sort baseline).
+        let mut scratch = cfg.clone();
+        scratch.delivery = DeliveryMode::Pems2Direct;
+        scratch.mu = crate::util::align::align_up(arena_cap, cfg.block());
+        scratch.v = 1;
+        scratch.p = 1;
+        scratch.k = 1;
+        let disks = DiskSet::create(&scratch, 0, driver, metrics.clone())?;
+
+        let mem_budget = (cfg.k as u64 * cfg.mu).max(cfg.block() * 4);
+        let ram_cap = ((mem_budget / 2) as usize / Entry::SIZE).max(64);
+        let run_buf_cap = (cfg.block() as usize / Entry::SIZE).max(64);
+        let merge_budget = (mem_budget / 2) as usize;
+        let ext = MultiwayMerge::new(Vec::new(), &disks)?;
+        Ok(EmPq {
+            disks,
+            metrics,
+            cost: CostModel::new(cfg.cost, cfg.d),
+            heaps: (0..cfg.k.max(1)).map(|_| BinaryHeap::new()).collect(),
+            ram_len: 0,
+            ram_cap,
+            ext,
+            arena_at: 0,
+            arena_cap,
+            next_heap: 0,
+            run_buf_cap,
+            merge_budget,
+            len: 0,
+            max_len: 0,
+            runs_created: 0,
+        })
+    }
+
+    // ------------------------------------------------------------ queries
+
+    /// Live elements.
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    /// True if no live elements.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Elements currently resident in the insertion heaps.
+    pub fn ram_resident(&self) -> usize {
+        self.ram_len
+    }
+
+    /// External arrays created so far (including exhausted ones).
+    pub fn external_runs(&self) -> usize {
+        self.ext.num_runs()
+    }
+
+    /// Insertion-heap capacity before a spill (elements).
+    pub fn ram_capacity(&self) -> usize {
+        self.ram_cap
+    }
+
+    /// Measured I/O counters so far.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// RunReport-style accounting summary.
+    pub fn report(&self) -> EmPqReport {
+        let snap = self.metrics.snapshot();
+        EmPqReport {
+            metrics: snap,
+            charged: self.cost.charge(&snap).total(),
+            runs_created: self.runs_created,
+            max_len: self.max_len,
+        }
+    }
+
+    /// Name of the I/O driver in use.
+    pub fn driver_name(&self) -> &'static str {
+        self.disks.driver_name()
+    }
+
+    /// Directory holding the spill arena's backing files (removed on
+    /// drop when the queue owns a temp dir).
+    pub fn disk_dir(&self) -> &std::path::Path {
+        self.disks.dir()
+    }
+
+    // ------------------------------------------------------------- insert
+
+    /// Insert one element (round-robin over the insertion heaps; spills
+    /// when the RAM budget fills).
+    pub fn push(&mut self, e: Entry) -> Result<()> {
+        let h = self.next_heap;
+        self.next_heap = (self.next_heap + 1) % self.heaps.len();
+        self.heaps[h].push(Reverse(e));
+        self.ram_len += 1;
+        self.bump_len(1);
+        if self.ram_len >= self.ram_cap {
+            self.spill()?;
+        }
+        Ok(())
+    }
+
+    /// Bulk insert.  A batch at least as large as the heap budget is
+    /// sorted and written as an external array directly — no per-element
+    /// heap discipline (the bulk fast path); smaller batches are split
+    /// across the insertion heaps.
+    pub fn push_batch(&mut self, items: &[Entry]) -> Result<()> {
+        if items.is_empty() {
+            return Ok(());
+        }
+        if items.len() >= self.ram_cap {
+            let mut sorted = items.to_vec();
+            sorted.sort_unstable();
+            self.write_run(sorted)?;
+            self.bump_len(items.len() as u64);
+            return Ok(());
+        }
+        let k = self.heaps.len();
+        let per = items.len().div_ceil(k).max(1);
+        for (i, chunk) in items.chunks(per).enumerate() {
+            let heap = &mut self.heaps[i % k];
+            for &e in chunk {
+                heap.push(Reverse(e));
+            }
+        }
+        self.ram_len += items.len();
+        self.bump_len(items.len() as u64);
+        if self.ram_len >= self.ram_cap {
+            self.spill()?;
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ extract
+
+    /// Smallest live element without extracting it (no I/O beyond merge
+    /// head blocks already resident).
+    pub fn peek_min(&self) -> Option<Entry> {
+        let ram = self.ram_min().map(|(_, e)| e);
+        let ext = self.ext.peek();
+        match (ram, ext) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Extract the smallest element.
+    pub fn extract_min(&mut self) -> Result<Option<Entry>> {
+        let ram = self.ram_min();
+        let ext = self.ext.peek();
+        match (ram, ext) {
+            (None, None) => Ok(None),
+            (Some((h, e)), x) if x.map_or(true, |x| e <= x) => {
+                self.heaps[h].pop();
+                self.ram_len -= 1;
+                self.len -= 1;
+                Ok(Some(e))
+            }
+            _ => {
+                let e = self.ext.next(&self.disks)?.expect("external min exists");
+                self.len -= 1;
+                Ok(Some(e))
+            }
+        }
+    }
+
+    /// Extract up to `max_n` smallest elements (fewer if the queue
+    /// drains first).
+    ///
+    /// This is the genuinely bulk path: it decides the current source
+    /// (one insertion heap or the external merge) once, computes the
+    /// bound up to which that source alone holds the global minimum,
+    /// and drains it to the bound — one `O(k)` scan per *segment*
+    /// instead of per element (the amortization the bulk-parallel PQ
+    /// design is about).
+    pub fn extract_min_batch(&mut self, max_n: usize) -> Result<Vec<Entry>> {
+        let mut out = Vec::with_capacity(max_n.min(4096));
+        'segment: while out.len() < max_n {
+            let ram = self.ram_min();
+            let ext = self.ext.peek();
+            match (ram, ext) {
+                (None, None) => break,
+                (Some((h, e)), x) if x.map_or(true, |x| e <= x) => {
+                    // Heap `h` holds the global min.  It stays the source
+                    // until its top exceeds the smallest head elsewhere.
+                    let mut bound: Option<Entry> = x;
+                    for (i, hp) in self.heaps.iter().enumerate() {
+                        if i != h {
+                            if let Some(&Reverse(m)) = hp.peek() {
+                                bound = Some(bound.map_or(m, |b| b.min(m)));
+                            }
+                        }
+                    }
+                    while out.len() < max_n {
+                        match self.heaps[h].peek().copied() {
+                            Some(Reverse(top)) if bound.map_or(true, |b| top <= b) => {
+                                self.heaps[h].pop();
+                                self.ram_len -= 1;
+                                self.len -= 1;
+                                out.push(top);
+                            }
+                            _ => continue 'segment,
+                        }
+                    }
+                }
+                _ => {
+                    // The external merge holds the global min: drain it
+                    // until its head exceeds the RAM minimum — no heap
+                    // rescans per element.
+                    let bound = ram.map(|(_, e)| e);
+                    while out.len() < max_n {
+                        match self.ext.peek() {
+                            Some(head) if bound.map_or(true, |b| head <= b) => {
+                                self.ext.next(&self.disks)?;
+                                self.len -= 1;
+                                out.push(head);
+                            }
+                            _ => continue 'segment,
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Extract every element with `key <= bound` (time-forward processing
+    /// pops exactly the messages addressed to the current node).
+    pub fn extract_while_key_le(&mut self, bound: u64) -> Result<Vec<Entry>> {
+        let mut out = Vec::new();
+        while let Some(e) = self.peek_min() {
+            if e.key > bound {
+                break;
+            }
+            out.push(self.extract_min()?.expect("peeked element exists"));
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------ spill control
+
+    /// Force the insertion heaps to disk and wait for deferred writes
+    /// (useful before measuring a pure-extraction phase).
+    pub fn flush(&mut self) -> Result<()> {
+        self.spill()?;
+        self.disks.flush()
+    }
+
+    fn ram_min(&self) -> Option<(usize, Entry)> {
+        let mut best: Option<(usize, Entry)> = None;
+        for (i, h) in self.heaps.iter().enumerate() {
+            if let Some(&Reverse(e)) = h.peek() {
+                if best.map_or(true, |(_, b)| e < b) {
+                    best = Some((i, e));
+                }
+            }
+        }
+        best
+    }
+
+    fn bump_len(&mut self, n: u64) {
+        self.len += n;
+        self.max_len = self.max_len.max(self.len);
+    }
+
+    /// Drain all insertion heaps into one sorted external array.
+    fn spill(&mut self) -> Result<()> {
+        if self.ram_len == 0 {
+            return Ok(());
+        }
+        // Fail *before* draining the heaps: an arena-exhaustion error must
+        // leave the queue consistent — every element stays extractable
+        // from RAM and `len()` stays truthful.
+        self.arena_check((self.ram_len * Entry::SIZE) as u64)?;
+        let mut all = Vec::with_capacity(self.ram_len);
+        for h in self.heaps.iter_mut() {
+            all.extend(h.drain().map(|Reverse(e)| e));
+        }
+        all.sort_unstable();
+        self.ram_len = 0;
+        self.write_run(all)
+    }
+
+    /// Per-run refill-buffer capacity (elements) for the current run
+    /// count: the merge budget divided over `runs + 1`, clamped to
+    /// [16, one block].  Shrinking per-run buffers as runs accumulate
+    /// keeps total merge RAM within the budget (stxxl's per-run sizing).
+    fn next_run_buf_cap(&self) -> usize {
+        let runs = self.ext.num_runs() + 1;
+        (self.merge_budget / runs / Entry::SIZE).clamp(16, self.run_buf_cap)
+    }
+
+    /// Error if the spill arena cannot take `bytes` more.
+    fn arena_check(&self, bytes: u64) -> Result<()> {
+        if self.arena_at + bytes > self.arena_cap {
+            return Err(Error::alloc(format!(
+                "empq spill arena exhausted: need {bytes} B at offset {}, \
+                 capacity {} B (raise the `capacity` passed to EmPq::new)",
+                self.arena_at, self.arena_cap
+            )));
+        }
+        Ok(())
+    }
+
+    /// Write a sorted slice as a new external array; its head block stays
+    /// resident so the merge needs no immediate read-back.
+    fn write_run(&mut self, sorted: Vec<Entry>) -> Result<()> {
+        debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+        let bytes = (sorted.len() * Entry::SIZE) as u64;
+        self.arena_check(bytes)?;
+        let base = self.arena_at;
+        self.disks.write(IoClass::Swap, base, as_bytes(&sorted))?;
+        self.arena_at += bytes;
+        self.runs_created += 1;
+        let cap = self.next_run_buf_cap();
+        // Existing runs refill at the tighter granularity from now on
+        // (already-buffered data drains first — a bounded transient).
+        self.ext.set_buf_caps(cap);
+        let head_len = cap.min(sorted.len());
+        let total = sorted.len() as u64;
+        // A fresh, right-sized Vec: truncating `sorted` would keep the
+        // whole run's allocation alive for the cursor's lifetime.
+        let head = sorted[..head_len].to_vec();
+        let cursor = RunCursor::with_resident_head(base, total, cap, IoClass::Swap, head);
+        self.ext.add_run(cursor, &self.disks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64;
+
+    /// Tiny RAM budget so spills happen early: k=2 cores, µ = 16 KiB
+    /// => heap budget = (2 * 16 KiB / 2) / 16 B = 1024 elements.
+    fn tiny_cfg() -> SimConfig {
+        SimConfig::builder()
+            .v(2)
+            .k(2)
+            .mu(16 << 10)
+            .d(2)
+            .block(4096)
+            .io(IoStyle::Async)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn push_extract_in_ram_only() {
+        let cfg = tiny_cfg();
+        let mut pq = EmPq::new(&cfg, 1 << 16).unwrap();
+        for &k in &[5u64, 1, 9, 3] {
+            pq.push(Entry::new(k, k * 10)).unwrap();
+        }
+        assert_eq!(pq.len(), 4);
+        assert_eq!(pq.external_runs(), 0, "no spill expected under budget");
+        assert_eq!(pq.extract_min().unwrap(), Some(Entry::new(1, 10)));
+        assert_eq!(pq.peek_min(), Some(Entry::new(3, 30)));
+        assert_eq!(pq.extract_min().unwrap(), Some(Entry::new(3, 30)));
+        assert_eq!(pq.extract_min().unwrap(), Some(Entry::new(5, 50)));
+        assert_eq!(pq.extract_min().unwrap(), Some(Entry::new(9, 90)));
+        assert_eq!(pq.extract_min().unwrap(), None);
+        assert!(pq.is_empty());
+    }
+
+    #[test]
+    fn spills_when_ram_budget_exceeded() {
+        let cfg = tiny_cfg();
+        let n = 10_000u64;
+        let mut pq = EmPq::new(&cfg, n * 2).unwrap();
+        let mut rng = XorShift64::new(42);
+        for _ in 0..n {
+            pq.push(Entry::new(rng.next_u64(), 0)).unwrap();
+        }
+        assert!(pq.external_runs() > 0, "must have spilled");
+        assert!(pq.ram_resident() < pq.ram_capacity());
+        let snap = pq.metrics();
+        assert!(snap.swap_write_bytes >= (n - pq.ram_resident() as u64) * 16);
+        // Extraction is globally sorted across heaps + external arrays.
+        let mut prev = 0u64;
+        let mut count = 0u64;
+        while let Some(e) = pq.extract_min().unwrap() {
+            assert!(e.key >= prev, "order violated: {} < {prev}", e.key);
+            prev = e.key;
+            count += 1;
+        }
+        assert_eq!(count, n, "element conservation");
+        let report = pq.report();
+        assert!(report.charged > 0.0);
+        assert!(report.runs_created > 0);
+        assert_eq!(report.max_len, n);
+    }
+
+    #[test]
+    fn bulk_batch_takes_direct_run_path() {
+        let cfg = tiny_cfg();
+        let mut pq = EmPq::new(&cfg, 1 << 16).unwrap();
+        let mut rng = XorShift64::new(7);
+        let big: Vec<Entry> =
+            (0..pq.ram_capacity() * 2).map(|_| Entry::new(rng.next_u64(), 1)).collect();
+        pq.push_batch(&big).unwrap();
+        assert_eq!(pq.external_runs(), 1, "bulk batch becomes one external array");
+        assert_eq!(pq.ram_resident(), 0, "bulk path bypasses the heaps");
+        let small: Vec<Entry> = (0..10).map(|i| Entry::new(i, 2)).collect();
+        pq.push_batch(&small).unwrap();
+        assert_eq!(pq.ram_resident(), 10);
+        let all = pq.extract_min_batch(usize::MAX).unwrap();
+        assert_eq!(all.len(), big.len() + small.len());
+        assert!(all.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn interleaved_matches_reference_heap() {
+        let cfg = tiny_cfg();
+        let mut pq = EmPq::new(&cfg, 1 << 20).unwrap();
+        let mut reference: BinaryHeap<Reverse<Entry>> = BinaryHeap::new();
+        let mut rng = XorShift64::new(99);
+        for round in 0..50 {
+            let burst = rng.range(0, 700);
+            let batch: Vec<Entry> = (0..burst)
+                .map(|_| Entry::new(rng.next_u64() % 10_000, round))
+                .collect();
+            pq.push_batch(&batch).unwrap();
+            for &e in &batch {
+                reference.push(Reverse(e));
+            }
+            let take = rng.range(0, burst + 2);
+            for got in pq.extract_min_batch(take).unwrap() {
+                let Reverse(want) = reference.pop().expect("reference non-empty");
+                assert_eq!(got, want);
+            }
+        }
+        // Drain both.
+        let rest = pq.extract_min_batch(usize::MAX).unwrap();
+        let mut want = Vec::new();
+        while let Some(Reverse(e)) = reference.pop() {
+            want.push(e);
+        }
+        assert_eq!(rest, want);
+    }
+
+    #[test]
+    fn extract_while_key_le_stops_at_bound() {
+        let cfg = tiny_cfg();
+        let mut pq = EmPq::new(&cfg, 1 << 12).unwrap();
+        for k in [1u64, 2, 2, 3, 7, 9] {
+            pq.push(Entry::new(k, 0)).unwrap();
+        }
+        let low = pq.extract_while_key_le(3).unwrap();
+        assert_eq!(low.iter().map(|e| e.key).collect::<Vec<_>>(), vec![1, 2, 2, 3]);
+        assert_eq!(pq.len(), 2);
+        assert_eq!(pq.peek_min().map(|e| e.key), Some(7));
+    }
+
+    #[test]
+    fn arena_exhaustion_is_a_clean_error() {
+        let cfg = tiny_cfg();
+        // Arena for 64 elements only; heap budget is ~1024, so force the
+        // spill explicitly.
+        let mut pq = EmPq::new(&cfg, 64).unwrap();
+        for i in 0..100u64 {
+            pq.push(Entry::new(i, 0)).unwrap();
+        }
+        let err = pq.flush().unwrap_err();
+        assert!(matches!(err, Error::Alloc(_)), "got {err}");
+        // The failed spill must not lose elements: everything is still
+        // accounted for and extractable from RAM.
+        assert_eq!(pq.len(), 100);
+        let out = pq.extract_min_batch(usize::MAX).unwrap();
+        assert_eq!(out.len(), 100);
+        assert!(out.windows(2).all(|w| w[0] <= w[1]));
+        assert!(pq.is_empty());
+    }
+
+    #[test]
+    fn duplicate_keys_conserved() {
+        let cfg = tiny_cfg();
+        let mut pq = EmPq::new(&cfg, 1 << 14).unwrap();
+        for _ in 0..3000 {
+            pq.push(Entry::new(5, 1)).unwrap();
+        }
+        let out = pq.extract_min_batch(usize::MAX).unwrap();
+        assert_eq!(out.len(), 3000);
+        assert!(out.iter().all(|e| e.key == 5 && e.val == 1));
+    }
+}

@@ -193,6 +193,6 @@ mod tests {
         let mut buf = [0u8; 64];
         d.read_at(&disk, 0, &mut buf).unwrap();
         assert_eq!(buf, [99u8; 64]);
-        std::fs::remove_file(&path).ok();
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
     }
 }

@@ -91,7 +91,7 @@ mod tests {
         let mut all = Vec::new();
         f.read_to_end(&mut all).unwrap();
         assert_eq!(&all[8192..8192 + 4096], &data[..]);
-        std::fs::remove_file(&path).ok();
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
     }
 
     #[test]
@@ -107,7 +107,7 @@ mod tests {
     #[test]
     fn async_read_sees_pending_writes() {
         let driver = AsyncIo::new(1);
-        let (_path, disk) = tmpfile();
+        let (path, disk) = tmpfile();
         // Many deferred writes, then an immediate read: the driver must
         // flush before reading.
         for i in 0..64u64 {
@@ -117,5 +117,6 @@ mod tests {
         driver.read_at(&disk, 63 * 128, &mut buf).unwrap();
         assert_eq!(buf, [63u8; 128]);
         driver.flush_all().unwrap();
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
     }
 }

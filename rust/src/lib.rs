@@ -40,6 +40,7 @@ pub mod cli;
 pub mod comm;
 pub mod config;
 pub mod disk;
+pub mod empq;
 pub mod engine;
 pub mod error;
 pub mod io;
@@ -57,6 +58,7 @@ pub use error::{Error, Result};
 pub mod prelude {
     pub use crate::api::Comm;
     pub use crate::config::{DeliveryMode, IoStyle, Layout, SimConfig};
+    pub use crate::empq::{EmPq, Entry};
     pub use crate::engine::{run, RunReport};
     pub use crate::error::{Error, Result};
     pub use crate::vp::{Vp, VpMem};

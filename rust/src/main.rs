@@ -9,6 +9,7 @@
 //! pems2 prefix-sum --n 1000000 --v 8 --io mmap --xla
 //! pems2 euler-tour --trees 4 --nodes 64 --v 8
 //! pems2 stxxl-sort --n 4000000 --mu 16m --k 4
+//! pems2 time-forward --n 1000000 --deg 4 --k 4 --mu 1m --io stxxl-file
 //! pems2 alltoallv --elems 65536 --v 8 --k 4 --io unix
 //! ```
 
@@ -35,6 +36,7 @@ fn real_main(args: Vec<String>) -> Result<()> {
         "prefix-sum" => cmd_prefix_sum(&cli),
         "list-ranking" => cmd_list_ranking(&cli),
         "euler-tour" => cmd_euler_tour(&cli),
+        "time-forward" => cmd_time_forward(&cli),
         "stxxl-sort" => cmd_stxxl_sort(&cli),
         "alltoallv" => cmd_alltoallv(&cli),
         "info" => cmd_info(&cli),
@@ -59,6 +61,7 @@ COMMANDS
   prefix-sum    CGM prefix sum (§8.4.2); --xla uses the Pallas scan kernel
   list-ranking  CGM list ranking (pointer jumping)
   euler-tour    Euler tour of a random forest (§8.4.3)
+  time-forward  time-forward DAG processing on the bulk EM priority queue
   stxxl-sort    hand-crafted EM multiway-merge sort baseline
   alltoallv     a single Alltoallv over the whole data set (Fig. 7.2)
   info          print the resolved configuration and disk-space needs
@@ -86,7 +89,10 @@ SIMULATION FLAGS (Appendix B.3)
 
 WORKLOAD FLAGS
   --n N           elements (psrs, cgm-sort, prefix-sum, list-ranking, stxxl-sort)
+                  or DAG nodes (time-forward)
   --trees N --nodes N   forest shape (euler-tour)
+  --deg N         mean out-degree (time-forward)                    [4]
+  --single        element-at-a-time queue ops (time-forward; default bulk)
   --elems N       elements per VP (alltoallv)
   --verify        verify the result (extra supersteps)
   --timeline-out FILE   write the gnuplot timeline here
@@ -182,6 +188,30 @@ fn cmd_euler_tour(cli: &Cli) -> Result<()> {
     println!("app                euler-tour");
     println!("arcs               {}", r.arcs);
     finish(&r.report, cli, r.verified)
+}
+
+fn cmd_time_forward(cli: &Cli) -> Result<()> {
+    let cfg = cli.sim_config()?;
+    let n: u64 = cli.get_or("n", 100_000)?;
+    let deg: u64 = cli.get_or("deg", 4)?;
+    let bulk = !cli.flag("single");
+    let r = pems2::apps::run_time_forward(&cfg, n, deg, bulk, cli.flag("verify"))?;
+    println!("app                time-forward");
+    println!("n                  {}", r.n);
+    println!("edges              {}", r.edges);
+    println!("mode               {}", if r.bulk { "bulk" } else { "single" });
+    println!("wall_seconds       {:.3}", r.wall);
+    println!("charged_seconds    {:.3}", r.pq.charged);
+    println!("io_volume          {}", human_bytes(r.pq.metrics.total_disk_bytes()));
+    println!("seeks              {}", r.pq.metrics.seeks);
+    println!("external_runs      {}", r.pq.runs_created);
+    println!("max_queue_len      {}", r.pq.max_len);
+    println!("checksum           {:#018x}", r.checksum);
+    println!("verified           {}", r.verified);
+    if !r.verified {
+        return Err(pems2::error::Error::comm("verification FAILED"));
+    }
+    Ok(())
 }
 
 fn cmd_stxxl_sort(cli: &Cli) -> Result<()> {

@@ -10,14 +10,22 @@
 //! [`Compute`] exposes the operations with a pure-Rust fallback so the
 //! simulator works without artifacts (`use_xla = false` or artifacts
 //! missing); the E2E examples exercise the XLA path.
+//!
+//! The PJRT dependency itself is gated behind the default-off `xla` cargo
+//! feature (the build environment is offline; see `rust/Cargo.toml`).
+//! Without it, [`Compute::from_artifacts`] fails cleanly and every
+//! operation uses the Rust fallback.
 
 pub mod manifest;
 
 pub use manifest::{Manifest, ManifestEntry};
 
 use crate::error::{Error, Result};
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "xla")]
+use std::path::PathBuf;
 use std::sync::Mutex;
 
 /// Which backend executed an operation (for reporting).
@@ -58,6 +66,7 @@ impl std::fmt::Debug for Compute {
     }
 }
 
+#[cfg(feature = "xla")]
 fn xla_worker(
     dir: PathBuf,
     manifest: Manifest,
@@ -136,6 +145,7 @@ impl Compute {
     }
 
     /// Load the artifact manifest from `dir` and start the PJRT worker.
+    #[cfg(feature = "xla")]
     pub fn from_artifacts(dir: impl AsRef<Path>) -> Result<Compute> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(dir.join("manifest.txt"))?;
@@ -149,6 +159,18 @@ impl Compute {
             .recv()
             .map_err(|_| Error::runtime("xla worker died during startup"))??;
         Ok(Compute { tx: Some(Mutex::new(tx)), enabled: true })
+    }
+
+    /// Built without the `xla` feature: the PJRT runtime is compiled out,
+    /// so artifact loading always fails and callers fall back to the
+    /// pure-Rust compute path.
+    #[cfg(not(feature = "xla"))]
+    pub fn from_artifacts(dir: impl AsRef<Path>) -> Result<Compute> {
+        let _ = dir.as_ref();
+        Err(Error::runtime(
+            "pems2 was built without the `xla` feature; rebuild with \
+             `--features xla` (requires a vendored xla crate)",
+        ))
     }
 
     /// Load artifacts if the directory exists, else return the fallback.

@@ -13,6 +13,16 @@ pub unsafe trait Pod: Copy + Send + Sync + 'static {
     /// Element size in bytes (= `size_of::<Self>()`, kept explicit for use
     /// in const contexts).
     const SIZE: usize;
+
+    /// A zero-initialized value; every bit pattern — including all-zeroes —
+    /// is valid for a `Pod` type, so this is safe by the trait contract.
+    fn zeroed() -> Self
+    where
+        Self: Sized,
+    {
+        // SAFETY: Pod types are valid for any bit pattern.
+        unsafe { std::mem::zeroed() }
+    }
 }
 
 macro_rules! impl_pod {

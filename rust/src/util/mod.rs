@@ -4,6 +4,7 @@
 
 pub mod align;
 pub mod bytes;
+pub mod os;
 pub mod proptest_mini;
 pub mod rng;
 

@@ -1,0 +1,83 @@
+//! Minimal libc FFI for the mmap context store.
+//!
+//! The offline crate set has no `libc`, and `std` exposes no mmap.  These
+//! declarations bind the two calls §5.2 needs directly against the C
+//! library every unix Rust program already links.  Constants are the
+//! common unix values (identical on Linux and macOS for this subset).
+
+#![allow(non_camel_case_types)]
+
+/// C `void` for raw pointers crossing the FFI boundary.
+pub type c_void = std::ffi::c_void;
+
+/// Pages may be read.
+pub const PROT_READ: i32 = 0x1;
+/// Pages may be written.
+pub const PROT_WRITE: i32 = 0x2;
+/// Updates are carried through to the underlying file.
+pub const MAP_SHARED: i32 = 0x01;
+
+extern "C" {
+    /// `man 2 mmap` — `offset` is `off_t` (64-bit on our targets).
+    pub fn mmap(
+        addr: *mut c_void,
+        length: usize,
+        prot: i32,
+        flags: i32,
+        fd: i32,
+        offset: i64,
+    ) -> *mut c_void;
+
+    /// `man 2 munmap`.
+    pub fn munmap(addr: *mut c_void, length: usize) -> i32;
+}
+
+/// `MAP_FAILED` is `(void *)-1`; int-to-pointer casts are awkward in
+/// const items, so expose the check as a function.
+pub fn is_map_failed(p: *mut c_void) -> bool {
+    p as isize == -1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mmap_round_trips_through_a_file() {
+        use std::io::Write;
+        use std::os::unix::io::AsRawFd;
+        let dir = std::env::temp_dir().join(format!(
+            "pems2-os-test-{}-{:p}",
+            std::process::id(),
+            &PROT_READ
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.dat");
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .truncate(true)
+            .open(&path)
+            .unwrap();
+        f.write_all(&[7u8; 4096]).unwrap();
+        f.sync_all().unwrap();
+        unsafe {
+            let p = mmap(
+                std::ptr::null_mut(),
+                4096,
+                PROT_READ | PROT_WRITE,
+                MAP_SHARED,
+                f.as_raw_fd(),
+                0,
+            );
+            assert!(!is_map_failed(p));
+            let b = p as *mut u8;
+            assert_eq!(*b, 7);
+            *b.add(1) = 42;
+            assert_eq!(*b.add(1), 42);
+            assert_eq!(munmap(p, 4096), 0);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

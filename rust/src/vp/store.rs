@@ -17,6 +17,7 @@ use crate::disk::DiskSet;
 use crate::error::{Error, Result};
 use crate::metrics::{IoClass, Metrics};
 use crate::util::align::align_up;
+use crate::util::os;
 use std::cell::UnsafeCell;
 use std::sync::Arc;
 
@@ -44,7 +45,7 @@ impl RawBuf {
 
 /// An active `mmap` region over one disk file (opaque).
 pub struct Mapping {
-    base: *mut libc::c_void,
+    base: *mut os::c_void,
     len: usize,
 }
 
@@ -55,7 +56,7 @@ unsafe impl Sync for Mapping {}
 impl Drop for Mapping {
     fn drop(&mut self) {
         unsafe {
-            libc::munmap(self.base, self.len);
+            os::munmap(self.base, self.len);
         }
     }
 }
@@ -140,16 +141,16 @@ impl Store {
                     let f = &disks.disk_file(i).file;
                     let len = f.metadata()?.len() as usize;
                     let base = unsafe {
-                        libc::mmap(
+                        os::mmap(
                             std::ptr::null_mut(),
                             len.max(1),
-                            libc::PROT_READ | libc::PROT_WRITE,
-                            libc::MAP_SHARED,
+                            os::PROT_READ | os::PROT_WRITE,
+                            os::MAP_SHARED,
                             f.as_raw_fd(),
                             0,
                         )
                     };
-                    if base == libc::MAP_FAILED {
+                    if os::is_map_failed(base) {
                         return Err(Error::Io(std::io::Error::last_os_error()));
                     }
                     maps.push(Mapping { base, len });

@@ -466,6 +466,134 @@ fn coarse_alltoallv_program(vp: &mut Vp) -> pems2::Result<()> {
     Ok(())
 }
 
+// ------------------------------------------------------------ edge cases
+
+#[test]
+fn alltoallv_with_empty_sends() {
+    // Sparse pattern: even ranks send one word to odd ranks only; every
+    // other (sender, receiver) pair exchanges a zero-length message.
+    run(base_cfg(1, 4, 2, IoStyle::Unix), |vp| {
+        let v = vp.nranks();
+        let me = vp.rank();
+        let send = vp.alloc::<u32>(v)?;
+        let recv = vp.alloc::<u32>(v)?;
+        {
+            let s = vp.slice_mut(send)?;
+            s.fill(me as u32 + 100);
+        }
+        {
+            let r = vp.slice_mut(recv)?;
+            r.fill(0xFFFF);
+        }
+        let sends: Vec<(u64, u64)> = (0..v)
+            .map(|j| {
+                if me % 2 == 0 && j % 2 == 1 {
+                    (send.byte_off() + 4 * j as u64, 4)
+                } else {
+                    (0, 0) // empty message
+                }
+            })
+            .collect();
+        let recvs: Vec<(u64, u64)> = (0..v)
+            .map(|i| {
+                if i % 2 == 0 && me % 2 == 1 {
+                    (recv.byte_off() + 4 * i as u64, 4)
+                } else {
+                    (0, 0)
+                }
+            })
+            .collect();
+        vp.alltoallv_regions(&sends, &recvs)?;
+        let r = vp.slice(recv)?;
+        for i in 0..v {
+            if i % 2 == 0 && me % 2 == 1 {
+                assert_eq!(r[i], i as u32 + 100, "vp {me}: bad payload from {i}");
+            } else {
+                assert_eq!(r[i], 0xFFFF, "vp {me}: slot {i} must stay untouched");
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn alltoallv_with_all_sends_empty() {
+    // Degenerate h-relation: every region is (0, 0); must synchronize
+    // and deliver nothing, repeatedly.
+    run(base_cfg(2, 8, 2, IoStyle::Unix), |vp| {
+        let v = vp.nranks();
+        let empty = vec![(0u64, 0u64); v];
+        for _ in 0..3 {
+            vp.alltoallv_regions(&empty, &empty)?;
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn collectives_on_a_single_vp() {
+    // v = 1: every collective degenerates to a local copy but must still
+    // complete its superstep accounting.
+    let report = run(base_cfg(1, 1, 1, IoStyle::Unix), |vp| {
+        assert_eq!(vp.nranks(), 1);
+        let send = vp.alloc::<u32>(4)?;
+        let recv = vp.alloc::<u32>(4)?;
+        vp.slice_mut(send)?.copy_from_slice(&[1, 2, 3, 4]);
+        // Self-alltoallv.
+        vp.alltoallv_regions(&[send.region()], &[recv.region()])?;
+        assert_eq!(vp.slice(recv)?, &[1u32, 2, 3, 4][..]);
+        // Rooted collectives with root == the only rank.
+        pems2::comm::bcast(vp, 0, send.region(), send.region())?;
+        pems2::comm::gather(vp, 0, send.region(), recv.region())?;
+        assert_eq!(vp.slice(recv)?, &[1u32, 2, 3, 4][..]);
+        pems2::comm::scatter(vp, 0, send.region(), recv.region())?;
+        assert_eq!(vp.slice(recv)?, &[1u32, 2, 3, 4][..]);
+        let rsend = vp.alloc::<u64>(2)?;
+        let rrecv = vp.alloc::<u64>(2)?;
+        vp.slice_mut(rsend)?.fill(7);
+        pems2::comm::reduce::<u64>(
+            vp,
+            0,
+            pems2::comm::ReduceOp::Sum,
+            rsend.region(),
+            rrecv.region(),
+        )?;
+        assert_eq!(vp.slice(rrecv)?, &[7u64, 7][..]);
+        vp.barrier_collective()?;
+        Ok(())
+    })
+    .unwrap();
+    assert!(report.metrics.supersteps > 0);
+}
+
+#[test]
+fn zero_length_scatter_gather_bcast() {
+    // ω = 0 payloads are legal no-ops that must still synchronize all
+    // ranks (MPI allows zero counts everywhere).
+    run(base_cfg(1, 4, 2, IoStyle::Unix), |vp| {
+        pems2::comm::gather(vp, 1, (0, 0), (0, 0))?;
+        pems2::comm::scatter(vp, 1, (0, 0), (0, 0))?;
+        pems2::comm::bcast(vp, 1, (0, 0), (0, 0))?;
+        let v = vp.nranks();
+        vp.alltoallv_regions(&vec![(0, 0); v], &vec![(0, 0); v])?;
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[test]
+fn zero_length_payloads_multi_node() {
+    run(base_cfg(2, 8, 2, IoStyle::Unix), |vp| {
+        pems2::comm::gather(vp, 5, (0, 0), (0, 0))?;
+        pems2::comm::scatter(vp, 5, (0, 0), (0, 0))?;
+        pems2::comm::bcast(vp, 5, (0, 0), (0, 0))?;
+        Ok(())
+    })
+    .unwrap();
+}
+
 #[test]
 fn pems2_beats_pems1_on_io_volume() {
     // The headline claim, in the coarse-grained regime: same program,
