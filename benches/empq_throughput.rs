@@ -1,25 +1,35 @@
-//! `empq` throughput: bulk vs element-at-a-time queue operation, and
-//! PQ-based vs sort-based message processing.
+//! `empq` throughput: bulk vs element-at-a-time queue operation, the
+//! worker-pool spill pipeline vs the serial path, and PQ-based vs
+//! sort-based message processing.
 //!
-//! Three comparisons, all against the same RAM budget `k·µ`:
+//! Four comparisons, all against the same RAM budget `k·µ`:
 //!
 //! 1. *Bulk insert/extract* (`push_batch` / `extract_min_batch`) vs
 //!    single-element `push` / `extract_min` over the same random
 //!    workload — the Bingmann et al. motivation: batch operation
 //!    amortizes heap discipline and merge-tree replay.
-//! 2. *Time-forward processing* through the PQ, bulk vs single mode.
-//! 3. The PQ run vs the hand-crafted EM merge sort over the same *byte
+//! 2. *Spill pipeline*: bulk pushes with the `k`-thread worker-pool
+//!    drain+sort vs the single-threaded concatenate+sort path
+//!    (`set_spill_parallel(false)`) — the pool must at least match.
+//! 3. *Time-forward processing* through the PQ (bulk vs single mode) and
+//!    *EM Dijkstra* through `EmPq<SsspRecord>` — the generic record
+//!    layer's two workloads.
+//! 4. The PQ run vs the hand-crafted EM merge sort over the same *byte
 //!    volume* (u32 keys are 4 B vs 16 B entries, so the sort gets 4x the
 //!    keys) — a sort-based processor must sort the full message set at
 //!    least once, so `stxxl-sort` is its I/O floor.
 //!
 //! y-values are Melem/s (wall clock); measured I/O counters are printed
 //! per phase, since on page-cached SSDs charged time is the faithful
-//! signal (see metrics::cost).
+//! signal (see metrics::cost).  A flat summary lands in
+//! `BENCH_empq.json` so successive commits can diff the perf trajectory.
 
+use pems2::apps::sssp::run_sssp_with;
 use pems2::apps::time_forward::run_time_forward;
 use pems2::baseline::run_stxxl_sort;
-use pems2::bench::{full_mode, print_series, results_dir, write_series, Series};
+use pems2::bench::{
+    full_mode, print_series, results_dir, write_json_summary, write_series, Series,
+};
 use pems2::config::{IoStyle, SimConfig};
 use pems2::empq::{EmPq, Entry};
 use pems2::util::bytes::human_bytes;
@@ -38,11 +48,13 @@ fn cfg() -> SimConfig {
 }
 
 /// Push `n` random entries then drain them, in batches of `batch`
-/// (`batch == 1` means the element-at-a-time API).  Returns
+/// (`batch == 1` means the element-at-a-time API), with or without the
+/// worker-pool spill pipeline.  Returns
 /// (push secs, extract secs, swap bytes, seeks).
-fn pq_round_trip(n: u64, batch: usize) -> (f64, f64, u64, u64) {
+fn pq_round_trip(n: u64, batch: usize, parallel_spill: bool) -> (f64, f64, u64, u64) {
     let cfg = cfg();
-    let mut pq = EmPq::new(&cfg, n).unwrap();
+    let mut pq: EmPq = EmPq::new(&cfg, n).unwrap();
+    pq.set_spill_parallel(parallel_spill);
     let mut rng = XorShift64::new(cfg.seed);
 
     let t0 = std::time::Instant::now();
@@ -101,6 +113,7 @@ fn main() {
         vec![1 << 16, 1 << 18]
     };
     let batch = 8192usize;
+    let mut summary: Vec<(String, f64)> = Vec::new();
 
     // ---- 1. raw queue throughput, bulk vs single ----
     let mut push_series = Vec::new();
@@ -110,7 +123,7 @@ fn main() {
         let mut sp = Series::new(format!("push-{label}"));
         let mut se = Series::new(format!("extract-{label}"));
         for &n in &sizes {
-            let (push, extract, io, seeks) = pq_round_trip(n, b);
+            let (push, extract, io, seeks) = pq_round_trip(n, b, true);
             println!(
                 "n={n:>9} {label:<11} push {:>8.2} Melem/s  extract {:>8.2} Melem/s  \
                  io {:>12}  seeks {seeks}",
@@ -126,8 +139,38 @@ fn main() {
     }
     print_series("empq push throughput (Melem/s)", &push_series);
     print_series("empq extract throughput (Melem/s)", &extract_series);
+    if let Some((_, y)) = push_series[1].points.last() {
+        summary.push(("push_bulk_melem_s".to_string(), *y));
+    }
+    if let Some((_, y)) = extract_series[1].points.last() {
+        summary.push(("extract_bulk_melem_s".to_string(), *y));
+    }
 
-    // ---- 2. time-forward processing, bulk vs single ----
+    // ---- 2. spill pipeline: worker pool vs serial ----
+    // Both legs run fresh, back-to-back at the same n, so the persisted
+    // speedup isolates the spill mode from page-cache/allocator warm-up
+    // drift (phase 1's measurements sit after a different run history).
+    let n_spill = *sizes.last().unwrap();
+    let mut spill_series = Series::new("spill-pipeline");
+    let mut rates = [0.0f64; 2];
+    for (i, (label, par)) in [("serial", false), ("pool", true)].into_iter().enumerate() {
+        let (push, _, io, _) = pq_round_trip(n_spill, batch, par);
+        let rate = n_spill as f64 / push.max(1e-9) / 1e6;
+        rates[i] = rate;
+        println!(
+            "spill {label:<7} n={n_spill} bulk-push {rate:>8.2} Melem/s  io {}",
+            human_bytes(io),
+        );
+        spill_series.push(i as f64, rate);
+        summary.push((format!("spill_{label}_push_melem_s"), rate));
+    }
+    println!(
+        "spill pipeline speedup: {:.2}x (pool/serial; >= 1.0 expected with k=2)",
+        rates[1] / rates[0].max(1e-9),
+    );
+    summary.push(("spill_pool_speedup".to_string(), rates[1] / rates[0].max(1e-9)));
+
+    // ---- 3a. time-forward processing, bulk vs single ----
     let nodes: u64 = if full_mode() { 1 << 20 } else { 1 << 15 };
     let deg = 4u64;
     let mut tf_series = Series::new("time-forward");
@@ -149,9 +192,34 @@ fn main() {
             if bulk { 1.0 } else { 0.0 },
             r.edges as f64 / r.wall.max(1e-9) / 1e6,
         );
+        summary.push((
+            format!("time_forward_{label}_medge_s"),
+            r.edges as f64 / r.wall.max(1e-9) / 1e6,
+        ));
     }
 
-    // ---- 3. PQ-based vs sort-based processing floor ----
+    // ---- 3b. EM Dijkstra over the generic record layer ----
+    let sssp_n: u64 = if full_mode() { 1 << 19 } else { 1 << 14 };
+    for (label, par) in [("pool", true), ("serial", false)] {
+        let r = run_sssp_with(&cfg(), sssp_n, deg, 100, 0, true, par).unwrap();
+        assert!(r.verified);
+        let rate = r.relaxed as f64 / r.wall.max(1e-9) / 1e6;
+        println!(
+            "sssp {label:<7} n={} relaxed={} reached={} wall {:.3}s charged {:.3}s \
+             io {} arena-hw {} reused {}",
+            r.n,
+            r.relaxed,
+            r.reached,
+            r.wall,
+            r.pq.charged,
+            human_bytes(r.pq.metrics.total_disk_bytes()),
+            human_bytes(r.pq.arena_high_water),
+            human_bytes(r.pq.arena_reused),
+        );
+        summary.push((format!("sssp_{label}_mrelax_s"), rate));
+    }
+
+    // ---- 4. PQ-based vs sort-based processing floor ----
     let tf = run_time_forward(&cfg(), nodes, deg, true, false).unwrap();
     // The sort baseline moves 4-byte u32 keys while the PQ moves 16-byte
     // entries: sort 4x the keys so both sides move the same byte volume
@@ -171,6 +239,8 @@ fn main() {
         sort.charged,
         human_bytes(sort.metrics.total_disk_bytes()),
     );
+    summary.push(("pq_charged_s".to_string(), tf.pq.charged));
+    summary.push(("sort_floor_charged_s".to_string(), sort.charged));
 
     let dir = results_dir();
     write_series(
@@ -181,9 +251,12 @@ fn main() {
             push_series[1].clone(),
             extract_series[0].clone(),
             extract_series[1].clone(),
+            spill_series,
             tf_series,
         ],
     )
     .unwrap();
     println!("series written to {dir}/empq_throughput.dat");
+    write_json_summary("BENCH_empq.json", "empq_throughput", &summary).unwrap();
+    println!("summary written to BENCH_empq.json");
 }

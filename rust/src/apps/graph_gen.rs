@@ -1,0 +1,71 @@
+//! Shared scaffolding for *implicit* random graphs.
+//!
+//! The EM-PQ workloads ([`crate::apps::time_forward`],
+//! [`crate::apps::sssp`]) never materialize their graphs: each node's
+//! out-edges regenerate from a per-node seeded PRNG.  Both rely on the
+//! same invariant — the node's *degree* is the first draw from its
+//! stream, so a counting pass (`edge_count`, which sizes the queue's
+//! spill arena) can reproduce the degree sequence without generating
+//! targets.  Defining the stream head and the degree formula once keeps
+//! every generator agreeing by construction; the per-workload *shape*
+//! (DAG targets vs. weighted digraph) stays in the workload module.
+
+use crate::util::XorShift64;
+
+/// Node `u`'s PRNG stream: deterministic and stateless across the run.
+/// `salt` distinguishes workloads (and derived streams like per-node
+/// initial values) so different generators never correlate.
+pub fn node_rng(seed: u64, salt: u64, u: u64) -> XorShift64 {
+    XorShift64::new(seed ^ (u + 1).wrapping_mul(salt))
+}
+
+/// The node's out-degree — always the *first* draw from its stream:
+/// uniform in `[0, 2·avg_deg]`, so the mean is `avg_deg`.
+pub fn degree_draw(rng: &mut XorShift64, avg_deg: u64) -> u64 {
+    rng.below(2 * avg_deg + 1)
+}
+
+/// Total edge count: one pass over the degree sequence, no edge storage.
+/// `emits(u)` says whether node `u` generates edges at all (a DAG's last
+/// node has no forward targets and must not draw, or the count diverges
+/// from its generator) — the workload passes the same predicate its
+/// `out_edges` uses.
+pub fn edge_count(
+    seed: u64,
+    salt: u64,
+    n: u64,
+    avg_deg: u64,
+    emits: impl Fn(u64) -> bool,
+) -> u64 {
+    (0..n)
+        .filter(|&u| emits(u))
+        .map(|u| degree_draw(&mut node_rng(seed, salt, u), avg_deg))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_streams_are_deterministic_and_salted() {
+        let mut a = node_rng(7, 0x9E37_79B9_7F4A_7C15, 3);
+        let mut b = node_rng(7, 0x9E37_79B9_7F4A_7C15, 3);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut c = node_rng(7, 0xD1B5_4A32_D192_ED03, 3);
+        assert_ne!(a.next_u64(), c.next_u64(), "salts separate workloads");
+    }
+
+    #[test]
+    fn degree_draw_is_mean_centered_and_bounded() {
+        let mut sum = 0u64;
+        let n = 10_000u64;
+        for u in 0..n {
+            let d = degree_draw(&mut node_rng(42, 0x1234_5678_9ABC_DEF1, u), 4);
+            assert!(d <= 8);
+            sum += d;
+        }
+        let mean = sum as f64 / n as f64;
+        assert!((mean - 4.0).abs() < 0.2, "mean degree off: {mean}");
+    }
+}

@@ -13,17 +13,21 @@
 //! * [`time_forward`] — time-forward processing over a DAG, the canonical
 //!   workload of the bulk-parallel external-memory priority queue
 //!   ([`crate::empq`]).
+//! * [`sssp`] — semi-external Dijkstra over `EmPq<SsspRecord>`, the
+//!   second in-tree instantiation of the generic record layer.
 //!
 //! Each app is an SPMD function over a [`crate::vp::Vp`] plus a driver
 //! that generates the workload, runs the engine, and verifies the result
-//! (time-forward drives the `empq` subsystem directly instead of the BSP
-//! engine, like the `stxxl_sort` baseline).
+//! (time-forward and sssp drive the `empq` subsystem directly instead of
+//! the BSP engine, like the `stxxl_sort` baseline).
 
 pub mod cgm_sort;
 pub mod euler_tour;
+pub mod graph_gen;
 pub mod list_ranking;
 pub mod prefix_sum;
 pub mod psrs;
+pub mod sssp;
 pub mod time_forward;
 
 pub use cgm_sort::run_cgm_sort;
@@ -31,4 +35,5 @@ pub use euler_tour::run_euler_tour;
 pub use list_ranking::run_list_ranking;
 pub use prefix_sum::run_prefix_sum;
 pub use psrs::run_psrs;
+pub use sssp::{run_sssp, run_sssp_with};
 pub use time_forward::run_time_forward;

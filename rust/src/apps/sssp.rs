@@ -1,0 +1,388 @@
+//! External-memory single-source shortest paths (EM Dijkstra) — the
+//! workload the generic record layer opens up.
+//!
+//! Semi-external Dijkstra over [`EmPq<SsspRecord>`]: the *tentative
+//! frontier* — every relaxation ever produced, which for dense graphs far
+//! exceeds RAM — lives in the external priority queue.  The driver's own
+//! RAM is the settled set (one byte per node as a `Vec<bool>`) plus a
+//! transient `Vec<SsspRecord>` for the current equal-distance frontier
+//! and its outbox — one "BFS level", not the graph.  Records are 24 bytes
+//! (`{dist, node, pred}`), ordered by distance first, so the queue's
+//! key-bounded bulk extraction ([`EmPq::extract_while_key_le`]) pops a
+//! whole equal-distance frontier per round: with integer weights `>= 1`
+//! no relaxation produced by settling distance `d` can re-enter at
+//! distance `d`, which makes the batch safe — the same monotonicity
+//! argument as time-forward processing.
+//!
+//! Stale records (a node relaxed again after settling) are skipped on
+//! extraction — the classic lazy-deletion EM Dijkstra; the arena
+//! free-list reclaims their runs' disk space once consumed.
+//!
+//! The graph is never materialized: out-edges (targets and weights)
+//! regenerate from a per-node seeded PRNG, exactly like
+//! [`crate::apps::time_forward`].  Verification runs an in-RAM Dijkstra
+//! oracle over the same implicit graph and additionally checks that every
+//! reported predecessor is a *valid* shortest-path predecessor.
+
+use crate::apps::graph_gen::{self, degree_draw};
+use crate::config::SimConfig;
+use crate::empq::{EmPq, EmPqReport};
+use crate::error::{Error, Result};
+use crate::util::bytes::Pod;
+use crate::util::record::Record;
+use crate::util::XorShift64;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A shortest-path relaxation: `node` is reachable at distance `dist`
+/// via `pred`.  24 bytes on disk, no padding; ordered by distance first
+/// (then node, then pred) so extraction settles the global frontier in
+/// distance order and ties resolve deterministically.
+#[repr(C)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SsspRecord {
+    /// Tentative distance from the source (the priority).
+    pub dist: u64,
+    /// Target node of the relaxation.
+    pub node: u64,
+    /// The settled node that produced it.
+    pub pred: u64,
+}
+
+impl SsspRecord {
+    /// Construct a relaxation record.
+    pub fn new(dist: u64, node: u64, pred: u64) -> SsspRecord {
+        SsspRecord { dist, node, pred }
+    }
+}
+
+// SAFETY: `repr(C)` triple of u64 — no padding, any bit pattern valid.
+unsafe impl Pod for SsspRecord {
+    const SIZE: usize = 24;
+}
+
+impl Record for SsspRecord {
+    type Key = u64;
+
+    fn key(&self) -> u64 {
+        self.dist
+    }
+}
+
+/// Outcome of an SSSP run.
+#[derive(Debug)]
+pub struct SsspResult {
+    /// Nodes in the graph.
+    pub n: u64,
+    /// Edges in the graph (regenerable, never stored).
+    pub edges: u64,
+    /// Relaxation records routed through the queue.
+    pub relaxed: u64,
+    /// Nodes reachable from the source.
+    pub reached: u64,
+    /// Equal-distance frontier batches processed.
+    pub rounds: u64,
+    /// Wrapping sum of all shortest distances.
+    pub total_dist: u64,
+    /// Wrapping checksum over `(dist, node)` pairs of settled nodes.
+    pub checksum: u64,
+    /// Distances and predecessors matched the in-RAM oracle (always true
+    /// when `verify` is off).
+    pub verified: bool,
+    /// Wall-clock seconds.
+    pub wall: f64,
+    /// Queue accounting (measured I/O counters + model-charged seconds).
+    pub pq: EmPqReport,
+}
+
+/// Workload salt for [`graph_gen::node_rng`]: keeps the SSSP digraph
+/// uncorrelated with the time-forward DAG under one `cfg.seed`.
+const NODE_SALT: u64 = 0xD1B5_4A32_D192_ED03;
+
+/// Node `u`'s PRNG stream (see [`graph_gen`]).
+fn node_rng(seed: u64, u: u64) -> XorShift64 {
+    graph_gen::node_rng(seed, NODE_SALT, u)
+}
+
+/// Out-edges of node `u`: `(target, weight)` pairs, targets uniform over
+/// the other nodes (multi-edges allowed), integer weights in
+/// `[1, wmax.max(1)]`, mean degree `avg_deg`.
+pub fn out_edges(seed: u64, u: u64, n: u64, avg_deg: u64, wmax: u64) -> Vec<(u64, u64)> {
+    if n <= 1 {
+        return Vec::new();
+    }
+    let mut rng = node_rng(seed, u);
+    let d = degree_draw(&mut rng, avg_deg);
+    (0..d)
+        .map(|_| {
+            let mut t = rng.below(n - 1);
+            if t >= u {
+                t += 1;
+            }
+            (t, 1 + rng.below(wmax.max(1)))
+        })
+        .collect()
+}
+
+/// Total edge count for the given shape (one pass over the degree
+/// sequence, no edge storage).  Every node emits when the graph has
+/// anyone to point at — the same condition [`out_edges`] uses.
+pub fn edge_count(seed: u64, n: u64, avg_deg: u64) -> u64 {
+    graph_gen::edge_count(seed, NODE_SALT, n, avg_deg, |_| n > 1)
+}
+
+/// Checksum mix shared by the queue run and the oracle.
+fn mix(dist: u64, node: u64) -> u64 {
+    dist.rotate_left((node % 63) as u32) ^ node.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Run EM Dijkstra from `src` over the implicit random graph with `n`
+/// nodes, mean out-degree `avg_deg` and weights in `[1, wmax]`, with the
+/// parallel spill pipeline in its default state.
+pub fn run_sssp(
+    cfg: &SimConfig,
+    n: u64,
+    avg_deg: u64,
+    wmax: u64,
+    src: u64,
+    verify: bool,
+) -> Result<SsspResult> {
+    run_sssp_with(cfg, n, avg_deg, wmax, src, verify, true)
+}
+
+/// [`run_sssp`] with an explicit spill mode (`parallel_spill = false`
+/// forces the serial drain+sort path, for A/B comparison).
+pub fn run_sssp_with(
+    cfg: &SimConfig,
+    n: u64,
+    avg_deg: u64,
+    wmax: u64,
+    src: u64,
+    verify: bool,
+    parallel_spill: bool,
+) -> Result<SsspResult> {
+    if n == 0 {
+        return Err(Error::config("sssp needs n >= 1"));
+    }
+    if src >= n {
+        return Err(Error::config(format!("sssp source {src} out of range (n = {n})")));
+    }
+    let seed = cfg.seed;
+    let m = edge_count(seed, n, avg_deg);
+    // Lifetime pushes are bounded by m + 1; with run reclamation the live
+    // footprint is far smaller, but the bound is always safe.
+    let mut pq: EmPq<SsspRecord> = EmPq::new(cfg, m + 1)?;
+    if !parallel_spill {
+        pq.set_spill_parallel(false);
+    }
+
+    // The only per-node RAM on the EM path: the settled flag (one byte).
+    let mut settled = vec![false; n as usize];
+    // Oracle-comparison state, allocated only under `verify`.
+    let mut dist_of = if verify { vec![u64::MAX; n as usize] } else { Vec::new() };
+    let mut pred_of = if verify { vec![u64::MAX; n as usize] } else { Vec::new() };
+
+    let start = std::time::Instant::now();
+    pq.push(SsspRecord::new(0, src, src))?;
+    let mut relaxed = 1u64;
+    let mut reached = 0u64;
+    let mut rounds = 0u64;
+    let mut total_dist = 0u64;
+    let mut checksum = 0u64;
+    let mut outbox: Vec<SsspRecord> = Vec::new();
+    while let Some(head) = pq.peek_min() {
+        // One equal-distance frontier per round: every record at the
+        // current minimum distance, across RAM heaps and external arrays.
+        let frontier = pq.extract_while_key_le(head.dist)?;
+        debug_assert!(frontier.iter().all(|r| r.dist == head.dist));
+        rounds += 1;
+        outbox.clear();
+        for r in &frontier {
+            let u = r.node as usize;
+            if settled[u] {
+                continue; // stale lazy-deleted record
+            }
+            settled[u] = true;
+            reached += 1;
+            total_dist = total_dist.wrapping_add(r.dist);
+            checksum = checksum.wrapping_add(mix(r.dist, r.node));
+            if verify {
+                dist_of[u] = r.dist;
+                pred_of[u] = r.pred;
+            }
+            for (v, w) in out_edges(seed, r.node, n, avg_deg, wmax) {
+                if !settled[v as usize] {
+                    outbox.push(SsspRecord::new(r.dist + w, v, r.node));
+                }
+            }
+        }
+        relaxed += outbox.len() as u64;
+        pq.push_batch(&outbox)?;
+    }
+    let wall = start.elapsed().as_secs_f64();
+
+    let verified = if verify {
+        oracle_agrees(seed, n, avg_deg, wmax, src, &dist_of, &pred_of)
+    } else {
+        true
+    };
+
+    Ok(SsspResult {
+        n,
+        edges: m,
+        relaxed,
+        reached,
+        rounds,
+        total_dist,
+        checksum,
+        verified,
+        wall,
+        pq: pq.report(),
+    })
+}
+
+/// In-RAM Dijkstra oracle over the same implicit graph; checks distances
+/// exactly and predecessors structurally (`dist[pred] + w(pred, v) ==
+/// dist[v]` for some regenerated edge `pred -> v`).
+fn oracle_agrees(
+    seed: u64,
+    n: u64,
+    avg_deg: u64,
+    wmax: u64,
+    src: u64,
+    dist_of: &[u64],
+    pred_of: &[u64],
+) -> bool {
+    let mut dist = vec![u64::MAX; n as usize];
+    dist[src as usize] = 0;
+    let mut heap: BinaryHeap<Reverse<(u64, u64)>> = BinaryHeap::new();
+    heap.push(Reverse((0, src)));
+    while let Some(Reverse((d, u))) = heap.pop() {
+        if d > dist[u as usize] {
+            continue;
+        }
+        for (v, w) in out_edges(seed, u, n, avg_deg, wmax) {
+            let nd = d + w;
+            if nd < dist[v as usize] {
+                dist[v as usize] = nd;
+                heap.push(Reverse((nd, v)));
+            }
+        }
+    }
+    if dist != dist_of {
+        return false;
+    }
+    // Predecessor validity: pred settled strictly earlier and connected
+    // by an edge of exactly the right weight.
+    for v in 0..n as usize {
+        if dist[v] == u64::MAX || v as u64 == src {
+            continue;
+        }
+        let p = pred_of[v];
+        if p >= n || dist[p as usize] == u64::MAX {
+            return false;
+        }
+        let ok = out_edges(seed, p, n, avg_deg, wmax)
+            .iter()
+            .any(|&(t, w)| t == v as u64 && dist[p as usize] + w == dist[v]);
+        if !ok {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::IoStyle;
+
+    fn cfg() -> SimConfig {
+        SimConfig::builder()
+            .v(2)
+            .k(2)
+            .mu(16 << 10)
+            .d(2)
+            .block(4096)
+            .io(IoStyle::Async)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn record_layout_and_order() {
+        assert_eq!(SsspRecord::SIZE, 24);
+        assert_eq!(std::mem::size_of::<SsspRecord>(), 24);
+        let a = SsspRecord::new(3, 9, 0);
+        let b = SsspRecord::new(4, 1, 0);
+        assert!(a < b, "distance dominates the order");
+        assert_eq!(a.key(), 3);
+        assert!(SsspRecord::new(4, 1, 2) < SsspRecord::new(4, 1, 3), "pred breaks ties");
+    }
+
+    #[test]
+    fn matches_oracle_with_spilling() {
+        let r = run_sssp(&cfg(), 3_000, 4, 100, 0, true).unwrap();
+        assert!(r.verified, "distances/preds diverged from the oracle");
+        assert!(r.reached > 1, "a deg-4 random digraph reaches many nodes");
+        assert!(
+            r.pq.metrics.swap_bytes() > 0,
+            "workload must route the frontier through disk"
+        );
+        assert_eq!(r.edges, edge_count(cfg().seed, 3_000, 4));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = run_sssp(&cfg(), 1_000, 3, 10, 0, false).unwrap();
+        let b = run_sssp(&cfg(), 1_000, 3, 10, 0, false).unwrap();
+        assert_eq!(a.checksum, b.checksum);
+        assert_eq!(a.total_dist, b.total_dist);
+        assert_eq!(a.reached, b.reached);
+        assert_eq!(a.rounds, b.rounds);
+    }
+
+    #[test]
+    fn unit_weights_and_unreachable_nodes() {
+        // avg_deg 0 => every degree draw is below(1) == 0: only the
+        // source settles.
+        let r = run_sssp(&cfg(), 100, 0, 1, 7, true).unwrap();
+        assert!(r.verified);
+        assert_eq!(r.reached, 1);
+        assert_eq!(r.total_dist, 0);
+        // Unit weights on a real graph: BFS distances.
+        let r = run_sssp(&cfg(), 2_000, 4, 1, 0, true).unwrap();
+        assert!(r.verified);
+    }
+
+    #[test]
+    fn single_node_graph() {
+        let r = run_sssp(&cfg(), 1, 4, 10, 0, true).unwrap();
+        assert!(r.verified);
+        assert_eq!(r.reached, 1);
+        assert_eq!(r.edges, 0);
+        assert_eq!(r.rounds, 1);
+    }
+
+    #[test]
+    fn bad_inputs_error_cleanly() {
+        assert!(run_sssp(&cfg(), 0, 4, 10, 0, false).is_err());
+        assert!(run_sssp(&cfg(), 10, 4, 10, 10, false).is_err());
+    }
+
+    #[test]
+    fn nonzero_source() {
+        let r = run_sssp(&cfg(), 1_500, 3, 20, 42, true).unwrap();
+        assert!(r.verified);
+    }
+
+    #[test]
+    fn serial_spill_mode_agrees() {
+        let a = run_sssp_with(&cfg(), 1_200, 4, 50, 0, true, true).unwrap();
+        let b = run_sssp_with(&cfg(), 1_200, 4, 50, 0, true, false).unwrap();
+        assert!(a.verified && b.verified);
+        assert_eq!(a.checksum, b.checksum);
+        assert_eq!(a.total_dist, b.total_dist);
+        assert_eq!(a.rounds, b.rounds);
+    }
+}

@@ -15,6 +15,7 @@
 //! a per-node seeded PRNG, so the only RAM the driver holds is the
 //! verification oracle (8 bytes/node, only when `verify` is on).
 
+use crate::apps::graph_gen::{self, degree_draw};
 use crate::config::SimConfig;
 use crate::empq::{EmPq, EmPqReport, Entry};
 use crate::error::{Error, Result};
@@ -40,10 +41,13 @@ pub struct TimeForwardResult {
     pub bulk: bool,
 }
 
-/// Per-node PRNG: deterministic, stateless across the run so edges can be
-/// regenerated instead of stored.
+/// Workload salt for [`graph_gen::node_rng`] (see [`graph_gen`] for the
+/// shared degree/stream conventions).
+const NODE_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Node `i`'s PRNG stream.
 fn node_rng(seed: u64, i: u64) -> XorShift64 {
-    XorShift64::new(seed ^ (i + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    graph_gen::node_rng(seed, NODE_SALT, i)
 }
 
 /// A node's initial value.
@@ -59,22 +63,15 @@ fn out_edges(seed: u64, i: u64, n: u64, avg_deg: u64) -> Vec<u64> {
         return Vec::new();
     }
     let mut rng = node_rng(seed, i);
-    let d = rng.below(2 * avg_deg + 1);
+    let d = degree_draw(&mut rng, avg_deg);
     (0..d).map(|_| i + 1 + rng.below(span)).collect()
 }
 
 /// Total edge count for the given shape (one pass over the degree
-/// sequence, no edge storage).
+/// sequence, no edge storage).  A node emits only when forward targets
+/// exist — the same `span > 0` condition [`out_edges`] uses.
 pub fn edge_count(seed: u64, n: u64, avg_deg: u64) -> u64 {
-    (0..n)
-        .map(|i| {
-            if n - i - 1 == 0 {
-                0
-            } else {
-                node_rng(seed, i).below(2 * avg_deg + 1)
-            }
-        })
-        .sum()
+    graph_gen::edge_count(seed, NODE_SALT, n, avg_deg, |i| n - i - 1 > 0)
 }
 
 /// Run time-forward processing over a random DAG with `n` nodes and mean
@@ -92,7 +89,7 @@ pub fn run_time_forward(
     }
     let seed = cfg.seed;
     let m = edge_count(seed, n, avg_deg);
-    let mut pq = EmPq::new(cfg, m.max(1))?;
+    let mut pq: EmPq<Entry> = EmPq::new(cfg, m.max(1))?;
 
     let start = std::time::Instant::now();
     let mut checksum = 0u64;

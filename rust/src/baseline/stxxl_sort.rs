@@ -10,6 +10,10 @@
 //!    tournament (loser) tree — the machinery shared with the external
 //!    priority queue, see [`crate::empq::merge`] — writing the output
 //!    through a block-sized buffer.
+//!
+//! The merge pass runs on the same [`crate::util::Record`] bound as
+//! `EmPq` (a `u32` key is a record over itself), so the baseline and the
+//! queue exercise one implementation rather than two ad-hoc generics.
 
 use crate::config::{IoStyle, SimConfig};
 use crate::disk::DiskSet;

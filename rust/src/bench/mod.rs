@@ -160,6 +160,48 @@ pub fn psrs_config(
     b.build()
 }
 
+/// Write a flat benchmark summary as JSON (offline crate set: no serde —
+/// metric names must be plain ASCII identifiers, values finite).
+///
+/// The fixed shape (`bench`, `full_mode`, `metrics{name: value}`) is what
+/// lets successive runs of the same bench be diffed for a perf
+/// trajectory (e.g. `BENCH_empq.json` at the repo root).
+pub fn write_json_summary(path: &str, bench: &str, entries: &[(String, f64)]) -> Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut f = std::fs::File::create(path)?;
+    // Same identifier-folding as metric keys: nothing enforces the
+    // caller's name contract, and one stray quote would break the file.
+    let bench: String = bench
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == '-' { c } else { '_' })
+        .collect();
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"{bench}\",")?;
+    writeln!(f, "  \"full_mode\": {},", full_mode())?;
+    writeln!(f, "  \"metrics\": {{")?;
+    for (i, (k, v)) in entries.iter().enumerate() {
+        // Unconditional sanitation (bench binaries build without
+        // debug_assertions): a NaN/inf rate becomes JSON null instead of
+        // an unparseable literal, and key characters outside the
+        // identifier set are folded to '_' rather than breaking quoting.
+        let key: String = k
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == '-' { c } else { '_' })
+            .collect();
+        let val =
+            if v.is_finite() { format!("{v}") } else { "null".to_string() };
+        let comma = if i + 1 < entries.len() { "," } else { "" };
+        writeln!(f, "    \"{key}\": {val}{comma}")?;
+    }
+    writeln!(f, "  }}")?;
+    writeln!(f, "}}")?;
+    Ok(())
+}
+
 /// Standard bench output directory.
 pub fn results_dir() -> String {
     std::env::var("PEMS2_RESULTS_DIR").unwrap_or_else(|_| "results".to_string())
@@ -174,6 +216,25 @@ pub fn full_mode() -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_summary_is_well_formed() {
+        let dir = std::env::temp_dir().join(format!("pems2-json-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        write_json_summary(
+            path.to_str().unwrap(),
+            "empq_throughput",
+            &[("push_melem_s".to_string(), 12.5), ("n".to_string(), 65536.0)],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"bench\": \"empq_throughput\""));
+        assert!(text.contains("\"push_melem_s\": 12.5,"));
+        assert!(text.contains("\"n\": 65536"));
+        assert!(!text.contains("65536,"), "last entry has no trailing comma");
+        std::fs::remove_dir_all(&dir).ok();
+    }
 
     #[test]
     fn series_round_trip_to_file() {

@@ -12,18 +12,26 @@
 //!   lengths are (the STXXL merger design, Bingmann et al. §4).
 //! * [`MultiwayMerge`] — cursors + tree + the head-key cache, supporting
 //!   mid-stream run insertion (needed by the priority queue, where spills
-//!   create new external arrays between extractions).
+//!   create new external arrays between extractions) and mid-stream run
+//!   *retirement* ([`MultiwayMerge::retire_exhausted`]), which hands the
+//!   exhausted runs' disk extents back to the owner for reuse.
+//!
+//! Everything here is generic over one bound — the typed record layer
+//! [`Record`] (`Pod + Ord` + key projection) — shared with [`crate::empq`]
+//! and the `baseline/stxxl_sort` merge pass, so a `u32` sort run and a
+//! 24-byte SSSP record queue go through identical machinery.
 
 use crate::disk::DiskSet;
 use crate::error::Result;
 use crate::metrics::IoClass;
-use crate::util::bytes::{as_bytes_mut, Pod};
+use crate::util::bytes::as_bytes_mut;
+use crate::util::record::Record;
 
 /// Block-buffered read cursor over one sorted run stored in a [`DiskSet`].
 ///
 /// `base` is a *byte* offset into the disk set's logical space; `len` is in
 /// elements.  Refills read `buf_cap` elements at a time.
-pub struct RunCursor<T: Pod> {
+pub struct RunCursor<T: Record> {
     base: u64,
     len: u64,
     /// Elements already fetched from disk into `buf`.
@@ -34,7 +42,7 @@ pub struct RunCursor<T: Pod> {
     class: IoClass,
 }
 
-impl<T: Pod + Ord> RunCursor<T> {
+impl<T: Record> RunCursor<T> {
     /// Cursor over `len` elements starting at byte offset `base`.
     pub fn new(base: u64, len: u64, buf_cap: usize, class: IoClass) -> RunCursor<T> {
         RunCursor {
@@ -112,6 +120,38 @@ impl<T: Pod + Ord> RunCursor<T> {
     /// already-buffered elements drain first.
     pub fn set_buf_cap(&mut self, cap: usize) {
         self.buf_cap = cap.max(1);
+    }
+
+    /// Byte offset of the run's first element in the disk set.
+    pub fn base(&self) -> u64 {
+        self.base
+    }
+
+    /// Total run length in elements (consumed or not).
+    pub fn total_len(&self) -> u64 {
+        self.len
+    }
+
+    /// Total run length in bytes — the disk extent `[base, base+byte_len)`
+    /// this cursor owns, reusable once the cursor is exhausted.
+    pub fn byte_len(&self) -> u64 {
+        self.len * T::SIZE as u64
+    }
+
+    /// Current refill granularity (elements).
+    pub fn buf_cap(&self) -> usize {
+        self.buf_cap
+    }
+
+    /// Actual capacity of the resident buffer (elements) — lets tests pin
+    /// down that per-run RAM really shrinks after [`RunCursor::set_buf_cap`].
+    pub fn buf_capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// True once every element has been fetched *and* consumed.
+    pub fn is_exhausted(&self) -> bool {
+        self.fetched >= self.len && self.buf_at >= self.buf.len()
     }
 }
 
@@ -224,14 +264,14 @@ impl TournamentTree {
 ///
 /// The [`DiskSet`] is passed per call (not stored) so the owner can keep
 /// both in one struct without self-references.
-pub struct MultiwayMerge<T: Pod + Ord> {
+pub struct MultiwayMerge<T: Record> {
     cursors: Vec<RunCursor<T>>,
     /// Head element of each run (`None` = exhausted).
     keys: Vec<Option<T>>,
     tree: TournamentTree,
 }
 
-impl<T: Pod + Ord> MultiwayMerge<T> {
+impl<T: Record> MultiwayMerge<T> {
     /// Build a merge over `cursors`; peeks every run (reading its head
     /// block unless resident).
     pub fn new(mut cursors: Vec<RunCursor<T>>, disks: &DiskSet) -> Result<MultiwayMerge<T>> {
@@ -282,9 +322,35 @@ impl<T: Pod + Ord> MultiwayMerge<T> {
         self.cursors.iter().map(RunCursor::remaining).sum()
     }
 
-    /// Number of runs (including exhausted ones).
+    /// Number of live runs (exhausted runs disappear on
+    /// [`MultiwayMerge::retire_exhausted`]).
     pub fn num_runs(&self) -> usize {
         self.cursors.len()
+    }
+
+    /// Drop every exhausted run and return the `(base, byte_len)` disk
+    /// extents they occupied, so the owner can recycle the space (the
+    /// `empq` arena free-list).  Rebuilds the tree only if something was
+    /// removed: `O(R)`, same as [`MultiwayMerge::add_run`].
+    pub fn retire_exhausted(&mut self) -> Vec<(u64, u64)> {
+        let mut freed = Vec::new();
+        let mut i = 0;
+        while i < self.cursors.len() {
+            // `keys[i]` is `None` exactly when the cursor peeked past its
+            // end — fetched, drained, and observed empty.
+            if self.keys[i].is_none() {
+                debug_assert!(self.cursors[i].is_exhausted());
+                let c = self.cursors.swap_remove(i);
+                self.keys.swap_remove(i);
+                freed.push((c.base(), c.byte_len()));
+            } else {
+                i += 1;
+            }
+        }
+        if !freed.is_empty() {
+            self.tree = TournamentTree::new(&self.keys);
+        }
+        freed
     }
 }
 
@@ -430,5 +496,112 @@ mod tests {
         c.advance();
         assert_eq!(c.peek(&disks).unwrap(), Some(20));
         assert_eq!(c.remaining(), 2);
+    }
+
+    #[test]
+    fn zero_length_run_cursor_is_immediately_exhausted() {
+        let disks = mk_disks(1 << 20);
+        let mut c = RunCursor::<u32>::new(128, 0, 8, IoClass::Swap);
+        assert_eq!(c.remaining(), 0);
+        assert_eq!(c.peek(&disks).unwrap(), None);
+        assert!(c.is_exhausted());
+        assert_eq!(c.byte_len(), 0);
+        // Same through the resident-head constructor with an empty head.
+        let mut c = RunCursor::<u32>::with_resident_head(128, 0, 8, IoClass::Swap, Vec::new());
+        assert_eq!(c.peek(&disks).unwrap(), None);
+        assert!(c.is_exhausted());
+    }
+
+    #[test]
+    fn merge_tolerates_zero_length_runs_between_real_ones() {
+        let disks = mk_disks(1 << 20);
+        let a: Vec<u32> = vec![2, 5];
+        disks.write(IoClass::Swap, 0, as_bytes(&a)).unwrap();
+        let cursors = vec![
+            RunCursor::<u32>::new(4096, 0, 8, IoClass::Swap), // empty
+            RunCursor::<u32>::new(0, 2, 8, IoClass::Swap),
+            RunCursor::<u32>::new(8192, 0, 8, IoClass::Swap), // empty
+        ];
+        let mut merge = MultiwayMerge::new(cursors, &disks).unwrap();
+        assert_eq!(merge.num_runs(), 3);
+        assert_eq!(merge.next(&disks).unwrap(), Some(2));
+        assert_eq!(merge.next(&disks).unwrap(), Some(5));
+        assert_eq!(merge.next(&disks).unwrap(), None);
+        // Retiring reports each empty run's zero-byte extent and the real
+        // run's full extent.
+        let mut freed = merge.retire_exhausted();
+        freed.sort_unstable();
+        assert_eq!(freed, vec![(0, 8), (4096, 0), (8192, 0)]);
+        assert_eq!(merge.num_runs(), 0);
+    }
+
+    #[test]
+    fn single_run_merge_streams_in_order() {
+        let disks = mk_disks(1 << 20);
+        let run: Vec<u32> = (0..1000).map(|i| i * 3).collect();
+        disks.write(IoClass::Swap, 0, as_bytes(&run)).unwrap();
+        let mut merge = MultiwayMerge::new(
+            vec![RunCursor::<u32>::new(0, run.len() as u64, 64, IoClass::Swap)],
+            &disks,
+        )
+        .unwrap();
+        let mut out = Vec::new();
+        while let Some(x) = merge.next(&disks).unwrap() {
+            out.push(x);
+        }
+        assert_eq!(out, run);
+    }
+
+    #[test]
+    fn buf_cap_shrink_applies_to_refills() {
+        let disks = mk_disks(1 << 20);
+        let run: Vec<u32> = (0..4000u32).collect();
+        disks.write(IoClass::Swap, 0, as_bytes(&run)).unwrap();
+        let mut c = RunCursor::<u32>::new(0, run.len() as u64, 512, IoClass::Swap);
+        c.peek(&disks).unwrap();
+        assert!(c.buf_capacity() >= 512, "first refill at the original cap");
+        // Shrink (an owner adding runs under a fixed merge budget), then
+        // drain past the already-buffered elements.
+        c.set_buf_cap(32);
+        assert_eq!(c.buf_cap(), 32);
+        for _ in 0..512 {
+            c.peek(&disks).unwrap();
+            c.advance();
+        }
+        assert_eq!(c.peek(&disks).unwrap(), Some(512));
+        assert!(
+            c.buf_capacity() <= 32,
+            "refill buffer must shrink to the new cap, got {}",
+            c.buf_capacity()
+        );
+    }
+
+    #[test]
+    fn retire_exhausted_keeps_live_runs_merging() {
+        let disks = mk_disks(1 << 20);
+        let a: Vec<u32> = vec![1, 2];
+        let b: Vec<u32> = vec![3, 4, 5];
+        disks.write(IoClass::Swap, 0, as_bytes(&a)).unwrap();
+        disks.write(IoClass::Swap, 1024, as_bytes(&b)).unwrap();
+        let mut merge = MultiwayMerge::new(
+            vec![
+                RunCursor::<u32>::new(0, 2, 8, IoClass::Swap),
+                RunCursor::<u32>::new(1024, 3, 8, IoClass::Swap),
+            ],
+            &disks,
+        )
+        .unwrap();
+        assert_eq!(merge.next(&disks).unwrap(), Some(1));
+        assert_eq!(merge.next(&disks).unwrap(), Some(2));
+        assert_eq!(merge.next(&disks).unwrap(), Some(3));
+        // Run `a` is exhausted (its key slot is None); run `b` is mid-way.
+        let freed = merge.retire_exhausted();
+        assert_eq!(freed, vec![(0, 8)]);
+        assert_eq!(merge.num_runs(), 1);
+        assert_eq!(merge.remaining(), 2);
+        assert_eq!(merge.next(&disks).unwrap(), Some(4));
+        assert_eq!(merge.next(&disks).unwrap(), Some(5));
+        assert_eq!(merge.next(&disks).unwrap(), None);
+        assert_eq!(merge.retire_exhausted(), vec![(1024, 12)]);
     }
 }

@@ -57,9 +57,11 @@ pub use error::{Error, Result};
 /// Convenient re-exports for user programs.
 pub mod prelude {
     pub use crate::api::Comm;
+    pub use crate::apps::sssp::SsspRecord;
     pub use crate::config::{DeliveryMode, IoStyle, Layout, SimConfig};
     pub use crate::empq::{EmPq, Entry};
     pub use crate::engine::{run, RunReport};
     pub use crate::error::{Error, Result};
+    pub use crate::util::record::Record;
     pub use crate::vp::{Vp, VpMem};
 }

@@ -37,6 +37,7 @@ fn real_main(args: Vec<String>) -> Result<()> {
         "list-ranking" => cmd_list_ranking(&cli),
         "euler-tour" => cmd_euler_tour(&cli),
         "time-forward" => cmd_time_forward(&cli),
+        "sssp" => cmd_sssp(&cli),
         "stxxl-sort" => cmd_stxxl_sort(&cli),
         "alltoallv" => cmd_alltoallv(&cli),
         "info" => cmd_info(&cli),
@@ -62,6 +63,7 @@ COMMANDS
   list-ranking  CGM list ranking (pointer jumping)
   euler-tour    Euler tour of a random forest (§8.4.3)
   time-forward  time-forward DAG processing on the bulk EM priority queue
+  sssp          semi-external Dijkstra on the bulk EM priority queue
   stxxl-sort    hand-crafted EM multiway-merge sort baseline
   alltoallv     a single Alltoallv over the whole data set (Fig. 7.2)
   info          print the resolved configuration and disk-space needs
@@ -89,10 +91,13 @@ SIMULATION FLAGS (Appendix B.3)
 
 WORKLOAD FLAGS
   --n N           elements (psrs, cgm-sort, prefix-sum, list-ranking, stxxl-sort)
-                  or DAG nodes (time-forward)
+                  or graph nodes (time-forward, sssp)
   --trees N --nodes N   forest shape (euler-tour)
-  --deg N         mean out-degree (time-forward)                    [4]
+  --deg N         mean out-degree (time-forward, sssp)              [4]
   --single        element-at-a-time queue ops (time-forward; default bulk)
+  --wmax N        max edge weight (sssp; weights in [1, wmax])      [100]
+  --src N         source node (sssp)                                [0]
+  --serial-spill  disable the empq worker-pool spill pipeline (sssp)
   --elems N       elements per VP (alltoallv)
   --verify        verify the result (extra supersteps)
   --timeline-out FILE   write the gnuplot timeline here
@@ -206,6 +211,44 @@ fn cmd_time_forward(cli: &Cli) -> Result<()> {
     println!("seeks              {}", r.pq.metrics.seeks);
     println!("external_runs      {}", r.pq.runs_created);
     println!("max_queue_len      {}", r.pq.max_len);
+    println!("checksum           {:#018x}", r.checksum);
+    println!("verified           {}", r.verified);
+    if !r.verified {
+        return Err(pems2::error::Error::comm("verification FAILED"));
+    }
+    Ok(())
+}
+
+fn cmd_sssp(cli: &Cli) -> Result<()> {
+    let cfg = cli.sim_config()?;
+    let n: u64 = cli.get_or("n", 100_000)?;
+    let deg: u64 = cli.get_or("deg", 4)?;
+    let wmax: u64 = cli.get_or("wmax", 100)?;
+    let src: u64 = cli.get_or("src", 0)?;
+    let r = pems2::apps::run_sssp_with(
+        &cfg,
+        n,
+        deg,
+        wmax,
+        src,
+        cli.flag("verify"),
+        !cli.flag("serial-spill"),
+    )?;
+    println!("app                sssp");
+    println!("n                  {}", r.n);
+    println!("edges              {}", r.edges);
+    println!("relaxations        {}", r.relaxed);
+    println!("reached            {}", r.reached);
+    println!("frontier_rounds    {}", r.rounds);
+    println!("total_dist         {}", r.total_dist);
+    println!("wall_seconds       {:.3}", r.wall);
+    println!("charged_seconds    {:.3}", r.pq.charged);
+    println!("io_volume          {}", human_bytes(r.pq.metrics.total_disk_bytes()));
+    println!("seeks              {}", r.pq.metrics.seeks);
+    println!("external_runs      {}", r.pq.runs_created);
+    println!("max_queue_len      {}", r.pq.max_len);
+    println!("arena_high_water   {}", human_bytes(r.pq.arena_high_water));
+    println!("arena_reused       {}", human_bytes(r.pq.arena_reused));
     println!("checksum           {:#018x}", r.checksum);
     println!("verified           {}", r.verified);
     if !r.verified {

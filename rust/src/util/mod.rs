@@ -1,12 +1,18 @@
 //! Small shared utilities: block-alignment arithmetic (Appendix B.2
-//! notation), a deterministic PRNG, byte helpers, and a miniature
-//! property-testing harness (`proptest` is unavailable offline).
+//! notation), a deterministic PRNG, byte helpers, the typed [`Record`]
+//! layer for external-memory data structures, a shared [`WorkerPool`],
+//! and a miniature property-testing harness (`proptest` is unavailable
+//! offline).
 
 pub mod align;
 pub mod bytes;
 pub mod os;
+pub mod pool;
 pub mod proptest_mini;
+pub mod record;
 pub mod rng;
 
 pub use align::{align_down, align_up, Aligned};
+pub use pool::{BatchHandle, WorkerPool};
+pub use record::Record;
 pub use rng::XorShift64;

@@ -1,0 +1,293 @@
+//! A small shared worker pool.
+//!
+//! The simulation engine pins one OS thread per *virtual* processor, but
+//! subsystems that act like a single node with `k` cores — the `empq`
+//! spill pipeline foremost — need a place to run `k` CPU-bound jobs
+//! (heap drains, segment sorts) concurrently without paying a
+//! thread-spawn per spill.  [`WorkerPool`] is that place: `k` long-lived
+//! threads over one job queue, created once per owner and reused for
+//! every batch.
+//!
+//! The two-phase API ([`WorkerPool::spawn_batch`] → [`BatchHandle::join`])
+//! is what enables overlap: the caller submits the sort jobs, does its own
+//! bookkeeping (merge-buffer resizing, extent allocation, write-behind
+//! draining) while the workers run, and only then blocks for the results.
+//! [`WorkerPool::run`] is the blocking convenience wrapper.
+//!
+//! A panicking job does not kill its worker thread (the pool survives for
+//! later batches); the panic surfaces in `join` on the submitting thread.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+/// A fixed set of worker threads over one FIFO job queue.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Lock that shrugs off poisoning: a panicked *job* (already caught and
+/// contained) must not wedge the whole pool.
+fn lock_queue(shared: &Shared) -> MutexGuard<'_, QueueState> {
+    shared.queue.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl WorkerPool {
+    /// Spawn `threads.max(1)` named worker threads.
+    pub fn new(threads: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+        });
+        let handles = (0..threads.max(1))
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("pems2-pool{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Enqueue one fire-and-forget job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let mut q = lock_queue(&self.shared);
+        q.jobs.push_back(Box::new(job));
+        drop(q);
+        self.shared.cv.notify_one();
+    }
+
+    /// Enqueue a batch of result-bearing tasks and return immediately; the
+    /// caller collects ordered results later via [`BatchHandle::join`]
+    /// (doing other work in between is the point).
+    pub fn spawn_batch<T, F>(&self, tasks: Vec<F>) -> BatchHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let n = tasks.len();
+        let shared = Arc::new(BatchShared {
+            state: Mutex::new(BatchState {
+                slots: (0..n).map(|_| None).collect(),
+                done: 0,
+                panic: None,
+            }),
+            cv: Condvar::new(),
+        });
+        for (i, task) in tasks.into_iter().enumerate() {
+            let sh = shared.clone();
+            self.submit(move || {
+                // The guard counts the task done even if `task` panics, so
+                // `join` wakes up instead of hanging; the caught payload is
+                // parked in the batch state so `join` can re-raise the
+                // *original* panic on the submitting thread.
+                let guard = DoneGuard(sh.clone());
+                match catch_unwind(AssertUnwindSafe(task)) {
+                    Ok(out) => {
+                        let mut st =
+                            sh.state.lock().unwrap_or_else(|e| e.into_inner());
+                        st.slots[i] = Some(out);
+                    }
+                    Err(payload) => {
+                        let mut st =
+                            sh.state.lock().unwrap_or_else(|e| e.into_inner());
+                        if st.panic.is_none() {
+                            st.panic = Some(payload);
+                        }
+                    }
+                }
+                drop(guard);
+            });
+        }
+        BatchHandle { shared, n }
+    }
+
+    /// Run all tasks to completion on the pool; results in task order.
+    pub fn run<T, F>(&self, tasks: Vec<F>) -> Vec<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        self.spawn_batch(tasks).join()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = lock_queue(&self.shared);
+            q.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = lock_queue(shared);
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    break Some(j);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = shared.cv.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        match job {
+            // Backstop for raw `submit` jobs; batch tasks catch their own
+            // panics (preserving the payload for `join`), so this only
+            // keeps the worker alive — it never eats a batch payload.
+            Some(j) => drop(catch_unwind(AssertUnwindSafe(j))),
+            None => return,
+        }
+    }
+}
+
+struct BatchState<T> {
+    slots: Vec<Option<T>>,
+    done: usize,
+    /// First caught task-panic payload, re-raised by `join`.
+    panic: Option<Box<dyn std::any::Any + Send + 'static>>,
+}
+
+struct BatchShared<T> {
+    state: Mutex<BatchState<T>>,
+    cv: Condvar,
+}
+
+/// Increments the batch's done count on drop — unconditionally, so a
+/// panicking task still wakes the joiner.
+struct DoneGuard<T>(Arc<BatchShared<T>>);
+
+impl<T> Drop for DoneGuard<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.done += 1;
+        drop(st);
+        self.0.cv.notify_all();
+    }
+}
+
+/// Handle to an in-flight batch; [`BatchHandle::join`] blocks until every
+/// task finished and returns results in submission order.
+pub struct BatchHandle<T> {
+    shared: Arc<BatchShared<T>>,
+    n: usize,
+}
+
+impl<T> BatchHandle<T> {
+    /// Wait for the whole batch.
+    ///
+    /// # Panics
+    /// If any task panicked on a worker thread, the *original* payload is
+    /// re-raised here on the submitting thread.
+    pub fn join(self) -> Vec<T> {
+        let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        while st.done < self.n {
+            st = self.shared.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        if let Some(payload) = st.panic.take() {
+            drop(st);
+            std::panic::resume_unwind(payload);
+        }
+        st.slots.iter_mut().map(|s| s.take().expect("pool task panicked")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_tasks_and_orders_results() {
+        let pool = WorkerPool::new(4);
+        let out = pool.run((0..32usize).map(|i| move || i * i).collect());
+        assert_eq!(out, (0..32usize).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batches_reuse_the_same_threads() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.threads(), 2);
+        let hits = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let tasks: Vec<_> = (0..4)
+                .map(|_| {
+                    let h = hits.clone();
+                    move || {
+                        h.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 40);
+    }
+
+    #[test]
+    fn spawn_batch_overlaps_with_caller_work() {
+        let pool = WorkerPool::new(2);
+        let handle = pool.spawn_batch(
+            (0..4u64).map(|i| move || (0..1000).fold(i, |a, b| a.wrapping_add(b))).collect(),
+        );
+        // Caller-side work between submit and join.
+        let local: u64 = (0..1000).sum();
+        let out = handle.join();
+        assert_eq!(out.len(), 4);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, local + i as u64);
+        }
+    }
+
+    #[test]
+    fn empty_batch_joins_immediately() {
+        let pool = WorkerPool::new(1);
+        let out: Vec<u8> = pool.run(Vec::<fn() -> u8>::new());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn task_panic_is_contained_and_reported() {
+        let pool = WorkerPool::new(1);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(vec![|| -> u8 { panic!("task boom") }]);
+        }));
+        let payload = res.expect_err("join must propagate the task panic");
+        assert_eq!(
+            payload.downcast_ref::<&str>(),
+            Some(&"task boom"),
+            "the original panic payload must survive the worker hop"
+        );
+        // The worker survived the panic: the pool still runs new work.
+        let ok = pool.run(vec![|| 7u8]);
+        assert_eq!(ok, vec![7]);
+    }
+}

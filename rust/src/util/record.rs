@@ -1,0 +1,74 @@
+//! The typed record layer shared by the external-memory data structures.
+//!
+//! [`Record`] is the single bound the priority queue ([`crate::empq::EmPq`]),
+//! the shared merge machinery ([`crate::empq::merge`]) and the sort baseline
+//! ([`crate::baseline::stxxl_sort`]) agree on: a plain-old-data element
+//! (`Pod` gives `const SIZE` and the byte-cast round trip) with a total
+//! order *and* an explicit key projection.  The full `Ord` decides merge
+//! and extraction order (so equal-key records still extract
+//! deterministically); [`Record::key`] is the coarser priority used for
+//! bound queries such as
+//! [`crate::empq::EmPq::extract_while_key_le`] — time-forward processing
+//! bounds by target node id, SSSP by tentative distance.
+//!
+//! Primitive unsigned/signed integers are records over themselves, which
+//! is what lets a plain `u32` sort (`stxxl_sort`) and a 24-byte
+//! [`crate::apps::sssp::SsspRecord`] queue run through the same cursors
+//! and tournament trees without per-type rewrites (the PEMS thesis point:
+//! one simulation substrate, many algorithms).
+
+use crate::util::bytes::Pod;
+
+/// A fixed-size external-memory record: `Pod` (any bit pattern valid, no
+/// padding, `const SIZE`) + totally ordered + a key projection.
+///
+/// `Ord` must be *consistent* with the key: `a < b` implies
+/// `a.key() <= b.key()`.  The natural way to get this is to lay the key
+/// out as the first field and `#[derive(Ord)]`.
+pub trait Record: Pod + Ord {
+    /// The priority component, used for key-bounded extraction.
+    type Key: Ord + Copy + Send + Sync + std::fmt::Debug + 'static;
+
+    /// Project the record onto its priority.
+    fn key(&self) -> Self::Key;
+}
+
+macro_rules! impl_record_for_int {
+    ($($t:ty),*) => {
+        $(impl Record for $t {
+            type Key = $t;
+            fn key(&self) -> $t {
+                *self
+            }
+        })*
+    };
+}
+impl_record_for_int!(u8, i8, u16, i16, u32, i32, u64, i64, usize);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn min_by_key<R: Record>(items: &[R]) -> Option<R::Key> {
+        items.iter().map(Record::key).min()
+    }
+
+    #[test]
+    fn primitives_are_their_own_key() {
+        assert_eq!(7u32.key(), 7);
+        assert_eq!((-3i64).key(), -3);
+        assert_eq!(min_by_key(&[5u64, 2, 9]), Some(2));
+        assert_eq!(u32::SIZE, 4);
+    }
+
+    #[test]
+    fn generic_code_sees_one_bound() {
+        // A function generic over Record works for any instantiation —
+        // the unification the record layer is for.
+        fn smallest<R: Record>(v: &mut Vec<R>) -> Option<R> {
+            v.sort_unstable();
+            v.first().copied()
+        }
+        assert_eq!(smallest(&mut vec![3u16, 1, 2]), Some(1));
+    }
+}
