@@ -18,6 +18,11 @@
 //!    volume* (u32 keys are 4 B vs 16 B entries, so the sort gets 4x the
 //!    keys) — a sort-based processor must sort the full message set at
 //!    least once, so `stxxl-sort` is its I/O floor.
+//! 5. Engine-phase A/B under the unified `SimConfig::parallel_phases`
+//!    switch: `stxxl-sort` run formation (pool segment sorts + streamed
+//!    merge vs one in-place sort) and the mem-store alltoallv delivery
+//!    fan-out (pooled memcpys vs the serial loop), each emitting a
+//!    pool/serial speedup into the JSON summary.
 //!
 //! y-values are Melem/s (wall clock); measured I/O counters are printed
 //! per phase, since on page-cached SSDs charged time is the faithful
@@ -28,7 +33,8 @@ use pems2::apps::sssp::run_sssp_with;
 use pems2::apps::time_forward::run_time_forward;
 use pems2::baseline::run_stxxl_sort;
 use pems2::bench::{
-    full_mode, print_series, results_dir, write_json_summary, write_series, Series,
+    alltoallv_once, full_mode, print_series, results_dir, write_json_summary, write_series,
+    Series,
 };
 use pems2::config::{IoStyle, SimConfig};
 use pems2::empq::{EmPq, Entry};
@@ -241,6 +247,64 @@ fn main() {
     );
     summary.push(("pq_charged_s".to_string(), tf.pq.charged));
     summary.push(("sort_floor_charged_s".to_string(), sort.charged));
+
+    // ---- 5. engine-phase A/B: sort run formation + delivery fan-out ----
+    // Both phases run under the unified SimConfig switch; the serial leg
+    // is the pre-pool behaviour, so the persisted speedups track what
+    // the shared WorkerPool actually buys per commit.
+    let sort_n: u64 = if full_mode() { 1 << 23 } else { 1 << 19 };
+    let mut sort_rates = [0.0f64; 2];
+    for (i, (label, par)) in [("serial", false), ("pool", true)].into_iter().enumerate() {
+        let mut c = cfg();
+        c.parallel_phases = par;
+        let r = run_stxxl_sort(&c, sort_n, false).unwrap();
+        let rate = sort_n as f64 / r.wall.max(1e-9) / 1e6;
+        sort_rates[i] = rate;
+        println!(
+            "sort-form {label:<7} n={sort_n} {rate:>8.2} Melem/s  io {}  pool_jobs {}",
+            human_bytes(r.metrics.total_disk_bytes()),
+            r.metrics.pool_jobs,
+        );
+        summary.push((format!("sort_form_{label}_melem_s"), rate));
+    }
+    println!(
+        "sort run-formation speedup: {:.2}x (pool/serial)",
+        sort_rates[1] / sort_rates[0].max(1e-9),
+    );
+    summary.push(("sort_form_pool_speedup".to_string(), sort_rates[1] / sort_rates[0].max(1e-9)));
+
+    let elems: usize = if full_mode() { 1 << 20 } else { 1 << 16 };
+    let mut deliv_rates = [0.0f64; 2];
+    for (i, (label, par)) in [("serial", false), ("pool", true)].into_iter().enumerate() {
+        let c = SimConfig::builder()
+            .v(4)
+            .k(2)
+            .mu(16 << 20)
+            .sigma(16 << 20)
+            .block(64 << 10)
+            .io(IoStyle::Mem)
+            .parallel_phases(par)
+            .build()
+            .unwrap();
+        let r = alltoallv_once(c, elems).unwrap();
+        assert!(r.verified);
+        let wall = r.report.wall.as_secs_f64();
+        let rate = (elems * 4) as f64 / wall.max(1e-9) / 1e6;
+        deliv_rates[i] = rate;
+        println!(
+            "delivery {label:<7} elems/vp={elems} {rate:>8.2} Melem/s  pool_jobs {} ({} batches)",
+            r.report.metrics.pool_jobs, r.report.metrics.pool_batches,
+        );
+        summary.push((format!("delivery_{label}_melem_s"), rate));
+    }
+    println!(
+        "delivery fan-out speedup: {:.2}x (pool/serial)",
+        deliv_rates[1] / deliv_rates[0].max(1e-9),
+    );
+    summary.push((
+        "delivery_pool_speedup".to_string(),
+        deliv_rates[1] / deliv_rates[0].max(1e-9),
+    ));
 
     let dir = results_dir();
     write_series(

@@ -4,8 +4,18 @@
 //! configuration would use), `D` disks through [`crate::disk::DiskSet`]
 //! with the asynchronous driver — mirroring STXXL's design (Fig. 1.3):
 //!
-//! 1. *Run formation*: read M-sized chunks, sort in RAM (optionally via
-//!    the XLA tile-sort kernel), write sorted runs.
+//! 1. *Run formation*: read M-sized chunks, sort in RAM, write sorted
+//!    runs.  Under the unified phase switch
+//!    ([`SimConfig::phases_parallel`]) each run is split into one
+//!    segment per [`WorkerPool`] worker, the segments sort
+//!    concurrently, and the tournament merge streams the run back out
+//!    in block-sized chunks overlapping the async driver's write-behind
+//!    — the `empq` spill pipeline, via the shared
+//!    [`crate::empq::merge::sort_segments`] /
+//!    [`crate::empq::merge::merge_write_segments`] helpers.  The serial
+//!    path (one in-place sort, optionally on the XLA tile-sort kernel,
+//!    one whole-run write) is kept for A/B runs and produces
+//!    byte-identical output.
 //! 2. *Multiway merge*: merge all runs with per-run block buffers and a
 //!    tournament (loser) tree — the machinery shared with the external
 //!    priority queue, see [`crate::empq::merge`] — writing the output
@@ -17,11 +27,12 @@
 
 use crate::config::{IoStyle, SimConfig};
 use crate::disk::DiskSet;
-use crate::empq::merge::{MultiwayMerge, RunCursor};
+use crate::empq::merge::{merge_write_segments, sort_segments, MultiwayMerge, RunCursor};
 use crate::error::Result;
 use crate::io::{aio::AsyncIo, unix::UnixIo, IoDriver};
 use crate::metrics::{CostModel, IoClass, Metrics, MetricsSnapshot};
 use crate::runtime::Compute;
+use crate::util::pool::WorkerPool;
 use crate::util::XorShift64;
 use std::sync::Arc;
 
@@ -36,6 +47,10 @@ pub struct StxxlSortResult {
     pub charged: f64,
     /// Output verified sorted + element-conserving.
     pub verified: bool,
+    /// Order-sensitive FNV hash over the sorted output (0 unless
+    /// `verify` was on) — what the serial/parallel equivalence tests
+    /// compare to pin byte-identical results across modes.
+    pub output_hash: u64,
     /// Elements sorted.
     pub n: u64,
 }
@@ -88,6 +103,12 @@ pub fn run_stxxl_sort(cfg: &SimConfig, n: u64, verify: bool) -> Result<StxxlSort
     let setup = metrics.snapshot();
 
     // ---- Pass 1: run formation ----
+    // The pool path defers to the XLA tile-sort kernel when it is
+    // active: the kernel already pipelines chunks, so only one of the
+    // two accelerations runs at a time.
+    let pool = (cfg.phases_parallel() && cfg.pool_threads() > 1 && !compute.xla_active())
+        .then(|| WorkerPool::new(cfg.pool_threads()));
+    let chunk_cap = (cfg.block() as usize / 4).max(64);
     let mut runs: Vec<(u64, u64)> = Vec::new(); // (offset elements, len)
     {
         let mut buf = vec![0u32; run_len];
@@ -99,12 +120,35 @@ pub fn run_stxxl_sort(cfg: &SimConfig, n: u64, verify: bool) -> Result<StxxlSort
                 in_base + at * 4,
                 crate::util::bytes::as_bytes_mut(&mut buf[..take]),
             )?;
-            compute.local_sort_u32(&mut buf[..take]);
-            disks.write(
-                IoClass::Swap,
-                in_base + at * 4,
-                crate::util::bytes::as_bytes(&buf[..take]),
-            )?;
+            match &pool {
+                Some(pool) if take > 1 => {
+                    // The empq spill pipeline: one segment per worker
+                    // sorted concurrently, then the tournament merge
+                    // streams the run out in block-sized chunks so merge
+                    // CPU overlaps the async driver's write-behind.
+                    let t = pool.threads().min(take);
+                    let per = take.div_ceil(t);
+                    let segments: Vec<Vec<u32>> =
+                        buf[..take].chunks(per).map(<[u32]>::to_vec).collect();
+                    let segments = sort_segments(segments, Some(pool), &metrics, || ());
+                    merge_write_segments(
+                        &segments,
+                        &disks,
+                        in_base + at * 4,
+                        IoClass::Swap,
+                        chunk_cap,
+                        0,
+                    )?;
+                }
+                _ => {
+                    compute.local_sort_u32(&mut buf[..take]);
+                    disks.write(
+                        IoClass::Swap,
+                        in_base + at * 4,
+                        crate::util::bytes::as_bytes(&buf[..take]),
+                    )?;
+                }
+            }
             runs.push((at, take as u64));
             at += take as u64;
         }
@@ -150,6 +194,7 @@ pub fn run_stxxl_sort(cfg: &SimConfig, n: u64, verify: bool) -> Result<StxxlSort
 
     // ---- Verify ----
     let mut verified = true;
+    let mut output_hash: u64 = 0;
     if verify {
         let mut buf = vec![0u32; (1usize << 20).min(n as usize).max(1)];
         let mut prev = 0u32;
@@ -168,6 +213,11 @@ pub fn run_stxxl_sort(cfg: &SimConfig, n: u64, verify: bool) -> Result<StxxlSort
                 }
                 prev = x;
                 checksum_out = checksum_out.wrapping_add(x as u64);
+                // Order-sensitive FNV-style fold: equal only for
+                // identical output sequences.
+                output_hash = output_hash
+                    .wrapping_mul(0x0100_0000_01B3)
+                    .wrapping_add(x as u64 ^ 0x9E37_79B9);
             }
             at += take as u64;
         }
@@ -183,6 +233,7 @@ pub fn run_stxxl_sort(cfg: &SimConfig, n: u64, verify: bool) -> Result<StxxlSort
         charged: model.charge(&snap).total(),
         metrics: snap,
         verified,
+        output_hash,
         n,
     })
 }
@@ -245,5 +296,35 @@ mod tests {
         let c = cfg(1 << 16);
         assert!(run_stxxl_sort(&c, 1, true).unwrap().verified);
         assert!(run_stxxl_sort(&c, 2, true).unwrap().verified);
+    }
+
+    #[test]
+    fn pool_run_formation_matches_serial_byte_for_byte() {
+        // k=2: the parallel leg splits each run into 2 segments sorted on
+        // the pool; output must be identical to the serial in-place sort.
+        let mk = |parallel: bool| {
+            SimConfig::builder()
+                .v(2)
+                .k(2)
+                .mu(32 << 10)
+                .block(4096)
+                .io(IoStyle::Async)
+                .parallel_phases(parallel)
+                .build()
+                .unwrap()
+        };
+        for n in [1u64, 3, 50_000, 50_001] {
+            let par = run_stxxl_sort(&mk(true), n, true).unwrap();
+            let ser = run_stxxl_sort(&mk(false), n, true).unwrap();
+            assert!(par.verified && ser.verified, "n={n}");
+            assert_eq!(par.output_hash, ser.output_hash, "n={n}");
+            assert_eq!(ser.metrics.pool_jobs, 0, "serial leg must not touch the pool");
+            if mk(true).phases_parallel() && n > 1 {
+                assert!(
+                    par.metrics.pool_jobs >= 2,
+                    "pool leg must run segment sorts as pool jobs (n={n})"
+                );
+            }
+        }
     }
 }

@@ -69,7 +69,7 @@ impl Cli {
     /// Build a [`SimConfig`] from the standard simulation flags:
     /// `--p --v --k --mu --d --sigma --alpha --io --pems1 --alloc
     /// --layout --fragmented --indirect-slot --block --timeline --xla
-    /// --seed --disk-dir --unordered`.
+    /// --seed --disk-dir --unordered --threads --serial`.
     ///
     /// Sizes accept suffixes `k`/`m`/`g` (binary).
     pub fn sim_config(&self) -> Result<SimConfig> {
@@ -83,6 +83,8 @@ impl Cli {
             .alpha(self.get_or("alpha", 4)?)
             .block(parse_size(&self.get_or("block", "256k".to_string())?)?)
             .seed(self.get_or("seed", 0xF00D)?)
+            .compute_threads(self.get_or("threads", 0)?)
+            .parallel_phases(!self.flag("serial"))
             .record_timeline(self.flag("timeline"))
             .use_xla(self.flag("xla"))
             .ordered_rounds(!self.flag("unordered"));
@@ -193,6 +195,19 @@ mod tests {
         assert_eq!(cfg.delivery, DeliveryMode::Pems1Indirect);
         assert_eq!(cfg.alloc, AllocPolicy::Bump);
         assert!(cfg.indirect_slot > 0);
+    }
+
+    #[test]
+    fn serial_and_threads_flags() {
+        let c = Cli::parse(args("x --v 4 --k 2 --serial --threads 3")).unwrap();
+        let cfg = c.sim_config().unwrap();
+        assert!(!cfg.parallel_phases);
+        assert_eq!(cfg.compute_threads, 3);
+        assert_eq!(cfg.pool_threads(), 3);
+        // Defaults: parallel on, pool width derived from k.
+        let cfg = Cli::parse(args("x --v 4 --k 2")).unwrap().sim_config().unwrap();
+        assert!(cfg.parallel_phases);
+        assert_eq!(cfg.pool_threads(), 2);
     }
 
     #[test]

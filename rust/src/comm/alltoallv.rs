@@ -19,7 +19,10 @@
 //!
 //! With mmap/mem stores, delivery is a straight memcpy into the receiver's
 //! context and swaps are no-ops; the synchronisation structure is
-//! identical.
+//! identical — and the memcpys fan out across the engine's shared
+//! [`WorkerPool`](crate::util::WorkerPool) (batched per receiver, see
+//! [`super::deliver_local_batch`]) when the unified phase switch
+//! (`SimConfig::phases_parallel`) is on.
 
 use super::Region;
 use crate::error::{Error, Result};
@@ -71,10 +74,13 @@ pub fn alltoallv(vp: &mut Vp, sends: &[Region], recvs: &[Region]) -> Result<()> 
         vp.swap_out_except(&except)?;
     }
 
-    // Deliver local messages whose receiver has recorded its offsets.
+    // Deliver local messages whose receiver has recorded its offsets —
+    // fanned out on the shared pool for mmap/mem stores (the copies are
+    // plain memcpys into disjoint receiver regions), serially otherwise.
     let me = vp.rank();
     let my_node = vp.node();
     let mut deferred: Vec<usize> = Vec::new();
+    let mut ready: Vec<super::LocalMsg> = Vec::new();
     for (j, &(soff, slen)) in sends.iter().enumerate() {
         if slen == 0 {
             continue;
@@ -84,14 +90,19 @@ pub fn alltoallv(vp: &mut Vp, sends: &[Region], recvs: &[Region]) -> Result<()> 
             continue; // remote: superstep 2
         }
         if sh.comm.executed[dst_local].load(Ordering::Acquire) {
-            let payload = unsafe {
-                std::slice::from_raw_parts(mem.add(soff as usize), slen as usize)
-            };
-            deliver_local(&sh, dst_local, me, payload)?;
+            ready.push(super::LocalMsg {
+                dst_local,
+                src_global: me,
+                // SAFETY: partition memory this VP holds; it stays valid
+                // and unmutated until the batch joins below.
+                ptr: unsafe { mem.add(soff as usize) },
+                len: slen as usize,
+            });
         } else {
             deferred.push(j);
         }
     }
+    super::deliver_local_batch(&sh, ready)?;
     vp.resident = false;
     vp.release();
     vp.internal_barrier();
@@ -113,14 +124,22 @@ pub fn alltoallv(vp: &mut Vp, sends: &[Region], recvs: &[Region]) -> Result<()> 
     if explicit && !needed.is_empty() {
         vp.swap_in_regions(&needed)?;
     }
-    // Deliver the deferred local messages.
-    for &j in &deferred {
-        let (soff, slen) = sends[j];
-        let (_, dst_local) = vp.locate(j);
-        let payload =
-            unsafe { std::slice::from_raw_parts(mem.add(soff as usize), slen as usize) };
-        deliver_local(&sh, dst_local, me, payload)?;
-    }
+    // Deliver the deferred local messages (same fan-out as superstep 1).
+    let ready: Vec<super::LocalMsg> = deferred
+        .iter()
+        .map(|&j| {
+            let (soff, slen) = sends[j];
+            let (_, dst_local) = vp.locate(j);
+            super::LocalMsg {
+                dst_local,
+                src_global: me,
+                // SAFETY: as above — joined before `mem` is released.
+                ptr: unsafe { mem.add(soff as usize) },
+                len: slen as usize,
+            }
+        })
+        .collect();
+    super::deliver_local_batch(&sh, ready)?;
     // Remote exchange in α-chunks (Alg. 7.1.3).
     if cfg.p > 1 {
         par_comm(vp, &sh, &remote, sends, mem)?;
@@ -296,15 +315,23 @@ fn par_comm(
             let received = sh.switch.alltoallv(my_node, out);
             for buf in received {
                 let mut cur = 0usize;
+                let mut msgs = Vec::new();
                 while cur < buf.len() {
                     let (src, dst, payload, next) = decode_msg(&buf, cur)?;
                     let (dst_node, dst_local) = vp.locate(dst);
                     if dst_node != my_node {
                         return Err(Error::comm("misrouted remote message"));
                     }
-                    deliver_local(sh, dst_local, src, payload)?;
+                    msgs.push(super::LocalMsg {
+                        dst_local,
+                        src_global: src,
+                        // SAFETY: `buf` outlives the batch joined below.
+                        ptr: payload.as_ptr(),
+                        len: payload.len(),
+                    });
                     cur = next;
                 }
+                super::deliver_local_batch(sh, msgs)?;
             }
         }
         sh.round_barriers[vp.round()].wait();

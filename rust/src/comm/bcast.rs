@@ -5,8 +5,17 @@
 //! partition swap out); remote nodes receive via one node-level broadcast
 //! performed by each node's *first* thread.  Time
 //! `S·2vµ/(PkB) + G·vω/(PDB) + g·ω/b + l + L` (Thm. 7.2.3).
+//!
+//! Under pooled delivery ([`crate::vp::NodeShared::pooled_delivery`]:
+//! mmap/mem stores + an engine pool), receivers record their receive
+//! region in the offset table *before* blocking; the root (or, on remote
+//! nodes, the first thread) fans the payload out to every recorded
+//! receiver's context on the pool and marks them `delivered` before
+//! signalling, so they skip their own copy — the same `E[i]` structure
+//! as EM-Alltoallv's internal superstep 1.  Late receivers keep the
+//! copy-it-yourself path, so the result is identical either way.
 
-use super::Region;
+use super::{fanout_rooted, record_rooted_recv, take_rooted_delivery, Region};
 use crate::error::{Error, Result};
 use crate::metrics::IoClass;
 use crate::sync::{em_first_thread, em_signal_threads, em_wait_for_root};
@@ -29,9 +38,11 @@ pub fn bcast(vp: &mut Vp, root: usize, send: Region, recv: Region) -> Result<()>
         )));
     }
 
+    let pooled = sh.pooled_delivery();
     if me == root {
-        // Root: copy S into the shared buffer, signal local threads, and
-        // broadcast to other nodes.
+        // Root: copy S into the shared buffer, fan out to recorded
+        // receivers (pooled mode), signal local threads, and broadcast
+        // to other nodes.
         vp.ensure_resident()?;
         let data = vp.slice::<u8>(crate::vp::VpMem::from_raw(send.0, send.1 as usize))?.to_vec();
         {
@@ -39,10 +50,21 @@ pub fn bcast(vp: &mut Vp, root: usize, send: Region, recv: Region) -> Result<()>
             buf[..data.len()].copy_from_slice(&data);
             sh.comm.note_shared_use(data.len());
         }
+        // Fan out while the waiters are quiescent; the signal must fire
+        // even if the fan-out failed, or they deadlock.
+        let fan = if pooled {
+            fanout_rooted(&sh, me, vp.local_rank(), &data, |_, _| 0)
+        } else {
+            Ok(())
+        };
         em_signal_threads(&sh.comm.sig_root, v_per_p, true);
         if cfg.p > 1 {
+            // The node-level broadcast must happen even if the local
+            // fan-out failed: remote first threads are already blocked
+            // in their matching switch call.
             sh.switch.bcast(my_node, root_node, Some(data.clone()));
         }
+        fan?;
         // Root also delivers to its own receive region (MPI semantics:
         // root's recv = its send; copy only if regions differ).
         if recv.1 > 0 && recv.0 != send.0 {
@@ -52,10 +74,22 @@ pub fn bcast(vp: &mut Vp, root: usize, send: Region, recv: Region) -> Result<()>
     } else if root_node == my_node {
         // Same node as the root: rooted synchronisation.
         vp.ensure_resident()?;
+        let local = vp.local_rank();
+        if pooled {
+            record_rooted_recv(&sh, local, root, recv);
+        }
         let swapped = em_wait_for_root(&sh.comm.sig_root, vp, root_local, v_per_p)?;
-        deliver_from_shared(vp, recv, swapped)?;
+        if !(pooled && take_rooted_delivery(&sh, local)) {
+            deliver_from_shared(vp, recv, swapped)?;
+        }
     } else {
-        // Remote node: the first thread receives into the shared buffer.
+        // Remote node: the first thread receives into the shared buffer
+        // (recording happens first so the first thread can cover this
+        // receiver in its fan-out).
+        let local = vp.local_rank();
+        if pooled {
+            record_rooted_recv(&sh, local, root, recv);
+        }
         if cfg.p > 1 && em_first_thread(&sh.comm.sig_first, v_per_p) {
             let data = sh.switch.bcast(my_node, root_node, None);
             {
@@ -63,10 +97,18 @@ pub fn bcast(vp: &mut Vp, root: usize, send: Region, recv: Region) -> Result<()>
                 buf[..data.len()].copy_from_slice(&data);
                 sh.comm.note_shared_use(data.len());
             }
+            let fan = if pooled {
+                fanout_rooted(&sh, root, local, &data, |_, _| 0)
+            } else {
+                Ok(())
+            };
             em_signal_threads(&sh.comm.sig_first, v_per_p, false);
+            fan?;
         }
         vp.ensure_resident()?;
-        deliver_from_shared(vp, recv, false)?;
+        if !(pooled && take_rooted_delivery(&sh, local)) {
+            deliver_from_shared(vp, recv, false)?;
+        }
     }
     let _ = omega;
 

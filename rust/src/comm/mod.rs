@@ -34,9 +34,11 @@ pub use reduce::{reduce, ReduceElem, ReduceOp};
 pub use scatter::scatter;
 
 use crate::config::SimConfig;
+use crate::error::Result;
 use crate::sync::EmSignal;
+use crate::vp::NodeShared;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// A message region inside a VP's context: (byte offset, byte length).
 pub type Region = (u64, u64);
@@ -49,6 +51,11 @@ pub struct CommState {
     /// Execution states `E`: local VP has recorded its offsets (and
     /// initialized its border blocks) this superstep.
     pub executed: Vec<AtomicBool>,
+    /// Per-local-VP "payload already delivered" flags for the pooled
+    /// rooted-collective fan-out: the deliverer sets them before
+    /// signalling; a woken receiver that finds its flag set skips its
+    /// own copy (and always clears the flag for the next collective).
+    pub delivered: Vec<AtomicBool>,
     /// Boundary-block cache `M` (§6.2).
     pub border: BorderCache,
     /// The shared buffer (σ bytes).
@@ -75,6 +82,7 @@ impl CommState {
         CommState {
             table: Mutex::new(vec![vec![(0, 0); cfg.v]; local]),
             executed: (0..local).map(|_| AtomicBool::new(false)).collect(),
+            delivered: (0..local).map(|_| AtomicBool::new(false)).collect(),
             border: BorderCache::new(cfg.block()),
             shared_buf: Mutex::new(vec![0u8; cfg.sigma as usize]),
             sig_root: EmSignal::new(),
@@ -104,6 +112,143 @@ impl std::fmt::Debug for CommState {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("CommState").finish()
     }
+}
+
+/// One local delivery staged for the pool: receiver, provenance, and a
+/// payload living in memory the caller keeps alive (and unmutated)
+/// until the batch is joined.
+pub(crate) struct LocalMsg {
+    /// Local index of the receiving VP.
+    pub dst_local: usize,
+    /// Global rank of the sender (indexes the offset table).
+    pub src_global: usize,
+    /// Payload base (partition memory / a decode buffer the caller owns).
+    pub ptr: *const u8,
+    /// Payload length in bytes.
+    pub len: usize,
+}
+
+// SAFETY: the raw pointer is only dereferenced inside a batch that the
+// submitting thread joins (inside `deliver_local_batch`) before the
+// backing memory can move, mutate, or die.
+unsafe impl Send for LocalMsg {}
+
+/// Deliver a set of local messages: fanned out across the engine's
+/// shared worker pool — grouped by receiver, so per-receiver writes stay
+/// ordered — when [`NodeShared::pooled_delivery`] holds, serially
+/// otherwise.  Per-receiver disjointness of the written regions is the
+/// existing offset-table partitioning; the pool only changes *who*
+/// performs the memcpys.  Pool batches are metered into `Metrics`
+/// (`pool_jobs`/`pool_batches`).
+pub(crate) fn deliver_local_batch(sh: &Arc<NodeShared>, msgs: Vec<LocalMsg>) -> Result<()> {
+    if msgs.is_empty() {
+        return Ok(());
+    }
+    if !(sh.pooled_delivery() && msgs.len() > 1) {
+        for m in msgs {
+            let payload = unsafe { std::slice::from_raw_parts(m.ptr, m.len) };
+            alltoallv::deliver_local(sh, m.dst_local, m.src_global, payload)?;
+        }
+        return Ok(());
+    }
+    let pool = sh.pool.as_ref().expect("pooled_delivery implies a pool").clone();
+    let mut groups: std::collections::BTreeMap<usize, Vec<LocalMsg>> = Default::default();
+    for m in msgs {
+        groups.entry(m.dst_local).or_default().push(m);
+    }
+    let jobs: Vec<_> = groups
+        .into_values()
+        .map(|group| {
+            let sh = sh.clone();
+            move || -> Result<()> {
+                for m in group {
+                    let payload = unsafe { std::slice::from_raw_parts(m.ptr, m.len) };
+                    alltoallv::deliver_local(&sh, m.dst_local, m.src_global, payload)?;
+                }
+                Ok(())
+            }
+        })
+        .collect();
+    sh.metrics.pool_batch(jobs.len() as u64);
+    for r in pool.run(jobs) {
+        r?;
+    }
+    Ok(())
+}
+
+/// Rooted-collective fan-out (EM-Bcast / EM-Scatter): deliver the
+/// payload to every local receiver that already recorded its receive
+/// region in the offset table (`executed[dst]`), then mark them
+/// `delivered` so they skip their own copy after the signal.  Late
+/// receivers — not yet recorded when the deliverer scans — keep the
+/// copy-it-yourself path, the same `E[i]` structure as EM-Alltoallv's
+/// internal superstep 1.  Only meaningful under
+/// [`NodeShared::pooled_delivery`]; callers must invoke this *before*
+/// signalling the waiters (they are quiescent until then, which is what
+/// makes the cross-context writes race-free).
+///
+/// `slot` maps a receiver's `(dst_local, recorded_len)` to the payload
+/// byte offset its `recorded_len` bytes start at.
+pub(crate) fn fanout_rooted(
+    sh: &Arc<NodeShared>,
+    src_global: usize,
+    skip_local: usize,
+    payload: &[u8],
+    slot: impl Fn(usize, u64) -> usize,
+) -> Result<()> {
+    let vpp = sh.v_per_p();
+    // One table acquisition for the whole scan (pool jobs re-read their
+    // entry inside deliver_local; this keeps the hot path at one lock
+    // per job instead of two).
+    let recorded: Vec<(usize, u64)> = {
+        let t = sh.comm.table.lock().unwrap();
+        (0..vpp)
+            .filter(|&dst| {
+                dst != skip_local && sh.comm.executed[dst].load(Ordering::Acquire)
+            })
+            .map(|dst| (dst, t[dst][src_global].1))
+            .collect()
+    };
+    let mut msgs = Vec::new();
+    let mut covered = Vec::new();
+    for (dst, rlen) in recorded {
+        let off = slot(dst, rlen);
+        if off + rlen as usize > payload.len() {
+            return Err(crate::error::Error::comm(format!(
+                "rooted fan-out: receiver {dst} slot ({off}, {rlen}) exceeds payload {} B",
+                payload.len()
+            )));
+        }
+        msgs.push(LocalMsg {
+            dst_local: dst,
+            src_global,
+            // SAFETY: in-bounds by the check above; `payload` outlives
+            // the joined batch below.
+            ptr: unsafe { payload.as_ptr().add(off) },
+            len: rlen as usize,
+        });
+        covered.push(dst);
+    }
+    deliver_local_batch(sh, msgs)?;
+    for dst in covered {
+        sh.comm.delivered[dst].store(true, Ordering::Release);
+    }
+    Ok(())
+}
+
+/// Receiver half of the pooled rooted-collective handshake: record this
+/// VP's receive region + `executed` flag so the deliverer can cover it.
+/// Call before blocking on the root/first-thread signal.
+pub(crate) fn record_rooted_recv(sh: &NodeShared, local: usize, src_global: usize, recv: Region) {
+    sh.comm.table.lock().unwrap()[local][src_global] = recv;
+    sh.comm.executed[local].store(true, Ordering::Release);
+}
+
+/// Other receiver half, after waking: clear the recording and report
+/// whether the deliverer already covered this VP (skip the copy then).
+pub(crate) fn take_rooted_delivery(sh: &NodeShared, local: usize) -> bool {
+    sh.comm.executed[local].store(false, Ordering::Release);
+    sh.comm.delivered[local].swap(false, Ordering::AcqRel)
 }
 
 impl crate::vp::Vp {

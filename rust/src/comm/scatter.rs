@@ -5,8 +5,13 @@
 //! copies the *local* portion into the shared buffer and signals; remote
 //! node slabs go out in a single node-level scatter received by each
 //! node's first thread.
+//!
+//! Under pooled delivery the same record/fan-out/skip handshake as
+//! EM-Bcast applies (see [`crate::comm::bcast`]): the root or first
+//! thread writes every recorded receiver's slot into its context on the
+//! shared pool before signalling; covered receivers skip their copy.
 
-use super::Region;
+use super::{fanout_rooted, record_rooted_recv, take_rooted_delivery, Region};
 use crate::error::{Error, Result};
 use crate::metrics::IoClass;
 use crate::sync::{em_first_thread, em_signal_threads, em_wait_for_root};
@@ -30,6 +35,7 @@ pub fn scatter(vp: &mut Vp, root: usize, send: Region, recv: Region) -> Result<(
         )));
     }
 
+    let pooled = sh.pooled_delivery();
     if me == root {
         if (send.1 as usize) < omega as usize * cfg.v {
             return Err(Error::comm("scatter: root send region too small"));
@@ -38,14 +44,25 @@ pub fn scatter(vp: &mut Vp, root: usize, send: Region, recv: Region) -> Result<(
         let all =
             vp.slice::<u8>(crate::vp::VpMem::from_raw(send.0, send.1 as usize))?.to_vec();
         // Local slab into the shared buffer.
+        let base = root_node * v_per_p * omega as usize;
         {
-            let base = root_node * v_per_p * omega as usize;
             let mut buf = sh.comm.shared_buf.lock().unwrap();
             buf[..node_slab].copy_from_slice(&all[base..base + node_slab]);
             sh.comm.note_shared_use(node_slab);
         }
+        // Pool fan-out to recorded receivers before the signal wakes
+        // them; the signal must fire even on error (deadlock otherwise).
+        let fan = if pooled {
+            fanout_rooted(&sh, me, vp.local_rank(), &all[base..base + node_slab], |dst, rlen| {
+                dst * rlen as usize
+            })
+        } else {
+            Ok(())
+        };
         em_signal_threads(&sh.comm.sig_root, v_per_p, true);
-        // Remote slabs via one node-level scatter.
+        // Remote slabs via one node-level scatter — before propagating
+        // any fan-out error: remote first threads are already blocked in
+        // their matching switch call.
         if cfg.p > 1 {
             let slabs: Vec<Vec<u8>> = (0..cfg.p)
                 .map(|n| {
@@ -55,13 +72,24 @@ pub fn scatter(vp: &mut Vp, root: usize, send: Region, recv: Region) -> Result<(
                 .collect();
             sh.switch.scatter(my_node, root_node, Some(slabs));
         }
+        fan?;
         // Root's own message.
         copy_own_slot(vp, recv, omega)?;
     } else if my_node == root_node {
         vp.ensure_resident()?;
+        let local = vp.local_rank();
+        if pooled {
+            record_rooted_recv(&sh, local, root, recv);
+        }
         let swapped = em_wait_for_root(&sh.comm.sig_root, vp, root_local, v_per_p)?;
-        deliver_slot(vp, recv, omega, swapped)?;
+        if !(pooled && take_rooted_delivery(&sh, local)) {
+            deliver_slot(vp, recv, omega, swapped)?;
+        }
     } else {
+        let local = vp.local_rank();
+        if pooled {
+            record_rooted_recv(&sh, local, root, recv);
+        }
         if cfg.p > 1 && em_first_thread(&sh.comm.sig_first, v_per_p) {
             let slab = sh.switch.scatter(my_node, root_node, None);
             {
@@ -69,10 +97,18 @@ pub fn scatter(vp: &mut Vp, root: usize, send: Region, recv: Region) -> Result<(
                 buf[..slab.len()].copy_from_slice(&slab);
                 sh.comm.note_shared_use(slab.len());
             }
+            let fan = if pooled {
+                fanout_rooted(&sh, root, local, &slab, |dst, rlen| dst * rlen as usize)
+            } else {
+                Ok(())
+            };
             em_signal_threads(&sh.comm.sig_first, v_per_p, false);
+            fan?;
         }
         vp.ensure_resident()?;
-        deliver_slot(vp, recv, omega, false)?;
+        if !(pooled && take_rooted_delivery(&sh, local)) {
+            deliver_slot(vp, recv, omega, false)?;
+        }
     }
 
     if vp.resident {

@@ -174,6 +174,17 @@ pub struct SimConfig {
     pub disk_dir: Option<PathBuf>,
     /// Cost-model coefficients.
     pub cost: CostCoeffs,
+    /// Worker threads in the per-node compute pool driving the engine's
+    /// parallel phases (delivery fan-out) and `stxxl_sort` run
+    /// formation; `0` resolves to `k` — one worker per memory
+    /// partition.  (`empq` sizes its own pool at one worker per
+    /// insertion heap, i.e. always `k`.)
+    pub compute_threads: usize,
+    /// Master switch for the parallel phases.  `false` forces every
+    /// phase onto its serial path (A/B benchmarking, the forced-serial
+    /// CI leg); the `PEMS2_FORCE_SERIAL` environment variable overrides
+    /// it to `false` process-wide — see [`force_serial_env`].
+    pub parallel_phases: bool,
     /// Record per-thread per-superstep timelines (Figs. 8.12–8.14).
     pub record_timeline: bool,
     /// Use the XLA/PJRT artifacts for computation supersteps when available.
@@ -207,6 +218,24 @@ impl SimConfig {
     /// Bytes of context space per node (`vµ/P`, slot-aligned).
     pub fn context_space_per_node(&self) -> u64 {
         self.vps_per_node() as u64 * self.ctx_slot()
+    }
+
+    /// Resolved compute-pool width: [`SimConfig::compute_threads`],
+    /// defaulting to `k` when left at 0.
+    pub fn pool_threads(&self) -> usize {
+        if self.compute_threads == 0 {
+            self.k
+        } else {
+            self.compute_threads
+        }
+    }
+
+    /// True when parallelizable phases should run on the shared worker
+    /// pool: the config switch is on and `PEMS2_FORCE_SERIAL` is not
+    /// set.  Subsystems combine this with their own width condition
+    /// (a 1-wide pool buys nothing).
+    pub fn phases_parallel(&self) -> bool {
+        self.parallel_phases && !force_serial_env()
     }
 
     /// Bytes of indirect area per node (PEMS1: slots for **all** `v`
@@ -288,6 +317,19 @@ impl SimConfig {
     }
 }
 
+/// True when `PEMS2_FORCE_SERIAL` is set to a truthy value
+/// (`1`/`true`/`yes`): a process-wide override forcing the serial path
+/// of every parallelizable phase, regardless of
+/// [`SimConfig::parallel_phases`].  CI runs the whole test suite once
+/// per mode with this, so both paths stay green.
+pub fn force_serial_env() -> bool {
+    truthy(std::env::var("PEMS2_FORCE_SERIAL").ok())
+}
+
+fn truthy(v: Option<String>) -> bool {
+    matches!(v.as_deref(), Some("1") | Some("true") | Some("yes"))
+}
+
 /// Builder for [`SimConfig`].
 #[derive(Debug, Clone)]
 pub struct SimConfigBuilder {
@@ -314,6 +356,8 @@ impl Default for SimConfigBuilder {
                 ordered_rounds: true,
                 disk_dir: None,
                 cost: CostCoeffs::default(),
+                compute_threads: 0,
+                parallel_phases: true,
                 record_timeline: false,
                 use_xla: false,
                 seed: 0xF00D,
@@ -364,6 +408,10 @@ impl SimConfigBuilder {
         ordered_rounds: bool,
         /// Cost coefficients.
         cost: CostCoeffs,
+        /// Compute-pool width (0 = `k`).
+        compute_threads: usize,
+        /// Parallel-phases master switch.
+        parallel_phases: bool,
         /// Record timelines.
         record_timeline: bool,
         /// Enable XLA compute path.
@@ -450,6 +498,30 @@ mod tests {
         let p1_1 = mk(1, DeliveryMode::Pems1Indirect).disk_space_per_node();
         let p1_4 = mk(4, DeliveryMode::Pems1Indirect).disk_space_per_node();
         assert!(p1_4 > p1_1); // PEMS1: grows with total v
+    }
+
+    #[test]
+    fn compute_pool_knobs_resolve() {
+        let c = SimConfig::builder().v(8).k(4).build().unwrap();
+        assert_eq!(c.compute_threads, 0, "default: derive from k");
+        assert_eq!(c.pool_threads(), 4);
+        let c = SimConfig::builder().v(8).k(4).compute_threads(3).build().unwrap();
+        assert_eq!(c.pool_threads(), 3);
+        // The master switch defaults on; phases_parallel honours it.
+        let c = SimConfig::builder().v(8).k(2).parallel_phases(false).build().unwrap();
+        assert!(!c.phases_parallel());
+    }
+
+    #[test]
+    fn force_serial_env_parses_truthy_values() {
+        // The env var itself is process-global, so the test exercises the
+        // parser on values rather than mutating the environment.
+        assert!(truthy(Some("1".into())));
+        assert!(truthy(Some("true".into())));
+        assert!(truthy(Some("yes".into())));
+        assert!(!truthy(Some("0".into())));
+        assert!(!truthy(Some("".into())));
+        assert!(!truthy(None));
     }
 
     #[test]

@@ -70,13 +70,15 @@ impl DiskSet {
         driver: Arc<dyn IoDriver>,
         metrics: Arc<Metrics>,
     ) -> Result<DiskSet> {
+        // Unique per-instance subdirectory (pid + process-wide serial)
+        // even under a user-provided `disk_dir`: two simultaneous
+        // DiskSets sharing a `--disk-dir` (an engine run plus an EmPq,
+        // say) must not collide on a fixed `node{N}` name, and the
+        // first drop must not delete the survivor's backing files.
+        let leaf = format!("pems2-{}-{}-node{node}", std::process::id(), unique_serial());
         let dir = match &cfg.disk_dir {
-            Some(d) => d.join(format!("node{node}")),
-            None => std::env::temp_dir().join(format!(
-                "pems2-{}-{}-node{node}",
-                std::process::id(),
-                unique_serial()
-            )),
+            Some(d) => d.join(leaf),
+            None => std::env::temp_dir().join(leaf),
         };
         std::fs::create_dir_all(&dir)?;
         let total = cfg.disk_space_per_node();
@@ -283,9 +285,10 @@ impl Drop for DiskSet {
     fn drop(&mut self) {
         // Best-effort cleanup: wait out deferred writes, then remove the
         // backing files.  They are scratch state with no meaning across
-        // runs, so the per-node directory is always ours to delete — for
-        // a user-provided `disk_dir` that is the `node{N}` subdirectory
-        // we created (the parent itself is preserved).
+        // runs, so the per-instance directory is always ours to delete —
+        // for a user-provided `disk_dir` that is the unique
+        // `pems2-<pid>-<serial>-node{N}` subdirectory we created (the
+        // parent itself is preserved).
         let _ = self.driver.flush_all();
         let _ = std::fs::remove_dir_all(&self.dir);
     }
@@ -478,6 +481,39 @@ mod tests {
         }
         assert!(!node_dir.exists(), "node dir must be removed on drop");
         assert!(parent.exists(), "user-provided parent must be preserved");
+        std::fs::remove_dir_all(&parent).ok();
+    }
+
+    #[test]
+    fn simultaneous_disk_sets_sharing_a_disk_dir_do_not_collide() {
+        // Regression (ROADMAP): two live DiskSets under one user-provided
+        // `disk_dir` used to map the same `node0` subdirectory, so the
+        // first drop deleted the survivor's backing files.
+        let parent = std::env::temp_dir()
+            .join(format!("pems2-shared-{}-{}", std::process::id(), unique_serial()));
+        std::fs::create_dir_all(&parent).unwrap();
+        let cfg = SimConfig::builder()
+            .v(4)
+            .mu(1 << 16)
+            .block(4096)
+            .disk_dir(parent.clone())
+            .build()
+            .unwrap();
+        let a = DiskSet::create(&cfg, 0, Arc::new(UnixIo::new()), Arc::new(Metrics::new()))
+            .unwrap();
+        let b = DiskSet::create(&cfg, 0, Arc::new(UnixIo::new()), Arc::new(Metrics::new()))
+            .unwrap();
+        assert_ne!(a.dir(), b.dir(), "same (disk_dir, node) must get distinct subdirs");
+        let data = vec![7u8; 8192];
+        b.write(IoClass::Swap, 0, &data).unwrap();
+        drop(a);
+        // The survivor's backing files are intact and readable.
+        assert!(b.dir().exists(), "first drop must not delete the survivor's dir");
+        let mut back = vec![0u8; data.len()];
+        b.read(IoClass::Swap, 0, &mut back).unwrap();
+        assert_eq!(back, data, "survivor's data must be untouched");
+        drop(b);
+        assert!(parent.exists());
         std::fs::remove_dir_all(&parent).ok();
     }
 }

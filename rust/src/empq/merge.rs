@@ -20,11 +20,20 @@
 //! [`Record`] (`Pod + Ord` + key projection) — shared with [`crate::empq`]
 //! and the `baseline/stxxl_sort` merge pass, so a `u32` sort run and a
 //! 24-byte SSSP record queue go through identical machinery.
+//!
+//! The *spill pipeline* also lives here as two free functions shared by
+//! the priority queue's spill path and the sort baseline's run
+//! formation: [`sort_segments`] (concurrent segment sorts on a
+//! [`WorkerPool`], with an overlap window for caller bookkeeping) and
+//! [`merge_write_segments`] (tournament-merge the sorted segments and
+//! stream the result out in block-sized chunks, so merge CPU overlaps
+//! the async driver's write-behind).
 
 use crate::disk::DiskSet;
 use crate::error::Result;
-use crate::metrics::IoClass;
-use crate::util::bytes::as_bytes_mut;
+use crate::metrics::{IoClass, Metrics};
+use crate::util::bytes::{as_bytes, as_bytes_mut};
+use crate::util::pool::WorkerPool;
 use crate::util::record::Record;
 
 /// Block-buffered read cursor over one sorted run stored in a [`DiskSet`].
@@ -354,6 +363,111 @@ impl<T: Record> MultiwayMerge<T> {
     }
 }
 
+/// Sort each segment, concurrently on `pool` when given (one job per
+/// segment, metered into `metrics` as one batch), serially in place
+/// otherwise.  `overlap` runs on the *calling* thread between job
+/// submission and join — the spill pipeline's bookkeeping window
+/// (merge-buffer resizing, extent accounting) that hides behind the
+/// sorts.  In the serial path `overlap` runs after the sorts, so its
+/// effects land at the same point either way.
+pub fn sort_segments<T: Record>(
+    segments: Vec<Vec<T>>,
+    pool: Option<&WorkerPool>,
+    metrics: &Metrics,
+    overlap: impl FnOnce(),
+) -> Vec<Vec<T>> {
+    match pool {
+        Some(pool) if segments.len() > 1 => {
+            metrics.pool_batch(segments.len() as u64);
+            let handle = pool.spawn_batch(
+                segments
+                    .into_iter()
+                    .map(|mut s| {
+                        move || {
+                            s.sort_unstable();
+                            s
+                        }
+                    })
+                    .collect::<Vec<_>>(),
+            );
+            overlap();
+            handle.join()
+        }
+        _ => {
+            let mut segments = segments;
+            for s in segments.iter_mut() {
+                s.sort_unstable();
+            }
+            overlap();
+            segments
+        }
+    }
+}
+
+/// Tournament-merge sorted `segments` and stream the result to
+/// `[base, base + total·SIZE)` in `chunk_cap`-element writes — sized to
+/// one disk block by callers, so the async driver's write-behind absorbs
+/// finished chunks while the merge produces the next.  Returns the first
+/// `head_cap` merged elements (the resident head the priority queue
+/// hands to [`RunCursor::with_resident_head`]; pass 0 when not needed).
+///
+/// Segments with equal elements merge deterministically (ties break by
+/// segment index), so the streamed bytes are a pure function of the
+/// multiset of inputs — the serial/parallel equivalence the tests pin.
+pub fn merge_write_segments<T: Record>(
+    segments: &[Vec<T>],
+    disks: &DiskSet,
+    base: u64,
+    class: IoClass,
+    chunk_cap: usize,
+    head_cap: usize,
+) -> Result<Vec<T>> {
+    debug_assert!(segments.iter().all(|s| s.windows(2).all(|w| w[0] <= w[1])));
+    let total: usize = segments.iter().map(Vec::len).sum();
+    let chunk_cap = chunk_cap.max(1);
+    let head_cap = head_cap.min(total);
+    let mut head: Vec<T> = Vec::with_capacity(head_cap);
+    let mut written: u64 = 0;
+    let live: Vec<&Vec<T>> = segments.iter().filter(|s| !s.is_empty()).collect();
+    if live.len() <= 1 {
+        // Zero or one non-empty segment: already sorted, stream it out.
+        let empty = Vec::new();
+        let s: &Vec<T> = live.first().copied().unwrap_or(&empty);
+        head.extend_from_slice(&s[..head_cap]);
+        for chunk in s.chunks(chunk_cap) {
+            disks.write(class, base + written, as_bytes(chunk))?;
+            written += (chunk.len() * T::SIZE) as u64;
+        }
+    } else {
+        let mut pos = vec![0usize; live.len()];
+        let mut keys: Vec<Option<T>> = live.iter().map(|s| s.first().copied()).collect();
+        let mut tree = TournamentTree::new(&keys);
+        let mut out: Vec<T> = Vec::with_capacity(chunk_cap.min(total));
+        loop {
+            let w = tree.winner();
+            let Some(e) = keys.get(w).copied().flatten() else { break };
+            pos[w] += 1;
+            keys[w] = live[w].get(pos[w]).copied();
+            tree.update(&keys);
+            if head.len() < head_cap {
+                head.push(e);
+            }
+            out.push(e);
+            if out.len() == chunk_cap {
+                disks.write(class, base + written, as_bytes(&out))?;
+                written += (out.len() * T::SIZE) as u64;
+                out.clear();
+            }
+        }
+        if !out.is_empty() {
+            disks.write(class, base + written, as_bytes(&out))?;
+            written += (out.len() * T::SIZE) as u64;
+        }
+    }
+    debug_assert_eq!(written, (total * T::SIZE) as u64);
+    Ok(head)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -603,5 +717,68 @@ mod tests {
         assert_eq!(merge.next(&disks).unwrap(), Some(5));
         assert_eq!(merge.next(&disks).unwrap(), None);
         assert_eq!(merge.retire_exhausted(), vec![(1024, 12)]);
+    }
+
+    // ------------------------------------------- shared spill pipeline
+
+    fn random_segments(seed: u64, counts: &[usize]) -> Vec<Vec<u32>> {
+        let mut rng = XorShift64::new(seed);
+        counts
+            .iter()
+            .map(|&n| (0..n).map(|_| rng.next_u32() % 10_000).collect())
+            .collect()
+    }
+
+    #[test]
+    fn sort_segments_pool_and_serial_agree_and_meter() {
+        let segments = random_segments(9, &[100, 1, 0, 257, 64]);
+        let pool = WorkerPool::new(3);
+        let metrics = Metrics::new();
+        let mut overlap_ran = false;
+        let par = sort_segments(segments.clone(), Some(&pool), &metrics, || {
+            overlap_ran = true;
+        });
+        assert!(overlap_ran);
+        let ser = sort_segments(segments, None, &metrics, || ());
+        assert_eq!(par, ser, "sort mode must not change segment contents");
+        assert!(par.iter().all(|s| s.windows(2).all(|w| w[0] <= w[1])));
+        let snap = metrics.snapshot();
+        assert_eq!(snap.pool_batches, 1, "only the pooled call meters");
+        assert_eq!(snap.pool_jobs, 5, "one job per segment");
+    }
+
+    #[test]
+    fn merge_write_segments_round_trips_and_returns_head() {
+        let disks = mk_disks(1 << 20);
+        let mut segments = random_segments(21, &[500, 0, 33, 1000]);
+        for s in segments.iter_mut() {
+            s.sort_unstable();
+        }
+        let head =
+            merge_write_segments(&segments, &disks, 64, IoClass::Swap, 100, 7).unwrap();
+        let mut want: Vec<u32> = segments.concat();
+        want.sort_unstable();
+        assert_eq!(head, want[..7].to_vec(), "head = first merged elements");
+        let mut back = vec![0u32; want.len()];
+        disks.read(IoClass::Swap, 64, as_bytes_mut(&mut back)).unwrap();
+        assert_eq!(back, want, "streamed output is the full sorted merge");
+    }
+
+    #[test]
+    fn merge_write_segments_single_segment_fast_path() {
+        let disks = mk_disks(1 << 20);
+        let sorted: Vec<u32> = (0..777).collect();
+        // One real segment among empties takes the no-tree path.
+        let segments = vec![Vec::new(), sorted.clone(), Vec::new()];
+        let head =
+            merge_write_segments(&segments, &disks, 0, IoClass::Swap, 64, 3).unwrap();
+        assert_eq!(head, vec![0, 1, 2]);
+        let mut back = vec![0u32; sorted.len()];
+        disks.read(IoClass::Swap, 0, as_bytes_mut(&mut back)).unwrap();
+        assert_eq!(back, sorted);
+        // All-empty input writes nothing and returns an empty head.
+        let head = merge_write_segments::<u32>(&[Vec::new()], &disks, 0, IoClass::Swap, 64, 8)
+            .unwrap();
+        assert!(head.is_empty());
     }
 }

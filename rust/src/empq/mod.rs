@@ -49,7 +49,7 @@ use crate::disk::DiskSet;
 use crate::error::{Error, Result};
 use crate::io::{aio::AsyncIo, unix::UnixIo, IoDriver};
 use crate::metrics::{CostModel, IoClass, Metrics, MetricsSnapshot};
-use crate::util::bytes::{as_bytes, Pod};
+use crate::util::bytes::Pod;
 use crate::util::pool::WorkerPool;
 use crate::util::record::Record;
 use std::cmp::Reverse;
@@ -229,9 +229,11 @@ impl<T: Record> EmPq<T> {
     /// Create a queue: RAM budget `cfg.k * cfg.mu` (half for insertion
     /// heaps, half for merge buffers), disks/layout/driver per `cfg`,
     /// spill arena sized for `capacity` concurrently-spilled elements.
-    /// Parallel spilling defaults to on when `cfg.k > 1`; the worker pool
-    /// (one thread per insertion heap) spawns lazily at the first
-    /// parallel spill and is reused for the queue's lifetime.
+    /// Parallel spilling defaults to the unified phase switch
+    /// ([`SimConfig::phases_parallel`], which also honours
+    /// `PEMS2_FORCE_SERIAL`) whenever `cfg.k > 1`; the worker pool (one
+    /// thread per insertion heap) spawns lazily at the first parallel
+    /// spill and is reused for the queue's lifetime.
     pub fn new(cfg: &SimConfig, capacity: u64) -> Result<EmPq<T>> {
         let metrics = Arc::new(Metrics::new());
         let driver: Arc<dyn IoDriver> = match cfg.io {
@@ -265,7 +267,7 @@ impl<T: Record> EmPq<T> {
             ext,
             free: ExtentFreeList::default(),
             pool: None,
-            parallel_spill: k > 1,
+            parallel_spill: cfg.phases_parallel() && k > 1,
             arena_at: 0,
             arena_cap,
             arena_reused: 0,
@@ -359,9 +361,11 @@ impl<T: Record> EmPq<T> {
 
     // ------------------------------------------------------------- config
 
-    /// Toggle the parallel spill pipeline.  Off = the serial path
-    /// (concatenate, one `sort_unstable`, stream out), kept so benches can
-    /// A/B the pool against the single-threaded baseline.
+    /// Toggle the parallel spill pipeline, overriding the
+    /// [`SimConfig::phases_parallel`] default captured at construction.
+    /// Off = the serial path (concatenate, one `sort_unstable`, stream
+    /// out), kept so benches can A/B the pool against the
+    /// single-threaded baseline.
     pub fn set_spill_parallel(&mut self, on: bool) {
         self.parallel_spill = on;
     }
@@ -681,86 +685,39 @@ impl<T: Record> EmPq<T> {
     /// the result to `[base, base + total·SIZE)` in block-sized chunks,
     /// then register the new run with a resident head.
     ///
-    /// The pipeline overlap lives here: while pool workers sort, the
-    /// caller thread resizes the existing runs' merge buffers; while the
+    /// The pipeline itself is the shared [`merge::sort_segments`] /
+    /// [`merge::merge_write_segments`] pair (also driving `stxxl_sort`
+    /// run formation): while pool workers sort, the caller thread
+    /// resizes the existing runs' merge buffers; while the
     /// tournament-tree merge produces chunks, the async driver's
     /// write-behind absorbs the finished ones.
-    fn write_segments_at(&mut self, base: u64, mut segments: Vec<Vec<T>>) -> Result<()> {
+    fn write_segments_at(&mut self, base: u64, segments: Vec<Vec<T>>) -> Result<()> {
         let total: usize = segments.iter().map(Vec::len).sum();
         debug_assert!(total > 0, "write_segments_at needs elements");
         let cap = self.next_run_buf_cap();
-        if self.parallel_spill && segments.len() > 1 {
-            let k = self.heaps.len();
-            let pool = self.pool.get_or_insert_with(|| WorkerPool::new(k));
-            let handle = pool.spawn_batch(
-                segments
-                    .into_iter()
-                    .map(|mut s| {
-                        move || {
-                            s.sort_unstable();
-                            s
-                        }
-                    })
-                    .collect::<Vec<_>>(),
-            );
-            // Overlapped bookkeeping: existing runs refill at the tighter
-            // granularity from now on (already-buffered data drains first
-            // — a bounded transient).
-            self.ext.set_buf_caps(cap);
-            segments = handle.join();
-        } else {
-            for s in segments.iter_mut() {
-                s.sort_unstable();
-            }
-            self.ext.set_buf_caps(cap);
-        }
-        debug_assert!(segments
-            .iter()
-            .all(|s| s.windows(2).all(|w| w[0] <= w[1])));
-
-        let head_cap = cap.min(total);
-        // One disk block per write (`cap` never exceeds it — see
-        // `next_run_buf_cap`'s clamp).
-        let chunk_cap = self.run_buf_cap;
-        // The run's head stays resident so the merge needs no immediate
-        // read-back (a fresh right-sized Vec, not a slice of the run).
-        let mut head: Vec<T> = Vec::with_capacity(head_cap);
-        let mut written: u64 = 0;
-        if segments.len() == 1 {
-            let s = &segments[0];
-            head.extend_from_slice(&s[..head_cap]);
-            for chunk in s.chunks(chunk_cap) {
-                self.disks.write(IoClass::Swap, base + written, as_bytes(chunk))?;
-                written += (chunk.len() * T::SIZE) as u64;
-            }
-        } else {
-            let mut pos = vec![0usize; segments.len()];
-            let mut keys: Vec<Option<T>> =
-                segments.iter().map(|s| s.first().copied()).collect();
-            let mut tree = TournamentTree::new(&keys);
-            let mut out: Vec<T> = Vec::with_capacity(chunk_cap.min(total));
-            loop {
-                let w = tree.winner();
-                let Some(e) = keys.get(w).copied().flatten() else { break };
-                pos[w] += 1;
-                keys[w] = segments[w].get(pos[w]).copied();
-                tree.update(&keys);
-                if head.len() < head_cap {
-                    head.push(e);
-                }
-                out.push(e);
-                if out.len() == chunk_cap {
-                    self.disks.write(IoClass::Swap, base + written, as_bytes(&out))?;
-                    written += (out.len() * T::SIZE) as u64;
-                    out.clear();
-                }
-            }
-            if !out.is_empty() {
-                self.disks.write(IoClass::Swap, base + written, as_bytes(&out))?;
-                written += (out.len() * T::SIZE) as u64;
-            }
-        }
-        debug_assert_eq!(written, (total * T::SIZE) as u64);
+        let segments = {
+            // Disjoint field borrows: the pool sorts while `ext` resizes
+            // its merge buffers (the overlapped-bookkeeping window);
+            // already-buffered data drains first — a bounded transient.
+            let EmPq { pool, heaps, parallel_spill, metrics, ext, .. } = self;
+            let p = if *parallel_spill && segments.len() > 1 {
+                Some(&*pool.get_or_insert_with(|| WorkerPool::new(heaps.len())))
+            } else {
+                None
+            };
+            merge::sort_segments(segments, p, metrics, || ext.set_buf_caps(cap))
+        };
+        // One disk block per write chunk (`cap` never exceeds it — see
+        // `next_run_buf_cap`'s clamp); the run's head stays resident so
+        // the merge needs no immediate read-back.
+        let head = merge::merge_write_segments(
+            &segments,
+            &self.disks,
+            base,
+            IoClass::Swap,
+            self.run_buf_cap,
+            cap.min(total),
+        )?;
         self.runs_created += 1;
         let cursor =
             RunCursor::with_resident_head(base, total as u64, cap, IoClass::Swap, head);
@@ -1038,7 +995,13 @@ mod tests {
     fn parallel_spill_spawns_the_pool_lazily() {
         let cfg = tiny_cfg();
         let mut pq: EmPq = EmPq::new(&cfg, 1 << 14).unwrap();
-        assert!(pq.spill_parallel(), "k=2 defaults to the pool pipeline");
+        assert_eq!(
+            pq.spill_parallel(),
+            cfg.phases_parallel(),
+            "k=2 default must follow the unified phase switch"
+        );
+        // Pin the mode so the test holds under PEMS2_FORCE_SERIAL too.
+        pq.set_spill_parallel(true);
         assert_eq!(pq.pool_threads(), 0, "no worker threads before a spill");
         for i in 0..=pq.ram_capacity() as u64 {
             pq.push(Entry::new(i, 0)).unwrap();

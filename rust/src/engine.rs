@@ -17,6 +17,7 @@ use crate::metrics::{cost::ChargedTime, CostModel, Metrics, MetricsSnapshot, Tim
 use crate::net::Switch;
 use crate::runtime::Compute;
 use crate::sync::SuperstepBarrier;
+use crate::util::pool::WorkerPool;
 use crate::vp::{NodeShared, PartitionGate, Store, Vp};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -77,6 +78,14 @@ pub fn run_arc(
         let store = Store::create(&cfg, disks, metrics.clone())?;
         let vpp = cfg.vps_per_node();
         let rounds = vpp.div_ceil(cfg.k);
+        // The node's compute pool: one engine-owned resource shared by
+        // every parallel phase (delivery fan-out today), created once and
+        // reused for the whole run.  Absent in serial mode, when a
+        // 1-wide pool would buy nothing, and for explicit-I/O stores
+        // (whose delivery stays serial — see NodeShared::pooled_delivery
+        // — so the workers would only idle).
+        let pool = (cfg.phases_parallel() && cfg.pool_threads() > 1 && !cfg.io.is_explicit())
+            .then(|| Arc::new(WorkerPool::new(cfg.pool_threads())));
         let shared = NodeShared {
             cfg: cfg.clone(),
             node,
@@ -92,6 +101,7 @@ pub fn run_arc(
             switch: switch.clone(),
             comm: CommState::new(&cfg),
             compute: compute.clone(),
+            pool,
         };
         nodes.push(Arc::new(shared));
     }

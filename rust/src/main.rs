@@ -84,6 +84,10 @@ SIMULATION FLAGS (Appendix B.3)
   --layout L      striped | per-vp
   --fragmented    emulate ext3-style file fragmentation (Fig. C.1)
   --unordered     disable ID-ordered rounds (Def. 6.5.1)
+  --threads N     compute-pool workers per node (0 = k)    [0]
+  --serial        force the serial path of every parallel phase (delivery
+                  fan-out, sort run formation, empq spills); the
+                  PEMS2_FORCE_SERIAL=1 env var does the same globally
   --timeline      record per-thread superstep timelines (Figs. 8.12-8.14)
   --xla           run computation supersteps on the AOT XLA kernels
   --seed N        workload seed
@@ -119,6 +123,7 @@ fn finish(report: &pems2::engine::RunReport, cli: &Cli, verified: bool) -> Resul
     println!("net_relations      {}", m.net_relations);
     println!("supersteps         {}", m.supersteps);
     println!("mmap_touched       {}", human_bytes(m.mmap_touched_bytes));
+    println!("pool_jobs          {} ({} batches)", m.pool_jobs, m.pool_batches);
     println!("xla_active         {}", report.xla_active);
     println!("verified           {verified}");
     if let Some(path) = cli.options.get("timeline-out") {
@@ -267,6 +272,10 @@ fn cmd_stxxl_sort(cli: &Cli) -> Result<()> {
     println!("charged_seconds    {:.3}", r.charged);
     println!("io_volume          {}", human_bytes(r.metrics.total_disk_bytes()));
     println!("seeks              {}", r.metrics.seeks);
+    println!(
+        "pool_jobs          {} ({} batches)",
+        r.metrics.pool_jobs, r.metrics.pool_batches
+    );
     println!("verified           {}", r.verified);
     if !r.verified {
         return Err(pems2::error::Error::comm("verification FAILED"));

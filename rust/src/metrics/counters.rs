@@ -30,6 +30,8 @@ pub struct Metrics {
     net_relations: AtomicU64,
     supersteps: AtomicU64,
     mmap_touched_bytes: AtomicU64,
+    pool_jobs: AtomicU64,
+    pool_batches: AtomicU64,
 }
 
 impl Metrics {
@@ -91,6 +93,14 @@ impl Metrics {
         self.mmap_touched_bytes.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Record one worker-pool batch of `jobs` parallel jobs (spill
+    /// segment sorts, delivery fan-outs, run-formation sorts) — the
+    /// achieved-parallelism signal `RunReport` exposes.
+    pub fn pool_batch(&self, jobs: u64) {
+        self.pool_batches.fetch_add(1, Ordering::Relaxed);
+        self.pool_jobs.fetch_add(jobs, Ordering::Relaxed);
+    }
+
     /// Total swap I/O volume (read + write), bytes.
     pub fn swap_bytes(&self) -> u64 {
         self.swap_read_bytes.load(Ordering::Relaxed)
@@ -118,6 +128,8 @@ impl Metrics {
             net_relations: self.net_relations.load(Ordering::Relaxed),
             supersteps: self.supersteps.load(Ordering::Relaxed),
             mmap_touched_bytes: self.mmap_touched_bytes.load(Ordering::Relaxed),
+            pool_jobs: self.pool_jobs.load(Ordering::Relaxed),
+            pool_batches: self.pool_batches.load(Ordering::Relaxed),
         }
     }
 }
@@ -149,6 +161,10 @@ pub struct MetricsSnapshot {
     pub supersteps: u64,
     /// Bytes touched via mmap'd contexts.
     pub mmap_touched_bytes: u64,
+    /// Jobs executed on the shared worker pool.
+    pub pool_jobs: u64,
+    /// Worker-pool batches submitted (jobs / batches = achieved fan-out).
+    pub pool_batches: u64,
 }
 
 impl MetricsSnapshot {
@@ -185,6 +201,8 @@ impl MetricsSnapshot {
             net_relations: self.net_relations - earlier.net_relations,
             supersteps: self.supersteps - earlier.supersteps,
             mmap_touched_bytes: self.mmap_touched_bytes - earlier.mmap_touched_bytes,
+            pool_jobs: self.pool_jobs - earlier.pool_jobs,
+            pool_batches: self.pool_batches - earlier.pool_batches,
         }
     }
 }
@@ -219,6 +237,19 @@ mod tests {
         assert_eq!(d.swap_write_bytes, 25);
         assert_eq!(d.seeks, 1);
         assert_eq!(d.seek_distance, 100);
+    }
+
+    #[test]
+    fn pool_batches_accumulate_jobs() {
+        let m = Metrics::new();
+        m.pool_batch(4);
+        m.pool_batch(2);
+        let s = m.snapshot();
+        assert_eq!(s.pool_batches, 2);
+        assert_eq!(s.pool_jobs, 6);
+        m.pool_batch(1);
+        let d = m.snapshot().delta(&s);
+        assert_eq!((d.pool_batches, d.pool_jobs), (1, 1));
     }
 
     #[test]

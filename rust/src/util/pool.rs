@@ -275,6 +275,96 @@ mod tests {
     }
 
     #[test]
+    fn drop_with_pending_jobs_drains_the_queue() {
+        // A dropped pool must finish queued work, not abandon it: the
+        // shutdown flag only takes effect once the queue is empty, so
+        // fire-and-forget submitters can rely on completion.
+        let hits = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = WorkerPool::new(1);
+            for _ in 0..16 {
+                let h = hits.clone();
+                pool.submit(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    h.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Drop with most jobs still queued behind the sleeping first.
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 16, "drop must drain, not abandon");
+    }
+
+    #[test]
+    fn drop_with_batch_in_flight_completes_it() {
+        // join() after the owning pool started shutting down is not a
+        // supported pattern, but a batch submitted *before* drop must
+        // still run to completion during drop.
+        let hits = Arc::new(AtomicUsize::new(0));
+        let handle;
+        {
+            let pool = WorkerPool::new(2);
+            let tasks: Vec<_> = (0..8)
+                .map(|_| {
+                    let h = hits.clone();
+                    move || {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                        h.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+                .collect();
+            handle = pool.spawn_batch(tasks);
+            // Pool dropped here: Drop joins the workers after the queue
+            // drains, so every task has run.
+        }
+        let out = handle.join();
+        assert_eq!(out.len(), 8);
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn panic_in_one_task_reports_and_still_runs_the_rest() {
+        let pool = WorkerPool::new(2);
+        let done = Arc::new(AtomicUsize::new(0));
+        let tasks: Vec<_> = (0..8usize)
+            .map(|i| {
+                let d = done.clone();
+                move || {
+                    if i == 3 {
+                        panic!("task 3 boom");
+                    }
+                    d.fetch_add(1, Ordering::SeqCst);
+                    i
+                }
+            })
+            .collect();
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| pool.run(tasks)));
+        assert!(res.is_err(), "join must re-raise the task panic");
+        assert_eq!(
+            done.load(Ordering::SeqCst),
+            7,
+            "the other tasks of the batch must still have run"
+        );
+        // The pool stays usable afterwards.
+        let ok = pool.run((1u8..=2).map(|x| move || x).collect::<Vec<_>>());
+        assert_eq!(ok, vec![1, 2]);
+    }
+
+    #[test]
+    fn many_small_batches_stress() {
+        // The empq/delivery usage pattern: hundreds of small batches
+        // (including zero- and one-task ones) against one long-lived
+        // pool, interleaved from the same thread.
+        let pool = WorkerPool::new(3);
+        for round in 0..300usize {
+            let n = round % 5;
+            let out = pool.run(
+                (0..n).map(|i| move || round * 10 + i).collect::<Vec<_>>(),
+            );
+            assert_eq!(out, (0..n).map(|i| round * 10 + i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
     fn task_panic_is_contained_and_reported() {
         let pool = WorkerPool::new(1);
         let res = std::panic::catch_unwind(AssertUnwindSafe(|| {

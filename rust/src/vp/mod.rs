@@ -29,6 +29,7 @@ use crate::net::Switch;
 use crate::runtime::Compute;
 use crate::sync::{PartitionYield, SuperstepBarrier};
 use crate::util::bytes::Pod;
+use crate::util::pool::WorkerPool;
 use std::marker::PhantomData;
 use std::sync::{Arc, Mutex};
 
@@ -112,6 +113,11 @@ pub struct NodeShared {
     pub comm: CommState,
     /// Computation-superstep backend (XLA artifacts or Rust fallback).
     pub compute: Arc<Compute>,
+    /// Engine-owned compute pool for the parallel phases (delivery
+    /// fan-out today; one per node, `cfg.pool_threads()` workers).
+    /// `None` when the unified phase switch is off or the pool would be
+    /// 1 wide.
+    pub pool: Option<Arc<WorkerPool>>,
 }
 
 impl NodeShared {
@@ -123,6 +129,17 @@ impl NodeShared {
     /// Number of rounds per internal superstep.
     pub fn rounds(&self) -> usize {
         self.v_per_p().div_ceil(self.cfg.k)
+    }
+
+    /// True when message delivery should fan out on the shared pool: the
+    /// engine owns a pool and the store delivers by plain memcpy
+    /// (mmap/mem stores) — per-receiver regions live in disjoint
+    /// contexts, so the copies are embarrassingly parallel.
+    /// Explicit-I/O stores keep the serial path: their delivery threads
+    /// the border cache and the per-disk queues, which the region
+    /// partitioning does not make disjoint.
+    pub fn pooled_delivery(&self) -> bool {
+        self.pool.is_some() && !self.store.is_explicit()
     }
 
     /// Local barrier with a custom leader hook (runs once, before release).

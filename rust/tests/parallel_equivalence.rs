@@ -1,0 +1,313 @@
+//! Serial/parallel equivalence: every phase that can run on the shared
+//! worker pool (stxxl-sort run formation, the delivery fan-out of
+//! alltoallv/bcast/scatter, empq spills) must produce *byte-identical*
+//! results in both modes, pinned over the same seeded workloads.
+//!
+//! The parallel legs build configs with `parallel_phases(true)`; under
+//! `PEMS2_FORCE_SERIAL` (the forced-serial CI leg) both legs resolve to
+//! the serial path and the equivalences hold trivially, so the suite
+//! stays green in either mode — pool-usage assertions are gated on
+//! `SimConfig::phases_parallel()` for the same reason.
+
+use pems2::baseline::run_stxxl_sort;
+use pems2::config::{IoStyle, Layout, SimConfig};
+use pems2::empq::{EmPq, Entry};
+use pems2::engine::run;
+use pems2::util::XorShift64;
+use pems2::vp::Vp;
+use std::sync::{Arc, Mutex};
+
+// ---------------------------------------------------------------- sort
+
+fn sort_cfg(parallel: bool) -> SimConfig {
+    SimConfig::builder()
+        .v(2)
+        .k(2)
+        .mu(64 << 10)
+        .block(4096)
+        .io(IoStyle::Async)
+        .parallel_phases(parallel)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn stxxl_sort_equivalence_across_sizes() {
+    // Sizes straddle one-run/multi-run and are deliberately not
+    // multiples of the segment count k = 2.
+    for n in [1u64, 2, 4095, 40_000, 40_001] {
+        let par = run_stxxl_sort(&sort_cfg(true), n, true).unwrap();
+        let ser = run_stxxl_sort(&sort_cfg(false), n, true).unwrap();
+        assert!(par.verified, "parallel run must verify (n={n})");
+        assert!(ser.verified, "serial run must verify (n={n})");
+        assert_eq!(
+            par.output_hash, ser.output_hash,
+            "sorted output must be byte-identical across modes (n={n})"
+        );
+        assert_eq!(ser.metrics.pool_jobs, 0, "serial leg must not use the pool");
+        if sort_cfg(true).phases_parallel() && n > 1 {
+            assert!(par.metrics.pool_jobs > 0, "parallel leg must meter pool jobs");
+        }
+    }
+}
+
+// ------------------------------------------------------------ delivery
+
+/// Order-sensitive byte fold (FNV-style): equal only for identical
+/// received byte sequences.
+fn fold(h: u64, bytes: &[u8]) -> u64 {
+    bytes
+        .iter()
+        .fold(h, |h, &b| h.wrapping_mul(0x0100_0000_01B3) ^ (b as u64 + 1))
+}
+
+/// One superstep each of alltoallv (variable sizes incl. empty sends),
+/// bcast, and scatter; each VP folds everything it received into
+/// `hashes[rank]`.
+fn delivery_program(
+    hashes: Arc<Mutex<Vec<u64>>>,
+    all_empty: bool,
+) -> impl Fn(&mut Vp) -> pems2::Result<()> + Send + Sync + 'static {
+    move |vp: &mut Vp| {
+        let v = vp.nranks();
+        let me = vp.rank();
+        let mut h = 0u64;
+
+        // --- Alltoallv: message s -> d is ((s*7 + d*13) % 5) * 3 bytes
+        // (so several pairs exchange nothing); all-empty variant pins the
+        // everyone-sends-zero edge.
+        let size = |s: usize, d: usize| {
+            if all_empty {
+                0
+            } else {
+                ((s * 7 + d * 13) % 5) * 3
+            }
+        };
+        let send_total: usize = (0..v).map(|j| size(me, j)).sum();
+        let recv_total: usize = (0..v).map(|i| size(i, me)).sum();
+        let send = vp.alloc::<u8>(send_total.max(1))?;
+        let recv = vp.alloc::<u8>(recv_total.max(1))?;
+        {
+            let s = vp.slice_mut(send)?;
+            let mut at = 0;
+            for j in 0..v {
+                for x in 0..size(me, j) {
+                    s[at] = (me * 31 + j * 7 + x) as u8;
+                    at += 1;
+                }
+            }
+        }
+        let mut sends = Vec::new();
+        let mut off = send.byte_off();
+        for j in 0..v {
+            sends.push((off, size(me, j) as u64));
+            off += size(me, j) as u64;
+        }
+        let mut recvs = Vec::new();
+        let mut off = recv.byte_off();
+        for i in 0..v {
+            recvs.push((off, size(i, me) as u64));
+            off += size(i, me) as u64;
+        }
+        vp.alltoallv_regions(&sends, &recvs)?;
+        {
+            let r = vp.slice(recv)?;
+            h = fold(h, &r[..recv_total]);
+        }
+
+        // --- Bcast from a non-zero root.
+        let root = 1 % v;
+        let blen = 97usize;
+        let bsend = vp.alloc::<u8>(blen)?;
+        let brecv = vp.alloc::<u8>(blen)?;
+        if me == root {
+            let s = vp.slice_mut(bsend)?;
+            for (i, x) in s.iter_mut().enumerate() {
+                *x = (i * 3 + 11) as u8;
+            }
+        }
+        vp.bcast_region(root, bsend.region(), brecv.region())?;
+        {
+            let r = vp.slice(brecv)?;
+            h = fold(h, r);
+        }
+
+        // --- Scatter from rank 0: 16 bytes per VP.
+        let omega = 16usize;
+        let ssend = vp.alloc::<u8>(omega * v)?;
+        let srecv = vp.alloc::<u8>(omega)?;
+        if me == 0 {
+            let s = vp.slice_mut(ssend)?;
+            for (i, x) in s.iter_mut().enumerate() {
+                *x = (i * 5 + 1) as u8;
+            }
+        }
+        vp.scatter_region(0, ssend.region(), srecv.region())?;
+        {
+            let r = vp.slice(srecv)?;
+            h = fold(h, r);
+        }
+
+        hashes.lock().unwrap()[me] = h;
+        Ok(())
+    }
+}
+
+fn delivery_cfg(p: usize, v: usize, k: usize, io: IoStyle, parallel: bool) -> SimConfig {
+    let mut b = SimConfig::builder()
+        .p(p)
+        .v(v)
+        .k(k)
+        .mu(1 << 16)
+        .sigma(1 << 16)
+        .block(4096)
+        .io(io)
+        .parallel_phases(parallel);
+    if io == IoStyle::Mmap {
+        b = b.layout(Layout::PerVpDisk);
+    }
+    b.build().unwrap()
+}
+
+fn run_delivery(cfg: SimConfig, all_empty: bool) -> (Vec<u64>, u64) {
+    let hashes = Arc::new(Mutex::new(vec![0u64; cfg.v]));
+    let report = run(cfg, delivery_program(hashes.clone(), all_empty)).unwrap();
+    let out = hashes.lock().unwrap().clone();
+    (out, report.metrics.pool_jobs)
+}
+
+#[test]
+fn delivery_equivalence_mem_store() {
+    // Shapes include v/P not a multiple of k (v=6, k=4 -> rounds 4+2)
+    // and a multi-node run (remote exchange + first-thread fan-out).
+    for (p, v, k) in [(1, 4, 2), (1, 6, 4), (2, 8, 2)] {
+        let (par, jobs) = run_delivery(delivery_cfg(p, v, k, IoStyle::Mem, true), false);
+        let (ser, ser_jobs) = run_delivery(delivery_cfg(p, v, k, IoStyle::Mem, false), false);
+        assert_eq!(par, ser, "delivery results must match (p={p} v={v} k={k})");
+        assert!(par.iter().all(|&h| h != 0), "every VP must have received data");
+        assert_eq!(ser_jobs, 0, "serial run must not touch the pool");
+        if delivery_cfg(p, v, k, IoStyle::Mem, true).phases_parallel() {
+            assert!(jobs > 0, "parallel delivery must meter pool jobs (p={p} v={v} k={k})");
+        }
+    }
+}
+
+#[test]
+fn delivery_equivalence_mmap_store() {
+    let (par, _) = run_delivery(delivery_cfg(1, 4, 2, IoStyle::Mmap, true), false);
+    let (ser, _) = run_delivery(delivery_cfg(1, 4, 2, IoStyle::Mmap, false), false);
+    assert_eq!(par, ser, "mmap delivery must match across modes");
+    // And mmap agrees with mem on the same shape: the store must not
+    // change the delivered bytes.
+    let (mem, _) = run_delivery(delivery_cfg(1, 4, 2, IoStyle::Mem, false), false);
+    assert_eq!(par, mem, "mmap and mem stores must deliver the same bytes");
+}
+
+#[test]
+fn delivery_equivalence_all_empty_sends() {
+    let (par, _) = run_delivery(delivery_cfg(1, 4, 2, IoStyle::Mem, true), true);
+    let (ser, _) = run_delivery(delivery_cfg(1, 4, 2, IoStyle::Mem, false), true);
+    assert_eq!(par, ser, "all-empty alltoallv must match across modes");
+}
+
+#[test]
+fn delivery_serial_path_unchanged_for_explicit_stores() {
+    // Explicit-I/O stores never fan out on the pool, parallel switch or
+    // not — their delivery threads the border cache and disk queues.
+    let (par, jobs) = run_delivery(delivery_cfg(1, 4, 2, IoStyle::Unix, true), false);
+    let (ser, _) = run_delivery(delivery_cfg(1, 4, 2, IoStyle::Unix, false), false);
+    assert_eq!(par, ser);
+    assert_eq!(jobs, 0, "explicit stores must not use the delivery pool");
+}
+
+// --------------------------------------------------------------- empq
+
+fn empq_cfg(parallel: bool) -> SimConfig {
+    SimConfig::builder()
+        .v(2)
+        .k(2)
+        .mu(16 << 10)
+        .d(2)
+        .block(4096)
+        .io(IoStyle::Async)
+        .parallel_phases(parallel)
+        .build()
+        .unwrap()
+}
+
+fn empq_drain(cfg: &SimConfig, n: usize) -> Vec<Entry> {
+    // The unified switch (not set_spill_parallel) picks the spill mode.
+    let mut pq: EmPq = EmPq::new(cfg, (n as u64) * 2).unwrap();
+    assert_eq!(
+        pq.spill_parallel(),
+        cfg.phases_parallel(),
+        "EmPq spill mode must follow SimConfig::phases_parallel"
+    );
+    let mut rng = XorShift64::new(0xE0_0A11);
+    let items: Vec<Entry> =
+        (0..n as u64).map(|i| Entry::new(rng.next_u64() % 997, i)).collect();
+    // Mix the per-element path (heap spills) and the bulk path (direct
+    // external arrays).
+    let half = n / 2;
+    for &e in &items[..half] {
+        pq.push(e).unwrap();
+    }
+    pq.push_batch(&items[half..]).unwrap();
+    pq.extract_min_batch(usize::MAX).unwrap()
+}
+
+#[test]
+fn empq_spill_equivalence_across_sizes() {
+    // Sizes include values that split unevenly over k = 2 heaps.
+    for n in [10usize, 1000, 4097, 9001] {
+        let par = empq_drain(&empq_cfg(true), n);
+        let ser = empq_drain(&empq_cfg(false), n);
+        assert_eq!(par.len(), n, "conservation (n={n})");
+        assert_eq!(par, ser, "extraction order must not depend on spill mode (n={n})");
+    }
+}
+
+// ------------------------------------------------- app-level oracles
+
+#[test]
+fn time_forward_oracle_pins_both_modes() {
+    let mut checksums = Vec::new();
+    for parallel in [true, false] {
+        let cfg = empq_cfg(parallel);
+        let r = pems2::apps::run_time_forward(&cfg, 20_000, 4, true, true).unwrap();
+        assert!(r.verified, "time-forward oracle must hold (parallel={parallel})");
+        checksums.push(r.checksum);
+    }
+    assert_eq!(checksums[0], checksums[1], "checksum must not depend on the mode");
+}
+
+#[test]
+fn sssp_oracle_pins_both_modes() {
+    let mut checksums = Vec::new();
+    for parallel in [true, false] {
+        let cfg = empq_cfg(parallel);
+        let r = pems2::apps::run_sssp(&cfg, 4_000, 4, 100, 0, true).unwrap();
+        assert!(r.verified, "sssp oracle must hold (parallel={parallel})");
+        checksums.push((r.checksum, r.total_dist, r.reached));
+    }
+    assert_eq!(checksums[0], checksums[1], "sssp result must not depend on the mode");
+}
+
+#[test]
+fn prefix_sum_oracle_under_pooled_delivery() {
+    // An engine app over gather/scatter: the pooled rooted fan-out must
+    // not change app-level results.
+    for parallel in [true, false] {
+        let cfg = SimConfig::builder()
+            .v(4)
+            .k(2)
+            .mu(1 << 20)
+            .sigma(1 << 20)
+            .io(IoStyle::Mem)
+            .parallel_phases(parallel)
+            .build()
+            .unwrap();
+        let r = pems2::apps::run_prefix_sum(cfg, 50_000, true).unwrap();
+        assert!(r.verified, "prefix-sum oracle must hold (parallel={parallel})");
+    }
+}
