@@ -23,6 +23,10 @@
 //!    merge vs one in-place sort) and the mem-store alltoallv delivery
 //!    fan-out (pooled memcpys vs the serial loop), each emitting a
 //!    pool/serial speedup into the JSON summary.
+//! 6. Swap-pipeline A/B under `SimConfig::swap_prefetch`: PSRS over the
+//!    async driver with the double-buffered prefetching swap path on vs
+//!    the legacy synchronous path, emitting the speedup plus the
+//!    overlap-hidden byte volume and swap-wait seconds.
 //!
 //! y-values are Melem/s (wall clock); measured I/O counters are printed
 //! per phase, since on page-cached SSDs charged time is the faithful
@@ -304,6 +308,59 @@ fn main() {
     summary.push((
         "delivery_pool_speedup".to_string(),
         deliv_rates[1] / deliv_rates[0].max(1e-9),
+    ));
+
+    // ---- 6. swap-pipeline A/B: prefetch on/off over an explicit run ----
+    // PSRS over the async driver is the thesis' flagship explicit-I/O
+    // workload: the pipelined leg should hide swap-in latency behind
+    // compute (nonzero prefetch_hit_bytes) and at least match the
+    // synchronous leg's wall clock.
+    let psrs_n: u64 = if full_mode() { 1 << 22 } else { 1 << 16 };
+    let psrs_mu = pems2::apps::psrs::required_mu(psrs_n, 4).max(16 << 20);
+    let mut psrs_rates = [0.0f64; 2];
+    for (i, (label, prefetch)) in [("off", false), ("on", true)].into_iter().enumerate() {
+        let c = SimConfig::builder()
+            .v(4)
+            .k(2)
+            .mu(psrs_mu)
+            .sigma(16 << 20)
+            .d(2)
+            .block(64 << 10)
+            .io(IoStyle::Async)
+            .swap_prefetch(prefetch)
+            .build()
+            .unwrap();
+        let r = pems2::apps::run_psrs(c, psrs_n, true).unwrap();
+        assert!(r.verified);
+        let wall = r.report.wall.as_secs_f64();
+        let rate = psrs_n as f64 / wall.max(1e-9) / 1e6;
+        psrs_rates[i] = rate;
+        let m = &r.report.metrics;
+        println!(
+            "swap-prefetch {label:<4} psrs n={psrs_n} {rate:>8.2} Melem/s  \
+             hits {} misses {} hidden {}  swap-wait {:.3}s",
+            m.prefetch_hits,
+            m.prefetch_misses,
+            human_bytes(m.prefetch_hit_bytes),
+            m.swap_wait_ns as f64 / 1e9,
+        );
+        summary.push((format!("psrs_prefetch_{label}_melem_s"), rate));
+        summary.push((
+            format!("psrs_prefetch_{label}_hidden_mb"),
+            m.prefetch_hit_bytes as f64 / (1 << 20) as f64,
+        ));
+        summary.push((
+            format!("psrs_prefetch_{label}_swap_wait_s"),
+            m.swap_wait_ns as f64 / 1e9,
+        ));
+    }
+    println!(
+        "swap-prefetch speedup: {:.2}x (on/off)",
+        psrs_rates[1] / psrs_rates[0].max(1e-9),
+    );
+    summary.push((
+        "swap_prefetch_speedup".to_string(),
+        psrs_rates[1] / psrs_rates[0].max(1e-9),
     ));
 
     let dir = results_dir();

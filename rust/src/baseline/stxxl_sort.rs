@@ -12,10 +12,12 @@
 //!    in block-sized chunks overlapping the async driver's write-behind
 //!    — the `empq` spill pipeline, via the shared
 //!    [`crate::empq::merge::sort_segments`] /
-//!    [`crate::empq::merge::merge_write_segments`] helpers.  The serial
-//!    path (one in-place sort, optionally on the XLA tile-sort kernel,
-//!    one whole-run write) is kept for A/B runs and produces
-//!    byte-identical output.
+//!    [`crate::empq::merge::merge_write_segments`] helpers; each
+//!    segment sort defers to the XLA tile-sort kernel when it is active
+//!    ([`crate::util::Record::kernel_sort`]), so the pool and the
+//!    kernel compose.  The serial path (one in-place sort, optionally
+//!    on the kernel, one whole-run write) is kept for A/B runs and
+//!    produces byte-identical output.
 //! 2. *Multiway merge*: merge all runs with per-run block buffers and a
 //!    tournament (loser) tree — the machinery shared with the external
 //!    priority queue, see [`crate::empq::merge`] — writing the output
@@ -60,7 +62,7 @@ pub struct StxxlSortResult {
 pub fn run_stxxl_sort(cfg: &SimConfig, n: u64, verify: bool) -> Result<StxxlSortResult> {
     let metrics = Arc::new(Metrics::new());
     let driver: Arc<dyn IoDriver> = match cfg.io {
-        IoStyle::Async => Arc::new(AsyncIo::new(cfg.d.max(2))),
+        IoStyle::Async => Arc::new(AsyncIo::new(cfg.d)),
         _ => Arc::new(UnixIo::new()),
     };
     // Dedicated data file: element space lives in a scratch config whose
@@ -73,7 +75,7 @@ pub fn run_stxxl_sort(cfg: &SimConfig, n: u64, verify: bool) -> Result<StxxlSort
     scratch.p = 1;
     scratch.k = 1;
     let disks = DiskSet::create(&scratch, 0, driver, metrics.clone())?;
-    let compute = Compute::auto("artifacts", cfg.use_xla);
+    let compute = Arc::new(Compute::auto("artifacts", cfg.use_xla));
 
     let mem_budget_bytes = (cfg.k as u64 * cfg.mu).max(cfg.block() * 4);
     let run_len = (mem_budget_bytes / 4).min(n.max(1)) as usize;
@@ -103,10 +105,11 @@ pub fn run_stxxl_sort(cfg: &SimConfig, n: u64, verify: bool) -> Result<StxxlSort
     let setup = metrics.snapshot();
 
     // ---- Pass 1: run formation ----
-    // The pool path defers to the XLA tile-sort kernel when it is
-    // active: the kernel already pipelines chunks, so only one of the
-    // two accelerations runs at a time.
-    let pool = (cfg.phases_parallel() && cfg.pool_threads() > 1 && !compute.xla_active())
+    // The XLA tile-sort kernel now slots into the segment-sort closure
+    // itself (Record::kernel_sort via sort_segments), so the pool path
+    // and the kernel compose: each worker sorts its segment on the
+    // kernel when it is active.
+    let pool = (cfg.phases_parallel() && cfg.pool_threads() > 1)
         .then(|| WorkerPool::new(cfg.pool_threads()));
     let chunk_cap = (cfg.block() as usize / 4).max(64);
     let mut runs: Vec<(u64, u64)> = Vec::new(); // (offset elements, len)
@@ -130,7 +133,8 @@ pub fn run_stxxl_sort(cfg: &SimConfig, n: u64, verify: bool) -> Result<StxxlSort
                     let per = take.div_ceil(t);
                     let segments: Vec<Vec<u32>> =
                         buf[..take].chunks(per).map(<[u32]>::to_vec).collect();
-                    let segments = sort_segments(segments, Some(pool), &metrics, || ());
+                    let segments =
+                        sort_segments(segments, Some(pool), &metrics, Some(&compute), || ());
                     merge_write_segments(
                         &segments,
                         &disks,

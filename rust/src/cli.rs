@@ -69,7 +69,7 @@ impl Cli {
     /// Build a [`SimConfig`] from the standard simulation flags:
     /// `--p --v --k --mu --d --sigma --alpha --io --pems1 --alloc
     /// --layout --fragmented --indirect-slot --block --timeline --xla
-    /// --seed --disk-dir --unordered --threads --serial`.
+    /// --seed --disk-dir --unordered --threads --serial --no-prefetch`.
     ///
     /// Sizes accept suffixes `k`/`m`/`g` (binary).
     pub fn sim_config(&self) -> Result<SimConfig> {
@@ -85,6 +85,7 @@ impl Cli {
             .seed(self.get_or("seed", 0xF00D)?)
             .compute_threads(self.get_or("threads", 0)?)
             .parallel_phases(!self.flag("serial"))
+            .swap_prefetch(!self.flag("no-prefetch"))
             .record_timeline(self.flag("timeline"))
             .use_xla(self.flag("xla"))
             .ordered_rounds(!self.flag("unordered"));
@@ -195,6 +196,22 @@ mod tests {
         assert_eq!(cfg.delivery, DeliveryMode::Pems1Indirect);
         assert_eq!(cfg.alloc, AllocPolicy::Bump);
         assert!(cfg.indirect_slot > 0);
+    }
+
+    #[test]
+    fn no_prefetch_flag_disables_the_swap_pipeline() {
+        let cfg = Cli::parse(args("x --v 4 --k 2 --io stxxl-file --no-prefetch"))
+            .unwrap()
+            .sim_config()
+            .unwrap();
+        assert!(!cfg.swap_prefetch);
+        assert!(!cfg.swap_prefetch_active());
+        // Default: on for explicit stores.
+        let cfg = Cli::parse(args("x --v 4 --k 2 --io stxxl-file"))
+            .unwrap()
+            .sim_config()
+            .unwrap();
+        assert!(cfg.swap_prefetch);
     }
 
     #[test]

@@ -109,6 +109,12 @@ pub fn alltoallv(vp: &mut Vp, sends: &[Region], recvs: &[Region]) -> Result<()> 
 
     // ---------- Internal superstep 2 ----------
     vp.acquire();
+    // Re-derive the partition pointer: while this VP was out, a
+    // partition-mate's admission may have consumed a prefetch and
+    // flipped the active/shadow buffers (the swap pipeline), so the
+    // superstep-1 pointer can name the stale buffer.  The partial
+    // swap-in below reads into the *current* active buffer.
+    let mem = vp_mem_ptr(&sh, local);
     // Regions needed in memory: deferred local messages + all remote
     // messages ("Swap message in", Alg. 7.1.1 line 13).
     let mut needed: Vec<Region> = deferred.iter().map(|&j| sends[j]).collect();

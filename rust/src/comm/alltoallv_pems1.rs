@@ -63,9 +63,12 @@ pub fn alltoallv_pems1(vp: &mut Vp, sends: &[Region], recvs: &[Region]) -> Resul
     let me = vp.rank();
     let my_node = vp.node();
     let local = vp.local_rank();
-    let mem = sh.store.vp_memory(local, cfg.k, cfg.mu);
 
     vp.ensure_resident()?;
+    // Derive the partition pointer only *after* residency: under the
+    // swap pipeline, ensure_resident may flip the active/shadow buffers,
+    // so a pointer captured earlier could name the stale buffer.
+    let mem = sh.store.vp_memory(local, cfg.k, cfg.mu);
 
     // ---------- Internal superstep 1: send ----------
     // Local destinations: write message to the receiver's indirect slot.
@@ -106,8 +109,10 @@ pub fn alltoallv_pems1(vp: &mut Vp, sends: &[Region], recvs: &[Region]) -> Resul
 
     // ---------- Internal superstep 2: receive ----------
     vp.acquire();
-    // Swap the whole context in.
+    // Swap the whole context in; re-derive the pointer — the swap-in may
+    // have consumed a prefetch and flipped buffers.
     vp.ensure_resident()?;
+    let mem = sh.store.vp_memory(local, cfg.k, cfg.mu);
     for (i, &(roff, rlen)) in recvs.iter().enumerate() {
         if rlen == 0 {
             continue;

@@ -7,13 +7,16 @@
 //! `S·2vµ/(PkB) + G·vω/(PDB) + g·ω/b + l + L` (Thm. 7.2.3).
 //!
 //! Under pooled delivery ([`crate::vp::NodeShared::pooled_delivery`]:
-//! mmap/mem stores + an engine pool), receivers record their receive
-//! region in the offset table *before* blocking; the root (or, on remote
-//! nodes, the first thread) fans the payload out to every recorded
-//! receiver's context on the pool and marks them `delivered` before
-//! signalling, so they skip their own copy — the same `E[i]` structure
-//! as EM-Alltoallv's internal superstep 1.  Late receivers keep the
-//! copy-it-yourself path, so the result is identical either way.
+//! any store + an engine pool — explicit stores included, batched per
+//! target disk), receivers record their receive region in the offset
+//! table *before* blocking; the root (or, on remote nodes, the first
+//! thread) fans the payload out to every recorded receiver's context
+//! (direct writes — `fanout_rooted` in `comm/mod.rs`) and marks them
+//! `delivered` before signalling, so they skip their own copy — the
+//! same `E[i]` structure as EM-Alltoallv's internal superstep 1.  Late
+//! receivers keep the copy-it-yourself path, so the result is identical
+//! either way; covered receivers mark the range clean so a final
+//! swap-out cannot overwrite the delivered bytes.
 
 use super::{fanout_rooted, record_rooted_recv, take_rooted_delivery, Region};
 use crate::error::{Error, Result};
@@ -79,7 +82,12 @@ pub fn bcast(vp: &mut Vp, root: usize, send: Region, recv: Region) -> Result<()>
             record_rooted_recv(&sh, local, root, recv);
         }
         let swapped = em_wait_for_root(&sh.comm.sig_root, vp, root_local, v_per_p)?;
-        if !(pooled && take_rooted_delivery(&sh, local)) {
+        if pooled && take_rooted_delivery(&sh, local) && dirty_tracking(&cfg) {
+            // The fan-out wrote the payload straight to this context's
+            // slot on disk; make sure a still-resident receiver's final
+            // swap-out cannot clobber it with the stale memory copy.
+            vp.mark_clean(recv.0, recv.1);
+        } else {
             deliver_from_shared(vp, recv, swapped)?;
         }
     } else {
@@ -106,7 +114,13 @@ pub fn bcast(vp: &mut Vp, root: usize, send: Region, recv: Region) -> Result<()>
             fan?;
         }
         vp.ensure_resident()?;
-        if !(pooled && take_rooted_delivery(&sh, local)) {
+        if pooled && take_rooted_delivery(&sh, local) && dirty_tracking(&cfg) {
+            // The fan-out delivered to this context's slot on disk; the
+            // disk copy is authoritative, so keep the range out of the
+            // dirty set (an already-resident receiver's memory is stale
+            // until the next swap-in, which no one reads before then).
+            vp.mark_clean(recv.0, recv.1);
+        } else {
             deliver_from_shared(vp, recv, false)?;
         }
     }
@@ -120,6 +134,16 @@ pub fn bcast(vp: &mut Vp, root: usize, send: Region, recv: Region) -> Result<()>
     vp.release();
     vp.superstep_end();
     Ok(())
+}
+
+/// True when the allocator honours the dirty set on swap-out, so
+/// [`crate::vp::Vp`]'s `mark_clean` can protect a fanned-out payload
+/// from the final swap-out.  The PEMS1 bump allocator always rewrites
+/// the whole allocated prefix regardless of dirtiness, so covered
+/// receivers must re-copy like uncovered ones (idempotent — the shared
+/// buffer holds the same bytes the fan-out delivered).
+pub(crate) fn dirty_tracking(cfg: &crate::config::SimConfig) -> bool {
+    cfg.alloc != crate::config::AllocPolicy::Bump
 }
 
 /// Copy the broadcast payload from the shared buffer into this VP's

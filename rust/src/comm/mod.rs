@@ -35,6 +35,7 @@ pub use scatter::scatter;
 
 use crate::config::SimConfig;
 use crate::error::Result;
+use crate::metrics::IoClass;
 use crate::sync::EmSignal;
 use crate::vp::NodeShared;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -133,37 +134,47 @@ pub(crate) struct LocalMsg {
 // backing memory can move, mutate, or die.
 unsafe impl Send for LocalMsg {}
 
-/// Deliver a set of local messages: fanned out across the engine's
-/// shared worker pool — grouped by receiver, so per-receiver writes stay
-/// ordered — when [`NodeShared::pooled_delivery`] holds, serially
-/// otherwise.  Per-receiver disjointness of the written regions is the
-/// existing offset-table partitioning; the pool only changes *who*
-/// performs the memcpys.  Pool batches are metered into `Metrics`
-/// (`pool_jobs`/`pool_batches`).
-pub(crate) fn deliver_local_batch(sh: &Arc<NodeShared>, msgs: Vec<LocalMsg>) -> Result<()> {
+/// The shared pool-dispatch shape of every delivery batch: serial for
+/// empty/singleton batches or without pooling; otherwise grouped — for
+/// mmap/mem stores by *receiver* (per-receiver memcpys into disjoint
+/// contexts), for explicit stores by the receiver's *target disk*
+/// (`dst_local mod D`, which under `Layout::PerVpDisk` is exactly the
+/// disk holding the context) so concurrent jobs feed independent
+/// per-disk I/O queues — and run one job per group on the pool,
+/// metered into `Metrics` (`pool_jobs`/`pool_batches`).  A receiver
+/// always maps into one group, keeping its writes ordered; region
+/// disjointness is the existing offset-table partitioning.
+fn fan_out_batch<M: Send + 'static>(
+    sh: &Arc<NodeShared>,
+    msgs: Vec<M>,
+    dst_local: fn(&M) -> usize,
+    write: fn(&Arc<NodeShared>, &M) -> Result<()>,
+) -> Result<()> {
     if msgs.is_empty() {
         return Ok(());
     }
     if !(sh.pooled_delivery() && msgs.len() > 1) {
-        for m in msgs {
-            let payload = unsafe { std::slice::from_raw_parts(m.ptr, m.len) };
-            alltoallv::deliver_local(sh, m.dst_local, m.src_global, payload)?;
+        for m in &msgs {
+            write(sh, m)?;
         }
         return Ok(());
     }
     let pool = sh.pool.as_ref().expect("pooled_delivery implies a pool").clone();
-    let mut groups: std::collections::BTreeMap<usize, Vec<LocalMsg>> = Default::default();
+    let explicit = sh.store.is_explicit();
+    let d = sh.cfg.d.max(1);
+    let mut groups: std::collections::BTreeMap<usize, Vec<M>> = Default::default();
     for m in msgs {
-        groups.entry(m.dst_local).or_default().push(m);
+        let dst = dst_local(&m);
+        let key = if explicit { dst % d } else { dst };
+        groups.entry(key).or_default().push(m);
     }
     let jobs: Vec<_> = groups
         .into_values()
         .map(|group| {
             let sh = sh.clone();
             move || -> Result<()> {
-                for m in group {
-                    let payload = unsafe { std::slice::from_raw_parts(m.ptr, m.len) };
-                    alltoallv::deliver_local(&sh, m.dst_local, m.src_global, payload)?;
+                for m in &group {
+                    write(&sh, m)?;
                 }
                 Ok(())
             }
@@ -176,6 +187,31 @@ pub(crate) fn deliver_local_batch(sh: &Arc<NodeShared>, msgs: Vec<LocalMsg>) -> 
     Ok(())
 }
 
+/// Deliver a set of local alltoallv messages through the shared
+/// fan-out shape ([`fan_out_batch`]); each write is the full
+/// border-cache delivery primitive ([`alltoallv::deliver_local`]).
+pub(crate) fn deliver_local_batch(sh: &Arc<NodeShared>, msgs: Vec<LocalMsg>) -> Result<()> {
+    fn write(sh: &Arc<NodeShared>, m: &LocalMsg) -> Result<()> {
+        let payload = unsafe { std::slice::from_raw_parts(m.ptr, m.len) };
+        alltoallv::deliver_local(sh, m.dst_local, m.src_global, payload)
+    }
+    fan_out_batch(sh, msgs, |m| m.dst_local, write)
+}
+
+/// One rooted-collective delivery staged for the pool: receiver, its
+/// recorded receive offset, and a payload slice the caller keeps alive
+/// until the batch joins.
+struct RootedMsg {
+    dst_local: usize,
+    recv_off: u64,
+    ptr: *const u8,
+    len: usize,
+}
+
+// SAFETY: as LocalMsg — dereferenced only inside a batch the submitting
+// thread joins before the backing payload can move or die.
+unsafe impl Send for RootedMsg {}
+
 /// Rooted-collective fan-out (EM-Bcast / EM-Scatter): deliver the
 /// payload to every local receiver that already recorded its receive
 /// region in the offset table (`executed[dst]`), then mark them
@@ -187,6 +223,18 @@ pub(crate) fn deliver_local_batch(sh: &Arc<NodeShared>, msgs: Vec<LocalMsg>) -> 
 /// signalling the waiters (they are quiescent until then, which is what
 /// makes the cross-context writes race-free).
 ///
+/// Delivery is a *direct* context write
+/// ([`crate::vp::Store::write_to_context`]) — the same primitive the
+/// receivers' own copy-it-yourself path uses — NOT the border-cache split:
+/// rooted receivers never seed border blocks.  For mmap/mem stores this
+/// is the plain memcpy it always was; for explicit stores it is an
+/// unaligned positional write to the receiver's slot, batched per
+/// target disk on the pool (the per-disk I/O queues keep concurrent
+/// writers independent).  A covered receiver that stayed resident must
+/// mark its receive region *clean* ([`crate::vp::Vp`]'s dirty tracking)
+/// so its final swap-out does not overwrite the delivered bytes — the
+/// callers do this on `take_rooted_delivery`.
+///
 /// `slot` maps a receiver's `(dst_local, recorded_len)` to the payload
 /// byte offset its `recorded_len` bytes start at.
 pub(crate) fn fanout_rooted(
@@ -197,21 +245,22 @@ pub(crate) fn fanout_rooted(
     slot: impl Fn(usize, u64) -> usize,
 ) -> Result<()> {
     let vpp = sh.v_per_p();
-    // One table acquisition for the whole scan (pool jobs re-read their
-    // entry inside deliver_local; this keeps the hot path at one lock
-    // per job instead of two).
-    let recorded: Vec<(usize, u64)> = {
+    // One table acquisition for the whole scan.
+    let recorded: Vec<(usize, u64, u64)> = {
         let t = sh.comm.table.lock().unwrap();
         (0..vpp)
             .filter(|&dst| {
                 dst != skip_local && sh.comm.executed[dst].load(Ordering::Acquire)
             })
-            .map(|dst| (dst, t[dst][src_global].1))
+            .map(|dst| {
+                let (roff, rlen) = t[dst][src_global];
+                (dst, roff, rlen)
+            })
             .collect()
     };
     let mut msgs = Vec::new();
     let mut covered = Vec::new();
-    for (dst, rlen) in recorded {
+    for (dst, roff, rlen) in recorded {
         let off = slot(dst, rlen);
         if off + rlen as usize > payload.len() {
             return Err(crate::error::Error::comm(format!(
@@ -219,21 +268,33 @@ pub(crate) fn fanout_rooted(
                 payload.len()
             )));
         }
-        msgs.push(LocalMsg {
-            dst_local: dst,
-            src_global,
-            // SAFETY: in-bounds by the check above; `payload` outlives
-            // the joined batch below.
-            ptr: unsafe { payload.as_ptr().add(off) },
-            len: rlen as usize,
-        });
+        if rlen > 0 {
+            msgs.push(RootedMsg {
+                dst_local: dst,
+                recv_off: roff,
+                // SAFETY: in-bounds by the check above; `payload` outlives
+                // the joined batch below.
+                ptr: unsafe { payload.as_ptr().add(off) },
+                len: rlen as usize,
+            });
+        }
         covered.push(dst);
     }
-    deliver_local_batch(sh, msgs)?;
+    deliver_rooted_batch(sh, msgs)?;
     for dst in covered {
         sh.comm.delivered[dst].store(true, Ordering::Release);
     }
     Ok(())
+}
+
+/// Fan a set of rooted deliveries out through the shared fan-out shape
+/// ([`fan_out_batch`]); each write is a direct context write.
+fn deliver_rooted_batch(sh: &Arc<NodeShared>, msgs: Vec<RootedMsg>) -> Result<()> {
+    fn write(sh: &Arc<NodeShared>, m: &RootedMsg) -> Result<()> {
+        let payload = unsafe { std::slice::from_raw_parts(m.ptr, m.len) };
+        sh.store.write_to_context(m.dst_local, m.recv_off, payload, IoClass::Delivery)
+    }
+    fan_out_batch(sh, msgs, |m| m.dst_local, write)
 }
 
 /// Receiver half of the pooled rooted-collective handshake: record this

@@ -11,6 +11,7 @@
 //! thread writes every recorded receiver's slot into its context on the
 //! shared pool before signalling; covered receivers skip their copy.
 
+use super::bcast::dirty_tracking;
 use super::{fanout_rooted, record_rooted_recv, take_rooted_delivery, Region};
 use crate::error::{Error, Result};
 use crate::metrics::IoClass;
@@ -82,7 +83,13 @@ pub fn scatter(vp: &mut Vp, root: usize, send: Region, recv: Region) -> Result<(
             record_rooted_recv(&sh, local, root, recv);
         }
         let swapped = em_wait_for_root(&sh.comm.sig_root, vp, root_local, v_per_p)?;
-        if !(pooled && take_rooted_delivery(&sh, local)) {
+        if pooled && take_rooted_delivery(&sh, local) && dirty_tracking(&cfg) {
+            // Fan-out delivered straight to disk: the range must not be
+            // re-written from (stale) memory by the final swap-out.
+            // (Bump-allocator swap-outs ignore the dirty set, so there
+            // the receiver re-copies like an uncovered one.)
+            vp.mark_clean(recv.0, recv.1);
+        } else {
             deliver_slot(vp, recv, omega, swapped)?;
         }
     } else {
@@ -106,7 +113,10 @@ pub fn scatter(vp: &mut Vp, root: usize, send: Region, recv: Region) -> Result<(
             fan?;
         }
         vp.ensure_resident()?;
-        if !(pooled && take_rooted_delivery(&sh, local)) {
+        if pooled && take_rooted_delivery(&sh, local) && dirty_tracking(&cfg) {
+            // As above: the disk copy is authoritative.
+            vp.mark_clean(recv.0, recv.1);
+        } else {
             deliver_slot(vp, recv, omega, false)?;
         }
     }

@@ -185,6 +185,14 @@ pub struct SimConfig {
     /// CI leg); the `PEMS2_FORCE_SERIAL` environment variable overrides
     /// it to `false` process-wide — see [`force_serial_env`].
     pub parallel_phases: bool,
+    /// The asynchronous context-swap pipeline: double-buffered partition
+    /// memory (`2kµ` instead of `kµ`) with shadow-buffer prefetch of the
+    /// next turn's context and write-behind swap-out.  Takes effect for
+    /// the async I/O style only (see [`SimConfig::swap_prefetch_active`]);
+    /// off ⇒ the byte-identical legacy single-buffer path.  CLI
+    /// `--no-prefetch`; the `PEMS2_NO_PREFETCH` environment variable
+    /// overrides it to off process-wide — see [`no_prefetch_env`].
+    pub swap_prefetch: bool,
     /// Record per-thread per-superstep timelines (Figs. 8.12–8.14).
     pub record_timeline: bool,
     /// Use the XLA/PJRT artifacts for computation supersteps when available.
@@ -236,6 +244,18 @@ impl SimConfig {
     /// (a 1-wide pool buys nothing).
     pub fn phases_parallel(&self) -> bool {
         self.parallel_phases && !force_serial_env()
+    }
+
+    /// True when the explicit store should run the double-buffered swap
+    /// pipeline: the config switch is on, the I/O style is the *async*
+    /// driver, and `PEMS2_NO_PREFETCH` is not set.  Mirrors the
+    /// [`SimConfig::phases_parallel`] scheme.  The synchronous unix
+    /// driver keeps the legacy path: its reads execute on the issuing
+    /// thread, so a "prefetch" there would just move the successor's
+    /// swap-in onto the current holder's critical path (and mmap/mem
+    /// stores never swap at all).
+    pub fn swap_prefetch_active(&self) -> bool {
+        self.swap_prefetch && self.io == IoStyle::Async && !no_prefetch_env()
     }
 
     /// Bytes of indirect area per node (PEMS1: slots for **all** `v`
@@ -326,6 +346,15 @@ pub fn force_serial_env() -> bool {
     truthy(std::env::var("PEMS2_FORCE_SERIAL").ok())
 }
 
+/// True when `PEMS2_NO_PREFETCH` is set to a truthy value
+/// (`1`/`true`/`yes`): a process-wide override forcing the legacy
+/// synchronous swap path regardless of [`SimConfig::swap_prefetch`].
+/// CI runs the whole test suite once per mode with this, mirroring the
+/// `PEMS2_FORCE_SERIAL` leg.
+pub fn no_prefetch_env() -> bool {
+    truthy(std::env::var("PEMS2_NO_PREFETCH").ok())
+}
+
 fn truthy(v: Option<String>) -> bool {
     matches!(v.as_deref(), Some("1") | Some("true") | Some("yes"))
 }
@@ -358,6 +387,7 @@ impl Default for SimConfigBuilder {
                 cost: CostCoeffs::default(),
                 compute_threads: 0,
                 parallel_phases: true,
+                swap_prefetch: true,
                 record_timeline: false,
                 use_xla: false,
                 seed: 0xF00D,
@@ -412,6 +442,8 @@ impl SimConfigBuilder {
         compute_threads: usize,
         /// Parallel-phases master switch.
         parallel_phases: bool,
+        /// Swap-pipeline (double-buffer + prefetch) switch.
+        swap_prefetch: bool,
         /// Record timelines.
         record_timeline: bool,
         /// Enable XLA compute path.
@@ -522,6 +554,27 @@ mod tests {
         assert!(!truthy(Some("0".into())));
         assert!(!truthy(Some("".into())));
         assert!(!truthy(None));
+    }
+
+    #[test]
+    fn swap_prefetch_requires_the_async_driver() {
+        // The env var is process-global; exercise the config logic only.
+        let mk = |io, on| SimConfig::builder().io(io).swap_prefetch(on).build().unwrap();
+        if !no_prefetch_env() {
+            assert!(mk(IoStyle::Async, true).swap_prefetch_active());
+        }
+        assert!(!mk(IoStyle::Async, false).swap_prefetch_active());
+        // The synchronous unix driver has nothing to overlap with; the
+        // mmap/mem stores never swap explicitly.
+        assert!(!mk(IoStyle::Unix, true).swap_prefetch_active());
+        let c = SimConfig::builder()
+            .io(IoStyle::Mmap)
+            .layout(Layout::PerVpDisk)
+            .swap_prefetch(true)
+            .build()
+            .unwrap();
+        assert!(!c.swap_prefetch_active());
+        assert!(!mk(IoStyle::Mem, true).swap_prefetch_active());
     }
 
     #[test]

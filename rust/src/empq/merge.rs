@@ -32,9 +32,11 @@
 use crate::disk::DiskSet;
 use crate::error::Result;
 use crate::metrics::{IoClass, Metrics};
+use crate::runtime::Compute;
 use crate::util::bytes::{as_bytes, as_bytes_mut};
 use crate::util::pool::WorkerPool;
 use crate::util::record::Record;
+use std::sync::Arc;
 
 /// Block-buffered read cursor over one sorted run stored in a [`DiskSet`].
 ///
@@ -365,17 +367,27 @@ impl<T: Record> MultiwayMerge<T> {
 
 /// Sort each segment, concurrently on `pool` when given (one job per
 /// segment, metered into `metrics` as one batch), serially in place
-/// otherwise.  `overlap` runs on the *calling* thread between job
-/// submission and join — the spill pipeline's bookkeeping window
-/// (merge-buffer resizing, extent accounting) that hides behind the
-/// sorts.  In the serial path `overlap` runs after the sorts, so its
-/// effects land at the same point either way.
+/// otherwise.  When `kernel` carries a live compute runtime, each
+/// segment first offers itself to the record type's accelerator kernel
+/// ([`Record::kernel_sort`] — the XLA bitonic tile-sort for `u32`),
+/// falling back to `sort_unstable`; results are byte-identical either
+/// way.  `overlap` runs on the *calling* thread between job submission
+/// and join — the spill pipeline's bookkeeping window (merge-buffer
+/// resizing, extent accounting) that hides behind the sorts.  In the
+/// serial path `overlap` runs after the sorts, so its effects land at
+/// the same point either way.
 pub fn sort_segments<T: Record>(
     segments: Vec<Vec<T>>,
     pool: Option<&WorkerPool>,
     metrics: &Metrics,
+    kernel: Option<&Arc<Compute>>,
     overlap: impl FnOnce(),
 ) -> Vec<Vec<T>> {
+    fn sort_one<T: Record>(s: &mut Vec<T>, kernel: Option<&Arc<Compute>>) {
+        if !kernel.is_some_and(|c| T::kernel_sort(s, c)) {
+            s.sort_unstable();
+        }
+    }
     match pool {
         Some(pool) if segments.len() > 1 => {
             metrics.pool_batch(segments.len() as u64);
@@ -383,8 +395,9 @@ pub fn sort_segments<T: Record>(
                 segments
                     .into_iter()
                     .map(|mut s| {
+                        let kernel = kernel.cloned();
                         move || {
-                            s.sort_unstable();
+                            sort_one(&mut s, kernel.as_ref());
                             s
                         }
                     })
@@ -396,7 +409,7 @@ pub fn sort_segments<T: Record>(
         _ => {
             let mut segments = segments;
             for s in segments.iter_mut() {
-                s.sort_unstable();
+                sort_one(s, kernel);
             }
             overlap();
             segments
@@ -735,16 +748,31 @@ mod tests {
         let pool = WorkerPool::new(3);
         let metrics = Metrics::new();
         let mut overlap_ran = false;
-        let par = sort_segments(segments.clone(), Some(&pool), &metrics, || {
+        let par = sort_segments(segments.clone(), Some(&pool), &metrics, None, || {
             overlap_ran = true;
         });
         assert!(overlap_ran);
-        let ser = sort_segments(segments, None, &metrics, || ());
+        let ser = sort_segments(segments, None, &metrics, None, || ());
         assert_eq!(par, ser, "sort mode must not change segment contents");
         assert!(par.iter().all(|s| s.windows(2).all(|w| w[0] <= w[1])));
         let snap = metrics.snapshot();
         assert_eq!(snap.pool_batches, 1, "only the pooled call meters");
         assert_eq!(snap.pool_jobs, 5, "one job per segment");
+    }
+
+    #[test]
+    fn sort_segments_kernel_hook_is_byte_identical() {
+        // With a disabled runtime the kernel reports "no kernel" and the
+        // plain path runs; the wiring must not change bytes in either
+        // the pooled or the serial leg.
+        let compute = Arc::new(Compute::disabled());
+        let segments = random_segments(4, &[300, 7, 0, 64]);
+        let pool = WorkerPool::new(2);
+        let metrics = Metrics::new();
+        let with_kernel =
+            sort_segments(segments.clone(), Some(&pool), &metrics, Some(&compute), || ());
+        let without = sort_segments(segments, None, &metrics, None, || ());
+        assert_eq!(with_kernel, without);
     }
 
     #[test]

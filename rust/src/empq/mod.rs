@@ -49,6 +49,7 @@ use crate::disk::DiskSet;
 use crate::error::{Error, Result};
 use crate::io::{aio::AsyncIo, unix::UnixIo, IoDriver};
 use crate::metrics::{CostModel, IoClass, Metrics, MetricsSnapshot};
+use crate::runtime::Compute;
 use crate::util::bytes::Pod;
 use crate::util::pool::WorkerPool;
 use crate::util::record::Record;
@@ -205,6 +206,10 @@ pub struct EmPq<T: Record = Entry> {
     /// Drain + sort heaps on the pool (else the pre-pool serial path —
     /// kept for A/B benchmarking).
     parallel_spill: bool,
+    /// Accelerator backend offered to the segment-sort closure
+    /// ([`Record::kernel_sort`]); disabled unless `cfg.use_xla` resolved
+    /// a live PJRT runtime.
+    compute: Arc<Compute>,
     /// Next free byte in the spill arena (bump high-water).
     arena_at: u64,
     /// Spill arena capacity (bytes).
@@ -237,7 +242,7 @@ impl<T: Record> EmPq<T> {
     pub fn new(cfg: &SimConfig, capacity: u64) -> Result<EmPq<T>> {
         let metrics = Arc::new(Metrics::new());
         let driver: Arc<dyn IoDriver> = match cfg.io {
-            IoStyle::Async => Arc::new(AsyncIo::new(cfg.d.max(2))),
+            IoStyle::Async => Arc::new(AsyncIo::new(cfg.d)),
             _ => Arc::new(UnixIo::new()),
         };
         let arena_cap = capacity.max(1) * T::SIZE as u64;
@@ -268,6 +273,7 @@ impl<T: Record> EmPq<T> {
             free: ExtentFreeList::default(),
             pool: None,
             parallel_spill: cfg.phases_parallel() && k > 1,
+            compute: Arc::new(Compute::auto("artifacts", cfg.use_xla)),
             arena_at: 0,
             arena_cap,
             arena_reused: 0,
@@ -699,13 +705,15 @@ impl<T: Record> EmPq<T> {
             // Disjoint field borrows: the pool sorts while `ext` resizes
             // its merge buffers (the overlapped-bookkeeping window);
             // already-buffered data drains first — a bounded transient.
-            let EmPq { pool, heaps, parallel_spill, metrics, ext, .. } = self;
+            let EmPq { pool, heaps, parallel_spill, metrics, ext, compute, .. } = self;
             let p = if *parallel_spill && segments.len() > 1 {
                 Some(&*pool.get_or_insert_with(|| WorkerPool::new(heaps.len())))
             } else {
                 None
             };
-            merge::sort_segments(segments, p, metrics, || ext.set_buf_caps(cap))
+            merge::sort_segments(segments, p, metrics, Some(&*compute), || {
+                ext.set_buf_caps(cap)
+            })
         };
         // One disk block per write chunk (`cap` never exceeds it — see
         // `next_run_buf_cap`'s clamp); the run's head stays resident so

@@ -66,8 +66,13 @@ pub fn run_arc(
     // Build the nodes.
     let mut nodes: Vec<Arc<NodeShared>> = Vec::with_capacity(cfg.p);
     for node in 0..cfg.p {
+        // One async worker per disk: strict per-disk queue partitioning,
+        // so swap-out write-behind, context prefetch and message delivery
+        // targeting distinct disks proceed concurrently (and requests to
+        // one disk stay FIFO — the read-after-write ordering the swap
+        // pipeline's prefetch relies on).
         let driver: Arc<dyn IoDriver> = match cfg.io {
-            IoStyle::Async => Arc::new(AsyncIo::new(cfg.d.max(2))),
+            IoStyle::Async => Arc::new(AsyncIo::new(cfg.d)),
             _ => Arc::new(UnixIo::new()),
         };
         let disks = if cfg.io == IoStyle::Mem {
@@ -79,12 +84,14 @@ pub fn run_arc(
         let vpp = cfg.vps_per_node();
         let rounds = vpp.div_ceil(cfg.k);
         // The node's compute pool: one engine-owned resource shared by
-        // every parallel phase (delivery fan-out today), created once and
+        // every parallel phase (delivery fan-out), created once and
         // reused for the whole run.  Absent in serial mode, when a
-        // 1-wide pool would buy nothing, and for explicit-I/O stores
-        // (whose delivery stays serial — see NodeShared::pooled_delivery
-        // — so the workers would only idle).
-        let pool = (cfg.phases_parallel() && cfg.pool_threads() > 1 && !cfg.io.is_explicit())
+        // 1-wide pool would buy nothing.  Explicit-I/O stores fan out
+        // too since the per-disk I/O queue partitioning landed: their
+        // deliveries batch per target disk (see deliver_local_batch) and
+        // the border cache is lock-protected with per-(src,dst) disjoint
+        // regions.
+        let pool = (cfg.phases_parallel() && cfg.pool_threads() > 1)
             .then(|| Arc::new(WorkerPool::new(cfg.pool_threads())));
         let shared = NodeShared {
             cfg: cfg.clone(),

@@ -3,12 +3,27 @@
 //! Writes are *write-behind*: the call copies the buffer, enqueues a
 //! request on the worker thread that owns the target disk, and returns
 //! immediately, letting the virtual processor overlap computation and
-//! communication with disk I/O.  Reads are ordered after pending writes to
-//! the same disk (the barrier semantics of §5.1.2: a thread only ever waits
-//! for requests whose results it needs).
+//! communication with disk I/O.  Reads come in two flavours: the
+//! blocking [`IoDriver::read_at`] (ordered after pending writes to the
+//! same disk — the barrier semantics of §5.1.2) and the deferred
+//! [`IoDriver::read_at_async`], which enqueues the read on the disk's
+//! worker and hands back a [`ReadTicket`] — the context-swap prefetch
+//! path of the swap pipeline ([`crate::vp::swap`]).
+//!
+//! **Queue partitioning**: every disk owns exactly one request queue
+//! (requests for disk `i` always land on worker `i mod workers`; the
+//! engine sizes `workers = D` so the mapping is 1:1).  Within a queue
+//! requests execute FIFO, so a read enqueued after a write to the same
+//! disk observes the written data; across queues, swap-out, prefetch and
+//! delivery targeting *distinct* disks proceed concurrently.
+//!
+//! Worker-side failures are recorded as structured [`IoFault`]s (disk
+//! index + physical offset + operation) and surfaced at the next
+//! flush/barrier — a failed write-behind fails the run instead of being
+//! silently dropped.
 
 use crate::error::Result;
-use crate::io::{DiskFile, IoDriver};
+use crate::io::{DiskFile, IoDriver, IoFault, ReadCompletion, ReadDst, ReadTicket};
 use std::collections::HashMap;
 use std::fs::File;
 use std::os::unix::fs::FileExt;
@@ -16,23 +31,33 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 
-struct WriteReq {
-    file: Arc<File>,
-    off: u64,
-    data: Vec<u8>,
-    disk: usize,
+enum Req {
+    Write {
+        file: Arc<File>,
+        off: u64,
+        data: Vec<u8>,
+        disk: usize,
+    },
+    Read {
+        file: Arc<File>,
+        off: u64,
+        dst: ReadDst,
+        disk: usize,
+        completion: ReadCompletion,
+    },
 }
 
 struct Shared {
     /// Outstanding requests per disk index.
     pending: Mutex<HashMap<usize, usize>>,
     cv: Condvar,
-    errors: Mutex<Vec<String>>,
+    /// Structured worker-side failures, drained at the next flush/barrier.
+    faults: Mutex<Vec<IoFault>>,
 }
 
-/// Write-behind async I/O with per-disk ordered queues.
+/// Write-behind + deferred-read async I/O with per-disk ordered queues.
 pub struct AsyncIo {
-    senders: Vec<Sender<WriteReq>>,
+    senders: Vec<Sender<Req>>,
     shared: Arc<Shared>,
     files: Mutex<HashMap<usize, Arc<File>>>,
     inflight_hwm: AtomicUsize,
@@ -47,26 +72,54 @@ impl std::fmt::Debug for AsyncIo {
 
 impl AsyncIo {
     /// Create a driver with `workers` I/O threads.  Requests for one disk
-    /// always land on the same worker, preserving per-disk write order.
+    /// always land on the same worker (`disk mod workers`), preserving
+    /// per-disk request order; callers that want strict per-disk queue
+    /// partitioning pass `workers = D` (one queue per disk — what the
+    /// engine does).
     pub fn new(workers: usize) -> Self {
         let workers = workers.max(1);
         let shared = Arc::new(Shared {
             pending: Mutex::new(HashMap::new()),
             cv: Condvar::new(),
-            errors: Mutex::new(Vec::new()),
+            faults: Mutex::new(Vec::new()),
         });
         let mut senders = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for _ in 0..workers {
-            let (tx, rx) = channel::<WriteReq>();
+            let (tx, rx) = channel::<Req>();
             let sh = shared.clone();
             handles.push(std::thread::spawn(move || {
                 while let Ok(req) = rx.recv() {
-                    if let Err(e) = req.file.write_all_at(&req.data, req.off) {
-                        sh.errors.lock().unwrap().push(e.to_string());
-                    }
+                    let disk = match req {
+                        Req::Write { file, off, data, disk } => {
+                            if let Err(e) = file.write_all_at(&data, off) {
+                                sh.faults.lock().unwrap().push(IoFault {
+                                    disk,
+                                    off,
+                                    len: data.len(),
+                                    op: "write",
+                                    error: e.to_string(),
+                                });
+                            }
+                            disk
+                        }
+                        Req::Read { file, off, dst, disk, completion } => {
+                            let buf = unsafe {
+                                std::slice::from_raw_parts_mut(dst.ptr, dst.len)
+                            };
+                            let r = file.read_exact_at(buf, off).map_err(|e| IoFault {
+                                disk,
+                                off,
+                                len: dst.len,
+                                op: "read",
+                                error: e.to_string(),
+                            });
+                            completion.complete(r);
+                            disk
+                        }
+                    };
                     let mut p = sh.pending.lock().unwrap();
-                    let c = p.get_mut(&req.disk).expect("pending entry exists");
+                    let c = p.get_mut(&disk).expect("pending entry exists");
                     *c -= 1;
                     if *c == 0 {
                         sh.cv.notify_all();
@@ -94,22 +147,39 @@ impl AsyncIo {
         Ok(f)
     }
 
+    fn enqueue(&self, disk_index: usize, req: Req) -> Result<()> {
+        {
+            let mut p = self.shared.pending.lock().unwrap();
+            let c = p.entry(disk_index).or_insert(0);
+            *c += 1;
+            let total: usize = p.values().sum();
+            self.inflight_hwm.fetch_max(total, Ordering::Relaxed);
+        }
+        self.senders[disk_index % self.senders.len()]
+            .send(req)
+            .map_err(|_| crate::error::Error::Io(std::io::Error::other("io worker died")))
+    }
+
     fn wait_disk(&self, disk_index: usize) -> Result<()> {
         let mut p = self.shared.pending.lock().unwrap();
         while p.get(&disk_index).copied().unwrap_or(0) > 0 {
             p = self.shared.cv.wait(p).unwrap();
         }
         drop(p);
-        self.check_errors()
+        self.check_faults()
     }
 
-    fn check_errors(&self) -> Result<()> {
-        let mut errs = self.shared.errors.lock().unwrap();
-        if let Some(e) = errs.pop() {
-            errs.clear();
-            return Err(crate::error::Error::Io(std::io::Error::other(e)));
+    fn check_faults(&self) -> Result<()> {
+        let mut faults = self.shared.faults.lock().unwrap();
+        if faults.is_empty() {
+            return Ok(());
         }
-        Ok(())
+        let msg = faults
+            .drain(..)
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("; ");
+        Err(crate::error::Error::Io(std::io::Error::other(msg)))
     }
 
     /// High-water mark of in-flight requests (for perf diagnostics).
@@ -120,7 +190,7 @@ impl AsyncIo {
 
 impl IoDriver for AsyncIo {
     fn read_at(&self, disk: &DiskFile, off: u64, buf: &mut [u8]) -> Result<()> {
-        // Order after pending writes to this disk.
+        // Order after pending requests to this disk.
         self.wait_disk(disk.index)?;
         disk.file.read_exact_at(buf, off)?;
         Ok(())
@@ -128,18 +198,20 @@ impl IoDriver for AsyncIo {
 
     fn write_at(&self, disk: &DiskFile, off: u64, data: &[u8]) -> Result<()> {
         let file = self.handle_for(disk)?;
-        {
-            let mut p = self.shared.pending.lock().unwrap();
-            let c = p.entry(disk.index).or_insert(0);
-            *c += 1;
-            let total: usize = p.values().sum();
-            self.inflight_hwm.fetch_max(total, Ordering::Relaxed);
-        }
-        let req = WriteReq { file, off, data: data.to_vec(), disk: disk.index };
-        self.senders[disk.index % self.senders.len()]
-            .send(req)
-            .map_err(|_| crate::error::Error::Io(std::io::Error::other("io worker died")))?;
-        Ok(())
+        self.enqueue(
+            disk.index,
+            Req::Write { file, off, data: data.to_vec(), disk: disk.index },
+        )
+    }
+
+    fn read_at_async(&self, disk: &DiskFile, off: u64, dst: ReadDst) -> Result<ReadTicket> {
+        let file = self.handle_for(disk)?;
+        let (ticket, completion) = ReadTicket::pending();
+        self.enqueue(
+            disk.index,
+            Req::Read { file, off, dst, disk: disk.index, completion },
+        )?;
+        Ok(ticket)
     }
 
     fn flush_disk(&self, disk_index: usize) -> Result<()> {
@@ -152,7 +224,7 @@ impl IoDriver for AsyncIo {
             p = self.shared.cv.wait(p).unwrap();
         }
         drop(p);
-        self.check_errors()
+        self.check_faults()
     }
 
     fn name(&self) -> &'static str {
@@ -164,6 +236,33 @@ impl IoDriver for AsyncIo {
 mod tests {
     use super::*;
 
+    fn scratch_file(name: &str, writable: bool) -> (std::path::PathBuf, DiskFile) {
+        let dir = std::env::temp_dir().join(format!(
+            "pems2-aio-{}-{}",
+            std::process::id(),
+            name
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("d.dat");
+        {
+            // Create + size with a writable handle first.
+            let f = std::fs::OpenOptions::new()
+                .create(true)
+                .read(true)
+                .write(true)
+                .truncate(true)
+                .open(&path)
+                .unwrap();
+            f.set_len(4096).unwrap();
+        }
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(writable)
+            .open(&path)
+            .unwrap();
+        (dir, DiskFile { index: 0, file })
+    }
+
     #[test]
     fn flush_all_with_no_requests_is_instant() {
         let d = AsyncIo::new(2);
@@ -172,18 +271,7 @@ mod tests {
 
     #[test]
     fn many_interleaved_writes_keep_order_per_disk() {
-        let dir = std::env::temp_dir().join(format!("pems2-aio-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("ordered.dat");
-        let file = std::fs::OpenOptions::new()
-            .create(true)
-            .read(true)
-            .write(true)
-            .truncate(true)
-            .open(&path)
-            .unwrap();
-        file.set_len(4096).unwrap();
-        let disk = DiskFile { index: 0, file };
+        let (dir, disk) = scratch_file("ordered", true);
         let d = AsyncIo::new(1);
         // Overlapping writes to the same offset: last must win.
         for i in 0..100u8 {
@@ -193,6 +281,68 @@ mod tests {
         let mut buf = [0u8; 64];
         d.read_at(&disk, 0, &mut buf).unwrap();
         assert_eq!(buf, [99u8; 64]);
-        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn async_read_ordered_after_write_on_same_queue() {
+        let (dir, disk) = scratch_file("raw", true);
+        let d = AsyncIo::new(1);
+        d.write_at(&disk, 128, &[0xAB; 64]).unwrap();
+        // The deferred read is enqueued behind the write on the same
+        // disk's queue, so it must observe the written bytes.
+        let mut buf = vec![0u8; 64];
+        let t = d
+            .read_at_async(&disk, 128, ReadDst { ptr: buf.as_mut_ptr(), len: buf.len() })
+            .unwrap();
+        t.wait().unwrap();
+        assert_eq!(buf, vec![0xAB; 64]);
+        d.flush_all().unwrap();
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn failed_write_behind_fails_the_next_flush_with_location() {
+        // Fault injection: the disk's file handle is read-only, so the
+        // deferred write fails on the worker.  The failure must surface
+        // at the next flush (not vanish), carrying disk index + offset.
+        let (dir, disk) = scratch_file("fault", false);
+        let d = AsyncIo::new(1);
+        d.write_at(&disk, 1024, &[7u8; 256]).unwrap(); // enqueue succeeds
+        let err = d.flush_all().unwrap_err().to_string();
+        assert!(err.contains("disk 0"), "error must name the disk: {err}");
+        assert!(err.contains("1024"), "error must name the offset: {err}");
+        assert!(err.contains("write"), "error must name the operation: {err}");
+        // The fault is drained: the driver is usable again afterwards.
+        d.flush_all().unwrap();
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn failed_write_behind_fails_a_following_read_barrier() {
+        // The §5.1.2 barrier path: a blocking read orders after pending
+        // writes and must surface their faults too.
+        let (dir, disk) = scratch_file("fault-read", false);
+        let d = AsyncIo::new(1);
+        d.write_at(&disk, 512, &[1u8; 128]).unwrap();
+        let mut buf = [0u8; 8];
+        let err = d.read_at(&disk, 0, &mut buf).unwrap_err().to_string();
+        assert!(err.contains("disk 0") && err.contains("512"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn failed_async_read_reports_through_the_ticket() {
+        let (dir, disk) = scratch_file("short", true);
+        let d = AsyncIo::new(1);
+        // Read past EOF (file is 4096 B): read_exact_at fails.
+        let mut buf = vec![0u8; 64];
+        let t = d
+            .read_at_async(&disk, 1 << 20, ReadDst { ptr: buf.as_mut_ptr(), len: buf.len() })
+            .unwrap();
+        let err = t.wait().unwrap_err().to_string();
+        assert!(err.contains("disk 0"), "{err}");
+        assert!(err.contains("read"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -18,6 +18,7 @@ pub mod unix;
 
 use crate::error::Result;
 use std::fs::File;
+use std::sync::{Arc, Condvar, Mutex};
 
 /// A single backing file standing in for one physical disk.
 #[derive(Debug)]
@@ -26,6 +27,121 @@ pub struct DiskFile {
     pub index: usize,
     /// The backing file.
     pub file: File,
+}
+
+/// A failed deferred I/O operation, located by disk index and physical
+/// offset — what the async worker threads record so a later
+/// flush/barrier can report *where* a write-behind or prefetch died
+/// instead of a joined string.
+#[derive(Debug, Clone)]
+pub struct IoFault {
+    /// Disk index within the node.
+    pub disk: usize,
+    /// Physical byte offset of the failed operation.
+    pub off: u64,
+    /// Length of the failed operation in bytes.
+    pub len: usize,
+    /// `"write"` or `"read"`.
+    pub op: &'static str,
+    /// The underlying OS error, stringified.
+    pub error: String,
+}
+
+impl std::fmt::Display for IoFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "disk {} {} of {} B at offset {} failed: {}",
+            self.disk, self.op, self.len, self.off, self.error
+        )
+    }
+}
+
+/// Destination of an asynchronous read: a raw pointer + length handed
+/// across to the driver's worker thread.
+///
+/// # Safety contract
+/// The caller guarantees the region stays valid, writable and untouched
+/// by anyone else until the returned [`ReadTicket`] completes (the swap
+/// scheduler's shadow buffers satisfy this by construction: a pending
+/// prefetch owns its shadow buffer exclusively).
+pub struct ReadDst {
+    /// Destination base pointer.
+    pub ptr: *mut u8,
+    /// Bytes to read.
+    pub len: usize,
+}
+
+// SAFETY: the pointer crosses to exactly one worker thread, which is the
+// only writer until the ticket completes (see the contract above).
+unsafe impl Send for ReadDst {}
+
+#[derive(Debug)]
+struct TicketState {
+    /// `None` while in flight; `Some(Ok)` / `Some(Err(fault))` when done.
+    done: Mutex<Option<std::result::Result<(), IoFault>>>,
+    cv: Condvar,
+}
+
+/// Completion token for a deferred read.  Cloneable (all clones observe
+/// the same completion); waiting is idempotent and does not consume.
+#[derive(Debug, Clone)]
+pub struct ReadTicket {
+    /// `None` = the read completed synchronously at issue time (the
+    /// blocking-driver default).
+    inner: Option<Arc<TicketState>>,
+}
+
+impl ReadTicket {
+    /// A ticket that is already complete (synchronous drivers).
+    pub fn ready() -> ReadTicket {
+        ReadTicket { inner: None }
+    }
+
+    /// A pending ticket plus its completion handle for the worker side.
+    pub fn pending() -> (ReadTicket, ReadCompletion) {
+        let state = Arc::new(TicketState { done: Mutex::new(None), cv: Condvar::new() });
+        (ReadTicket { inner: Some(state.clone()) }, ReadCompletion { state })
+    }
+
+    /// Block until the read finished; surfaces the worker-side fault
+    /// (disk index + offset) as an I/O error.
+    pub fn wait(&self) -> Result<()> {
+        let Some(state) = &self.inner else { return Ok(()) };
+        let mut done = state.done.lock().unwrap();
+        while done.is_none() {
+            done = state.cv.wait(done).unwrap();
+        }
+        match done.as_ref().unwrap() {
+            Ok(()) => Ok(()),
+            Err(fault) => Err(crate::error::Error::Io(std::io::Error::other(
+                fault.to_string(),
+            ))),
+        }
+    }
+
+    /// True once the read finished (without blocking).
+    pub fn is_done(&self) -> bool {
+        match &self.inner {
+            None => true,
+            Some(state) => state.done.lock().unwrap().is_some(),
+        }
+    }
+}
+
+/// Worker-side handle used to complete a [`ReadTicket`].
+pub struct ReadCompletion {
+    state: Arc<TicketState>,
+}
+
+impl ReadCompletion {
+    /// Mark the read done and wake all waiters.
+    pub fn complete(self, result: std::result::Result<(), IoFault>) {
+        let mut done = self.state.done.lock().unwrap();
+        *done = Some(result);
+        drop(done);
+        self.state.cv.notify_all();
+    }
 }
 
 /// Abstract positional I/O to one disk file.
@@ -39,6 +155,21 @@ pub trait IoDriver: Send + Sync {
     /// Positional write; may complete asynchronously (write-behind).  The
     /// driver owns a copy of `data` if it defers.
     fn write_at(&self, disk: &DiskFile, off: u64, data: &[u8]) -> Result<()>;
+
+    /// Positional read that may complete asynchronously; the returned
+    /// ticket reports completion.  Drivers with per-disk request queues
+    /// (the async driver) order the read after earlier writes to the
+    /// same disk, so a prefetch enqueued behind a swap-out of the same
+    /// blocks observes the written data.  The default performs the read
+    /// synchronously at issue time (the blocking-driver degradation:
+    /// same bytes, no overlap).
+    ///
+    /// See [`ReadDst`] for the destination-buffer safety contract.
+    fn read_at_async(&self, disk: &DiskFile, off: u64, dst: ReadDst) -> Result<ReadTicket> {
+        let buf = unsafe { std::slice::from_raw_parts_mut(dst.ptr, dst.len) };
+        self.read_at(disk, off, buf)?;
+        Ok(ReadTicket::ready())
+    }
 
     /// Wait for all outstanding deferred operations on `disk`.
     fn flush_disk(&self, disk_index: usize) -> Result<()>;
@@ -102,6 +233,59 @@ mod tests {
     #[test]
     fn async_round_trip() {
         round_trip(&AsyncIo::new(2));
+    }
+
+    #[test]
+    fn ready_ticket_is_instant_and_reusable() {
+        let t = ReadTicket::ready();
+        assert!(t.is_done());
+        t.wait().unwrap();
+        t.wait().unwrap(); // idempotent
+        let t2 = t.clone();
+        t2.wait().unwrap();
+    }
+
+    #[test]
+    fn pending_ticket_completes_across_threads() {
+        let (t, c) = ReadTicket::pending();
+        assert!(!t.is_done());
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || t2.wait());
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        c.complete(Ok(()));
+        h.join().unwrap().unwrap();
+        assert!(t.is_done());
+        t.wait().unwrap(); // all clones observe the same completion
+    }
+
+    #[test]
+    fn ticket_fault_carries_disk_and_offset() {
+        let (t, c) = ReadTicket::pending();
+        c.complete(Err(IoFault {
+            disk: 3,
+            off: 8192,
+            len: 512,
+            op: "read",
+            error: "boom".into(),
+        }));
+        let err = t.wait().unwrap_err().to_string();
+        assert!(err.contains("disk 3"), "fault must name the disk: {err}");
+        assert!(err.contains("8192"), "fault must name the offset: {err}");
+    }
+
+    #[test]
+    fn default_read_at_async_is_synchronous_and_correct() {
+        let driver = UnixIo::new();
+        let (path, disk) = tmpfile();
+        driver.write_at(&disk, 4096, &[0x5C; 256]).unwrap();
+        let mut buf = vec![0u8; 256];
+        let ticket = driver
+            .read_at_async(&disk, 4096, ReadDst { ptr: buf.as_mut_ptr(), len: buf.len() })
+            .unwrap();
+        assert!(ticket.is_done(), "blocking default completes at issue time");
+        ticket.wait().unwrap();
+        assert_eq!(buf, vec![0x5C; 256]);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
     }
 
     #[test]

@@ -88,6 +88,10 @@ SIMULATION FLAGS (Appendix B.3)
   --serial        force the serial path of every parallel phase (delivery
                   fan-out, sort run formation, empq spills); the
                   PEMS2_FORCE_SERIAL=1 env var does the same globally
+  --no-prefetch   disable the asynchronous context-swap pipeline
+                  (double-buffered partitions + shadow prefetch; takes
+                  effect with --io stxxl-file); PEMS2_NO_PREFETCH=1 does
+                  the same globally — off = the legacy synchronous path
   --timeline      record per-thread superstep timelines (Figs. 8.12-8.14)
   --xla           run computation supersteps on the AOT XLA kernels
   --seed N        workload seed
@@ -124,6 +128,13 @@ fn finish(report: &pems2::engine::RunReport, cli: &Cli, verified: bool) -> Resul
     println!("supersteps         {}", m.supersteps);
     println!("mmap_touched       {}", human_bytes(m.mmap_touched_bytes));
     println!("pool_jobs          {} ({} batches)", m.pool_jobs, m.pool_batches);
+    println!(
+        "swap_prefetch      {} hits / {} misses, {} hidden",
+        m.prefetch_hits,
+        m.prefetch_misses,
+        human_bytes(m.prefetch_hit_bytes)
+    );
+    println!("swap_wait_seconds  {:.3}", m.swap_wait_ns as f64 / 1e9);
     println!("xla_active         {}", report.xla_active);
     println!("verified           {verified}");
     if let Some(path) = cli.options.get("timeline-out") {

@@ -32,6 +32,10 @@ pub struct Metrics {
     mmap_touched_bytes: AtomicU64,
     pool_jobs: AtomicU64,
     pool_batches: AtomicU64,
+    prefetch_hits: AtomicU64,
+    prefetch_misses: AtomicU64,
+    prefetch_hit_bytes: AtomicU64,
+    swap_wait_ns: AtomicU64,
 }
 
 impl Metrics {
@@ -101,6 +105,28 @@ impl Metrics {
         self.pool_jobs.fetch_add(jobs, Ordering::Relaxed);
     }
 
+    /// Record a consumed context prefetch: `bytes` of swap-in latency
+    /// were hidden behind the previous occupant's compute (the swap
+    /// pipeline's "overlap-hidden" signal).
+    pub fn prefetch_hit(&self, bytes: u64) {
+        self.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+        self.prefetch_hit_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Record a disposed context prefetch (invalidated by a delivery
+    /// write, stale turn target, or region mismatch) — its read I/O was
+    /// wasted.
+    pub fn prefetch_miss(&self) {
+        self.prefetch_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `ns` nanoseconds a VP thread spent blocked waiting for a
+    /// swap-in to complete (prefetch-completion wait or the blocking
+    /// fallback reads) under the swap pipeline.
+    pub fn swap_wait(&self, ns: u64) {
+        self.swap_wait_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
     /// Total swap I/O volume (read + write), bytes.
     pub fn swap_bytes(&self) -> u64 {
         self.swap_read_bytes.load(Ordering::Relaxed)
@@ -130,6 +156,10 @@ impl Metrics {
             mmap_touched_bytes: self.mmap_touched_bytes.load(Ordering::Relaxed),
             pool_jobs: self.pool_jobs.load(Ordering::Relaxed),
             pool_batches: self.pool_batches.load(Ordering::Relaxed),
+            prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
+            prefetch_misses: self.prefetch_misses.load(Ordering::Relaxed),
+            prefetch_hit_bytes: self.prefetch_hit_bytes.load(Ordering::Relaxed),
+            swap_wait_ns: self.swap_wait_ns.load(Ordering::Relaxed),
         }
     }
 }
@@ -165,6 +195,16 @@ pub struct MetricsSnapshot {
     pub pool_jobs: u64,
     /// Worker-pool batches submitted (jobs / batches = achieved fan-out).
     pub pool_batches: u64,
+    /// Context prefetches consumed by the swap pipeline.
+    pub prefetch_hits: u64,
+    /// Context prefetches issued but disposed unconsumed (wasted reads).
+    pub prefetch_misses: u64,
+    /// Swap-in bytes whose read latency was hidden behind compute
+    /// (overlap-hidden volume; a subset of `swap_read_bytes`).
+    pub prefetch_hit_bytes: u64,
+    /// Nanoseconds VP threads spent blocked on swap-in completion under
+    /// the swap pipeline.
+    pub swap_wait_ns: u64,
 }
 
 impl MetricsSnapshot {
@@ -203,6 +243,10 @@ impl MetricsSnapshot {
             mmap_touched_bytes: self.mmap_touched_bytes - earlier.mmap_touched_bytes,
             pool_jobs: self.pool_jobs - earlier.pool_jobs,
             pool_batches: self.pool_batches - earlier.pool_batches,
+            prefetch_hits: self.prefetch_hits - earlier.prefetch_hits,
+            prefetch_misses: self.prefetch_misses - earlier.prefetch_misses,
+            prefetch_hit_bytes: self.prefetch_hit_bytes - earlier.prefetch_hit_bytes,
+            swap_wait_ns: self.swap_wait_ns - earlier.swap_wait_ns,
         }
     }
 }
@@ -250,6 +294,24 @@ mod tests {
         m.pool_batch(1);
         let d = m.snapshot().delta(&s);
         assert_eq!((d.pool_batches, d.pool_jobs), (1, 1));
+    }
+
+    #[test]
+    fn prefetch_counters_accumulate() {
+        let m = Metrics::new();
+        m.prefetch_hit(4096);
+        m.prefetch_hit(1024);
+        m.prefetch_miss();
+        m.swap_wait(500);
+        let s = m.snapshot();
+        assert_eq!(s.prefetch_hits, 2);
+        assert_eq!(s.prefetch_misses, 1);
+        assert_eq!(s.prefetch_hit_bytes, 5120);
+        assert_eq!(s.swap_wait_ns, 500);
+        m.prefetch_hit(8);
+        let d = m.snapshot().delta(&s);
+        assert_eq!((d.prefetch_hits, d.prefetch_hit_bytes), (1, 8));
+        assert_eq!(d.prefetch_misses, 0);
     }
 
     #[test]

@@ -22,8 +22,15 @@ use crate::sync::signal::EmSignal;
 /// Operations the calling thread can perform on its memory partition.
 ///
 /// Implemented by the engine's VP handle; tests use lightweight mocks.
+/// Under the engine's swap pipeline, `swap_out` drains via the async
+/// driver's write-behind queues and [`PartitionYield::yield_to`] lets a
+/// primitive that knows *who* it is yielding to start that thread's
+/// swap-in in the partition's shadow buffer — the primitives yield
+/// through the scheduler instead of paying blocking swaps.
 pub trait PartitionYield {
-    /// Swap this thread's context out to disk.
+    /// Swap this thread's context out to disk (write-behind under the
+    /// engine's async driver: enqueue-and-return, drained at the next
+    /// barrier flush).
     fn swap_out(&mut self) -> Result<()>;
     /// Release this thread's partition lock.
     fn unlock_partition(&mut self);
@@ -33,6 +40,11 @@ pub trait PartitionYield {
     fn partition_of(&self, thread: usize) -> usize;
     /// This thread's local ID.
     fn thread_id(&self) -> usize;
+    /// Hint that this thread is yielding its partition to `thread`
+    /// (which will swap in next): lets the engine prefetch that context
+    /// into the shadow buffer while the yielder's write-behind drains.
+    /// Default: no-op (mocks, non-pipelined stores).
+    fn yield_to(&mut self, _thread: usize) {}
 }
 
 /// Alg. 4.3.1 EM-Wait-For-Root: block until the root thread signals.
@@ -55,9 +67,12 @@ pub fn em_wait_for_root(
         // Root has not signalled yet.
         let shares = ops.partition_of(t) == ops.partition_of(root);
         if shares {
-            // Yield the partition to the root.
+            // Yield the partition to the root: the swap-out drains as
+            // write-behind while the root's context prefetches into the
+            // shadow buffer (the yield is pipelined, not paid twice).
             result = true;
             ops.swap_out()?;
+            ops.yield_to(root);
             ops.unlock_partition();
         }
         s.wait(); // wait for the root's broadcast

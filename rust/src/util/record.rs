@@ -31,6 +31,19 @@ pub trait Record: Pod + Ord {
 
     /// Project the record onto its priority.
     fn key(&self) -> Self::Key;
+
+    /// Sort `data` on an accelerator kernel when one exists for this
+    /// record type: returns `true` when the slice was sorted (by the
+    /// kernel, or its internal fallback), `false` when no kernel applies
+    /// — the caller then uses `sort_unstable`.  The spill pipeline's
+    /// segment-sort closure ([`crate::empq::merge::sort_segments`])
+    /// consults this, so both `empq` spills and `stxxl_sort` run
+    /// formation pick up the XLA tile-sort for kernel-shaped records.
+    /// Any correct sort is byte-identical for records that fully order
+    /// themselves, so the `output_hash` pins are kernel-agnostic.
+    fn kernel_sort(_data: &mut [Self], _compute: &crate::runtime::Compute) -> bool {
+        false
+    }
 }
 
 macro_rules! impl_record_for_int {
@@ -43,7 +56,27 @@ macro_rules! impl_record_for_int {
         })*
     };
 }
-impl_record_for_int!(u8, i8, u16, i16, u32, i32, u64, i64, usize);
+impl_record_for_int!(u8, i8, u16, i16, i32, u64, i64, usize);
+
+impl Record for u32 {
+    type Key = u32;
+
+    fn key(&self) -> u32 {
+        *self
+    }
+
+    /// `u32` is the XLA bitonic tile-sort's element type: route to the
+    /// kernel when the PJRT runtime is live (feature `xla` + artifacts);
+    /// otherwise report "no kernel" so callers use the plain path
+    /// without a second dispatch.
+    fn kernel_sort(data: &mut [u32], compute: &crate::runtime::Compute) -> bool {
+        if !compute.xla_active() {
+            return false;
+        }
+        compute.local_sort_u32(data);
+        true
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -59,6 +92,20 @@ mod tests {
         assert_eq!((-3i64).key(), -3);
         assert_eq!(min_by_key(&[5u64, 2, 9]), Some(2));
         assert_eq!(u32::SIZE, 4);
+    }
+
+    #[test]
+    fn kernel_sort_defaults_off_and_u32_gates_on_xla() {
+        let compute = crate::runtime::Compute::disabled();
+        let mut v = vec![3u64, 1, 2];
+        assert!(
+            !<u64 as Record>::kernel_sort(&mut v[..], &compute),
+            "no kernel for u64"
+        );
+        // u32 has a kernel hook, but a disabled runtime reports false so
+        // the caller's sort_unstable path runs exactly once.
+        let mut v = vec![3u32, 1, 2];
+        assert!(!<u32 as Record>::kernel_sort(&mut v[..], &compute));
     }
 
     #[test]

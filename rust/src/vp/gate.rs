@@ -92,6 +92,19 @@ impl PartitionGate {
         self.cv.notify_all();
     }
 
+    /// The round ordered turn-taking will admit next (`None` for
+    /// unordered gates, where there is no schedule to predict).  Called
+    /// by the swap pipeline right after an admission — `next_turn` has
+    /// already advanced past the caller and skipped retired rounds, so
+    /// this names exactly the VP whose context is worth prefetching into
+    /// the partition's shadow buffer.
+    pub fn peek_next_turn(&self) -> Option<usize> {
+        if !self.ordered {
+            return None;
+        }
+        Some(self.state.lock().unwrap().next_turn)
+    }
+
     /// Reset turn counting for a new internal superstep (called by the
     /// barrier leader).
     pub fn reset_turns(&self) {
@@ -160,6 +173,27 @@ mod tests {
         gate.release();
         gate.acquire_turn(0);
         gate.release();
+    }
+
+    #[test]
+    fn peek_next_turn_tracks_admissions_and_retirement() {
+        let gate = PartitionGate::new(true);
+        assert_eq!(gate.peek_next_turn(), Some(0));
+        gate.acquire_turn(0);
+        // Post-admission: the next admitted round is the prefetch target.
+        assert_eq!(gate.peek_next_turn(), Some(1));
+        gate.release();
+        // Round 1's VP finished its program: the schedule skips it.
+        gate.retire(1);
+        assert_eq!(gate.peek_next_turn(), Some(2));
+        gate.reset_turns();
+        assert_eq!(gate.peek_next_turn(), Some(0));
+        // Free acquisitions do not disturb the predicted schedule.
+        gate.acquire_free();
+        assert_eq!(gate.peek_next_turn(), Some(0));
+        gate.release();
+        // Unordered gates expose no schedule.
+        assert_eq!(PartitionGate::new(false).peek_next_turn(), None);
     }
 
     #[test]

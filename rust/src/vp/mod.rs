@@ -16,9 +16,11 @@
 
 pub mod gate;
 pub mod store;
+pub mod swap;
 
 pub use gate::PartitionGate;
 pub use store::Store;
+pub use swap::SwapScheduler;
 
 use crate::alloc::ContextAlloc;
 use crate::comm::CommState;
@@ -131,15 +133,15 @@ impl NodeShared {
         self.v_per_p().div_ceil(self.cfg.k)
     }
 
-    /// True when message delivery should fan out on the shared pool: the
-    /// engine owns a pool and the store delivers by plain memcpy
-    /// (mmap/mem stores) — per-receiver regions live in disjoint
-    /// contexts, so the copies are embarrassingly parallel.
-    /// Explicit-I/O stores keep the serial path: their delivery threads
-    /// the border cache and the per-disk queues, which the region
-    /// partitioning does not make disjoint.
+    /// True when message delivery should fan out on the shared pool (the
+    /// engine owns one).  mmap/mem stores deliver by plain memcpy into
+    /// disjoint receiver contexts; explicit stores batch per *target
+    /// disk* — since the async driver partitioned its request queues
+    /// per disk, concurrent writers land on independent queues, and the
+    /// border cache is safe under concurrency (internally locked, with
+    /// per-(src,dst) regions disjoint by the offset table).
     pub fn pooled_delivery(&self) -> bool {
-        self.pool.is_some() && !self.store.is_explicit()
+        self.pool.is_some()
     }
 
     /// Local barrier with a custom leader hook (runs once, before release).
@@ -228,6 +230,17 @@ impl Vp {
         }
     }
 
+    /// Remove `[off, off+len)` from the dirty set: the *on-disk* copy of
+    /// the range is now authoritative (a rooted-collective fan-out wrote
+    /// it directly to this context's slot), so a later swap-out must not
+    /// overwrite it with the stale in-memory bytes.
+    pub(crate) fn mark_clean(&mut self, off: u64, len: u64) {
+        if len == 0 || self.dirty.is_empty() {
+            return;
+        }
+        self.dirty = subtract_regions(&coalesce_regions(&self.dirty), &[(off, len)]);
+    }
+
     // ------------------------------------------------------------ identity
 
     /// Global rank ρ (0..v).
@@ -296,11 +309,17 @@ impl Vp {
     }
 
     /// Ensure the partition is held and the context is in memory.
+    ///
+    /// Under the swap pipeline the swap-in consumes a matching prefetch
+    /// with an active/shadow buffer flip (waiting only on the prefetch's
+    /// completion, never on write-behind), then immediately prefetches
+    /// the *next* ordered turn's context into the freed shadow buffer —
+    /// so the successor's swap-in I/O hides behind this VP's compute.
     pub fn ensure_resident(&mut self) -> Result<()> {
         self.acquire();
         if !self.resident {
             let regions = self.allocated_regions();
-            self.shared.store.swap_in_regions(
+            self.shared.store.swap_in_resident(
                 self.local,
                 self.shared.cfg.k,
                 self.shared.cfg.mu,
@@ -309,8 +328,36 @@ impl Vp {
             self.resident = true;
             // Fresh from disk: nothing dirty yet.
             self.dirty.clear();
+            self.prefetch_successor();
         }
         Ok(())
+    }
+
+    /// Pipeline the next context switch: ask the gate who runs next on
+    /// this partition (Def. 6.5.1 ordered turns) and issue asynchronous
+    /// reads of that VP's allocated regions into the shadow buffer.
+    /// Best-effort — an issue failure just means the successor takes the
+    /// blocking path (where the error properly surfaces).
+    fn prefetch_successor(&self) {
+        let sh = &self.shared;
+        if !sh.store.prefetch_enabled() {
+            return;
+        }
+        let p = self.partition();
+        let Some(next) = sh.gates[p].peek_next_turn() else { return };
+        let target = next * sh.cfg.k + p;
+        if target >= sh.v_per_p() || target == self.local {
+            return;
+        }
+        // The target's allocator is stable until it next holds this
+        // gate, which is exactly when the prefetch is consumed; a free()
+        // slipping in without the gate shows up as a region-list
+        // mismatch and falls back to the blocking path.
+        let regions = sh.allocs[target].lock().unwrap().allocated_regions();
+        if regions.is_empty() {
+            return;
+        }
+        let _ = sh.store.prefetch(target, regions);
     }
 
     /// The regions a swap-out must write: allocated ∩ dirty (under the
@@ -512,6 +559,25 @@ impl PartitionYield for Vp {
     }
     fn unlock_partition(&mut self) {
         self.release();
+    }
+    /// Yielding the partition to a known peer (EM-Wait-For-Root): start
+    /// its swap-in in the shadow buffer while our write-behind drains —
+    /// but only if the shadow is free; a pending turn-order prefetch is
+    /// more likely to be consumed than this opportunistic one.
+    fn yield_to(&mut self, thread: usize) {
+        let sh = &self.shared;
+        if !sh.store.prefetch_enabled()
+            || thread == self.local
+            || thread % sh.cfg.k != self.partition()
+            || sh.store.has_pending_prefetch(self.partition())
+        {
+            return;
+        }
+        let regions = sh.allocs[thread].lock().unwrap().allocated_regions();
+        if regions.is_empty() {
+            return;
+        }
+        let _ = sh.store.prefetch(thread, regions);
     }
     fn lock_partition(&mut self) {
         self.shared.gates[self.partition()].acquire_free();

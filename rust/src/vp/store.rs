@@ -18,7 +18,9 @@ use crate::error::{Error, Result};
 use crate::metrics::{IoClass, Metrics};
 use crate::util::align::align_up;
 use crate::util::os;
+use crate::vp::swap::SwapScheduler;
 use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// A raw, engine-managed byte buffer; access is serialized by partition
@@ -61,12 +63,59 @@ impl Drop for Mapping {
     }
 }
 
+/// One partition's buffer set: the *active* buffer VPs compute in, plus
+/// (under the swap pipeline) a *shadow* buffer prefetches fill.  The
+/// active index flips at a prefetch hit — the context switch becomes a
+/// pointer swap instead of a blocking read.
+pub struct PartitionBufs {
+    /// 1 buffer (legacy) or 2 (double-buffered pipeline), each µ bytes.
+    bufs: Vec<RawBufHandle>,
+    /// Index of the buffer VPs currently compute in.
+    active: AtomicUsize,
+}
+
+impl PartitionBufs {
+    fn new(mu: usize, double: bool) -> PartitionBufs {
+        let n = if double { 2 } else { 1 };
+        PartitionBufs {
+            bufs: (0..n).map(|_| RawBufHandle(RawBuf::owned(mu))).collect(),
+            active: AtomicUsize::new(0),
+        }
+    }
+
+    /// The buffer VPs compute in.
+    pub fn active_ptr(&self) -> *mut u8 {
+        self.bufs[self.active.load(Ordering::Acquire)].ptr()
+    }
+
+    /// The prefetch target (None without double buffering).
+    fn shadow_ptr(&self) -> Option<*mut u8> {
+        if self.bufs.len() < 2 {
+            return None;
+        }
+        Some(self.bufs[1 - self.active.load(Ordering::Acquire)].ptr())
+    }
+
+    /// Make the shadow buffer active (prefetch-hit admission).  Only the
+    /// thread holding the partition's gate may call this.
+    fn flip(&self) {
+        let cur = self.active.load(Ordering::Acquire);
+        debug_assert!(self.bufs.len() == 2, "flip without a shadow buffer");
+        self.active.store(1 - cur, Ordering::Release);
+    }
+}
+
 /// One node's context storage.
 pub enum Store {
     /// Explicit swapping through a disk set.
     Explicit {
-        /// `k` partition buffers of `µ` bytes.
-        partitions: Vec<RawBufHandle>,
+        /// The swap pipeline (prefetch + double buffering); `None` runs
+        /// the byte-identical legacy path.  Declared before the buffers
+        /// so its drop quiesces in-flight prefetch reads first.
+        sched: Option<SwapScheduler>,
+        /// `k` partition buffer sets (µ bytes each; ×2 under the
+        /// pipeline — the `2kµ` budget, see README "Swap pipeline").
+        partitions: Vec<PartitionBufs>,
         /// The node's disks.
         disks: Arc<DiskSet>,
         /// Context slot size (µ aligned up to B).
@@ -118,14 +167,20 @@ impl Store {
         let local = cfg.vps_per_node();
         let ctx_slot = align_up(cfg.mu, cfg.block());
         match cfg.io {
-            crate::config::IoStyle::Unix | crate::config::IoStyle::Async => Ok(Store::Explicit {
-                partitions: (0..cfg.k)
-                    .map(|_| RawBufHandle(RawBuf::owned(cfg.mu as usize)))
-                    .collect(),
-                disks: disks.expect("explicit store requires disks"),
-                ctx_slot,
-                metrics,
-            }),
+            crate::config::IoStyle::Unix | crate::config::IoStyle::Async => {
+                let pipeline = cfg.swap_prefetch_active();
+                Ok(Store::Explicit {
+                    sched: pipeline.then(|| {
+                        SwapScheduler::new(cfg.k, ctx_slot, cfg.mu, metrics.clone())
+                    }),
+                    partitions: (0..cfg.k)
+                        .map(|_| PartitionBufs::new(cfg.mu as usize, pipeline))
+                        .collect(),
+                    disks: disks.expect("explicit store requires disks"),
+                    ctx_slot,
+                    metrics,
+                })
+            }
             crate::config::IoStyle::Mmap => {
                 let disks = disks.expect("mmap store requires disks");
                 // Map each disk file; with PerVpDisk layout context `c`
@@ -190,7 +245,7 @@ impl Store {
     /// `µ` bytes.
     pub fn vp_memory(&self, local_vp: usize, k: usize, mu: u64) -> *mut u8 {
         match self {
-            Store::Explicit { partitions, .. } => partitions[local_vp % k].ptr(),
+            Store::Explicit { partitions, .. } => partitions[local_vp % k].active_ptr(),
             Store::Mapped { maps, vp_loc, .. } => {
                 let (m, off) = vp_loc[local_vp];
                 debug_assert!(off + mu as usize <= maps[m].len);
@@ -205,7 +260,67 @@ impl Store {
         matches!(self, Store::Explicit { .. })
     }
 
-    /// Swap selected regions of a VP's context **in** (disk -> partition).
+    /// True when the swap pipeline (shadow buffers + prefetch scheduler)
+    /// is active on this store.
+    pub fn prefetch_enabled(&self) -> bool {
+        matches!(self, Store::Explicit { sched: Some(_), .. })
+    }
+
+    /// True when the partition's shadow buffer already holds a pending
+    /// prefetch (so opportunistic issuers skip).
+    pub fn has_pending_prefetch(&self, partition: usize) -> bool {
+        match self {
+            Store::Explicit { sched: Some(s), .. } => s.has_pending(partition),
+            _ => false,
+        }
+    }
+
+    /// Issue an asynchronous prefetch of `regions` of `local_vp`'s
+    /// context into its partition's shadow buffer.  The next full
+    /// swap-in for that VP ([`Store::swap_in_resident`]) consumes it with
+    /// a buffer flip instead of blocking reads.  No-op without the
+    /// pipeline.  Caller must hold the partition's gate.
+    pub fn prefetch(&self, local_vp: usize, regions: Vec<(u64, u64)>) -> Result<()> {
+        if let Store::Explicit { sched: Some(s), partitions, disks, .. } = self {
+            let pair = &partitions[local_vp % partitions.len()];
+            let Some(shadow) = pair.shadow_ptr() else { return Ok(()) };
+            s.issue(disks, local_vp, regions, shadow)?;
+        }
+        Ok(())
+    }
+
+    /// Full swap-in establishing residency (the `ensure_resident` path):
+    /// consumes a matching prefetch with an active/shadow flip when the
+    /// pipeline is on, falling back to the legacy blocking reads
+    /// otherwise.  Only this path may flip buffers — partial swap-ins
+    /// ([`Store::swap_in_regions`]) never do, so raw partition pointers
+    /// captured under an established residency stay valid across them.
+    pub fn swap_in_resident(
+        &self,
+        local_vp: usize,
+        k: usize,
+        mu: u64,
+        regions: &[(u64, u64)],
+    ) -> Result<()> {
+        match self {
+            Store::Explicit { sched: Some(s), partitions, metrics, .. } => {
+                let t0 = std::time::Instant::now();
+                let r = if s.try_consume(local_vp, regions)? {
+                    partitions[local_vp % k].flip();
+                    Ok(())
+                } else {
+                    self.blocking_swap_in(local_vp, k, mu, regions)
+                };
+                metrics.swap_wait(t0.elapsed().as_nanos() as u64);
+                r
+            }
+            _ => self.swap_in_regions(local_vp, k, mu, regions),
+        }
+    }
+
+    /// Swap selected regions of a VP's context **in** (disk -> partition)
+    /// — the partial, never-flipping path (collective "swap message in"
+    /// steps and direct store users).
     pub fn swap_in_regions(
         &self,
         local_vp: usize,
@@ -214,24 +329,38 @@ impl Store {
         regions: &[(u64, u64)],
     ) -> Result<()> {
         match self {
-            Store::Explicit { partitions, disks, ctx_slot, .. } => {
-                let base = local_vp as u64 * ctx_slot;
-                let buf = partitions[local_vp % k].ptr();
-                for &(off, len) in regions {
-                    debug_assert!(off + len <= mu);
-                    let dst = unsafe {
-                        std::slice::from_raw_parts_mut(buf.add(off as usize), len as usize)
-                    };
-                    disks.read(IoClass::Swap, base + off, dst)?;
-                }
-                Ok(())
-            }
+            Store::Explicit { .. } => self.blocking_swap_in(local_vp, k, mu, regions),
             // mmap/mem: memory *is* the context.
             _ => Ok(()),
         }
     }
 
+    fn blocking_swap_in(
+        &self,
+        local_vp: usize,
+        k: usize,
+        mu: u64,
+        regions: &[(u64, u64)],
+    ) -> Result<()> {
+        let Store::Explicit { partitions, disks, ctx_slot, .. } = self else {
+            unreachable!("blocking_swap_in on a non-explicit store")
+        };
+        let base = local_vp as u64 * ctx_slot;
+        let buf = partitions[local_vp % k].active_ptr();
+        for &(off, len) in regions {
+            debug_assert!(off + len <= mu);
+            let dst =
+                unsafe { std::slice::from_raw_parts_mut(buf.add(off as usize), len as usize) };
+            disks.read(IoClass::Swap, base + off, dst)?;
+        }
+        Ok(())
+    }
+
     /// Swap selected regions of a VP's context **out** (partition -> disk).
+    /// Write-behind under the async driver (the driver copies at
+    /// enqueue, so the buffer is immediately reusable); any pending
+    /// prefetch of this VP's slot is invalidated — the disk image it
+    /// read is about to change.
     pub fn swap_out_regions(
         &self,
         local_vp: usize,
@@ -240,15 +369,26 @@ impl Store {
         regions: &[(u64, u64)],
     ) -> Result<()> {
         match self {
-            Store::Explicit { partitions, disks, ctx_slot, .. } => {
+            Store::Explicit { sched, partitions, disks, ctx_slot, .. } => {
                 let base = local_vp as u64 * ctx_slot;
-                let buf = partitions[local_vp % k].ptr();
+                let buf = partitions[local_vp % k].active_ptr();
                 for &(off, len) in regions {
                     debug_assert!(off + len <= mu);
                     let src = unsafe {
                         std::slice::from_raw_parts(buf.add(off as usize), len as usize)
                     };
                     disks.write(IoClass::Swap, base + off, src)?;
+                }
+                // Invalidate *after* issuing the writes: a pending
+                // prefetch of this slot is now stale, and any prefetch
+                // issued from here on queues behind the writes on the
+                // per-disk FIFOs (so it reads the new data and stays
+                // valid).  Invalidating first would leave a window where
+                // a prefetch slips between flag and write.
+                if let Some(s) = sched {
+                    if !regions.is_empty() {
+                        s.invalidate_vp(local_vp);
+                    }
                 }
                 Ok(())
             }
@@ -266,8 +406,15 @@ impl Store {
         class: IoClass,
     ) -> Result<()> {
         match self {
-            Store::Explicit { disks, ctx_slot, .. } => {
-                disks.write(class, local_vp as u64 * ctx_slot + off, data)
+            Store::Explicit { sched, disks, ctx_slot, .. } => {
+                let r = disks.write(class, local_vp as u64 * ctx_slot + off, data);
+                if let Some(s) = sched {
+                    // The receiver's on-disk context changed under a
+                    // possible prefetch of it.  Invalidate *after* the
+                    // write is issued (see swap_out_regions).
+                    s.invalidate_vp(local_vp);
+                }
+                r
             }
             Store::Mapped { maps, vp_loc, metrics, mu, .. } => {
                 debug_assert!(off + data.len() as u64 <= *mu);
@@ -326,7 +473,16 @@ impl Store {
     /// Only meaningful for explicit stores.
     pub fn raw_write(&self, off: u64, data: &[u8], class: IoClass) -> Result<()> {
         match self {
-            Store::Explicit { disks, .. } => disks.write(class, off, data),
+            Store::Explicit { sched, disks, .. } => {
+                let r = disks.write(class, off, data);
+                if let Some(s) = sched {
+                    // Usually targets the indirect area past the context
+                    // space (no overlap); range-checked to be safe, and
+                    // after the write as in swap_out_regions.
+                    s.invalidate_range(off, off + data.len() as u64);
+                }
+                r
+            }
             _ => Err(Error::config("raw disk access requires an explicit I/O store")),
         }
     }
@@ -491,5 +647,134 @@ mod tests {
             store.vp_memory(0, cfg.k, cfg.mu),
             store.vp_memory(1, cfg.k, cfg.mu)
         );
+    }
+
+    /// The pipelined handoff, end to end at the store level: VP 0 swaps
+    /// out (write-behind), a prefetch for partition-mate VP 2 fills the
+    /// shadow buffer, and VP 2's admission flips instead of reading —
+    /// byte-identical to the legacy path.  (The `mk` helper backs the
+    /// async-style config with a blocking `UnixIo` driver, so this also
+    /// exercises the synchronous ready-ticket degradation of
+    /// `read_at_async`'s default.)
+    #[test]
+    fn swap_pipeline_round_trip_is_byte_identical() {
+        {
+            let io = IoStyle::Async;
+            let (cfg, store, metrics) = mk(io);
+            if !cfg.swap_prefetch_active() {
+                // PEMS2_NO_PREFETCH CI leg: the pipeline is compiled out
+                // of the run; the legacy path is pinned elsewhere.
+                assert!(!store.prefetch_enabled());
+                return;
+            }
+            assert!(store.prefetch_enabled(), "async store defaults to the pipeline");
+            let (k, mu) = (cfg.k, cfg.mu);
+            // VP 2 writes a pattern and swaps out.
+            let p2 = store.vp_memory(2, k, mu);
+            unsafe {
+                for i in 0..512 {
+                    *p2.add(i) = (i % 249) as u8;
+                }
+            }
+            store.swap_out_regions(2, k, mu, &[(0, 512)]).unwrap();
+            // VP 0 takes the partition and clobbers the active buffer.
+            let p0 = store.vp_memory(0, k, mu);
+            unsafe {
+                std::ptr::write_bytes(p0, 0xEE, 512);
+            }
+            store.swap_out_regions(0, k, mu, &[(0, 512)]).unwrap();
+            // While "VP 0 computes", prefetch VP 2's context (ordered
+            // behind the write-behind on the same disk queues).
+            store.prefetch(2, vec![(0, 512)]).unwrap();
+            assert!(store.has_pending_prefetch(0));
+            // VP 2's admission: hit + flip, and the bytes match disk.
+            store.swap_in_resident(2, k, mu, &[(0, 512)]).unwrap();
+            let p2 = store.vp_memory(2, k, mu);
+            unsafe {
+                for i in 0..512 {
+                    assert_eq!(*p2.add(i), (i % 249) as u8, "byte {i} (io {io:?})");
+                }
+            }
+            let s = metrics.snapshot();
+            assert_eq!(s.prefetch_hits, 1, "io {io:?}");
+            assert_eq!(s.prefetch_hit_bytes, 512);
+            assert_eq!(s.prefetch_misses, 0);
+        }
+    }
+
+    #[test]
+    fn unix_style_store_keeps_the_legacy_single_buffer_path() {
+        // The synchronous driver has nothing to overlap with: no
+        // scheduler, no shadow buffers, prefetch calls are no-ops.
+        let (cfg, store, _m) = mk(IoStyle::Unix);
+        assert!(!cfg.swap_prefetch_active());
+        assert!(!store.prefetch_enabled());
+        store.prefetch(2, vec![(0, 128)]).unwrap();
+        assert!(!store.has_pending_prefetch(0));
+    }
+
+    #[test]
+    fn delivery_write_invalidates_a_pending_prefetch() {
+        let (cfg, store, metrics) = mk(IoStyle::Async);
+        if !cfg.swap_prefetch_active() {
+            return; // PEMS2_NO_PREFETCH CI leg
+        }
+        let (k, mu) = (cfg.k, cfg.mu);
+        let p2 = store.vp_memory(2, k, mu);
+        unsafe {
+            std::ptr::write_bytes(p2, 0x11, 256);
+        }
+        store.swap_out_regions(2, k, mu, &[(0, 256)]).unwrap();
+        store.prefetch(2, vec![(0, 256)]).unwrap();
+        // A message lands in VP 2's context on disk after the prefetch
+        // was issued: the prefetched bytes are stale.
+        store.write_to_context(2, 0, &[0x77; 64], IoClass::Delivery).unwrap();
+        store.swap_in_resident(2, k, mu, &[(0, 256)]).unwrap();
+        // The fallback blocking read sees the delivered bytes.
+        let p2 = store.vp_memory(2, k, mu);
+        unsafe {
+            assert_eq!(*p2, 0x77);
+            assert_eq!(*p2.add(63), 0x77);
+            assert_eq!(*p2.add(64), 0x11);
+        }
+        let s = metrics.snapshot();
+        assert_eq!((s.prefetch_hits, s.prefetch_misses), (0, 1));
+    }
+
+    #[test]
+    fn prefetch_off_keeps_single_buffers_and_zero_pipeline_metrics() {
+        let cfg = SimConfig::builder()
+            .v(4)
+            .k(2)
+            .mu(1 << 16)
+            .block(4096)
+            .io(IoStyle::Unix)
+            .swap_prefetch(false)
+            .build()
+            .unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let disks = Some(Arc::new(
+            DiskSet::create(&cfg, 0, Arc::new(UnixIo::new()), metrics.clone()).unwrap(),
+        ));
+        let store = Store::create(&cfg, disks, metrics.clone()).unwrap();
+        assert!(!store.prefetch_enabled());
+        // prefetch/swap_in_resident degrade to the legacy path.
+        store.prefetch(2, vec![(0, 128)]).unwrap();
+        assert!(!store.has_pending_prefetch(0));
+        let ptr = store.vp_memory(1, cfg.k, cfg.mu);
+        unsafe {
+            std::ptr::write_bytes(ptr, 0x3C, 128);
+        }
+        store.swap_out_regions(1, cfg.k, cfg.mu, &[(0, 128)]).unwrap();
+        unsafe {
+            std::ptr::write_bytes(ptr, 0, 128);
+        }
+        store.swap_in_resident(1, cfg.k, cfg.mu, &[(0, 128)]).unwrap();
+        unsafe {
+            assert_eq!(*ptr.add(100), 0x3C);
+        }
+        let s = metrics.snapshot();
+        assert_eq!(s.prefetch_hits + s.prefetch_misses, 0);
+        assert_eq!(s.swap_wait_ns, 0, "legacy path must not meter pipeline waits");
     }
 }

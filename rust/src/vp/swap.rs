@@ -1,0 +1,407 @@
+//! The asynchronous context-swap pipeline (thesis §5.1 applied to the
+//! simulator's own swap path).
+//!
+//! With the legacy explicit store every VP handoff stalls its partition
+//! for both I/O legs: the departing VP's swap-out *and* the arriving
+//! VP's swap-in run synchronously while the gate is held.  The pipeline
+//! double-buffers each of the `k` partitions (an *active* and a *shadow*
+//! buffer of µ — `2kµ` of partition RAM, see README "Swap pipeline") and
+//! hides both legs:
+//!
+//! * **write-behind** — swap-outs go through the async driver's per-disk
+//!   queues (the driver copies at enqueue, so the buffer is immediately
+//!   reusable);
+//! * **prefetch** — the ordered turn-taking of [`crate::vp::gate`]
+//!   (Def. 6.5.1) tells the scheduler exactly who runs next on each
+//!   partition, so when VP `r·k+p` is admitted it issues asynchronous
+//!   reads of VP `(r+1)·k+p`'s allocated regions into the shadow buffer;
+//!   admission of the successor then just *flips* active/shadow and
+//!   waits only on prefetch completion, never on writeback.
+//!
+//! Correctness is invalidation-based: prefetched data is consumed only
+//! if the target context's on-disk slot was untouched since issue.
+//! Every disk write that can land in a context slot (swap-out, direct
+//! message delivery, border flush, PEMS1 raw writes) reports its range
+//! via [`SwapScheduler::invalidate_range`]; an invalidated (or
+//! region-mismatched, or stale-target) prefetch is disposed and the
+//! admission falls back to the legacy blocking swap-in — byte-identical
+//! results either way, pinned by `rust/tests/parallel_equivalence.rs`.
+//!
+//! Serialization argument: prefetch issue and consumption for partition
+//! `p` only ever run on the thread currently holding gate `p`, so the
+//! slot state needs its mutex only against concurrent *invalidators*
+//! (delivery writers on other threads), which touch nothing but the
+//! `invalidated` flag.  The shadow buffer is owned exclusively by the
+//! pending prefetch from issue until disposal/consumption, which is what
+//! makes handing its raw pointer to the I/O workers sound.
+
+use crate::disk::DiskSet;
+use crate::error::Result;
+use crate::io::ReadTicket;
+use crate::metrics::{IoClass, Metrics};
+use std::sync::{Arc, Mutex};
+
+/// An in-flight (or completed, unconsumed) prefetch owning a partition's
+/// shadow buffer.
+struct Prefetch {
+    /// Local VP whose context is being read.
+    local_vp: usize,
+    /// The exact region list read (allocated regions at issue time);
+    /// consumption requires an exact match.
+    regions: Vec<(u64, u64)>,
+    /// Completion tokens, one per physical extent.
+    tickets: Vec<ReadTicket>,
+    /// Total prefetched bytes (the overlap-hidden volume on a hit).
+    bytes: u64,
+    /// Set by a disk write overlapping the target's context slot.
+    invalidated: bool,
+}
+
+#[derive(Default)]
+struct Slot {
+    pending: Option<Prefetch>,
+}
+
+/// Per-node scheduler for the double-buffered swap pipeline: one slot
+/// per memory partition tracking the shadow buffer's pending prefetch.
+pub struct SwapScheduler {
+    slots: Vec<Mutex<Slot>>,
+    /// Context slot size (µ aligned up to B) — locates a VP's slot in
+    /// the node's logical disk space.
+    ctx_slot: u64,
+    /// Context size µ (the extent of a slot that invalidation checks).
+    mu: u64,
+    metrics: Arc<Metrics>,
+}
+
+impl std::fmt::Debug for SwapScheduler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SwapScheduler").field("k", &self.slots.len()).finish()
+    }
+}
+
+impl SwapScheduler {
+    /// Scheduler for `k` partitions.
+    pub fn new(k: usize, ctx_slot: u64, mu: u64, metrics: Arc<Metrics>) -> SwapScheduler {
+        SwapScheduler {
+            slots: (0..k).map(|_| Mutex::new(Slot::default())).collect(),
+            ctx_slot,
+            mu,
+            metrics,
+        }
+    }
+
+    /// Number of partitions.
+    pub fn k(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True when the partition's shadow buffer already holds a pending
+    /// prefetch (opportunistic issuers — `PartitionYield::yield_to` —
+    /// skip rather than displace a turn-order prefetch).
+    pub fn has_pending(&self, partition: usize) -> bool {
+        self.slots[partition].lock().unwrap().pending.is_some()
+    }
+
+    /// Issue a prefetch of `regions` of `local_vp`'s context into the
+    /// partition's shadow buffer (`shadow`, µ bytes).  An unconsumed
+    /// previous prefetch on the partition is disposed first (counted as
+    /// a miss).  Must be called by the thread holding the partition's
+    /// gate.
+    ///
+    /// # Safety contract
+    /// `shadow` is the partition's shadow buffer; exclusivity until
+    /// consumption/disposal is guaranteed by the slot state itself.
+    pub fn issue(
+        &self,
+        disks: &DiskSet,
+        local_vp: usize,
+        regions: Vec<(u64, u64)>,
+        shadow: *mut u8,
+    ) -> Result<()> {
+        let idx = local_vp % self.slots.len();
+        // Dispose a displaced prefetch *outside* the slot lock: its
+        // in-flight reads must land before new ones target the same
+        // shadow bytes, but invalidators must not block behind that
+        // disk latency.  The gap (pending = None) is safe — there is
+        // nothing to invalidate, and only the gate holder can issue.
+        let displaced = self.slots[idx].lock().unwrap().pending.take();
+        if let Some(old) = displaced {
+            for t in &old.tickets {
+                let _ = t.wait();
+            }
+            self.metrics.prefetch_miss();
+        }
+        // Re-acquire for the issue itself: enqueue + install must be
+        // atomic w.r.t. invalidators, or a write racing the issue could
+        // land unflagged (the reads are cheap enqueues under the async
+        // driver, so the hold is short).
+        let mut slot = self.slots[idx].lock().unwrap();
+        let base = local_vp as u64 * self.ctx_slot;
+        let mut tickets: Vec<ReadTicket> = Vec::new();
+        let mut bytes = 0u64;
+        let mut issue_err = None;
+        for &(off, len) in &regions {
+            debug_assert!(off + len <= self.mu);
+            let r = unsafe {
+                disks.read_async(
+                    IoClass::Swap,
+                    base + off,
+                    shadow.add(off as usize),
+                    len as usize,
+                )
+            };
+            match r {
+                Ok(ts) => {
+                    tickets.extend(ts);
+                    bytes += len;
+                }
+                Err(e) => {
+                    issue_err = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = issue_err {
+            // Partially issued: the already-queued reads still target the
+            // shadow buffer — wait them out before abandoning it.
+            for t in &tickets {
+                let _ = t.wait();
+            }
+            return Err(e);
+        }
+        slot.pending =
+            Some(Prefetch { local_vp, regions, tickets, bytes, invalidated: false });
+        Ok(())
+    }
+
+    /// Try to satisfy a full swap-in of `regions` for `local_vp` from the
+    /// shadow buffer.  On a hit, waits for the outstanding reads and
+    /// returns `true` — the caller then flips active/shadow.  Returns
+    /// `false` (after disposing an unusable prefetch) when the caller
+    /// must take the blocking path.  Must be called by the thread holding
+    /// the partition's gate.
+    pub fn try_consume(&self, local_vp: usize, regions: &[(u64, u64)]) -> Result<bool> {
+        let idx = local_vp % self.slots.len();
+        let mut slot = self.slots[idx].lock().unwrap();
+        let Some(p) = slot.pending.as_ref() else { return Ok(false) };
+        if p.local_vp != local_vp {
+            // A prefetch for a different VP stays pending: its target may
+            // still be admitted later (it is disposed at the next issue).
+            return Ok(false);
+        }
+        if p.invalidated || p.regions != regions {
+            // Dispose: free the shadow buffer by waiting the reads out;
+            // read errors re-surface on the blocking fallback.
+            let p = slot.pending.take().unwrap();
+            drop(slot);
+            for t in &p.tickets {
+                let _ = t.wait();
+            }
+            self.metrics.prefetch_miss();
+            return Ok(false);
+        }
+        // Wait for completion without holding the slot lock (invalidators
+        // must not block behind disk latency); tickets are cloneable and
+        // waiting is idempotent.
+        let tickets = p.tickets.clone();
+        let bytes = p.bytes;
+        drop(slot);
+        for t in &tickets {
+            t.wait()?;
+        }
+        // Re-check under the lock: a delivery may have invalidated the
+        // slot while we waited.
+        let mut slot = self.slots[idx].lock().unwrap();
+        let usable = matches!(
+            slot.pending.as_ref(),
+            Some(p) if p.local_vp == local_vp && !p.invalidated && p.regions == regions
+        );
+        if usable {
+            slot.pending = None;
+            self.metrics.prefetch_hit(bytes);
+            Ok(true)
+        } else {
+            // Invalidated mid-wait (tickets already complete — waited
+            // above — so the shadow buffer is free).
+            slot.pending = None;
+            drop(slot);
+            self.metrics.prefetch_miss();
+            Ok(false)
+        }
+    }
+
+    /// A disk write landed in the node-logical byte range `[lo, hi)`:
+    /// invalidate any pending prefetch whose target context slot it
+    /// overlaps (prefetched data would no longer match the disk).
+    pub fn invalidate_range(&self, lo: u64, hi: u64) {
+        if lo >= hi {
+            return;
+        }
+        for slot in &self.slots {
+            let mut s = slot.lock().unwrap();
+            if let Some(p) = s.pending.as_mut() {
+                let slot_lo = p.local_vp as u64 * self.ctx_slot;
+                let slot_hi = slot_lo + self.mu;
+                if lo < slot_hi && slot_lo < hi {
+                    p.invalidated = true;
+                }
+            }
+        }
+    }
+
+    /// Shorthand: a write landed somewhere in `local_vp`'s context slot.
+    pub fn invalidate_vp(&self, local_vp: usize) {
+        let lo = local_vp as u64 * self.ctx_slot;
+        self.invalidate_range(lo, lo + self.mu);
+    }
+
+    /// Dispose every pending prefetch, waiting out in-flight reads (so
+    /// the shadow buffers are safe to free).  Pending-but-unconsumed
+    /// prefetches count as misses.
+    pub fn quiesce(&self) {
+        for slot in &self.slots {
+            let taken = slot.lock().unwrap().pending.take();
+            if let Some(p) = taken {
+                for t in &p.tickets {
+                    let _ = t.wait();
+                }
+                self.metrics.prefetch_miss();
+            }
+        }
+    }
+}
+
+impl Drop for SwapScheduler {
+    fn drop(&mut self) {
+        // The I/O workers may still be writing into shadow buffers the
+        // store is about to free; wait them out.
+        self.quiesce();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::io::aio::AsyncIo;
+    use crate::io::unix::UnixIo;
+    use crate::io::IoDriver;
+    use std::sync::Arc;
+
+    fn mk(async_io: bool) -> (DiskSet, SwapScheduler, Arc<Metrics>) {
+        let cfg = SimConfig::builder().v(4).k(2).mu(1 << 16).block(4096).build().unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let driver: Arc<dyn IoDriver> =
+            if async_io { Arc::new(AsyncIo::new(1)) } else { Arc::new(UnixIo::new()) };
+        let disks = DiskSet::create(&cfg, 0, driver, metrics.clone()).unwrap();
+        let sched = SwapScheduler::new(cfg.k, cfg.ctx_slot(), cfg.mu, metrics.clone());
+        (disks, sched, metrics)
+    }
+
+    fn write_pattern(disks: &DiskSet, base: u64, len: usize, seed: u8) {
+        let data: Vec<u8> = (0..len).map(|i| (i as u8).wrapping_mul(31).wrapping_add(seed)).collect();
+        disks.write(IoClass::Swap, base, &data).unwrap();
+        disks.flush().unwrap();
+    }
+
+    #[test]
+    fn prefetch_hit_round_trip() {
+        for async_io in [false, true] {
+            let (disks, sched, metrics) = mk(async_io);
+            let ctx_slot = 1u64 << 16;
+            write_pattern(&disks, 2 * ctx_slot, 4096, 7); // local vp 2, partition 0
+            let mut shadow = vec![0u8; 1 << 16];
+            let regions = vec![(0u64, 4096u64)];
+            sched.issue(&disks, 2, regions.clone(), shadow.as_mut_ptr()).unwrap();
+            assert!(sched.has_pending(0));
+            assert!(!sched.has_pending(1));
+            assert!(sched.try_consume(2, &regions).unwrap(), "must hit (async={async_io})");
+            assert!(!sched.has_pending(0));
+            for i in 0..4096usize {
+                assert_eq!(shadow[i], (i as u8).wrapping_mul(31).wrapping_add(7));
+            }
+            let s = metrics.snapshot();
+            assert_eq!((s.prefetch_hits, s.prefetch_misses), (1, 0));
+            assert_eq!(s.prefetch_hit_bytes, 4096);
+        }
+    }
+
+    #[test]
+    fn invalidation_forces_the_blocking_path() {
+        let (disks, sched, metrics) = mk(true);
+        let ctx_slot = 1u64 << 16;
+        write_pattern(&disks, 0, 4096, 1); // local vp 0
+        let mut shadow = vec![0u8; 1 << 16];
+        let regions = vec![(0u64, 4096u64)];
+        sched.issue(&disks, 0, regions.clone(), shadow.as_mut_ptr()).unwrap();
+        // A delivery lands in vp 0's slot: the prefetched bytes are stale.
+        sched.invalidate_range(100, 200);
+        assert!(!sched.try_consume(0, &regions).unwrap(), "invalidated must miss");
+        let s = metrics.snapshot();
+        assert_eq!((s.prefetch_hits, s.prefetch_misses), (0, 1));
+        // A disjoint-slot write must NOT invalidate.
+        sched.issue(&disks, 0, regions.clone(), shadow.as_mut_ptr()).unwrap();
+        sched.invalidate_vp(1); // partition 1's vp — different slot
+        sched.invalidate_range(2 * ctx_slot, 3 * ctx_slot); // vp 2's slot
+        assert!(sched.try_consume(0, &regions).unwrap(), "disjoint writes must not kill it");
+    }
+
+    #[test]
+    fn wrong_target_or_regions_do_not_consume() {
+        let (disks, sched, metrics) = mk(false);
+        write_pattern(&disks, 0, 8192, 3);
+        let mut shadow = vec![0u8; 1 << 16];
+        let regions = vec![(0u64, 8192u64)];
+        sched.issue(&disks, 0, regions.clone(), shadow.as_mut_ptr()).unwrap();
+        // Different VP on the same partition: pending survives for its
+        // real target.
+        assert!(!sched.try_consume(2, &regions).unwrap());
+        assert!(sched.has_pending(0));
+        // Same VP, different region list (allocator changed): disposed.
+        assert!(!sched.try_consume(0, &[(0, 4096)]).unwrap());
+        assert!(!sched.has_pending(0));
+        assert_eq!(metrics.snapshot().prefetch_misses, 1);
+        // And a fresh issue over the disposed slot works.
+        sched.issue(&disks, 0, regions.clone(), shadow.as_mut_ptr()).unwrap();
+        assert!(sched.try_consume(0, &regions).unwrap());
+    }
+
+    #[test]
+    fn reissue_disposes_the_previous_prefetch() {
+        let (disks, sched, metrics) = mk(true);
+        let ctx_slot = 1u64 << 16;
+        write_pattern(&disks, 0, 4096, 1);
+        write_pattern(&disks, 2 * ctx_slot, 4096, 2);
+        let mut shadow = vec![0u8; 1 << 16];
+        sched.issue(&disks, 0, vec![(0, 4096)], shadow.as_mut_ptr()).unwrap();
+        // Turn moved on without vp 0 being admitted: the next issue on
+        // the partition displaces it.
+        sched.issue(&disks, 2, vec![(0, 4096)], shadow.as_mut_ptr()).unwrap();
+        assert_eq!(metrics.snapshot().prefetch_misses, 1);
+        assert!(sched.try_consume(2, &[(0, 4096)]).unwrap());
+        assert_eq!(shadow[0], 2, "shadow must hold the second target's bytes");
+    }
+
+    #[test]
+    fn quiesce_drains_in_flight_reads() {
+        let (disks, sched, metrics) = mk(true);
+        write_pattern(&disks, 0, 4096, 9);
+        let mut shadow = vec![0u8; 1 << 16];
+        sched.issue(&disks, 0, vec![(0, 4096)], shadow.as_mut_ptr()).unwrap();
+        sched.quiesce();
+        assert!(!sched.has_pending(0));
+        assert_eq!(metrics.snapshot().prefetch_misses, 1);
+        // Shadow buffer safe to reuse/free: the read landed.
+        assert_eq!(shadow[0], 9);
+    }
+
+    #[test]
+    fn empty_region_prefetch_hits_trivially() {
+        let (disks, sched, metrics) = mk(false);
+        let mut shadow = vec![0u8; 1 << 16];
+        sched.issue(&disks, 1, Vec::new(), shadow.as_mut_ptr()).unwrap();
+        assert!(sched.try_consume(1, &[]).unwrap());
+        assert_eq!(metrics.snapshot().prefetch_hit_bytes, 0);
+    }
+}

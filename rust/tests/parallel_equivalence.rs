@@ -1,13 +1,19 @@
 //! Serial/parallel equivalence: every phase that can run on the shared
 //! worker pool (stxxl-sort run formation, the delivery fan-out of
 //! alltoallv/bcast/scatter, empq spills) must produce *byte-identical*
-//! results in both modes, pinned over the same seeded workloads.
+//! results in both modes, pinned over the same seeded workloads — and,
+//! since the asynchronous context-swap pipeline landed, the same holds
+//! along a second axis: `swap_prefetch` on (double-buffered partitions,
+//! shadow prefetch, write-behind) vs off (the legacy synchronous swap
+//! path) over both explicit I/O styles.
 //!
 //! The parallel legs build configs with `parallel_phases(true)`; under
 //! `PEMS2_FORCE_SERIAL` (the forced-serial CI leg) both legs resolve to
 //! the serial path and the equivalences hold trivially, so the suite
 //! stays green in either mode — pool-usage assertions are gated on
-//! `SimConfig::phases_parallel()` for the same reason.
+//! `SimConfig::phases_parallel()` for the same reason.  The prefetch
+//! assertions are gated on `SimConfig::swap_prefetch_active()` the same
+//! way, so the `PEMS2_NO_PREFETCH` CI leg stays green too.
 
 use pems2::baseline::run_stxxl_sort;
 use pems2::config::{IoStyle, Layout, SimConfig};
@@ -211,13 +217,22 @@ fn delivery_equivalence_all_empty_sends() {
 }
 
 #[test]
-fn delivery_serial_path_unchanged_for_explicit_stores() {
-    // Explicit-I/O stores never fan out on the pool, parallel switch or
-    // not — their delivery threads the border cache and disk queues.
-    let (par, jobs) = run_delivery(delivery_cfg(1, 4, 2, IoStyle::Unix, true), false);
-    let (ser, _) = run_delivery(delivery_cfg(1, 4, 2, IoStyle::Unix, false), false);
-    assert_eq!(par, ser);
-    assert_eq!(jobs, 0, "explicit stores must not use the delivery pool");
+fn delivery_equivalence_explicit_stores_pooled() {
+    // Explicit-I/O stores fan out on the pool too since the per-disk
+    // I/O queue partitioning landed: deliveries batch per target disk.
+    // Results must be byte-identical to the serial leg AND to the mem
+    // store (delivery bytes are store-independent).
+    let (mem, _) = run_delivery(delivery_cfg(1, 4, 2, IoStyle::Mem, false), false);
+    for io in [IoStyle::Unix, IoStyle::Async] {
+        let (par, jobs) = run_delivery(delivery_cfg(1, 4, 2, io, true), false);
+        let (ser, ser_jobs) = run_delivery(delivery_cfg(1, 4, 2, io, false), false);
+        assert_eq!(par, ser, "pooled explicit delivery must match serial ({io:?})");
+        assert_eq!(par, mem, "explicit stores must deliver the same bytes as mem ({io:?})");
+        assert_eq!(ser_jobs, 0, "serial leg must not touch the pool ({io:?})");
+        if delivery_cfg(1, 4, 2, io, true).phases_parallel() {
+            assert!(jobs > 0, "explicit delivery must now meter pool jobs ({io:?})");
+        }
+    }
 }
 
 // --------------------------------------------------------------- empq
@@ -291,6 +306,200 @@ fn sssp_oracle_pins_both_modes() {
         checksums.push((r.checksum, r.total_dist, r.reached));
     }
     assert_eq!(checksums[0], checksums[1], "sssp result must not depend on the mode");
+}
+
+// -------------------------------------------------- swap pipeline axis
+
+/// Explicit-store engine config on the prefetch axis.
+fn prefetch_cfg(io: IoStyle, v: usize, k: usize, prefetch: bool) -> SimConfig {
+    SimConfig::builder()
+        .v(v)
+        .k(k)
+        .mu(1 << 16)
+        .sigma(1 << 16)
+        .d(2)
+        .block(4096)
+        .io(io)
+        .swap_prefetch(prefetch)
+        .build()
+        .unwrap()
+}
+
+/// Swap round-trip program: several compute supersteps, each mutating
+/// rank-derived data, crossing a barrier (full swap-out/in), and
+/// verifying the bytes came back.  Returns per-VP content hashes.
+fn swap_round_trip(cfg: SimConfig) -> (Vec<u64>, pems2::metrics::MetricsSnapshot) {
+    let hashes = Arc::new(Mutex::new(vec![0u64; cfg.v]));
+    let h2 = hashes.clone();
+    let report = run(cfg, move |vp| {
+        let me = vp.rank() as u32;
+        let m = vp.alloc::<u32>(2048)?;
+        for step in 0..3u32 {
+            {
+                let s = vp.slice_mut(m)?;
+                for (i, x) in s.iter_mut().enumerate() {
+                    *x = me * 100_000 + step * 10_000 + i as u32;
+                }
+            }
+            // Full swap-out + swap-in around the barrier.
+            vp.barrier_collective()?;
+            let s = vp.slice(m)?;
+            let mut h = 0u64;
+            for (i, &x) in s.iter().enumerate() {
+                assert_eq!(
+                    x,
+                    me * 100_000 + step * 10_000 + i as u32,
+                    "vp {me} step {step} word {i} corrupted across the swap"
+                );
+                h = h.wrapping_mul(0x0100_0000_01B3) ^ (x as u64 + 1);
+            }
+            h2.lock().unwrap()[vp.rank()] = h;
+        }
+        Ok(())
+    })
+    .unwrap();
+    (hashes.lock().unwrap().clone(), report.metrics)
+}
+
+#[test]
+fn swap_round_trip_byte_identical_across_prefetch_modes() {
+    for io in [IoStyle::Unix, IoStyle::Async] {
+        let (on, on_m) = swap_round_trip(prefetch_cfg(io, 4, 2, true));
+        let (off, off_m) = swap_round_trip(prefetch_cfg(io, 4, 2, false));
+        assert_eq!(on, off, "swap contents must not depend on the pipeline ({io:?})");
+        assert_eq!(
+            off_m.prefetch_hits + off_m.prefetch_misses,
+            0,
+            "prefetch-off leg must not touch the pipeline ({io:?})"
+        );
+        if prefetch_cfg(io, 4, 2, true).swap_prefetch_active() {
+            // v/P = 4, k = 2 -> 2 rounds: round-1 admissions consume the
+            // prefetch issued at round-0 admissions.  Barrier-only
+            // supersteps perform no deliveries, so nothing invalidates.
+            assert!(
+                on_m.prefetch_hits > 0,
+                "pipelined run must consume prefetches ({io:?}): {on_m:?}"
+            );
+            assert!(on_m.prefetch_hit_bytes > 0, "hidden bytes must be metered ({io:?})");
+        }
+    }
+}
+
+#[test]
+fn collectives_byte_identical_across_prefetch_modes() {
+    // The full delivery program (alltoallv with empty sends + bcast +
+    // scatter) over both explicit styles × prefetch on/off, pinned
+    // against the mem store.
+    let (mem, _) = run_delivery(delivery_cfg(1, 6, 2, IoStyle::Mem, false), false);
+    for io in [IoStyle::Unix, IoStyle::Async] {
+        for prefetch in [true, false] {
+            let mut cfg = delivery_cfg(1, 6, 2, io, true);
+            cfg.swap_prefetch = prefetch;
+            let (got, _) = run_delivery(cfg, false);
+            assert_eq!(
+                got, mem,
+                "collective results must not depend on the swap pipeline \
+                 ({io:?}, prefetch={prefetch})"
+            );
+        }
+    }
+}
+
+#[test]
+fn multi_node_collectives_under_prefetch() {
+    // p = 2: the remote exchange path with pipelined swaps on each node.
+    let (mem, _) = run_delivery(delivery_cfg(2, 8, 2, IoStyle::Mem, false), false);
+    let mut cfg = delivery_cfg(2, 8, 2, IoStyle::Async, true);
+    cfg.swap_prefetch = true;
+    let (got, _) = run_delivery(cfg, false);
+    assert_eq!(got, mem, "multi-node delivery must be prefetch-agnostic");
+}
+
+/// Def. 6.5.1 pin: ID-ordered turn-taking must be preserved under the
+/// swap pipeline — partition `p` admits local threads `p, p+k, p+2k, …`
+/// in increasing round order within every superstep.
+#[test]
+fn gate_turn_order_preserved_under_prefetch() {
+    let cfg = prefetch_cfg(IoStyle::Async, 8, 2, true);
+    let k = cfg.k;
+    // (superstep, partition, round) in admission order: recorded while
+    // holding the gate right after residency, so per-partition insertion
+    // order IS admission order.
+    let log: Arc<Mutex<Vec<(u32, usize, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+    let log2 = log.clone();
+    run(cfg, move |vp| {
+        let m = vp.alloc::<u32>(256)?;
+        for step in 0..3u32 {
+            vp.slice_mut(m)?[0] = step; // forces residency (ordered admission)
+            log2.lock()
+                .unwrap()
+                .push((step, vp.local_rank() % k, vp.local_rank() / k));
+            vp.barrier_collective()?;
+        }
+        Ok(())
+    })
+    .unwrap();
+    let log = log.lock().unwrap();
+    for step in 0..3u32 {
+        for p in 0..k {
+            let rounds: Vec<usize> = log
+                .iter()
+                .filter(|&&(s, part, _)| s == step && part == p)
+                .map(|&(_, _, r)| r)
+                .collect();
+            assert_eq!(
+                rounds,
+                (0..rounds.len()).collect::<Vec<_>>(),
+                "partition {p} superstep {step} must admit rounds in order"
+            );
+        }
+    }
+}
+
+#[test]
+fn psrs_oracle_and_overlap_hidden_bytes_under_prefetch() {
+    // The acceptance pin: an explicit-I/O app run with the pipeline on
+    // passes its oracle AND reports nonzero overlap-hidden swap bytes.
+    let mk = |prefetch: bool| {
+        SimConfig::builder()
+            .v(4)
+            .k(2)
+            .mu(4 << 20)
+            .sigma(4 << 20)
+            .d(2)
+            .block(64 << 10)
+            .io(IoStyle::Async)
+            .swap_prefetch(prefetch)
+            .build()
+            .unwrap()
+    };
+    let n = 60_000u64;
+    let on = pems2::apps::run_psrs(mk(true), n, true).unwrap();
+    assert!(on.verified, "psrs must verify with the swap pipeline on");
+    let off = pems2::apps::run_psrs(mk(false), n, true).unwrap();
+    assert!(off.verified, "psrs must verify with the swap pipeline off");
+    assert_eq!(off.report.metrics.prefetch_hits, 0);
+    if mk(true).swap_prefetch_active() {
+        assert!(
+            on.report.metrics.prefetch_hit_bytes > 0,
+            "pipelined psrs must hide swap bytes behind compute: {:?}",
+            on.report.metrics
+        );
+    }
+}
+
+#[test]
+fn empq_apps_oracles_on_the_prefetch_axis() {
+    // time-forward + sssp carry the knob through their configs; results
+    // must be identical either way.
+    for prefetch in [true, false] {
+        let mut cfg = empq_cfg(true);
+        cfg.swap_prefetch = prefetch;
+        let tf = pems2::apps::run_time_forward(&cfg, 10_000, 4, true, true).unwrap();
+        assert!(tf.verified, "time-forward oracle (prefetch={prefetch})");
+        let ss = pems2::apps::run_sssp(&cfg, 2_000, 4, 100, 0, true).unwrap();
+        assert!(ss.verified, "sssp oracle (prefetch={prefetch})");
+    }
 }
 
 #[test]
