@@ -27,6 +27,10 @@
 //!    async driver with the double-buffered prefetching swap path on vs
 //!    the legacy synchronous path, emitting the speedup plus the
 //!    overlap-hidden byte volume and swap-wait seconds.
+//! 7. Computation-superstep A/B under the same unified switch: PSRS
+//!    (pooled local sort + partition passes) and prefix sum (pooled
+//!    local scan) over the mem store, pooled vs serial, with output-hash
+//!    equality asserted and the speedups persisted.
 //!
 //! y-values are Melem/s (wall clock); measured I/O counters are printed
 //! per phase, since on page-cached SSDs charged time is the faithful
@@ -361,6 +365,83 @@ fn main() {
     summary.push((
         "swap_prefetch_speedup".to_string(),
         psrs_rates[1] / psrs_rates[0].max(1e-9),
+    ));
+
+    // ---- 7. computation-superstep A/B: pooled vs serial local compute ----
+    // The ComputeCtx axis under the same unified switch: PSRS over the
+    // mem store (local sort + partition passes dominate) and prefix sum
+    // (local scan).  Byte-level equality of the two legs is asserted via
+    // the apps' output hashes.
+    let comp_n: u64 = if full_mode() { 1 << 22 } else { 1 << 17 };
+    let comp_mu = pems2::apps::psrs::required_mu(comp_n, 4).max(16 << 20);
+    let mut comp_rates = [0.0f64; 2];
+    let mut comp_hashes = [0u64; 2];
+    for (i, (label, par)) in [("serial", false), ("pool", true)].into_iter().enumerate() {
+        let c = SimConfig::builder()
+            .v(4)
+            .k(2)
+            .mu(comp_mu)
+            .sigma(16 << 20)
+            .io(IoStyle::Mem)
+            .parallel_phases(par)
+            .build()
+            .unwrap();
+        let r = pems2::apps::run_psrs(c, comp_n, false).unwrap();
+        let wall = r.report.wall.as_secs_f64();
+        let rate = comp_n as f64 / wall.max(1e-9) / 1e6;
+        comp_rates[i] = rate;
+        comp_hashes[i] = r.output_hash;
+        println!(
+            "compute {label:<7} psrs n={comp_n} {rate:>8.2} Melem/s  pool_jobs {} ({} batches)",
+            r.report.metrics.pool_jobs, r.report.metrics.pool_batches,
+        );
+        summary.push((format!("compute_psrs_{label}_melem_s"), rate));
+    }
+    assert_eq!(
+        comp_hashes[0], comp_hashes[1],
+        "pooled compute supersteps must be byte-identical to serial"
+    );
+    println!(
+        "computation-superstep speedup (psrs): {:.2}x (pool/serial)",
+        comp_rates[1] / comp_rates[0].max(1e-9),
+    );
+    summary.push((
+        "compute_psrs_pool_speedup".to_string(),
+        comp_rates[1] / comp_rates[0].max(1e-9),
+    ));
+
+    let scan_n: u64 = if full_mode() { 1 << 24 } else { 1 << 20 };
+    let mut scan_rates = [0.0f64; 2];
+    let mut scan_hashes = [0u64; 2];
+    for (i, (label, par)) in [("serial", false), ("pool", true)].into_iter().enumerate() {
+        let c = SimConfig::builder()
+            .v(4)
+            .k(2)
+            .mu(pems2::apps::prefix_sum::required_mu(scan_n, 4).max(16 << 20))
+            .sigma(16 << 20)
+            .io(IoStyle::Mem)
+            .parallel_phases(par)
+            .build()
+            .unwrap();
+        let r = pems2::apps::run_prefix_sum(c, scan_n, false).unwrap();
+        let wall = r.report.wall.as_secs_f64();
+        let rate = scan_n as f64 / wall.max(1e-9) / 1e6;
+        scan_rates[i] = rate;
+        scan_hashes[i] = r.output_hash;
+        println!(
+            "compute {label:<7} scan n={scan_n} {rate:>8.2} Melem/s  pool_jobs {}",
+            r.report.metrics.pool_jobs,
+        );
+        summary.push((format!("compute_scan_{label}_melem_s"), rate));
+    }
+    assert_eq!(scan_hashes[0], scan_hashes[1], "pooled scan must be byte-identical");
+    println!(
+        "computation-superstep speedup (scan): {:.2}x (pool/serial)",
+        scan_rates[1] / scan_rates[0].max(1e-9),
+    );
+    summary.push((
+        "compute_scan_pool_speedup".to_string(),
+        scan_rates[1] / scan_rates[0].max(1e-9),
     ));
 
     let dir = results_dir();

@@ -7,13 +7,14 @@
 //! lean PSRS implementation under explicit-I/O PEMS and why mmap I/O
 //! rescues it (§8.4.4).
 
+use crate::apps::{combine_rank_hashes, fold_u64};
 use crate::config::SimConfig;
 use crate::engine::{run_arc, RunReport};
 use crate::error::{Error, Result};
 use crate::util::XorShift64;
 use crate::vp::Vp;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Outcome of a CGMLib-sort run.
 #[derive(Debug)]
@@ -24,6 +25,9 @@ pub struct CgmSortResult {
     pub verified: bool,
     /// Elements sorted.
     pub n: u64,
+    /// Order-sensitive digest of the sorted output (per-VP folds in rank
+    /// order) — pinned equal across serial/pooled compute modes.
+    pub output_hash: u64,
 }
 
 /// Context bytes needed (note the CGMLib-style ~3× data copies).
@@ -46,15 +50,25 @@ pub fn run_cgm_sort(cfg: SimConfig, n: u64, verify: bool) -> Result<CgmSortResul
     }
     let ok = Arc::new(AtomicBool::new(true));
     let ok2 = ok.clone();
+    let hashes = Arc::new(Mutex::new(vec![0u64; v]));
+    let hashes2 = hashes.clone();
     let seed = cfg.seed;
     let report = run_arc(
         cfg,
-        Arc::new(move |vp: &mut Vp| cgm_sort_vp(vp, n, seed, verify, &ok2)),
+        Arc::new(move |vp: &mut Vp| cgm_sort_vp(vp, n, seed, verify, &ok2, &hashes2)),
     )?;
-    Ok(CgmSortResult { report, verified: ok.load(Ordering::SeqCst), n })
+    let output_hash = combine_rank_hashes(&hashes.lock().unwrap());
+    Ok(CgmSortResult { report, verified: ok.load(Ordering::SeqCst), n, output_hash })
 }
 
-fn cgm_sort_vp(vp: &mut Vp, n: u64, seed: u64, verify: bool, ok: &AtomicBool) -> Result<()> {
+fn cgm_sort_vp(
+    vp: &mut Vp,
+    n: u64,
+    seed: u64,
+    verify: bool,
+    ok: &AtomicBool,
+    hashes: &Mutex<Vec<u64>>,
+) -> Result<()> {
     let v = vp.nranks();
     let me = vp.rank();
     let base = (n / v as u64) as usize;
@@ -82,12 +96,13 @@ fn cgm_sort_vp(vp: &mut Vp, n: u64, seed: u64, verify: bool, ok: &AtomicBool) ->
         rng.fill_u32(d);
     }
 
-    // Local sort (through a staging copy, CGMLib-style).
+    // Local sort (through a staging copy, CGMLib-style; the sort itself
+    // runs batched on the engine pool).
     {
-        let compute = vp.shared().compute.clone();
+        let ctx = vp.compute_ctx();
         let (d, s) = vp.slice_pair_mut(data, staging)?;
         s.copy_from_slice(d);
-        compute.local_sort_u32(s);
+        ctx.sort(s);
         let (s2, d2) = vp.slice_pair_mut(staging, data)?;
         d2.copy_from_slice(s2);
     }
@@ -104,10 +119,11 @@ fn cgm_sort_vp(vp: &mut Vp, n: u64, seed: u64, verify: bool, ok: &AtomicBool) ->
     vp.barrier_collective()?; // CGM primitive entry barrier
     vp.gather_region(0, samples.region(), all_samples.map(|m| m.region()).unwrap_or((0, 0)))?;
     if me == 0 {
+        let ctx = vp.compute_ctx();
         let all = all_samples.expect("root");
         let (a_im, spl) = vp.slice_pair_mut(all, splitters)?;
         let mut a = a_im.to_vec();
-        a.sort_unstable();
+        ctx.sort(&mut a);
         for j in 0..v - 1 {
             spl[j] = a[(j + 1) * v];
         }
@@ -159,12 +175,19 @@ fn cgm_sort_vp(vp: &mut Vp, n: u64, seed: u64, verify: bool, ok: &AtomicBool) ->
         vp.alltoallv_regions(&sends, &recvs)?;
     }
     // Merge (CGMLib uses a full sort here rather than a k-way merge —
-    // another constant-factor cost we reproduce).
+    // another constant-factor cost we reproduce; pooled like the rest).
     {
-        let compute = vp.shared().compute.clone();
+        let ctx = vp.compute_ctx();
         let (r, o) = vp.slice_pair_mut(recv, out)?;
         o[..total_in].copy_from_slice(&r[..total_in]);
-        compute.local_sort_u32(&mut o[..total_in]);
+        ctx.sort(&mut o[..total_in]);
+    }
+
+    // Output digest (local fold; no superstep).
+    {
+        let o = vp.slice(out)?;
+        let h = o[..total_in].iter().fold(0u64, |h, &x| fold_u64(h, x as u64));
+        hashes.lock().unwrap()[me] = h;
     }
 
     if verify {

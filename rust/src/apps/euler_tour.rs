@@ -9,7 +9,12 @@
 //!
 //! As in CGMLib, the tour construction uses sorting + list ranking
 //! utilities; the adjacency/successor construction here is done by the
-//! driver (it is O(n) scan work), while the list ranking runs distributed.
+//! driver (it is O(n) scan work), while the list ranking runs
+//! distributed — and its computation supersteps (owner bucketing,
+//! request answering, the relink pass) run batched on the engine pool
+//! through [`crate::apps::list_ranking::list_rank_vp`]'s
+//! [`crate::vp::ComputeCtx`] usage, serial/pooled byte-identity
+//! included.
 
 use crate::apps::list_ranking::{self, NIL};
 use crate::config::SimConfig;
@@ -36,6 +41,9 @@ pub struct EulerTourResult {
     pub verified: bool,
     /// Number of arcs ranked.
     pub arcs: u64,
+    /// Order-sensitive digest of the full rank array — pinned equal
+    /// across serial/pooled compute modes.
+    pub ranks_hash: u64,
 }
 
 /// Generate a random forest: `trees` trees of `nodes_per_tree` nodes each
@@ -178,10 +186,14 @@ pub fn run_euler_tour(
             Ok(())
         }),
     )?;
+    let ranks_hash = {
+        let all = ranks_shared.lock().unwrap();
+        all.iter().fold(0x9E37_79B9_7F4A_7C15u64, |h, &r| crate::apps::fold_u64(h, r))
+    };
     if verify && !verify_tour(&succ, &ranks_shared.lock().unwrap()) {
         ok.store(false, Ordering::SeqCst);
     }
-    Ok(EulerTourResult { report, verified: ok.load(Ordering::SeqCst), arcs })
+    Ok(EulerTourResult { report, verified: ok.load(Ordering::SeqCst), arcs, ranks_hash })
 }
 
 #[cfg(test)]

@@ -6,16 +6,27 @@
 //! the same fixed number of rounds — pure BSP, no data-dependent
 //! convergence checks.
 //!
+//! The computation supersteps between the exchanges — bucketing
+//! successor indices by owner, answering index requests, and the
+//! jump-application (relink) pass — run batched on the engine pool
+//! through [`crate::vp::ComputeCtx`].  The relink pass is the classic
+//! two-phase parallel cursor walk: the owner-bucketing pass already
+//! yields per-chunk per-owner counts, whose prefix sums give each chunk
+//! its starting reply cursor, so chunks relink concurrently yet consume
+//! replies in exactly the serial order (byte-identical under the
+//! unified `SimConfig::parallel_phases` switch).
+//!
 //! The result: `dist[i]` = number of links from `i` to the tail of its
 //! list — which doubles as the (reversed) Euler-tour position.
 
+use crate::apps::{combine_rank_hashes, fold_u64};
 use crate::config::SimConfig;
 use crate::engine::{run_arc, RunReport};
 use crate::error::{Error, Result};
 use crate::util::XorShift64;
-use crate::vp::{Vp, VpMem};
+use crate::vp::{ScopedJob, Vp, VpMem};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Sentinel for "no successor" (list tail).
 pub const NIL: u64 = u64::MAX;
@@ -29,6 +40,9 @@ pub struct ListRankingResult {
     pub verified: bool,
     /// List length.
     pub n: u64,
+    /// Order-sensitive digest of the final ranks (per-VP folds in rank
+    /// order) — pinned equal across serial/pooled compute modes.
+    pub ranks_hash: u64,
 }
 
 /// Context bytes needed per VP for lists of `n` nodes over `v` VPs.
@@ -105,13 +119,17 @@ pub fn run_list_ranking(
     let ok = Arc::new(AtomicBool::new(true));
     let ok2 = ok.clone();
     let succ2 = succ.clone();
+    let hashes = Arc::new(Mutex::new(vec![0u64; v]));
+    let hashes2 = hashes.clone();
     let report = run_arc(
         cfg,
         Arc::new(move |vp: &mut Vp| {
             let ranks = list_rank_vp(vp, &succ2)?;
+            let me = vp.rank();
+            hashes2.lock().unwrap()[me] =
+                ranks.iter().fold(0u64, |h, &r| fold_u64(h, r));
             if verify {
                 let v = vp.nranks();
-                let me = vp.rank();
                 let (start, chunk) = slice_of(succ2.len() as u64, v, me);
                 for (i, &r) in ranks.iter().enumerate() {
                     if oracle[start as usize + i] != r {
@@ -124,7 +142,8 @@ pub fn run_list_ranking(
             Ok(())
         }),
     )?;
-    Ok(ListRankingResult { report, verified: ok.load(Ordering::SeqCst), n })
+    let ranks_hash = combine_rank_hashes(&hashes.lock().unwrap());
+    Ok(ListRankingResult { report, verified: ok.load(Ordering::SeqCst), n, ranks_hash })
 }
 
 /// (start, len) of rank `me`'s slice of `n` items over `v` VPs.
@@ -134,6 +153,20 @@ pub fn slice_of(n: u64, v: usize, me: usize) -> (u64, usize) {
     let start = base * me as u64 + rem.min(me) as u64;
     let len = base as usize + usize::from(me < rem);
     (start, len)
+}
+
+/// Owner rank of global index `idx` — the inverse of [`slice_of`]
+/// (module-level so the pooled passes' jobs can call it with plain
+/// copied captures).
+pub fn owner_of(idx: u64, n: u64, v: usize) -> usize {
+    let base = n / v as u64;
+    let rem = n % v as u64;
+    let cut = (base + 1) * rem; // first `rem` slices have base+1 items
+    if idx < cut {
+        (idx / (base + 1)) as usize
+    } else {
+        (rem + (idx - cut) / base.max(1)) as usize
+    }
 }
 
 /// The SPMD pointer-jumping core.  Returns this VP's final `dist` values
@@ -167,29 +200,43 @@ pub fn list_rank_vp(vp: &mut Vp, global_succ: &[u64]) -> Result<Vec<u64>> {
         }
     }
 
-    let owner = |idx: u64| -> usize {
-        // Inverse of slice_of.
-        let base = n / v as u64;
-        let rem = n % v as u64;
-        let cut = (base + 1) * rem; // first `rem` slices have base+1 items
-        if idx < cut {
-            (idx / (base + 1)) as usize
-        } else {
-            (rem + (idx - cut) / base.max(1)) as usize
-        }
-    };
-
+    let ctx = vp.compute_ctx();
     for _round in 0..rounds {
-        // Build per-owner requests: the successor indices we must resolve.
-        let mut by_owner: Vec<Vec<u64>> = vec![Vec::new(); v];
-        {
+        // Build per-owner requests (pooled bucketing pass): each chunk
+        // job buckets its slice of successor indices by owner; the
+        // per-chunk buckets concatenate in chunk order, so the merged
+        // request stream is in index order — exactly the serial build.
+        // The per-chunk per-owner counts feed the relink pass below.
+        let (by_owner, chunk_counts) = {
             let s = vp.slice(succ)?;
-            for &sx in s[..chunk].iter() {
-                if sx != NIL {
-                    by_owner[owner(sx)].push(sx);
+            let s: &[u64] = &s[..chunk];
+            let ranges = ctx.chunks(chunk);
+            let parts: Vec<Vec<Vec<u64>>> = ctx.run_scoped(
+                ranges
+                    .into_iter()
+                    .map(|r| {
+                        Box::new(move || {
+                            let mut own: Vec<Vec<u64>> = vec![Vec::new(); v];
+                            for &sx in &s[r] {
+                                if sx != NIL {
+                                    own[owner_of(sx, n, v)].push(sx);
+                                }
+                            }
+                            own
+                        }) as ScopedJob<'_, Vec<Vec<u64>>>
+                    })
+                    .collect(),
+            );
+            let chunk_counts: Vec<Vec<usize>> =
+                parts.iter().map(|own| own.iter().map(Vec::len).collect()).collect();
+            let mut by_owner: Vec<Vec<u64>> = vec![Vec::new(); v];
+            for own in parts {
+                for (j, mut l) in own.into_iter().enumerate() {
+                    by_owner[j].append(&mut l);
                 }
             }
-        }
+            (by_owner, chunk_counts)
+        };
         let send_counts: Vec<usize> = by_owner.iter().map(Vec::len).collect();
         // Exchange counts (4 supersteps per round total).
         {
@@ -215,58 +262,114 @@ pub fn list_rank_vp(vp: &mut Vp, global_succ: &[u64]) -> Result<Vec<u64>> {
         }
         exchange_var(vp, req_out, &send_counts, req_in, &recv_counts, 8)?;
 
-        // Answer requests from local arrays.
+        // Answer requests from local arrays (pooled: each chunk of
+        // requests fills its disjoint slice of the reply buffer).
         let total_in: usize = recv_counts.iter().sum();
         {
             let idxs: Vec<u64> = vp.slice(req_in)?[..total_in].to_vec();
-            let s = vp.slice(succ)?.to_vec();
-            let d = vp.slice(dist)?.to_vec();
+            let sv = vp.slice(succ)?.to_vec();
+            let dv = vp.slice(dist)?.to_vec();
             let rep = vp.slice_mut(rep_out)?;
-            for (i, &idx) in idxs.iter().enumerate() {
-                let li = (idx - my_start) as usize;
-                rep[2 * i] = s[li];
-                rep[2 * i + 1] = d[li];
-            }
+            let ranges = ctx.chunks(total_in);
+            let parts = crate::vp::superstep::split_mut(&mut rep[..2 * total_in], &{
+                // Reply chunks are twice the request chunks.
+                ranges.iter().map(|r| 2 * r.start..2 * r.end).collect::<Vec<_>>()
+            });
+            let jobs: Vec<ScopedJob<'_, ()>> = ranges
+                .iter()
+                .cloned()
+                .zip(parts)
+                .map(|(r, part)| {
+                    let idxs = &idxs[r];
+                    let sv = &sv;
+                    let dv = &dv;
+                    Box::new(move || {
+                        for (i, &idx) in idxs.iter().enumerate() {
+                            let li = (idx - my_start) as usize;
+                            part[2 * i] = sv[li];
+                            part[2 * i + 1] = dv[li];
+                        }
+                    }) as ScopedJob<'_, ()>
+                })
+                .collect();
+            ctx.run_scoped(jobs);
         }
         let rep_send: Vec<usize> = recv_counts.iter().map(|&c| 2 * c).collect();
         let rep_recv: Vec<usize> = send_counts.iter().map(|&c| 2 * c).collect();
         exchange_var(vp, rep_out, &rep_send, rep_in, &rep_recv, 8)?;
 
-        // Apply the jump.
+        // Apply the jump (pooled relink pass).  Replies arrive grouped
+        // by owner in the same order we asked; each chunk's starting
+        // reply cursor per owner is the prefix of the bucketing pass's
+        // per-chunk counts, so chunks relink concurrently while reading
+        // exactly the replies the serial cursor walk would.
         {
             let replies: Vec<u64> = vp.slice(rep_in)?.to_vec();
-            // Replies arrive grouped by owner in the same order we asked.
-            let mut owner_at = vec![0usize; v];
             let mut owner_base = vec![0usize; v];
             let mut acc = 0;
             for j in 0..v {
                 owner_base[j] = acc;
                 acc += rep_recv[j];
             }
-            let mut new_s: Vec<u64> = Vec::with_capacity(chunk);
-            let mut new_d: Vec<u64> = Vec::with_capacity(chunk);
-            {
-                let sv = vp.slice(succ)?.to_vec();
-                let dv = vp.slice(dist)?.to_vec();
-                for i in 0..chunk {
-                    let sx = sv[i];
-                    if sx == NIL {
-                        new_s.push(NIL);
-                        new_d.push(dv[i]);
-                    } else {
-                        let o = owner(sx);
-                        let r = owner_base[o] + owner_at[o];
-                        owner_at[o] += 2;
-                        let (ss, sd) = (replies[r], replies[r + 1]);
-                        new_s.push(ss);
-                        new_d.push(dv[i].wrapping_add(sd));
-                    }
+            let sv = vp.slice(succ)?.to_vec();
+            let dv = vp.slice(dist)?.to_vec();
+            let ranges = ctx.chunks(chunk);
+            debug_assert_eq!(ranges.len(), chunk_counts.len());
+            // start_at[c][o] = reply slots consumed for owner `o` by
+            // chunks before `c` (2 slots per request).
+            let mut start_at: Vec<Vec<usize>> = Vec::with_capacity(ranges.len());
+            let mut running = vec![0usize; v];
+            for counts in &chunk_counts {
+                start_at.push(running.clone());
+                for (o, &c) in counts.iter().enumerate() {
+                    running[o] += 2 * c;
                 }
             }
+            let outs: Vec<(Vec<u64>, Vec<u64>)> = {
+                let owner_base = &owner_base;
+                let replies = &replies;
+                let sv = &sv;
+                let dv = &dv;
+                ctx.run_scoped(
+                    ranges
+                        .iter()
+                        .cloned()
+                        .zip(start_at)
+                        .map(|(r, mut at)| {
+                            Box::new(move || {
+                                let mut new_s = Vec::with_capacity(r.len());
+                                let mut new_d = Vec::with_capacity(r.len());
+                                for i in r {
+                                    let sx = sv[i];
+                                    if sx == NIL {
+                                        new_s.push(NIL);
+                                        new_d.push(dv[i]);
+                                    } else {
+                                        let o = owner_of(sx, n, v);
+                                        let rloc = owner_base[o] + at[o];
+                                        at[o] += 2;
+                                        new_s.push(replies[rloc]);
+                                        new_d.push(dv[i].wrapping_add(replies[rloc + 1]));
+                                    }
+                                }
+                                (new_s, new_d)
+                            }) as ScopedJob<'_, (Vec<u64>, Vec<u64>)>
+                        })
+                        .collect(),
+                )
+            };
             let s = vp.slice_mut(succ)?;
-            s[..chunk].copy_from_slice(&new_s);
+            let mut at = 0;
+            for (ns, _) in &outs {
+                s[at..at + ns.len()].copy_from_slice(ns);
+                at += ns.len();
+            }
             let d = vp.slice_mut(dist)?;
-            d[..chunk].copy_from_slice(&new_d);
+            let mut at = 0;
+            for (_, nd) in &outs {
+                d[at..at + nd.len()].copy_from_slice(nd);
+                at += nd.len();
+            }
         }
     }
 
@@ -352,21 +455,12 @@ mod tests {
 
     #[test]
     fn owner_is_inverse_of_slice_of() {
-        let n = 103u64;
-        let v = 8;
-        // Rebuild the owner closure logic and cross-check.
-        for r in 0..v {
-            let (s, l) = slice_of(n, v, r);
-            for idx in s..s + l as u64 {
-                let base = n / v as u64;
-                let rem = n % v as u64;
-                let cut = (base + 1) * rem;
-                let o = if idx < cut {
-                    (idx / (base + 1)) as usize
-                } else {
-                    (rem + (idx - cut) / base.max(1)) as usize
-                };
-                assert_eq!(o, r, "idx {idx}");
+        for (n, v) in [(103u64, 8usize), (7, 7), (100, 3)] {
+            for r in 0..v {
+                let (s, l) = slice_of(n, v, r);
+                for idx in s..s + l as u64 {
+                    assert_eq!(owner_of(idx, n, v), r, "idx {idx} (n={n}, v={v})");
+                }
             }
         }
     }

@@ -21,6 +21,22 @@
 //! (time-forward and sssp drive the `empq` subsystem directly instead of
 //! the BSP engine, like the `stxxl_sort` baseline).
 
+/// Order-sensitive 64-bit fold (FNV-style) shared by the apps' output
+/// hashes: equal only for identical value sequences.  Every engine app
+/// folds its per-VP output through this and combines the per-rank
+/// digests in rank order ([`combine_rank_hashes`]), giving each result
+/// an `output_hash` that is a pure function of the produced bytes — the
+/// pin the serial/pooled computation-superstep equivalence suite
+/// (`rust/tests/parallel_equivalence.rs`) compares across modes.
+pub(crate) fn fold_u64(h: u64, x: u64) -> u64 {
+    h.wrapping_mul(0x0100_0000_01B3) ^ x.wrapping_add(1)
+}
+
+/// Combine per-rank output digests in rank order into one app-level hash.
+pub(crate) fn combine_rank_hashes(per_rank: &[u64]) -> u64 {
+    per_rank.iter().fold(0x9E37_79B9_7F4A_7C15, |h, &x| fold_u64(h, x))
+}
+
 pub mod cgm_sort;
 pub mod euler_tour;
 pub mod graph_gen;

@@ -2,17 +2,19 @@
 //!
 //! Each VP holds a chunk of a distributed i32 array; the result is the
 //! global inclusive prefix sum.  Three phases: local scan (computation
-//! superstep — the XLA Pallas scan kernel when enabled), gather of chunk
-//! totals + exclusive scan at the root, scatter of carry-ins, local
-//! carry add.
+//! superstep, batched on the engine pool via
+//! [`crate::vp::ComputeCtx::scan_i32`] — per-segment XLA Pallas scan
+//! kernel when enabled), gather of chunk totals + exclusive scan at the
+//! root, scatter of carry-ins, local carry add (also pooled).
 
+use crate::apps::{combine_rank_hashes, fold_u64};
 use crate::config::SimConfig;
 use crate::engine::{run_arc, RunReport};
 use crate::error::{Error, Result};
 use crate::util::XorShift64;
 use crate::vp::Vp;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Outcome of a prefix-sum run.
 #[derive(Debug)]
@@ -24,6 +26,9 @@ pub struct PrefixSumResult {
     pub verified: bool,
     /// Elements processed.
     pub n: u64,
+    /// Order-sensitive digest of the final prefix array (per-VP folds in
+    /// rank order) — pinned equal across serial/pooled compute modes.
+    pub output_hash: u64,
 }
 
 /// Context bytes needed per VP.
@@ -45,12 +50,15 @@ pub fn run_prefix_sum(cfg: SimConfig, n: u64, verify: bool) -> Result<PrefixSumR
     }
     let ok = Arc::new(AtomicBool::new(true));
     let ok2 = ok.clone();
+    let hashes = Arc::new(Mutex::new(vec![0u64; v]));
+    let hashes2 = hashes.clone();
     let seed = cfg.seed;
     let report = run_arc(
         cfg,
-        Arc::new(move |vp: &mut Vp| prefix_vp(vp, n, seed, verify, &ok2)),
+        Arc::new(move |vp: &mut Vp| prefix_vp(vp, n, seed, verify, &ok2, &hashes2)),
     )?;
-    Ok(PrefixSumResult { report, verified: ok.load(Ordering::SeqCst), n })
+    let output_hash = combine_rank_hashes(&hashes.lock().unwrap());
+    Ok(PrefixSumResult { report, verified: ok.load(Ordering::SeqCst), n, output_hash })
 }
 
 /// Deterministic input value at global index `i`.
@@ -61,7 +69,14 @@ fn input_at(seed: u64, i: u64) -> i32 {
     (x.next_u32() % 1000) as i32 - 500
 }
 
-fn prefix_vp(vp: &mut Vp, n: u64, seed: u64, verify: bool, ok: &AtomicBool) -> Result<()> {
+fn prefix_vp(
+    vp: &mut Vp,
+    n: u64,
+    seed: u64,
+    verify: bool,
+    ok: &AtomicBool,
+    hashes: &Mutex<Vec<u64>>,
+) -> Result<()> {
     let v = vp.nranks();
     let me = vp.rank();
     let base = (n / v as u64) as usize;
@@ -82,11 +97,12 @@ fn prefix_vp(vp: &mut Vp, n: u64, seed: u64, verify: bool, ok: &AtomicBool) -> R
         }
     }
 
-    // Phase 1: local inclusive scan (XLA Pallas kernel when enabled).
+    // Phase 1: local inclusive scan (computation superstep, batched on
+    // the engine pool; per-segment XLA Pallas kernel when enabled).
     {
-        let compute = vp.shared().compute.clone();
+        let ctx = vp.compute_ctx();
         let d = vp.slice_mut(data)?;
-        compute.local_scan_i32(&mut d[..chunk]);
+        ctx.scan_i32(&mut d[..chunk]);
         let t = d[chunk.saturating_sub(1)];
         vp.slice_mut(total)?[0] = if chunk == 0 { 0 } else { t };
     }
@@ -103,14 +119,22 @@ fn prefix_vp(vp: &mut Vp, n: u64, seed: u64, verify: bool, ok: &AtomicBool) -> R
         }
     }
 
-    // Phase 3: scatter carry-ins; add locally.
+    // Phase 3: scatter carry-ins; add locally (pooled — the add is a
+    // pure elementwise pass over disjoint chunks; a zero carry adds
+    // nothing byte-wise and is skipped).
     vp.scatter_region(0, carries.map(|c| c.region()).unwrap_or((0, 0)), carry.region())?;
     {
+        let ctx = vp.compute_ctx();
         let c = vp.slice(carry)?[0];
         let d = vp.slice_mut(data)?;
-        for x in d[..chunk].iter_mut() {
-            *x = x.wrapping_add(c);
-        }
+        ctx.add_i32(&mut d[..chunk], c);
+    }
+
+    // Output digest (local fold; no superstep).
+    {
+        let d = vp.slice(data)?;
+        let h = d[..chunk].iter().fold(0u64, |h, &x| fold_u64(h, x as u32 as u64));
+        hashes.lock().unwrap()[me] = h;
     }
 
     // Verification: compare sampled positions against the sequential

@@ -3,16 +3,22 @@
 //! The thesis' main benchmark: four communication supersteps (gather
 //! splitter samples, bcast global splitters, alltoall bucket counts,
 //! alltoallv buckets), with coarse granularity — the ideal PEMS workload.
-//! The local sort (computation superstep) runs on the XLA bitonic
-//! tile-sort kernel when `cfg.use_xla` and artifacts are present.
+//! The computation supersteps — the local sort and the root's sample
+//! sort — run batched on the engine pool through
+//! [`crate::vp::ComputeCtx`] (per-segment XLA bitonic tile-sort when
+//! `cfg.use_xla` and artifacts are present), byte-identical to the
+//! serial path behind the unified `SimConfig::parallel_phases` switch.
+//! (The splitter-location pass stays serial on purpose: v-1 binary
+//! searches are cheaper than a pool dispatch.)
 
+use crate::apps::{combine_rank_hashes, fold_u64};
 use crate::config::SimConfig;
 use crate::engine::{run_arc, RunReport};
 use crate::error::{Error, Result};
 use crate::util::XorShift64;
 use crate::vp::Vp;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Outcome of a PSRS run.
 #[derive(Debug)]
@@ -23,6 +29,10 @@ pub struct PsrsResult {
     pub verified: bool,
     /// Total elements sorted.
     pub n: u64,
+    /// Order-sensitive digest of the sorted output (per-VP folds combined
+    /// in rank order) — a pure function of the produced bytes, pinned
+    /// equal across the serial/pooled computation-superstep modes.
+    pub output_hash: u64,
 }
 
 /// Per-VP chunk length for a total of `n` elements over `v` VPs.
@@ -56,14 +66,16 @@ pub fn run_psrs(cfg: SimConfig, n: u64, verify: bool) -> Result<PsrsResult> {
     let sum_in = Arc::new(AtomicU64::new(0));
     let sum_out = Arc::new(AtomicU64::new(0));
     let count_out = Arc::new(AtomicU64::new(0));
+    let hashes = Arc::new(Mutex::new(vec![0u64; v]));
     let seed = cfg.seed;
     let ok2 = ok.clone();
     let sum_in2 = sum_in.clone();
     let sum_out2 = sum_out.clone();
     let count_out2 = count_out.clone();
+    let hashes2 = hashes.clone();
 
     let program = move |vp: &mut Vp| -> Result<()> {
-        psrs_vp(vp, n, seed, verify, &ok2, &sum_in2, &sum_out2, &count_out2)
+        psrs_vp(vp, n, seed, verify, &ok2, &sum_in2, &sum_out2, &count_out2, &hashes2)
     };
     let report = run_arc(cfg, Arc::new(program))?;
 
@@ -74,7 +86,8 @@ pub fn run_psrs(cfg: SimConfig, n: u64, verify: bool) -> Result<PsrsResult> {
     } else {
         true
     };
-    Ok(PsrsResult { report, verified, n })
+    let output_hash = combine_rank_hashes(&hashes.lock().unwrap());
+    Ok(PsrsResult { report, verified, n, output_hash })
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -87,6 +100,7 @@ fn psrs_vp(
     sum_in: &AtomicU64,
     sum_out: &AtomicU64,
     count_out: &AtomicU64,
+    hashes: &Mutex<Vec<u64>>,
 ) -> Result<()> {
     let v = vp.nranks();
     let me = vp.rank();
@@ -118,11 +132,12 @@ fn psrs_vp(
         }
     }
 
-    // ---- Step 1: local sort (computation superstep; XLA if enabled) ----
+    // ---- Step 1: local sort (computation superstep, batched on the
+    // engine pool; per-segment XLA tile-sort if enabled) ----
     {
-        let compute = vp.shared().compute.clone();
+        let ctx = vp.compute_ctx();
         let d = vp.slice_mut(data)?;
-        compute.local_sort_u32(d);
+        ctx.sort(d);
     }
 
     // ---- Step 2: choose v equally spaced splitter samples ----
@@ -137,12 +152,13 @@ fn psrs_vp(
     // ---- Step 3: gather all v^2 samples at the root ----
     vp.gather_region(0, samples.region(), all_samples.map(|m| m.region()).unwrap_or((0, 0)))?;
 
-    // ---- Step 4: root sorts samples, picks v-1 global splitters ----
+    // ---- Step 4: root sorts samples (pooled), picks v-1 splitters ----
     if me == 0 {
+        let ctx = vp.compute_ctx();
         let all = all_samples.expect("root allocated");
         let (a_im, spl) = vp.slice_pair_mut(all, splitters)?;
         let mut a: Vec<u32> = a_im.to_vec();
-        a.sort_unstable();
+        ctx.sort(&mut a);
         for j in 0..v - 1 {
             spl[j] = a[(j + 1) * v];
         }
@@ -153,6 +169,11 @@ fn psrs_vp(
     vp.bcast_region(0, splitters.region(), splitters.region())?;
 
     // ---- Step 6/7: locate splitters, compute bucket counts ----
+    // Deliberately serial: the partition pass is v-1 binary searches
+    // (~v·log(chunk) comparisons — microseconds), so a pool batch would
+    // cost more in dispatch than it parallelizes and add noise to the
+    // pool_jobs fan-out signal.  The pooled computation supersteps of
+    // this app are the local sort and the root's sample sort.
     let mut bounds = vec![0usize; v + 1];
     {
         let (d, spl) = {
@@ -227,6 +248,13 @@ fn psrs_vp(
             at += c;
         }
         merge_runs(&runs, &mut o[..total_in]);
+    }
+
+    // ---- Output digest (local fold; no superstep) ----
+    {
+        let o = vp.slice(out)?;
+        let h = o[..total_in].iter().fold(0u64, |h, &x| fold_u64(h, x as u64));
+        hashes.lock().unwrap()[me] = h;
     }
 
     // ---- Verification supersteps ----

@@ -20,9 +20,14 @@
 //!
 //! The graph is never materialized: out-edges (targets and weights)
 //! regenerate from a per-node seeded PRNG, exactly like
-//! [`crate::apps::time_forward`].  Verification runs an in-RAM Dijkstra
-//! oracle over the same implicit graph and additionally checks that every
-//! reported predecessor is a *valid* shortest-path predecessor.
+//! [`crate::apps::time_forward`] — and that regeneration, the dominant
+//! compute of each frontier round, runs batched on the queue's worker
+//! pool ([`crate::vp::ComputeCtx::with_pool`] over
+//! [`EmPq::compute_pool`]) while the settle/filter pass stays
+//! sequential, preserving the serial loop's bytes exactly.
+//! Verification runs an in-RAM Dijkstra oracle over the same implicit
+//! graph and additionally checks that every reported predecessor is a
+//! *valid* shortest-path predecessor.
 
 use crate::apps::graph_gen::{self, degree_draw};
 use crate::config::SimConfig;
@@ -31,6 +36,7 @@ use crate::error::{Error, Result};
 use crate::util::bytes::Pod;
 use crate::util::record::Record;
 use crate::util::XorShift64;
+use crate::vp::{ComputeCtx, ScopedJob};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -98,6 +104,13 @@ pub struct SsspResult {
 /// Workload salt for [`graph_gen::node_rng`]: keeps the SSSP digraph
 /// uncorrelated with the time-forward DAG under one `cfg.seed`.
 const NODE_SALT: u64 = 0xD1B5_4A32_D192_ED03;
+
+/// Frontier window (records) for pooled edge regeneration: bounds the
+/// resident edge-list RAM to one window (`window × avg_deg` pairs)
+/// regardless of how large an equal-distance frontier gets — low-weight
+/// graphs produce O(n)-record frontiers, which must not turn the serial
+/// path's O(deg) transient into an O(frontier × deg) resident buffer.
+const FRONTIER_WINDOW: usize = 4096;
 
 /// Node `u`'s PRNG stream (see [`graph_gen`]).
 fn node_rng(seed: u64, u: u64) -> XorShift64 {
@@ -189,6 +202,13 @@ pub fn run_sssp_with(
     let mut rounds = 0u64;
     let mut total_dist = 0u64;
     let mut checksum = 0u64;
+    // The driver's computation superstep — frontier out-edge
+    // regeneration — runs batched on the queue's own worker pool
+    // (shared with the spill pipeline; pool batches meter into the
+    // queue's report).  Serial path behind the unified
+    // `SimConfig::parallel_phases` switch — and `--serial-spill`, which
+    // forces the whole queue (spills + driver compute) serial.
+    let ctx = ComputeCtx::with_pool(pq.compute_pool(), pq.metrics_handle());
     let mut outbox: Vec<SsspRecord> = Vec::new();
     while let Some(head) = pq.peek_min() {
         // One equal-distance frontier per round: every record at the
@@ -196,23 +216,79 @@ pub fn run_sssp_with(
         let frontier = pq.extract_while_key_le(head.dist)?;
         debug_assert!(frontier.iter().all(|r| r.dist == head.dist));
         rounds += 1;
+        // The frontier processes in bounded windows (like time-forward's
+        // EDGE_WINDOW): per window, a pooled pass regenerates the edge
+        // list of each node's first occurrence, if the node is still
+        // unsettled when the window starts (edge lists are pure per-node
+        // PRNG functions — the round's dominant compute), then a
+        // sequential pass keeps
+        // the exact lazy-deletion and outbox-filter semantics of the
+        // serial loop.  Byte-identical in both modes and window-size
+        // independent: a record unsettled when its sequential turn comes
+        // was necessarily unsettled when its window was generated (the
+        // settled set only grows), so its list is always `Some`; records
+        // settled earlier — in a past round, a past window, or earlier
+        // in this window — are skipped, their lists unused.  Resident
+        // RAM stays at one window of edge lists, not the whole frontier.
         outbox.clear();
-        for r in &frontier {
-            let u = r.node as usize;
-            if settled[u] {
-                continue; // stale lazy-deleted record
-            }
-            settled[u] = true;
-            reached += 1;
-            total_dist = total_dist.wrapping_add(r.dist);
-            checksum = checksum.wrapping_add(mix(r.dist, r.node));
-            if verify {
-                dist_of[u] = r.dist;
-                pred_of[u] = r.pred;
-            }
-            for (v, w) in out_edges(seed, r.node, n, avg_deg, wmax) {
-                if !settled[v as usize] {
-                    outbox.push(SsspRecord::new(r.dist + w, v, r.node));
+        for window in frontier.chunks(FRONTIER_WINDOW) {
+            // First-occurrence mask: a node is generated once per window,
+            // even when the window holds many lazy-deleted duplicates of
+            // it (common on low-weight graphs) — the sequential pass
+            // skips every record after the one that settles the node, so
+            // the later duplicates' lists would go unused anyway.
+            let mut seen = std::collections::HashSet::with_capacity(window.len());
+            let gen: Vec<bool> = window
+                .iter()
+                .map(|rec| !settled[rec.node as usize] && seen.insert(rec.node))
+                .collect();
+            let edge_lists: Vec<Option<Vec<(u64, u64)>>> = {
+                let gen = &gen;
+                ctx.run_scoped(
+                    ctx.chunks(window.len())
+                        .into_iter()
+                        .map(|r| {
+                            Box::new(move || {
+                                window[r.clone()]
+                                    .iter()
+                                    .zip(&gen[r])
+                                    .map(|(rec, &g)| {
+                                        g.then(|| {
+                                            out_edges(seed, rec.node, n, avg_deg, wmax)
+                                        })
+                                    })
+                                    .collect::<Vec<_>>()
+                            })
+                                as ScopedJob<'_, Vec<Option<Vec<(u64, u64)>>>>
+                        })
+                        .collect(),
+                )
+                .into_iter()
+                .flatten() // moves the lists; concat() would clone them
+                .collect()
+            };
+            for (r, edges) in window.iter().zip(&edge_lists) {
+                let u = r.node as usize;
+                if settled[u] {
+                    continue; // stale lazy-deleted record (or duplicate)
+                }
+                settled[u] = true;
+                reached += 1;
+                total_dist = total_dist.wrapping_add(r.dist);
+                checksum = checksum.wrapping_add(mix(r.dist, r.node));
+                if verify {
+                    dist_of[u] = r.dist;
+                    pred_of[u] = r.pred;
+                }
+                // A record that is unsettled when its sequential turn
+                // comes is necessarily its node's first in-window
+                // occurrence and was unsettled at window start, so its
+                // list was generated.
+                let edges = edges.as_ref().expect("first unsettled occurrence has edges");
+                for &(v, w) in edges {
+                    if !settled[v as usize] {
+                        outbox.push(SsspRecord::new(r.dist + w, v, r.node));
+                    }
                 }
             }
         }

@@ -11,15 +11,25 @@
 //! technique: the queue carries exactly the "time-forwarded" data
 //! crossing the current frontier, which can far exceed RAM.
 //!
-//! The graph itself is never materialized: out-edges are regenerated from
-//! a per-node seeded PRNG, so the only RAM the driver holds is the
-//! verification oracle (8 bytes/node, only when `verify` is on).
+//! The graph itself is never materialized: out-edges are regenerated
+//! from a per-node seeded PRNG in a bounded lookahead window
+//! (`EDGE_WINDOW` nodes), batched on the compute pool — so the only
+//! RAM the driver holds is the window plus the verification oracle
+//! (8 bytes/node, only when `verify` is on).
 
 use crate::apps::graph_gen::{self, degree_draw};
 use crate::config::SimConfig;
 use crate::empq::{EmPq, EmPqReport, Entry};
 use crate::error::{Error, Result};
 use crate::util::XorShift64;
+use crate::vp::{ComputeCtx, ScopedJob};
+
+/// Lookahead window (nodes) for pooled out-edge regeneration: edge lists
+/// are pure per-node PRNG functions, so a window regenerates batched on
+/// the compute pool while the value recurrence stays strictly
+/// sequential.  Bounds driver RAM to `window × avg_deg` targets — the
+/// "graph never materialized" property holds up to this constant.
+const EDGE_WINDOW: u64 = 4096;
 
 /// Outcome of a time-forward run.
 #[derive(Debug)]
@@ -90,10 +100,38 @@ pub fn run_time_forward(
     let seed = cfg.seed;
     let m = edge_count(seed, n, avg_deg);
     let mut pq: EmPq<Entry> = EmPq::new(cfg, m.max(1))?;
+    // The driver's computation superstep — out-edge regeneration — runs
+    // batched over a lookahead window (see EDGE_WINDOW) on the queue's
+    // own worker pool (shared with the spill pipeline: the two issue
+    // from this one thread and are never busy at once); pool batches
+    // meter into the queue's report.  Serial path behind the unified
+    // `SimConfig::parallel_phases` switch, byte-identical (edge lists
+    // are pure functions of the id).
+    let ctx = ComputeCtx::with_pool(pq.compute_pool(), pq.metrics_handle());
 
     let start = std::time::Instant::now();
     let mut checksum = 0u64;
+    let mut window: Vec<Vec<u64>> = Vec::new();
+    let mut window_base = 0u64;
     for i in 0..n {
+        if i >= window_base + window.len() as u64 {
+            window_base = i;
+            let end = (i + EDGE_WINDOW).min(n);
+            let parts: Vec<Vec<Vec<u64>>> = ctx.run_scoped(
+                ctx.chunks((end - i) as usize)
+                    .into_iter()
+                    .map(|r| {
+                        Box::new(move || {
+                            r.map(|off| out_edges(seed, i + off as u64, n, avg_deg))
+                                .collect::<Vec<_>>()
+                        }) as ScopedJob<'_, Vec<Vec<u64>>>
+                    })
+                    .collect(),
+            );
+            // flatten() moves the inner edge-list Vecs; concat() would
+            // deep-clone every list right after generating it.
+            window = parts.into_iter().flatten().collect();
+        }
         let msgs = pq.extract_while_key_le(i)?;
         debug_assert!(msgs.iter().all(|e| e.key == i), "late message detected");
         let mut val = init_value(seed, i);
@@ -101,13 +139,14 @@ pub fn run_time_forward(
             val = val.wrapping_add(e.val);
         }
         checksum = checksum.wrapping_add(val.rotate_left((i % 63) as u32));
-        let targets = out_edges(seed, i, n, avg_deg);
+        let targets = &window[(i - window_base) as usize];
+        debug_assert_eq!(*targets, out_edges(seed, i, n, avg_deg));
         if bulk {
             let outbox: Vec<Entry> =
                 targets.iter().map(|&t| Entry::new(t, val)).collect();
             pq.push_batch(&outbox)?;
         } else {
-            for &t in &targets {
+            for &t in targets {
                 pq.push(Entry::new(t, val))?;
             }
         }

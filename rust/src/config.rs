@@ -175,10 +175,11 @@ pub struct SimConfig {
     /// Cost-model coefficients.
     pub cost: CostCoeffs,
     /// Worker threads in the per-node compute pool driving the engine's
-    /// parallel phases (delivery fan-out) and `stxxl_sort` run
-    /// formation; `0` resolves to `k` — one worker per memory
-    /// partition.  (`empq` sizes its own pool at one worker per
-    /// insertion heap, i.e. always `k`.)
+    /// parallel phases — delivery fan-out and the apps' computation
+    /// supersteps ([`crate::vp::ComputeCtx`]) — plus `stxxl_sort` run
+    /// formation and the PQ drivers' edge regeneration; `0` resolves to
+    /// `k` — one worker per memory partition.  (`empq` sizes its own
+    /// pool at one worker per insertion heap, i.e. always `k`.)
     pub compute_threads: usize,
     /// Master switch for the parallel phases.  `false` forces every
     /// phase onto its serial path (A/B benchmarking, the forced-serial
@@ -228,14 +229,18 @@ impl SimConfig {
         self.vps_per_node() as u64 * self.ctx_slot()
     }
 
-    /// Resolved compute-pool width: [`SimConfig::compute_threads`],
-    /// defaulting to `k` when left at 0.
+    /// Resolved compute-pool width: [`SimConfig::compute_threads`] when
+    /// set; otherwise the `PEMS2_POOL_THREADS` environment override
+    /// ([`pool_threads_env`]) when present, else `k`.  The env var only
+    /// fills the *derived* default — an explicit `compute_threads`
+    /// always wins — so CI can sweep the pool width (e.g. a width that
+    /// is not a multiple of `k`, exercising uneven chunking in every
+    /// pooled phase) without touching individual configs.
     pub fn pool_threads(&self) -> usize {
-        if self.compute_threads == 0 {
-            self.k
-        } else {
-            self.compute_threads
+        if self.compute_threads != 0 {
+            return self.compute_threads;
         }
+        pool_threads_env().unwrap_or(self.k)
     }
 
     /// True when parallelizable phases should run on the shared worker
@@ -344,6 +349,19 @@ impl SimConfig {
 /// per mode with this, so both paths stay green.
 pub fn force_serial_env() -> bool {
     truthy(std::env::var("PEMS2_FORCE_SERIAL").ok())
+}
+
+/// Pool-width override from `PEMS2_POOL_THREADS` (an integer > 1): a
+/// process-wide default for the compute-pool width wherever a config
+/// leaves it derived (`compute_threads == 0`).  CI's pooled-compute leg
+/// uses it to run the equivalence suite with a width that differs from
+/// `k`, so uneven chunk counts exercise every pooled phase.  `1` is
+/// rejected (falls back to `k`): a 1-wide pool is just the serial path,
+/// which has its own switches (`--serial` / `--threads 1`), and
+/// accepting it would make every "pooled phases must meter" test
+/// assertion spuriously false.
+pub fn pool_threads_env() -> Option<usize> {
+    std::env::var("PEMS2_POOL_THREADS").ok()?.parse().ok().filter(|&t| t > 1)
 }
 
 /// True when `PEMS2_NO_PREFETCH` is set to a truthy value
@@ -536,12 +554,31 @@ mod tests {
     fn compute_pool_knobs_resolve() {
         let c = SimConfig::builder().v(8).k(4).build().unwrap();
         assert_eq!(c.compute_threads, 0, "default: derive from k");
-        assert_eq!(c.pool_threads(), 4);
+        if pool_threads_env().is_none() {
+            assert_eq!(c.pool_threads(), 4);
+        } else {
+            // The PEMS2_POOL_THREADS CI leg: the env fills the derived
+            // default process-wide.
+            assert_eq!(c.pool_threads(), pool_threads_env().unwrap());
+        }
+        // An explicit width always beats the env override.
         let c = SimConfig::builder().v(8).k(4).compute_threads(3).build().unwrap();
         assert_eq!(c.pool_threads(), 3);
         // The master switch defaults on; phases_parallel honours it.
         let c = SimConfig::builder().v(8).k(2).parallel_phases(false).build().unwrap();
         assert!(!c.phases_parallel());
+    }
+
+    #[test]
+    fn pool_threads_env_parses_widths_above_one() {
+        // The env var itself is process-global; exercise the parser
+        // shape on the filter contract (integers > 1 only — width 1 is
+        // the serial path's job, see pool_threads_env docs).
+        assert_eq!("7".parse::<usize>().ok().filter(|&t| t > 1), Some(7));
+        assert_eq!("3".parse::<usize>().ok().filter(|&t| t > 1), Some(3));
+        assert_eq!("1".parse::<usize>().ok().filter(|&t| t > 1), None);
+        assert_eq!("0".parse::<usize>().ok().filter(|&t| t > 1), None);
+        assert_eq!("x".parse::<usize>().ok().filter(|&t| t > 1), None);
     }
 
     #[test]

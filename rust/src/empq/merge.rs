@@ -417,6 +417,38 @@ pub fn sort_segments<T: Record>(
     }
 }
 
+/// Tournament-merge already-sorted `segments` into `out` (RAM to RAM) —
+/// the in-memory counterpart of [`merge_write_segments`], used by the
+/// computation-superstep sort helper (`ComputeCtx::sort`) to reassemble
+/// pool-sorted segments into the app's partition buffer.  `out.len()`
+/// must equal the total segment length.  Ties break by segment index, so
+/// the output is a pure function of the segment contents — for records
+/// whose `Ord`-equality implies byte-equality (every in-tree `Record`),
+/// the result is byte-identical to sorting the concatenation directly.
+pub fn merge_segments_into<T: Record>(segments: &[Vec<T>], out: &mut [T]) {
+    debug_assert!(segments.iter().all(|s| s.windows(2).all(|w| w[0] <= w[1])));
+    let total: usize = segments.iter().map(Vec::len).sum();
+    debug_assert_eq!(total, out.len(), "merge_segments_into: output size mismatch");
+    let live: Vec<&Vec<T>> = segments.iter().filter(|s| !s.is_empty()).collect();
+    if live.len() <= 1 {
+        if let Some(s) = live.first() {
+            out.copy_from_slice(s);
+        }
+        return;
+    }
+    let mut pos = vec![0usize; live.len()];
+    let mut keys: Vec<Option<T>> = live.iter().map(|s| s.first().copied()).collect();
+    let mut tree = TournamentTree::new(&keys);
+    for slot in out.iter_mut() {
+        let w = tree.winner();
+        let e = keys[w].take().expect("merge sized to the segment total");
+        pos[w] += 1;
+        keys[w] = live[w].get(pos[w]).copied();
+        tree.update(&keys);
+        *slot = e;
+    }
+}
+
 /// Tournament-merge sorted `segments` and stream the result to
 /// `[base, base + total·SIZE)` in `chunk_cap`-element writes — sized to
 /// one disk block by callers, so the async driver's write-behind absorbs
@@ -773,6 +805,26 @@ mod tests {
             sort_segments(segments.clone(), Some(&pool), &metrics, Some(&compute), || ());
         let without = sort_segments(segments, None, &metrics, None, || ());
         assert_eq!(with_kernel, without);
+    }
+
+    #[test]
+    fn merge_segments_into_matches_full_sort() {
+        let mut segments = random_segments(33, &[400, 0, 1, 129, 77]);
+        for s in segments.iter_mut() {
+            s.sort_unstable();
+        }
+        let mut want: Vec<u32> = segments.concat();
+        let mut out = vec![0u32; want.len()];
+        merge_segments_into(&segments, &mut out);
+        want.sort_unstable();
+        assert_eq!(out, want);
+        // Degenerate shapes: all empty, and a single live segment.
+        let mut none: Vec<u32> = Vec::new();
+        merge_segments_into::<u32>(&[Vec::new(), Vec::new()], &mut none);
+        let single = vec![Vec::new(), (0..50u32).collect::<Vec<_>>()];
+        let mut out = vec![0u32; 50];
+        merge_segments_into(&single, &mut out);
+        assert_eq!(out, (0..50u32).collect::<Vec<_>>());
     }
 
     #[test]

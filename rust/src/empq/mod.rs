@@ -198,11 +198,13 @@ pub struct EmPq<T: Record = Entry> {
     ext: MultiwayMerge<T>,
     /// Extents of retired (fully consumed) external arrays, reusable.
     free: ExtentFreeList,
-    /// Shared sort workers, one per insertion heap; spawned lazily on the
-    /// first parallel spill, then reused by every later one.  Stays
-    /// `None` for serial-mode and `k = 1` queues, which never pay the
-    /// thread spawns.
-    pool: Option<WorkerPool>,
+    /// Shared sort workers, one per insertion heap; spawned lazily on
+    /// the first parallel spill (or the first [`EmPq::compute_pool`]
+    /// call), then reused by every later one — spills *and* the
+    /// driver-side pooled phases run on this one pool, so a workload
+    /// never holds two idle worker sets.  Stays `None` for serial-mode
+    /// and `k = 1` queues, which never pay the thread spawns.
+    pool: Option<Arc<WorkerPool>>,
     /// Drain + sort heaps on the pool (else the pre-pool serial path —
     /// kept for A/B benchmarking).
     parallel_spill: bool,
@@ -333,12 +335,37 @@ impl<T: Record> EmPq<T> {
     /// Worker threads backing the spill pipeline (0 until the first
     /// parallel spill spawns the pool).
     pub fn pool_threads(&self) -> usize {
-        self.pool.as_ref().map_or(0, WorkerPool::threads)
+        self.pool.as_ref().map_or(0, |p| p.threads())
+    }
+
+    /// Shared handle to the queue's worker pool for driver-side pooled
+    /// phases (the workloads' batched edge regeneration through
+    /// [`crate::vp::ComputeCtx::with_pool`]): lazily creates the same
+    /// pool the spill pipeline uses — one `k`-wide worker set serves
+    /// both, since spills and the driver's compute both issue from the
+    /// single driver thread and are never busy simultaneously.  `None`
+    /// in serial mode or for `k = 1` queues (a 1-wide pool buys
+    /// nothing), which keeps the serial path thread-spawn-free.
+    pub fn compute_pool(&mut self) -> Option<Arc<WorkerPool>> {
+        if !self.parallel_spill || self.heaps.len() <= 1 {
+            return None;
+        }
+        let heaps = self.heaps.len();
+        Some(self.pool.get_or_insert_with(|| Arc::new(WorkerPool::new(heaps))).clone())
     }
 
     /// Measured I/O counters so far.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// Shared handle to the queue's metrics sink.  Driver-side pooled
+    /// phases (the workloads' batched edge regeneration through
+    /// [`crate::vp::ComputeCtx::with_pool`]) meter their pool batches
+    /// here, so one [`EmPqReport`] covers the whole workload's achieved
+    /// compute fan-out, not just the spill pipeline's.
+    pub fn metrics_handle(&self) -> Arc<Metrics> {
+        self.metrics.clone()
     }
 
     /// RunReport-style accounting summary.
@@ -707,7 +734,8 @@ impl<T: Record> EmPq<T> {
             // already-buffered data drains first — a bounded transient.
             let EmPq { pool, heaps, parallel_spill, metrics, ext, compute, .. } = self;
             let p = if *parallel_spill && segments.len() > 1 {
-                Some(&*pool.get_or_insert_with(|| WorkerPool::new(heaps.len())))
+                Some(&**pool
+                    .get_or_insert_with(|| Arc::new(WorkerPool::new(heaps.len()))))
             } else {
                 None
             };

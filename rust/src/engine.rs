@@ -84,12 +84,14 @@ pub fn run_arc(
         let vpp = cfg.vps_per_node();
         let rounds = vpp.div_ceil(cfg.k);
         // The node's compute pool: one engine-owned resource shared by
-        // every parallel phase (delivery fan-out), created once and
-        // reused for the whole run.  Absent in serial mode, when a
-        // 1-wide pool would buy nothing.  Explicit-I/O stores fan out
-        // too since the per-disk I/O queue partitioning landed: their
-        // deliveries batch per target disk (see deliver_local_batch) and
-        // the border cache is lock-protected with per-(src,dst) disjoint
+        // every parallel phase — delivery fan-out and the apps'
+        // computation supersteps (local sorts/scans/relink passes via
+        // vp/superstep.rs::ComputeCtx) — created once and reused for
+        // the whole run.  Absent in serial mode, when a 1-wide pool
+        // would buy nothing.  Explicit-I/O stores fan out too since the
+        // per-disk I/O queue partitioning landed: their deliveries
+        // batch per target disk (see deliver_local_batch) and the
+        // border cache is lock-protected with per-(src,dst) disjoint
         // regions.
         let pool = (cfg.phases_parallel() && cfg.pool_threads() > 1)
             .then(|| Arc::new(WorkerPool::new(cfg.pool_threads())));

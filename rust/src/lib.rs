@@ -63,5 +63,5 @@ pub mod prelude {
     pub use crate::engine::{run, RunReport};
     pub use crate::error::{Error, Result};
     pub use crate::util::record::Record;
-    pub use crate::vp::{Vp, VpMem};
+    pub use crate::vp::{ComputeCtx, Vp, VpMem};
 }

@@ -84,10 +84,12 @@ SIMULATION FLAGS (Appendix B.3)
   --layout L      striped | per-vp
   --fragmented    emulate ext3-style file fragmentation (Fig. C.1)
   --unordered     disable ID-ordered rounds (Def. 6.5.1)
-  --threads N     compute-pool workers per node (0 = k)    [0]
+  --threads N     compute-pool workers per node (0 = k, or the
+                  PEMS2_POOL_THREADS env default when set)  [0]
   --serial        force the serial path of every parallel phase (delivery
-                  fan-out, sort run formation, empq spills); the
-                  PEMS2_FORCE_SERIAL=1 env var does the same globally
+                  fan-out, sort run formation, empq spills, the apps'
+                  computation supersteps); the PEMS2_FORCE_SERIAL=1 env
+                  var does the same globally
   --no-prefetch   disable the asynchronous context-swap pipeline
                   (double-buffered partitions + shadow prefetch; takes
                   effect with --io stxxl-file); PEMS2_NO_PREFETCH=1 does
@@ -227,6 +229,10 @@ fn cmd_time_forward(cli: &Cli) -> Result<()> {
     println!("seeks              {}", r.pq.metrics.seeks);
     println!("external_runs      {}", r.pq.runs_created);
     println!("max_queue_len      {}", r.pq.max_len);
+    println!(
+        "pool_jobs          {} ({} batches)",
+        r.pq.metrics.pool_jobs, r.pq.metrics.pool_batches
+    );
     println!("checksum           {:#018x}", r.checksum);
     println!("verified           {}", r.verified);
     if !r.verified {
@@ -265,6 +271,10 @@ fn cmd_sssp(cli: &Cli) -> Result<()> {
     println!("max_queue_len      {}", r.pq.max_len);
     println!("arena_high_water   {}", human_bytes(r.pq.arena_high_water));
     println!("arena_reused       {}", human_bytes(r.pq.arena_reused));
+    println!(
+        "pool_jobs          {} ({} batches)",
+        r.pq.metrics.pool_jobs, r.pq.metrics.pool_batches
+    );
     println!("checksum           {:#018x}", r.checksum);
     println!("verified           {}", r.verified);
     if !r.verified {

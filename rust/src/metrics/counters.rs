@@ -98,8 +98,9 @@ impl Metrics {
     }
 
     /// Record one worker-pool batch of `jobs` parallel jobs (spill
-    /// segment sorts, delivery fan-outs, run-formation sorts) — the
-    /// achieved-parallelism signal `RunReport` exposes.
+    /// segment sorts, delivery fan-outs, run-formation sorts, the
+    /// computation supersteps' pooled passes) — the achieved-parallelism
+    /// signal `RunReport` exposes.
     pub fn pool_batch(&self, jobs: u64) {
         self.pool_batches.fetch_add(1, Ordering::Relaxed);
         self.pool_jobs.fetch_add(jobs, Ordering::Relaxed);

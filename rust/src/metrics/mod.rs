@@ -6,6 +6,25 @@
 //! This module reproduces that, and adds the *accounting* layer every I/O
 //! and network operation flows through, so analytic I/O formulas
 //! (Fig. 7.8) can be validated against measured counts.
+//!
+//! Counter glossary (the [`MetricsSnapshot`] fields beyond raw I/O
+//! volume):
+//!
+//! * **`pool_jobs` / `pool_batches`** — jobs and batches executed on a
+//!   shared [`crate::util::WorkerPool`] (spill segment sorts, delivery
+//!   fan-outs, run-formation sorts, computation supersteps); their
+//!   ratio is the *achieved compute fan-out*.
+//! * **`prefetch_hits`** — context prefetches the swap pipeline issued
+//!   *and* consumed: the successor's swap-in I/O ran hidden behind the
+//!   previous occupant's compute.
+//! * **`prefetch_misses`** — prefetches issued but disposed unconsumed
+//!   (invalidated by a conflicting context write, stale turn target, or
+//!   region mismatch): wasted read I/O.
+//! * **`prefetch_hit_bytes`** — the *overlap-hidden* swap-in volume: a
+//!   subset of `swap_read_bytes` whose latency never blocked a VP.
+//! * **`swap_wait_ns`** — nanoseconds VP threads actually spent blocked
+//!   on swap-in completion under the pipeline (the residual latency the
+//!   prefetch did not hide).
 
 pub mod cost;
 pub mod counters;

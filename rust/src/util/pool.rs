@@ -12,7 +12,10 @@
 //! is what enables overlap: the caller submits the sort jobs, does its own
 //! bookkeeping (merge-buffer resizing, extent allocation, write-behind
 //! draining) while the workers run, and only then blocks for the results.
-//! [`WorkerPool::run`] is the blocking convenience wrapper.
+//! [`WorkerPool::run`] is the blocking convenience wrapper, and
+//! [`WorkerPool::run_scoped`] is its borrowing form — the computation
+//! supersteps hand workers disjoint `&mut` views of partition memory
+//! through it (see `vp/superstep.rs`).
 //!
 //! A panicking job does not kill its worker thread (the pool survives for
 //! later batches); the panic surfaces in `join` on the submitting thread.
@@ -129,6 +132,39 @@ impl WorkerPool {
         F: FnOnce() -> T + Send + 'static,
         T: Send + 'static,
     {
+        self.spawn_batch(tasks).join()
+    }
+
+    /// Scoped variant of [`WorkerPool::run`]: the tasks may borrow from
+    /// the caller's stack (the computation-superstep helpers hand workers
+    /// disjoint `&mut` views of partition memory this way, with no
+    /// copies).  Results still come back in task order; a task panic is
+    /// re-raised on this thread.
+    ///
+    /// Soundness rests on two properties of the batch machinery: this
+    /// call does not return — normally *or* by unwind — until every task
+    /// has finished (`join` counts panicked tasks through their done
+    /// guard and only re-raises after all `n` completions), and nothing
+    /// between submission and `join` can unwind on the calling thread.
+    /// Together they guarantee no worker touches a borrow after the
+    /// caller's frame is gone.
+    pub fn run_scoped<'scope, T: Send + 'static>(
+        &self,
+        tasks: Vec<Box<dyn FnOnce() -> T + Send + 'scope>>,
+    ) -> Vec<T> {
+        // SAFETY: the closures are only invoked before `spawn_batch(..)
+        // .join()` returns (see above), so promoting their lifetime to
+        // 'static never lets a worker dereference a dead frame.  The two
+        // box types are identical but for the lifetime bound.
+        let tasks: Vec<Box<dyn FnOnce() -> T + Send + 'static>> = tasks
+            .into_iter()
+            .map(|t| unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() -> T + Send + 'scope>,
+                    Box<dyn FnOnce() -> T + Send + 'static>,
+                >(t)
+            })
+            .collect();
         self.spawn_batch(tasks).join()
     }
 }
@@ -362,6 +398,50 @@ mod tests {
             );
             assert_eq!(out, (0..n).map(|i| round * 10 + i).collect::<Vec<_>>());
         }
+    }
+
+    #[test]
+    fn run_scoped_borrows_disjoint_slices() {
+        let pool = WorkerPool::new(3);
+        let mut data: Vec<u64> = (0..90u64).collect();
+        {
+            let (a, rest) = data.split_at_mut(30);
+            let (b, c) = rest.split_at_mut(30);
+            let tasks: Vec<Box<dyn FnOnce() -> u64 + Send + '_>> = [a, b, c]
+                .into_iter()
+                .map(|part| {
+                    Box::new(move || {
+                        for x in part.iter_mut() {
+                            *x *= 2;
+                        }
+                        part.iter().sum()
+                    }) as Box<dyn FnOnce() -> u64 + Send + '_>
+                })
+                .collect();
+            let sums = pool.run_scoped(tasks);
+            assert_eq!(sums.iter().sum::<u64>(), (0..90u64).sum::<u64>() * 2);
+        }
+        assert!(data.iter().enumerate().all(|(i, &x)| x == 2 * i as u64));
+    }
+
+    #[test]
+    fn run_scoped_reports_panics_after_all_tasks_finish() {
+        let pool = WorkerPool::new(2);
+        let done = Arc::new(AtomicUsize::new(0));
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..6usize)
+            .map(|i| {
+                let d = done.clone();
+                Box::new(move || {
+                    if i == 2 {
+                        panic!("scoped boom");
+                    }
+                    d.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| pool.run_scoped(tasks)));
+        assert!(res.is_err(), "scoped join must re-raise the task panic");
+        assert_eq!(done.load(Ordering::SeqCst), 5, "other tasks ran to completion");
     }
 
     #[test]

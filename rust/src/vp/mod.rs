@@ -13,13 +13,21 @@
 //! the partition — in ID order when `ordered_rounds` (Def. 6.5.1) — and
 //! swaps back in.  This yields exactly one full swap-out + swap-in per
 //! virtual superstep (§6.1).
+//!
+//! Submodules: [`gate`] (Def. 6.5.1 turn-taking), [`store`] (where
+//! contexts live: explicit/mmap/mem backends), [`swap`] (the
+//! asynchronous double-buffered swap pipeline), and [`superstep`] (the
+//! [`ComputeCtx`] handle that runs the apps' computation supersteps on
+//! the engine pool).
 
 pub mod gate;
 pub mod store;
+pub mod superstep;
 pub mod swap;
 
 pub use gate::PartitionGate;
 pub use store::Store;
+pub use superstep::{ComputeCtx, ScopedJob};
 pub use swap::SwapScheduler;
 
 use crate::alloc::ContextAlloc;
@@ -116,9 +124,10 @@ pub struct NodeShared {
     /// Computation-superstep backend (XLA artifacts or Rust fallback).
     pub compute: Arc<Compute>,
     /// Engine-owned compute pool for the parallel phases (delivery
-    /// fan-out today; one per node, `cfg.pool_threads()` workers).
-    /// `None` when the unified phase switch is off or the pool would be
-    /// 1 wide.
+    /// fan-out and, through [`superstep::ComputeCtx`], the apps'
+    /// computation supersteps; one per node, `cfg.pool_threads()`
+    /// workers).  `None` when the unified phase switch is off or the
+    /// pool would be 1 wide.
     pub pool: Option<Arc<WorkerPool>>,
 }
 

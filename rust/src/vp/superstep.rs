@@ -1,0 +1,444 @@
+//! Computation supersteps on the engine pool.
+//!
+//! PRs 2–4 made the simulation's I/O-side phases concurrent (empq
+//! spills, `stxxl_sort` run formation, delivery fan-out, the swap
+//! pipeline); the *computation superstep* — the local sorts, scans and
+//! batch passes inside every app — was the last phase still running
+//! single-threaded per node.  [`ComputeCtx`] closes that gap: it is the
+//! superstep-side handle to the per-node compute resources
+//! ([`NodeShared::pool`], metrics, the XLA kernel backend), letting app
+//! code fan its local work out over the engine's [`WorkerPool`] without
+//! touching the engine internals.
+//!
+//! Obtain one with [`Vp::compute_ctx`] (engine apps) or
+//! [`ComputeCtx::with_pool`] (the `empq`-backed drivers, which run
+//! outside the BSP engine and share the queue's spill pool via
+//! [`crate::empq::EmPq::compute_pool`]).  The context owns `Arc`
+//! clones of
+//! everything it needs, so the idiomatic pattern mirrors the existing
+//! `let compute = vp.shared().compute.clone()` dance:
+//!
+//! ```ignore
+//! let ctx = vp.compute_ctx();          // before borrowing VP memory
+//! let d = vp.slice_mut(data)?;
+//! ctx.sort(d);                         // pooled segment sorts + merge
+//! ```
+//!
+//! Every helper keeps a serial path behind the unified phase switch
+//! ([`crate::config::SimConfig::parallel_phases`] / `--serial` /
+//! `PEMS2_FORCE_SERIAL` — the pool handle simply being absent) with
+//! **byte-identical** output:
+//!
+//! * [`ComputeCtx::sort`] — pooled segment sorts
+//!   ([`crate::empq::merge::sort_segments`], which consults
+//!   [`Record::kernel_sort`] so kernel-shaped records use the XLA
+//!   tile-sort per segment) + a deterministic tournament merge back
+//!   ([`crate::empq::merge::merge_segments_into`]).  Identical bytes
+//!   because every in-tree `Record`'s `Ord`-equality implies
+//!   byte-equality, so the sorted sequence of a multiset is unique.
+//! * [`ComputeCtx::scan_i32`] — pooled per-segment inclusive scans +
+//!   serial carry combination + pooled carry add-back.  Identical bytes
+//!   because wrapping addition is associative (the same argument the
+//!   chunked XLA scan kernel already relies on).
+//! * [`ComputeCtx::run_scoped`] — the general form: a batch of borrowed
+//!   jobs over disjoint chunks, results in submission order; the serial
+//!   path runs the same closures in the same order on the calling
+//!   thread, so pooling never reorders effects.
+//!
+//! Pool usage is metered through [`Metrics::pool_batch`], so the
+//! achieved compute fan-out shows up in
+//! [`crate::metrics::MetricsSnapshot::pool_jobs`] /
+//! `pool_batches` on every `RunReport`/`EmPqReport` and in the CLI
+//! output.
+
+use crate::empq::merge::{merge_segments_into, sort_segments};
+use crate::metrics::Metrics;
+use crate::runtime::Compute;
+use crate::util::pool::WorkerPool;
+use crate::util::record::Record;
+use crate::vp::{NodeShared, Vp};
+use std::ops::Range;
+use std::sync::Arc;
+
+/// A borrowed pool job: boxed so heterogeneous captures batch together.
+pub type ScopedJob<'scope, R> = Box<dyn FnOnce() -> R + Send + 'scope>;
+
+/// Superstep-side compute handle: the per-node worker pool (when the
+/// unified phase switch is on), its width, the metrics sink, and the
+/// accelerator-kernel backend.  Cheap to create (Arc clones), so apps
+/// grab one per phase or per program as convenient.
+pub struct ComputeCtx {
+    pool: Option<Arc<WorkerPool>>,
+    threads: usize,
+    metrics: Arc<Metrics>,
+    kernel: Arc<Compute>,
+}
+
+impl NodeShared {
+    /// The node's computation-superstep context (see [`ComputeCtx`]).
+    pub fn compute_ctx(&self) -> ComputeCtx {
+        ComputeCtx {
+            pool: self.pool.clone(),
+            threads: self.cfg.pool_threads().max(1),
+            metrics: self.metrics.clone(),
+            kernel: self.compute.clone(),
+        }
+    }
+}
+
+impl Vp {
+    /// The computation-superstep context of this VP's node — grab it
+    /// *before* borrowing VP memory (it owns `Arc` clones, so it does
+    /// not hold a borrow of `self`).
+    pub fn compute_ctx(&self) -> ComputeCtx {
+        self.shared.compute_ctx()
+    }
+}
+
+/// Pooled-path size floor: below this many elements the dispatch cost
+/// of a pool batch (boxed closures, queue mutex, condvar wakeups)
+/// exceeds the work it parallelizes, so [`ComputeCtx::sort`],
+/// [`ComputeCtx::scan_i32`] and [`ComputeCtx::add_i32`] stay serial —
+/// e.g. PSRS's root sorts only `v²` splitter samples.  Byte output is
+/// mode-independent, so the floor is purely a dispatch-cost guard.
+const POOL_MIN: usize = 1024;
+
+impl ComputeCtx {
+    /// A context for code running outside the BSP engine (the
+    /// `empq`-backed drivers: time-forward processing, EM-SSSP), built
+    /// over an existing pool — pass the queue's
+    /// ([`crate::empq::EmPq::compute_pool`], `None` in serial mode) so
+    /// spills and driver compute share one worker set instead of
+    /// holding two.  `metrics` is the sink pooled batches meter into;
+    /// pass the queue's ([`crate::empq::EmPq::metrics_handle`]) so one
+    /// report covers the whole workload.  The kernel backend is
+    /// disabled — the driver-side phases (edge regeneration) are not
+    /// kernel-shaped.
+    pub fn with_pool(pool: Option<Arc<WorkerPool>>, metrics: Arc<Metrics>) -> ComputeCtx {
+        let threads = pool.as_ref().map_or(1, |p| p.threads());
+        ComputeCtx { pool, threads, metrics, kernel: Arc::new(Compute::disabled()) }
+    }
+
+    /// True when helpers will fan out on a pool (serial otherwise).
+    pub fn pooled(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// Target fan-out: the pool width (1 in serial mode).
+    pub fn threads(&self) -> usize {
+        if self.pool.is_some() {
+            self.threads
+        } else {
+            1
+        }
+    }
+
+    /// Split `0..len` into at most [`ComputeCtx::threads`] contiguous,
+    /// near-equal ranges (fewer for short inputs; empty for `len == 0`).
+    /// The canonical chunking every batched helper and app pass uses, so
+    /// serial and pooled runs agree on segment boundaries.
+    pub fn chunks(&self, len: usize) -> Vec<Range<usize>> {
+        if len == 0 {
+            return Vec::new();
+        }
+        let parts = self.threads().min(len).max(1);
+        let base = len / parts;
+        let rem = len % parts;
+        let mut out = Vec::with_capacity(parts);
+        let mut at = 0;
+        for p in 0..parts {
+            let take = base + usize::from(p < rem);
+            out.push(at..at + take);
+            at += take;
+        }
+        debug_assert_eq!(at, len);
+        out
+    }
+
+    /// Run a batch of borrowed jobs; results in submission order.
+    /// Pooled when a pool exists and the batch has more than one job
+    /// (metered as one [`Metrics::pool_batch`]); otherwise the closures
+    /// run serially on the calling thread in the same order — so the
+    /// two modes are observationally identical for jobs over disjoint
+    /// data.
+    pub fn run_scoped<'scope, R: Send + 'static>(
+        &self,
+        jobs: Vec<ScopedJob<'scope, R>>,
+    ) -> Vec<R> {
+        match &self.pool {
+            Some(pool) if jobs.len() > 1 => {
+                self.metrics.pool_batch(jobs.len() as u64);
+                pool.run_scoped(jobs)
+            }
+            _ => jobs.into_iter().map(|j| j()).collect(),
+        }
+    }
+
+    /// Sort `data` in place — the computation-superstep local sort.
+    ///
+    /// Pooled: split into one segment per worker, sort the segments
+    /// concurrently ([`sort_segments`], which offers each segment to
+    /// [`Record::kernel_sort`] first — the XLA tile-sort for `u32`),
+    /// then tournament-merge back in place.  Serial: the kernel hook
+    /// then `sort_unstable`, no copies.  Byte-identical either way (the
+    /// sorted sequence of a multiset is unique for records whose
+    /// equality is byte-equality).
+    pub fn sort<T: Record>(&self, data: &mut [T]) {
+        let pooled =
+            self.pool.is_some() && data.len() >= (2 * self.threads()).max(POOL_MIN);
+        if !pooled {
+            if !T::kernel_sort(data, &self.kernel) {
+                data.sort_unstable();
+            }
+            return;
+        }
+        let segments: Vec<Vec<T>> =
+            self.chunks(data.len()).into_iter().map(|r| data[r].to_vec()).collect();
+        let sorted = sort_segments(
+            segments,
+            self.pool.as_deref(),
+            &self.metrics,
+            Some(&self.kernel),
+            || (),
+        );
+        merge_segments_into(&sorted, data);
+    }
+
+    /// Inclusive wrapping prefix sum of `data` in place — the
+    /// computation-superstep local scan ([`Compute::local_scan_i32`]
+    /// semantics, XLA scan kernel per segment when enabled).
+    ///
+    /// Pooled: per-segment scans run concurrently on disjoint `&mut`
+    /// views (no copies), the per-segment totals combine serially into
+    /// carries (`k` wrapping adds), and a second pooled pass adds each
+    /// carry back.  Wrapping addition is associative, so the bytes match
+    /// the serial scan exactly.
+    pub fn scan_i32(&self, data: &mut [i32]) {
+        let pooled =
+            self.pool.is_some() && data.len() >= (2 * self.threads()).max(POOL_MIN);
+        if !pooled {
+            self.kernel.local_scan_i32(data);
+            return;
+        }
+        let ranges = self.chunks(data.len());
+        // Phase 1: independent segment scans; collect each segment total.
+        let totals: Vec<i32> = {
+            let parts = split_mut(data, &ranges);
+            let kernel = &self.kernel;
+            self.run_scoped(
+                parts
+                    .into_iter()
+                    .map(|p| {
+                        Box::new(move || {
+                            kernel.local_scan_i32(p);
+                            p.last().copied().unwrap_or(0)
+                        }) as ScopedJob<'_, i32>
+                    })
+                    .collect(),
+            )
+        };
+        // Phase 2: exclusive carries over the segment totals (serial,
+        // `parts`-many adds).
+        let mut carries = Vec::with_capacity(totals.len());
+        let mut acc = 0i32;
+        for t in totals {
+            carries.push(acc);
+            acc = acc.wrapping_add(t);
+        }
+        // Phase 3: add each segment's carry back (zero carries — always
+        // including the first segment's — are skipped; adding 0 changes
+        // no bytes, so this matches the serial scan exactly).
+        let parts = split_mut(data, &ranges);
+        let jobs: Vec<ScopedJob<'_, ()>> = parts
+            .into_iter()
+            .zip(carries)
+            .filter(|&(_, c)| c != 0)
+            .map(|(p, c)| carry_add_job(p, c))
+            .collect();
+        self.run_scoped(jobs);
+    }
+
+    /// Wrapping-add the constant `c` to every element in place — the
+    /// carry-application pass of a distributed prefix sum, pooled over
+    /// disjoint chunks.  A zero carry is a no-op and skipped entirely.
+    pub fn add_i32(&self, data: &mut [i32], c: i32) {
+        if c == 0 {
+            return;
+        }
+        let pooled =
+            self.pool.is_some() && data.len() >= (2 * self.threads()).max(POOL_MIN);
+        if !pooled {
+            for x in data.iter_mut() {
+                *x = x.wrapping_add(c);
+            }
+            return;
+        }
+        let ranges = self.chunks(data.len());
+        let jobs: Vec<ScopedJob<'_, ()>> =
+            split_mut(data, &ranges).into_iter().map(|p| carry_add_job(p, c)).collect();
+        self.run_scoped(jobs);
+    }
+}
+
+/// One carry-application job: wrapping-add `c` over a disjoint chunk.
+fn carry_add_job(p: &mut [i32], c: i32) -> ScopedJob<'_, ()> {
+    Box::new(move || {
+        for x in p.iter_mut() {
+            *x = x.wrapping_add(c);
+        }
+    })
+}
+
+/// Split a slice into disjoint `&mut` segments along `ranges` (which
+/// must be contiguous, in order, and cover a prefix of the slice — what
+/// [`ComputeCtx::chunks`] produces).
+pub fn split_mut<'a, T>(data: &'a mut [T], ranges: &[Range<usize>]) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(ranges.len());
+    let mut tail: &mut [T] = data;
+    let mut at = 0;
+    for r in ranges {
+        debug_assert_eq!(r.start, at, "split_mut: ranges must be contiguous");
+        let (head, rest) = std::mem::take(&mut tail).split_at_mut(r.len());
+        out.push(head);
+        tail = rest;
+        at = r.end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64;
+
+    fn mk_ctx(pooled: bool, threads: usize) -> ComputeCtx {
+        ComputeCtx {
+            pool: pooled.then(|| Arc::new(WorkerPool::new(threads))),
+            threads,
+            metrics: Arc::new(Metrics::new()),
+            kernel: Arc::new(Compute::disabled()),
+        }
+    }
+
+    #[test]
+    fn chunks_cover_exactly_in_order() {
+        let ctx = mk_ctx(true, 3);
+        for len in [0usize, 1, 2, 3, 7, 100, 101] {
+            let rs = ctx.chunks(len);
+            let mut at = 0;
+            for r in &rs {
+                assert_eq!(r.start, at);
+                at = r.end;
+            }
+            assert_eq!(at, len);
+            assert!(rs.len() <= 3);
+            if len >= 3 {
+                assert_eq!(rs.len(), 3);
+            }
+        }
+        // Serial context: one chunk regardless of the configured width.
+        assert_eq!(mk_ctx(false, 4).chunks(100).len(), 1);
+    }
+
+    #[test]
+    fn sort_pooled_and_serial_are_byte_identical() {
+        let mut rng = XorShift64::new(5);
+        for n in [0usize, 1, 5, 1000, 4097] {
+            let data: Vec<u64> = (0..n).map(|_| rng.next_u64() % 10_000).collect();
+            let mut a = data.clone();
+            let mut b = data;
+            mk_ctx(true, 3).sort(&mut a);
+            mk_ctx(false, 3).sort(&mut b);
+            assert_eq!(a, b, "sort mode must not change bytes (n={n})");
+            assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+
+    #[test]
+    fn sort_meters_pool_batches() {
+        let ctx = mk_ctx(true, 2);
+        let mut data: Vec<u32> = (0..5000u32).rev().collect();
+        ctx.sort(&mut data);
+        let snap = ctx.metrics.snapshot();
+        assert!(snap.pool_jobs >= 2, "segment sorts must land on the pool");
+        assert!(snap.pool_batches >= 1);
+    }
+
+    #[test]
+    fn tiny_inputs_stay_serial_despite_a_pool() {
+        // Below POOL_MIN the dispatch would cost more than the work:
+        // the helpers must neither pool nor meter.
+        let ctx = mk_ctx(true, 2);
+        let mut data: Vec<u32> = (0..100u32).rev().collect();
+        ctx.sort(&mut data);
+        let mut scan: Vec<i32> = (0..100).collect();
+        ctx.scan_i32(&mut scan);
+        ctx.add_i32(&mut scan, 7);
+        assert!(data.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(ctx.metrics.snapshot().pool_jobs, 0, "tiny inputs must not dispatch");
+    }
+
+    #[test]
+    fn scan_matches_serial_wrapping_semantics() {
+        let mut rng = XorShift64::new(9);
+        for n in [0usize, 1, 3, 1000, 4099] {
+            let data: Vec<i32> =
+                (0..n).map(|_| (rng.next_u32() as i32).wrapping_mul(31)).collect();
+            let mut want = data.clone();
+            let mut acc = 0i32;
+            for x in want.iter_mut() {
+                acc = acc.wrapping_add(*x);
+                *x = acc;
+            }
+            let mut a = data.clone();
+            let mut b = data;
+            mk_ctx(true, 4).scan_i32(&mut a);
+            mk_ctx(false, 4).scan_i32(&mut b);
+            assert_eq!(a, b, "scan mode must not change bytes (n={n})");
+            assert_eq!(a, want, "pooled scan must equal the reference scan (n={n})");
+        }
+    }
+
+    #[test]
+    fn add_i32_matches_serial_wrapping_add() {
+        let data: Vec<i32> = (0..5000).map(|i| i * 7 - 300).collect();
+        for c in [0i32, 1, -13, i32::MAX] {
+            let mut a = data.clone();
+            let mut b = data.clone();
+            mk_ctx(true, 3).add_i32(&mut a, c);
+            mk_ctx(false, 3).add_i32(&mut b, c);
+            assert_eq!(a, b, "add mode must not change bytes (c={c})");
+            assert!(a.iter().zip(&data).all(|(&x, &y)| x == y.wrapping_add(c)));
+        }
+    }
+
+    #[test]
+    fn run_scoped_serial_runs_in_submission_order() {
+        let ctx = mk_ctx(false, 4);
+        let mut log = std::sync::Mutex::new(Vec::new());
+        let jobs: Vec<ScopedJob<'_, usize>> = (0..5usize)
+            .map(|i| {
+                let log = &log;
+                Box::new(move || {
+                    log.lock().unwrap().push(i);
+                    i
+                }) as ScopedJob<'_, usize>
+            })
+            .collect();
+        let out = ctx.run_scoped(jobs);
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+        assert_eq!(*log.get_mut().unwrap(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(ctx.metrics.snapshot().pool_jobs, 0, "serial runs are not metered");
+    }
+
+    #[test]
+    fn split_mut_partitions_disjointly() {
+        let mut data: Vec<u32> = (0..10).collect();
+        let ctx = mk_ctx(true, 3);
+        let ranges = ctx.chunks(10);
+        let parts = split_mut(&mut data, &ranges);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), 10);
+        assert_eq!(parts[0][0], 0);
+    }
+}

@@ -1,7 +1,10 @@
 //! Serial/parallel equivalence: every phase that can run on the shared
 //! worker pool (stxxl-sort run formation, the delivery fan-out of
-//! alltoallv/bcast/scatter, empq spills) must produce *byte-identical*
-//! results in both modes, pinned over the same seeded workloads — and,
+//! alltoallv/bcast/scatter, empq spills, and — since the computation
+//! supersteps moved onto the engine pool via `ComputeCtx` — the apps'
+//! local sorts/scans/relink passes and the PQ drivers' edge
+//! regeneration) must produce *byte-identical* results in both modes,
+//! pinned over the same seeded workloads — and,
 //! since the asynchronous context-swap pipeline landed, the same holds
 //! along a second axis: `swap_prefetch` on (double-buffered partitions,
 //! shadow prefetch, write-behind) vs off (the legacy synchronous swap
@@ -500,6 +503,172 @@ fn empq_apps_oracles_on_the_prefetch_axis() {
         let ss = pems2::apps::run_sssp(&cfg, 2_000, 4, 100, 0, true).unwrap();
         assert!(ss.verified, "sssp oracle (prefetch={prefetch})");
     }
+}
+
+// ---------------------------------- pooled computation supersteps
+
+/// Engine config for the compute-superstep axis (mem store: no swap
+/// noise, the pool still drives delivery + compute).
+fn compute_cfg(p: usize, v: usize, k: usize, parallel: bool) -> SimConfig {
+    SimConfig::builder()
+        .p(p)
+        .v(v)
+        .k(k)
+        .mu(4 << 20)
+        .sigma(1 << 20)
+        .io(IoStyle::Mem)
+        .parallel_phases(parallel)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn ctx_sort_and_scan_byte_identical_through_the_engine() {
+    // Direct pin on the superstep helpers: every VP sorts and scans
+    // non-multiple-of-k-sized buffers through its ComputeCtx; per-VP
+    // content hashes must match across modes, and only the pooled leg
+    // may meter pool jobs.
+    for (p, v, k) in [(1usize, 4usize, 2usize), (2, 8, 2), (1, 6, 4)] {
+        let mut per_mode = Vec::new();
+        for parallel in [true, false] {
+            let hashes = Arc::new(Mutex::new(vec![0u64; v]));
+            let h2 = hashes.clone();
+            let report = run(compute_cfg(p, v, k, parallel), move |vp| {
+                let me = vp.rank();
+                let n = 10_007 + 13 * me; // uneven, not a multiple of k
+                let su = vp.alloc::<u32>(n)?;
+                let sc = vp.alloc::<i32>(n)?;
+                {
+                    let mut rng = XorShift64::new(0xC0FFEE ^ me as u64);
+                    let d = vp.slice_mut(su)?;
+                    for x in d.iter_mut() {
+                        *x = rng.next_u32();
+                    }
+                    let s = vp.slice_mut(sc)?;
+                    for x in s.iter_mut() {
+                        *x = (rng.next_u32() as i32).wrapping_mul(31);
+                    }
+                }
+                let ctx = vp.compute_ctx();
+                let mut h = 0u64;
+                {
+                    let d = vp.slice_mut(su)?;
+                    ctx.sort(d);
+                    assert!(d.windows(2).all(|w| w[0] <= w[1]), "vp {me} unsorted");
+                    for &x in d.iter() {
+                        h = fold(h, &x.to_le_bytes());
+                    }
+                }
+                {
+                    let s = vp.slice_mut(sc)?;
+                    ctx.scan_i32(s);
+                    for &x in s.iter() {
+                        h = fold(h, &x.to_le_bytes());
+                    }
+                }
+                h2.lock().unwrap()[me] = h;
+                Ok(())
+            })
+            .unwrap();
+            // A pool only exists when the switch is on AND the resolved
+            // width exceeds one (width 1 is reachable via an explicit
+            // `--threads 1` / `compute_threads(1)`; the env override
+            // rejects 1 by design).
+            let pooled_cfg = compute_cfg(p, v, k, parallel);
+            if pooled_cfg.phases_parallel() && pooled_cfg.pool_threads() > 1 {
+                assert!(
+                    report.metrics.pool_jobs > 0,
+                    "pooled compute must meter (p={p} v={v} k={k})"
+                );
+            }
+            if !parallel {
+                assert_eq!(report.metrics.pool_jobs, 0, "serial leg must not pool");
+            }
+            per_mode.push(hashes.lock().unwrap().clone());
+        }
+        assert_eq!(
+            per_mode[0], per_mode[1],
+            "ctx sort/scan must be byte-identical across modes (p={p} v={v} k={k})"
+        );
+    }
+}
+
+#[test]
+fn psrs_pooled_compute_byte_identity() {
+    // Sizes not multiples of k or v; multi-node shape included.
+    for (p, v, n) in [(1usize, 4usize, 30_001u64), (2, 8, 40_003)] {
+        let a = pems2::apps::run_psrs(compute_cfg(p, v, 2, true), n, true).unwrap();
+        let b = pems2::apps::run_psrs(compute_cfg(p, v, 2, false), n, true).unwrap();
+        assert!(a.verified && b.verified, "psrs must verify (p={p} v={v} n={n})");
+        assert_eq!(
+            a.output_hash, b.output_hash,
+            "psrs output must be byte-identical across modes (p={p} v={v} n={n})"
+        );
+    }
+}
+
+#[test]
+fn cgm_sort_pooled_compute_byte_identity() {
+    for (p, v, n) in [(1usize, 4usize, 20_003u64), (2, 8, 24_001)] {
+        let a = pems2::apps::run_cgm_sort(compute_cfg(p, v, 2, true), n, true).unwrap();
+        let b = pems2::apps::run_cgm_sort(compute_cfg(p, v, 2, false), n, true).unwrap();
+        assert!(a.verified && b.verified);
+        assert_eq!(a.output_hash, b.output_hash, "(p={p} v={v} n={n})");
+    }
+}
+
+#[test]
+fn prefix_sum_pooled_compute_byte_identity() {
+    for (p, v, n) in [(1usize, 4usize, 50_001u64), (2, 8, 60_007)] {
+        let a = pems2::apps::run_prefix_sum(compute_cfg(p, v, 2, true), n, true).unwrap();
+        let b = pems2::apps::run_prefix_sum(compute_cfg(p, v, 2, false), n, true).unwrap();
+        assert!(a.verified && b.verified);
+        assert_eq!(a.output_hash, b.output_hash, "(p={p} v={v} n={n})");
+    }
+}
+
+#[test]
+fn list_ranking_pooled_compute_byte_identity() {
+    for (p, v, n) in [(1usize, 4usize, 4_001u64), (2, 8, 6_007)] {
+        let succ = Arc::new(pems2::apps::list_ranking::random_list(n, 0xBEEF));
+        let a = pems2::apps::run_list_ranking(compute_cfg(p, v, 2, true), succ.clone(), true)
+            .unwrap();
+        let b = pems2::apps::run_list_ranking(compute_cfg(p, v, 2, false), succ, true)
+            .unwrap();
+        assert!(a.verified && b.verified, "list ranking oracle (p={p} v={v} n={n})");
+        assert_eq!(a.ranks_hash, b.ranks_hash, "(p={p} v={v} n={n})");
+    }
+}
+
+#[test]
+fn euler_tour_pooled_compute_byte_identity() {
+    for (p, v) in [(1usize, 4usize), (2, 8)] {
+        let a = pems2::apps::run_euler_tour(compute_cfg(p, v, 2, true), 3, 77, true).unwrap();
+        let b = pems2::apps::run_euler_tour(compute_cfg(p, v, 2, false), 3, 77, true).unwrap();
+        assert!(a.verified && b.verified);
+        assert_eq!(a.ranks_hash, b.ranks_hash, "(p={p} v={v})");
+    }
+}
+
+#[test]
+fn empq_driver_edge_generation_meters_on_the_pool() {
+    // The PQ drivers' batched edge regeneration meters into the queue's
+    // report; the serial leg must not touch a pool at all.
+    let cfg = empq_cfg(true);
+    let tf = pems2::apps::run_time_forward(&cfg, 9_001, 4, true, true).unwrap();
+    assert!(tf.verified);
+    let ss = pems2::apps::run_sssp(&cfg, 3_001, 4, 50, 0, true).unwrap();
+    assert!(ss.verified);
+    // The drivers share the queue's k-wide spill pool, so the gate is
+    // on k (not pool_threads, which only governs engine-owned pools).
+    if cfg.phases_parallel() && cfg.k > 1 {
+        assert!(tf.pq.metrics.pool_jobs > 0, "time-forward must meter pool jobs");
+        assert!(ss.pq.metrics.pool_jobs > 0, "sssp must meter pool jobs");
+    }
+    let cfg = empq_cfg(false);
+    let tf = pems2::apps::run_time_forward(&cfg, 2_000, 4, true, true).unwrap();
+    assert!(tf.verified);
+    assert_eq!(tf.pq.metrics.pool_jobs, 0, "serial driver leg must not pool");
 }
 
 #[test]
