@@ -31,6 +31,10 @@
 //!    (pooled local sort + partition passes) and prefix sum (pooled
 //!    local scan) over the mem store, pooled vs serial, with output-hash
 //!    equality asserted and the speedups persisted.
+//! 8. Phase-attributed trace + cost-model conformance: one PSRS run over
+//!    the async driver with a live trace session, per-phase attributed
+//!    seconds and the measured-vs-charged deviation ratio (Fig. 7.8)
+//!    persisted so commits can diff where wall time actually goes.
 //!
 //! y-values are Melem/s (wall clock); measured I/O counters are printed
 //! per phase, since on page-cached SSDs charged time is the faithful
@@ -443,6 +447,55 @@ fn main() {
         "compute_scan_pool_speedup".to_string(),
         scan_rates[1] / scan_rates[0].max(1e-9),
     ));
+
+    // ---- 8. phase-attributed trace + cost-model conformance ----
+    // One traced PSRS run over the async driver (swap + spill + comm all
+    // exercised).  The engine owns the trace session via `trace_out`, so
+    // the report carries the phase summary and the Chrome JSON lands next
+    // to the .dat series.  The conformance ratio charges each superstep's
+    // measured I/O counters through the same CostModel the engine uses
+    // (`engine::cost_model_for`) and divides the attributed wall time by
+    // it — 1.0 means the analytic model predicts the measurement exactly.
+    let trace_n: u64 = if full_mode() { 1 << 21 } else { 1 << 16 };
+    let trace_mu = pems2::apps::psrs::required_mu(trace_n, 4).max(16 << 20);
+    let trace_path = format!("{}/empq_trace.json", results_dir());
+    let c = SimConfig::builder()
+        .v(4)
+        .k(2)
+        .mu(trace_mu)
+        .sigma(16 << 20)
+        .d(2)
+        .block(64 << 10)
+        .io(IoStyle::Async)
+        .trace_out(trace_path.clone())
+        .build()
+        .unwrap();
+    let model = pems2::engine::cost_model_for(&c);
+    let r = pems2::apps::run_psrs(c, trace_n, true).unwrap();
+    assert!(r.verified);
+    let t = r.report.trace.expect("trace_out must yield a phase summary");
+    print!("{}", t.render_table());
+    for ph in pems2::metrics::Phase::ALL {
+        summary.push((
+            format!("trace_{}_s", ph.name()),
+            t.totals.phase_ns(ph) as f64 / 1e9,
+        ));
+    }
+    summary.push(("trace_events".to_string(), t.events as f64));
+    summary.push(("trace_supersteps".to_string(), t.per_superstep.len() as f64));
+    let rows = t.conformance(&model);
+    let measured: f64 = rows.iter().map(|r| r.measured_io_s + r.measured_comm_s).sum();
+    let charged: f64 = rows.iter().map(|r| r.charged.total() - r.charged.supersteps).sum();
+    println!(
+        "trace conformance: measured {measured:.3}s vs charged {charged:.3}s \
+         over {} supersteps",
+        rows.len(),
+    );
+    if let Some(ratio) = t.conformance_ratio(&model) {
+        println!("trace conformance ratio (measured/charged): {ratio:.3}");
+        summary.push(("trace_conformance_ratio".to_string(), ratio));
+    }
+    println!("trace written to {trace_path}");
 
     let dir = results_dir();
     write_series(

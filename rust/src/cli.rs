@@ -69,7 +69,8 @@ impl Cli {
     /// Build a [`SimConfig`] from the standard simulation flags:
     /// `--p --v --k --mu --d --sigma --alpha --io --pems1 --alloc
     /// --layout --fragmented --indirect-slot --block --timeline --xla
-    /// --seed --disk-dir --unordered --threads --serial --no-prefetch`.
+    /// --seed --disk-dir --unordered --threads --serial --no-prefetch
+    /// --trace-out`.
     ///
     /// Sizes accept suffixes `k`/`m`/`g` (binary).
     pub fn sim_config(&self) -> Result<SimConfig> {
@@ -124,6 +125,9 @@ impl Cli {
         }
         if let Some(dir) = self.options.get("disk-dir") {
             b = b.disk_dir(dir.clone());
+        }
+        if let Some(path) = self.options.get("trace-out") {
+            b = b.trace_out(path.clone());
         }
         b.build()
     }
@@ -228,6 +232,21 @@ mod tests {
         if crate::config::pool_threads_env().is_none() {
             assert_eq!(cfg.pool_threads(), 2);
         }
+    }
+
+    #[test]
+    fn trace_out_flag_lands_in_the_config() {
+        let cfg = Cli::parse(args("x --v 4 --trace-out /tmp/run.json"))
+            .unwrap()
+            .sim_config()
+            .unwrap();
+        assert_eq!(
+            cfg.trace_out.as_deref(),
+            Some(std::path::Path::new("/tmp/run.json"))
+        );
+        // Default: unset (falls back to the PEMS2_TRACE_OUT env var).
+        let cfg = Cli::parse(args("x --v 4")).unwrap().sim_config().unwrap();
+        assert!(cfg.trace_out.is_none());
     }
 
     #[test]

@@ -35,7 +35,7 @@ pub use scatter::scatter;
 
 use crate::config::SimConfig;
 use crate::error::Result;
-use crate::metrics::IoClass;
+use crate::metrics::{trace, IoClass, Phase};
 use crate::sync::EmSignal;
 use crate::vp::NodeShared;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -316,6 +316,7 @@ impl crate::vp::Vp {
     /// Alltoallv dispatching on the configured delivery mode (PEMS2 direct
     /// vs the PEMS1 indirect baseline).
     pub fn alltoallv_regions(&mut self, sends: &[Region], recvs: &[Region]) -> crate::Result<()> {
+        let _span = trace::span_named(Phase::Comm, "alltoallv");
         match self.config().delivery {
             crate::config::DeliveryMode::Pems2Direct => alltoallv(self, sends, recvs),
             crate::config::DeliveryMode::Pems1Indirect => alltoallv_pems1(self, sends, recvs),
@@ -324,16 +325,19 @@ impl crate::vp::Vp {
 
     /// EM-Bcast (Alg. 7.2.1).
     pub fn bcast_region(&mut self, root: usize, send: Region, recv: Region) -> crate::Result<()> {
+        let _span = trace::span_named(Phase::Comm, "bcast");
         bcast(self, root, send, recv)
     }
 
     /// EM-Gather (Alg. 7.3.1).
     pub fn gather_region(&mut self, root: usize, send: Region, recv: Region) -> crate::Result<()> {
+        let _span = trace::span_named(Phase::Comm, "gather");
         gather(self, root, send, recv)
     }
 
     /// EM-Scatter.
     pub fn scatter_region(&mut self, root: usize, send: Region, recv: Region) -> crate::Result<()> {
+        let _span = trace::span_named(Phase::Comm, "scatter");
         scatter(self, root, send, recv)
     }
 
@@ -345,11 +349,13 @@ impl crate::vp::Vp {
         send: Region,
         recv: Region,
     ) -> crate::Result<()> {
+        let _span = trace::span_named(Phase::Comm, "reduce");
         reduce::<T>(self, root, op, send, recv)
     }
 
     /// MPI_Barrier.
     pub fn barrier_collective(&mut self) -> crate::Result<()> {
+        let _span = trace::span_named(Phase::Comm, "barrier");
         barrier(self)
     }
 }

@@ -196,6 +196,12 @@ pub struct SimConfig {
     pub swap_prefetch: bool,
     /// Record per-thread per-superstep timelines (Figs. 8.12–8.14).
     pub record_timeline: bool,
+    /// Export a phase-attributed Chrome trace-event file to this path
+    /// (CLI `--trace-out`); `None` falls back to the `PEMS2_TRACE_OUT`
+    /// environment variable — see [`SimConfig::trace_path`] and
+    /// [`trace_out_env`].  Tracing is observe-only: application output is
+    /// byte-identical with it on or off.
+    pub trace_out: Option<PathBuf>,
     /// Use the XLA/PJRT artifacts for computation supersteps when available.
     pub use_xla: bool,
     /// Workload seed.
@@ -261,6 +267,14 @@ impl SimConfig {
     /// stores never swap at all).
     pub fn swap_prefetch_active(&self) -> bool {
         self.swap_prefetch && self.io == IoStyle::Async && !no_prefetch_env()
+    }
+
+    /// Resolved trace-export path: the explicit [`SimConfig::trace_out`]
+    /// when set, else the `PEMS2_TRACE_OUT` environment variable
+    /// ([`trace_out_env`]); `None` means tracing stays off (the
+    /// default — one branch per span site, no allocation).
+    pub fn trace_path(&self) -> Option<PathBuf> {
+        self.trace_out.clone().or_else(trace_out_env)
     }
 
     /// Bytes of indirect area per node (PEMS1: slots for **all** `v`
@@ -373,6 +387,17 @@ pub fn no_prefetch_env() -> bool {
     truthy(std::env::var("PEMS2_NO_PREFETCH").ok())
 }
 
+/// Trace-export path from `PEMS2_TRACE_OUT` (a non-empty file path):
+/// a process-wide default wherever a config leaves
+/// [`SimConfig::trace_out`] unset, mirroring the other `PEMS2_*`
+/// overrides so CI can run the whole suite with phase tracing on
+/// (`PEMS2_TRACE_OUT=trace.json cargo test`) without touching
+/// individual configs.  Unlike the boolean knobs this one carries a
+/// value, so truthiness does not apply — any non-empty string is a path.
+pub fn trace_out_env() -> Option<PathBuf> {
+    std::env::var("PEMS2_TRACE_OUT").ok().filter(|s| !s.is_empty()).map(PathBuf::from)
+}
+
 fn truthy(v: Option<String>) -> bool {
     matches!(v.as_deref(), Some("1") | Some("true") | Some("yes"))
 }
@@ -407,6 +432,7 @@ impl Default for SimConfigBuilder {
                 parallel_phases: true,
                 swap_prefetch: true,
                 record_timeline: false,
+                trace_out: None,
                 use_xla: false,
                 seed: 0xF00D,
             },
@@ -473,6 +499,12 @@ impl SimConfigBuilder {
     /// Backing directory for context files.
     pub fn disk_dir(mut self, dir: impl Into<PathBuf>) -> Self {
         self.cfg.disk_dir = Some(dir.into());
+        self
+    }
+
+    /// Export a phase-attributed Chrome trace to this path.
+    pub fn trace_out(mut self, path: impl Into<PathBuf>) -> Self {
+        self.cfg.trace_out = Some(path.into());
         self
     }
 
@@ -612,6 +644,16 @@ mod tests {
             .unwrap();
         assert!(!c.swap_prefetch_active());
         assert!(!mk(IoStyle::Mem, true).swap_prefetch_active());
+    }
+
+    #[test]
+    fn trace_path_prefers_explicit_over_env() {
+        // The env var is process-global; only the explicit-path side is
+        // asserted unconditionally.
+        let c = SimConfig::builder().trace_out("/tmp/t.json").build().unwrap();
+        assert_eq!(c.trace_path().unwrap(), PathBuf::from("/tmp/t.json"));
+        let c = SimConfig::builder().build().unwrap();
+        assert_eq!(c.trace_path(), trace_out_env());
     }
 
     #[test]

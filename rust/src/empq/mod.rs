@@ -48,7 +48,7 @@ use crate::config::{DeliveryMode, IoStyle, SimConfig};
 use crate::disk::DiskSet;
 use crate::error::{Error, Result};
 use crate::io::{aio::AsyncIo, unix::UnixIo, IoDriver};
-use crate::metrics::{CostModel, IoClass, Metrics, MetricsSnapshot};
+use crate::metrics::{trace, CostModel, IoClass, Metrics, MetricsSnapshot, Phase, PhaseTotals};
 use crate::runtime::Compute;
 use crate::util::bytes::Pod;
 use crate::util::pool::WorkerPool;
@@ -104,6 +104,9 @@ pub struct EmPqReport {
     pub arena_high_water: u64,
     /// Bytes served from retired runs' extents instead of fresh arena.
     pub arena_reused: u64,
+    /// Per-phase wall-time attribution (spill, merge, pool jobs, …) when
+    /// a trace session was live over the workload; `None` otherwise.
+    pub phase_ns: Option<PhaseTotals>,
 }
 
 /// A coalescing free-list of `(base, len)` byte extents inside the spill
@@ -378,6 +381,7 @@ impl<T: Record> EmPq<T> {
             max_len: self.max_len,
             arena_high_water: self.arena_at,
             arena_reused: self.arena_reused,
+            phase_ns: trace::phase_totals(),
         }
     }
 
@@ -649,6 +653,7 @@ impl<T: Record> EmPq<T> {
         if self.ram_len == 0 {
             return Ok(());
         }
+        let _span = trace::span(Phase::Spill);
         self.reclaim();
         // Allocate *before* draining the heaps: an arena-exhaustion error
         // must leave the queue consistent — every element stays
@@ -746,6 +751,7 @@ impl<T: Record> EmPq<T> {
         // One disk block per write chunk (`cap` never exceeds it — see
         // `next_run_buf_cap`'s clamp); the run's head stays resident so
         // the merge needs no immediate read-back.
+        let merge_span = trace::span(Phase::Merge);
         let head = merge::merge_write_segments(
             &segments,
             &self.disks,
@@ -754,6 +760,7 @@ impl<T: Record> EmPq<T> {
             self.run_buf_cap,
             cap.min(total),
         )?;
+        drop(merge_span);
         self.runs_created += 1;
         let cursor =
             RunCursor::with_resident_head(base, total as u64, cap, IoClass::Swap, head);

@@ -13,7 +13,9 @@ use crate::config::{IoStyle, SimConfig};
 use crate::disk::DiskSet;
 use crate::error::{Error, Result};
 use crate::io::{aio::AsyncIo, unix::UnixIo, IoDriver};
-use crate::metrics::{cost::ChargedTime, CostModel, Metrics, MetricsSnapshot, Timeline};
+use crate::metrics::{
+    cost::ChargedTime, trace, CostModel, Metrics, MetricsSnapshot, Timeline, TraceSummary,
+};
 use crate::net::Switch;
 use crate::runtime::Compute;
 use crate::sync::SuperstepBarrier;
@@ -39,6 +41,10 @@ pub struct RunReport {
     pub border_hwm: Vec<usize>,
     /// Whether the XLA compute path was active.
     pub xla_active: bool,
+    /// Phase-attributed trace summary (per-phase × per-superstep tables,
+    /// Figs. 8.12–8.14) when `--trace-out` / `PEMS2_TRACE_OUT` was set;
+    /// the raw events land in the Chrome trace-event file.
+    pub trace: Option<TraceSummary>,
 }
 
 /// Run `program` on every virtual processor under `cfg`.
@@ -58,6 +64,11 @@ pub fn run_arc(
     program: Arc<dyn Fn(&mut Vp) -> Result<()> + Send + Sync>,
 ) -> Result<RunReport> {
     cfg.validate()?;
+    // Phase tracing (observe-only): the session enables the global span
+    // recorder for the duration of the run and exports the Chrome trace
+    // on finish.  `None` (the default) keeps every span site on its
+    // single-branch disabled path.
+    let trace_session = cfg.trace_path().map(trace::Session::start);
     let metrics = Arc::new(Metrics::new());
     let timeline = Arc::new(Timeline::new(cfg.v, cfg.record_timeline));
     let switch = Switch::new(cfg.p, metrics.clone());
@@ -178,11 +189,7 @@ pub fn run_arc(
     }
 
     let snapshot = metrics.snapshot();
-    // P nodes each drive D disks concurrently: the charged-time divisor
-    // for disk terms is D·P (network/superstep terms are already
-    // counted per-relation / per-superstep globally).
-    let mut model = CostModel::new(cfg.cost, cfg.d);
-    model.disk_parallelism = (cfg.d * cfg.p) as f64;
+    let model = cost_model_for(&cfg);
     Ok(RunReport {
         wall,
         metrics: snapshot,
@@ -194,7 +201,19 @@ pub fn run_arc(
             .collect(),
         border_hwm: nodes.iter().map(|n| n.comm.border.high_water_mark()).collect(),
         xla_active: compute.xla_active(),
+        trace: trace_session.map(|s| s.finish()),
     })
+}
+
+/// The cost model a run is charged under: the config's coefficients with
+/// the disk-parallelism divisor set to `D·P` — `P` nodes each drive `D`
+/// disks concurrently (network/superstep terms are already counted
+/// per-relation / per-superstep globally).  Shared with the benches so
+/// the trace conformance pass charges exactly what the engine charges.
+pub fn cost_model_for(cfg: &SimConfig) -> CostModel {
+    let mut model = CostModel::new(cfg.cost, cfg.d);
+    model.disk_parallelism = (cfg.d * cfg.p) as f64;
+    model
 }
 
 #[cfg(test)]
@@ -250,6 +269,36 @@ mod tests {
             }
             other => panic!("unexpected error {other}"),
         }
+    }
+
+    #[test]
+    fn trace_out_yields_summary_and_export() {
+        let path = std::env::temp_dir()
+            .join(format!("pems2_engine_trace_{}.json", std::process::id()));
+        let cfg = SimConfig::builder()
+            .v(4)
+            .k(2)
+            .mu(1 << 16)
+            .block(4096)
+            .trace_out(&path)
+            .build()
+            .unwrap();
+        let report = run(cfg, |vp| {
+            let m = vp.alloc::<u32>(64)?;
+            vp.slice_mut(m)?.fill(7);
+            vp.barrier_collective()?;
+            Ok(())
+        })
+        .unwrap();
+        let trace = report.trace.expect("trace summary with trace_out set");
+        assert!(!trace.totals.is_empty(), "spans must have been recorded");
+        assert!(
+            trace.totals.count[crate::metrics::Phase::Barrier as usize] > 0,
+            "superstep barriers must record Barrier spans"
+        );
+        let text = std::fs::read_to_string(&path).expect("trace file written");
+        assert!(text.contains("\"traceEvents\""));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

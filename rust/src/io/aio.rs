@@ -24,6 +24,7 @@
 
 use crate::error::Result;
 use crate::io::{DiskFile, IoDriver, IoFault, ReadCompletion, ReadDst, ReadTicket};
+use crate::metrics::trace;
 use std::collections::HashMap;
 use std::fs::File;
 use std::os::unix::fs::FileExt;
@@ -85,10 +86,11 @@ impl AsyncIo {
         });
         let mut senders = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
-        for _ in 0..workers {
+        for w in 0..workers {
             let (tx, rx) = channel::<Req>();
             let sh = shared.clone();
-            handles.push(std::thread::spawn(move || {
+            let builder = std::thread::Builder::new().name(format!("pems2-aio{w}"));
+            let handle = builder.spawn(move || {
                 while let Ok(req) = rx.recv() {
                     let disk = match req {
                         Req::Write { file, off, data, disk } => {
@@ -121,11 +123,15 @@ impl AsyncIo {
                     let mut p = sh.pending.lock().unwrap();
                     let c = p.get_mut(&disk).expect("pending entry exists");
                     *c -= 1;
+                    let depth = *c as u64;
                     if *c == 0 {
                         sh.cv.notify_all();
                     }
+                    drop(p);
+                    trace::counter("aio_queue_disk", disk, depth);
                 }
-            }));
+            });
+            handles.push(handle.expect("spawn aio worker"));
             senders.push(tx);
         }
         AsyncIo {
@@ -152,8 +158,11 @@ impl AsyncIo {
             let mut p = self.shared.pending.lock().unwrap();
             let c = p.entry(disk_index).or_insert(0);
             *c += 1;
+            let depth = *c as u64;
             let total: usize = p.values().sum();
             self.inflight_hwm.fetch_max(total, Ordering::Relaxed);
+            drop(p);
+            trace::counter("aio_queue_disk", disk_index, depth);
         }
         self.senders[disk_index % self.senders.len()]
             .send(req)

@@ -95,6 +95,10 @@ SIMULATION FLAGS (Appendix B.3)
                   effect with --io stxxl-file); PEMS2_NO_PREFETCH=1 does
                   the same globally — off = the legacy synchronous path
   --timeline      record per-thread superstep timelines (Figs. 8.12-8.14)
+  --trace-out FILE  record phase-attributed spans (compute, comm, swap,
+                  spill, pool jobs) and write a Chrome/Perfetto trace
+                  JSON here; also prints the per-superstep phase table;
+                  PEMS2_TRACE_OUT=FILE does the same globally
   --xla           run computation supersteps on the AOT XLA kernels
   --seed N        workload seed
   --disk-dir PATH backing files location (default: temp dir)
@@ -113,15 +117,10 @@ WORKLOAD FLAGS
   --timeline-out FILE   write the gnuplot timeline here
 ";
 
-fn finish(report: &pems2::engine::RunReport, cli: &Cli, verified: bool) -> Result<()> {
-    let m = &report.metrics;
-    println!("wall_seconds       {:.3}", report.wall.as_secs_f64());
-    println!("charged_seconds    {:.3}", report.charged.total());
-    println!("  swap             {:.3}", report.charged.swap);
-    println!("  delivery         {:.3}", report.charged.delivery);
-    println!("  seeks            {:.3}", report.charged.seeks);
-    println!("  network          {:.3}", report.charged.network);
-    println!("  supersteps       {:.3}", report.charged.supersteps);
+/// The shared counter block — every subcommand prints the same keys in
+/// the same order, whether the workload ran on the BSP engine or on the
+/// `empq`-backed drivers.
+fn print_counters(m: &pems2::metrics::MetricsSnapshot) {
     println!("swap_io            {}", human_bytes(m.swap_bytes()));
     println!("delivery_io        {}", human_bytes(m.delivery_bytes()));
     println!("seeks              {}", m.seeks);
@@ -137,8 +136,39 @@ fn finish(report: &pems2::engine::RunReport, cli: &Cli, verified: bool) -> Resul
         human_bytes(m.prefetch_hit_bytes)
     );
     println!("swap_wait_seconds  {:.3}", m.swap_wait_ns as f64 / 1e9);
-    println!("xla_active         {}", report.xla_active);
+}
+
+/// The per-phase × per-superstep attribution table (present when a
+/// trace session covered the run: `--trace-out` / `PEMS2_TRACE_OUT`).
+fn print_phase_table(trace: Option<&pems2::metrics::TraceSummary>) {
+    if let Some(t) = trace {
+        if !t.totals.is_empty() {
+            print!("{}", t.render_table());
+        }
+    }
+}
+
+/// The shared verdict tail: print the flag, fail the process on a
+/// failed verification.
+fn verdict(verified: bool) -> Result<()> {
     println!("verified           {verified}");
+    if !verified {
+        return Err(pems2::error::Error::comm("verification FAILED"));
+    }
+    Ok(())
+}
+
+fn finish(report: &pems2::engine::RunReport, cli: &Cli, verified: bool) -> Result<()> {
+    println!("wall_seconds       {:.3}", report.wall.as_secs_f64());
+    println!("charged_seconds    {:.3}", report.charged.total());
+    println!("  swap             {:.3}", report.charged.swap);
+    println!("  delivery         {:.3}", report.charged.delivery);
+    println!("  seeks            {:.3}", report.charged.seeks);
+    println!("  network          {:.3}", report.charged.network);
+    println!("  supersteps       {:.3}", report.charged.supersteps);
+    print_counters(&report.metrics);
+    println!("xla_active         {}", report.xla_active);
+    print_phase_table(report.trace.as_ref());
     if let Some(path) = cli.options.get("timeline-out") {
         if let Some(series) = &report.timelines {
             let tl = series;
@@ -159,10 +189,7 @@ fn finish(report: &pems2::engine::RunReport, cli: &Cli, verified: bool) -> Resul
             println!("timeline written to {path}");
         }
     }
-    if !verified {
-        return Err(pems2::error::Error::comm("verification FAILED"));
-    }
-    Ok(())
+    verdict(verified)
 }
 
 fn cmd_psrs(cli: &Cli) -> Result<()> {
@@ -218,7 +245,11 @@ fn cmd_time_forward(cli: &Cli) -> Result<()> {
     let n: u64 = cli.get_or("n", 100_000)?;
     let deg: u64 = cli.get_or("deg", 4)?;
     let bulk = !cli.flag("single");
+    // Non-engine command: the trace session is owned here (engine
+    // subcommands get theirs inside `engine::run`).
+    let session = cfg.trace_path().map(pems2::metrics::trace::Session::start);
     let r = pems2::apps::run_time_forward(&cfg, n, deg, bulk, cli.flag("verify"))?;
+    let trace = session.map(|s| s.finish());
     println!("app                time-forward");
     println!("n                  {}", r.n);
     println!("edges              {}", r.edges);
@@ -226,19 +257,12 @@ fn cmd_time_forward(cli: &Cli) -> Result<()> {
     println!("wall_seconds       {:.3}", r.wall);
     println!("charged_seconds    {:.3}", r.pq.charged);
     println!("io_volume          {}", human_bytes(r.pq.metrics.total_disk_bytes()));
-    println!("seeks              {}", r.pq.metrics.seeks);
+    print_counters(&r.pq.metrics);
     println!("external_runs      {}", r.pq.runs_created);
     println!("max_queue_len      {}", r.pq.max_len);
-    println!(
-        "pool_jobs          {} ({} batches)",
-        r.pq.metrics.pool_jobs, r.pq.metrics.pool_batches
-    );
     println!("checksum           {:#018x}", r.checksum);
-    println!("verified           {}", r.verified);
-    if !r.verified {
-        return Err(pems2::error::Error::comm("verification FAILED"));
-    }
-    Ok(())
+    print_phase_table(trace.as_ref());
+    verdict(r.verified)
 }
 
 fn cmd_sssp(cli: &Cli) -> Result<()> {
@@ -247,6 +271,7 @@ fn cmd_sssp(cli: &Cli) -> Result<()> {
     let deg: u64 = cli.get_or("deg", 4)?;
     let wmax: u64 = cli.get_or("wmax", 100)?;
     let src: u64 = cli.get_or("src", 0)?;
+    let session = cfg.trace_path().map(pems2::metrics::trace::Session::start);
     let r = pems2::apps::run_sssp_with(
         &cfg,
         n,
@@ -256,6 +281,7 @@ fn cmd_sssp(cli: &Cli) -> Result<()> {
         cli.flag("verify"),
         !cli.flag("serial-spill"),
     )?;
+    let trace = session.map(|s| s.finish());
     println!("app                sssp");
     println!("n                  {}", r.n);
     println!("edges              {}", r.edges);
@@ -266,42 +292,30 @@ fn cmd_sssp(cli: &Cli) -> Result<()> {
     println!("wall_seconds       {:.3}", r.wall);
     println!("charged_seconds    {:.3}", r.pq.charged);
     println!("io_volume          {}", human_bytes(r.pq.metrics.total_disk_bytes()));
-    println!("seeks              {}", r.pq.metrics.seeks);
+    print_counters(&r.pq.metrics);
     println!("external_runs      {}", r.pq.runs_created);
     println!("max_queue_len      {}", r.pq.max_len);
     println!("arena_high_water   {}", human_bytes(r.pq.arena_high_water));
     println!("arena_reused       {}", human_bytes(r.pq.arena_reused));
-    println!(
-        "pool_jobs          {} ({} batches)",
-        r.pq.metrics.pool_jobs, r.pq.metrics.pool_batches
-    );
     println!("checksum           {:#018x}", r.checksum);
-    println!("verified           {}", r.verified);
-    if !r.verified {
-        return Err(pems2::error::Error::comm("verification FAILED"));
-    }
-    Ok(())
+    print_phase_table(trace.as_ref());
+    verdict(r.verified)
 }
 
 fn cmd_stxxl_sort(cli: &Cli) -> Result<()> {
     let cfg = cli.sim_config()?;
     let n: u64 = cli.get_or("n", 1_000_000)?;
+    let session = cfg.trace_path().map(pems2::metrics::trace::Session::start);
     let r = pems2::baseline::run_stxxl_sort(&cfg, n, cli.flag("verify"))?;
+    let trace = session.map(|s| s.finish());
     println!("app                stxxl-sort");
     println!("n                  {}", r.n);
     println!("wall_seconds       {:.3}", r.wall);
     println!("charged_seconds    {:.3}", r.charged);
     println!("io_volume          {}", human_bytes(r.metrics.total_disk_bytes()));
-    println!("seeks              {}", r.metrics.seeks);
-    println!(
-        "pool_jobs          {} ({} batches)",
-        r.metrics.pool_jobs, r.metrics.pool_batches
-    );
-    println!("verified           {}", r.verified);
-    if !r.verified {
-        return Err(pems2::error::Error::comm("verification FAILED"));
-    }
-    Ok(())
+    print_counters(&r.metrics);
+    print_phase_table(trace.as_ref());
+    verdict(r.verified)
 }
 
 fn cmd_alltoallv(cli: &Cli) -> Result<()> {

@@ -29,7 +29,9 @@
 pub mod cost;
 pub mod counters;
 pub mod timeline;
+pub mod trace;
 
 pub use cost::CostModel;
 pub use counters::{IoClass, Metrics, MetricsSnapshot};
 pub use timeline::Timeline;
+pub use trace::{Phase, PhaseTotals, SpanGuard, TraceSummary};

@@ -28,14 +28,18 @@ impl Timeline {
         }
     }
 
-    /// Record that `vp` just crossed a superstep barrier.
+    /// Record that `vp` just crossed a superstep barrier.  Out-of-range
+    /// indices are ignored (a caller bug must not bring the run down for
+    /// the sake of a diagnostic).
     pub fn mark(&self, vp: usize) {
         if !self.enabled {
             return;
         }
         let t = self.start.elapsed().as_secs_f64();
         let mut rows = self.rows.lock().unwrap();
-        rows[vp].push(t);
+        if let Some(row) = rows.get_mut(vp) {
+            row.push(t);
+        }
     }
 
     /// Number of barriers recorded by the busiest thread.
@@ -46,6 +50,29 @@ impl Timeline {
     /// Per-thread series (vp -> cumulative seconds per superstep).
     pub fn series(&self) -> Vec<Vec<f64>> {
         self.rows.lock().unwrap().clone()
+    }
+
+    /// Per-thread *span* series: the time each superstep took (delta
+    /// between consecutive barrier marks; the first span is measured from
+    /// the timeline start).  This is the per-superstep view the phase
+    /// tables decompose further — [`Timeline::series`] keeps returning
+    /// the cumulative marks.
+    pub fn span_series(&self) -> Vec<Vec<f64>> {
+        self.rows
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|row| {
+                let mut prev = 0.0f64;
+                row.iter()
+                    .map(|&t| {
+                        let d = (t - prev).max(0.0);
+                        prev = t;
+                        d
+                    })
+                    .collect()
+            })
+            .collect()
     }
 
     /// Write a gnuplot-compatible data file: one row per superstep, one
@@ -90,6 +117,29 @@ mod tests {
         assert_eq!(s[0].len(), 2);
         assert!(s[0][1] >= s[0][0]);
         assert_eq!(s[1].len(), 1);
+    }
+
+    #[test]
+    fn out_of_range_mark_is_ignored() {
+        let t = Timeline::new(2, true);
+        t.mark(0);
+        t.mark(5); // beyond v: must not panic, must not record
+        assert_eq!(t.max_steps(), 1);
+        assert_eq!(t.series().len(), 2);
+    }
+
+    #[test]
+    fn span_series_are_deltas_of_marks() {
+        let t = Timeline::new(1, true);
+        t.mark(0);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.mark(0);
+        let cum = t.series();
+        let spans = t.span_series();
+        assert_eq!(spans[0].len(), 2);
+        assert!((spans[0][0] - cum[0][0]).abs() < 1e-9);
+        assert!((spans[0][1] - (cum[0][1] - cum[0][0])).abs() < 1e-9);
+        assert!(spans[0].iter().all(|&d| d >= 0.0));
     }
 
     #[test]

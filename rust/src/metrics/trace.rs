@@ -1,0 +1,1079 @@
+//! Phase-attributed trace subsystem (§1.4 "integrated benchmarking").
+//!
+//! The thesis evaluates PEMS with *per-superstep, per-thread* phase
+//! breakdowns (Figs. 8.12–8.14) and validates its analytic I/O formulas
+//! against measured counts (Fig. 7.8).  The aggregate counters in
+//! [`super::counters`] cannot answer "where did superstep 14 spend its
+//! time?", so this module records *spans*: wall-clock intervals keyed by a
+//! [`Phase`] and tagged with the superstep in which they started.
+//!
+//! # Design
+//!
+//! - **Lock-light recording.**  Each OS thread owns a bounded ring buffer
+//!   ([`TraceBuf`]) behind a mutex that only the owning thread and the
+//!   (rare) drainer ever touch; pushing a span is a thread-local lookup
+//!   plus an uncontended lock.  Buffers self-register with the
+//!   process-global [`TraceRecorder`] on first use, which is what lets
+//!   handle-free subsystems ([`crate::util::pool::WorkerPool`] workers,
+//!   [`crate::io::aio::AsyncIo`] completion threads) participate without
+//!   constructor plumbing.
+//! - **Zero-cost disabled path.**  With no active [`Session`] the whole
+//!   recorder is one relaxed atomic load per [`span`] / [`instant`] /
+//!   [`counter`] call: no allocation, no thread registration, no clock
+//!   read.  Default is off; `--trace-out` / `PEMS2_TRACE_OUT` turns it on.
+//! - **Barrier drains.**  [`superstep_mark`] (called from the node-0
+//!   superstep-barrier leader, while every VP of the node is parked in the
+//!   barrier) moves thread-buffer contents into the central store, folds
+//!   them into per-phase × per-superstep totals, captures the superstep's
+//!   [`MetricsSnapshot`] I/O delta, and advances the superstep tag.
+//!   [`drain`] does the move without advancing (internal barriers, spill
+//!   boundaries).
+//! - **Observe-only.**  Nothing here feeds back into the simulation:
+//!   application output is byte-identical with tracing on or off (pinned
+//!   by `tests/parallel_equivalence.rs`).
+//!
+//! # Consumers
+//!
+//! 1. [`Session::finish`] exports Chrome trace-event JSON (one track per
+//!    OS thread, per-disk queue-depth counter tracks, superstep index as
+//!    span metadata) loadable in Perfetto / `chrome://tracing`.
+//! 2. [`TraceSummary::render_table`] is the per-phase × per-superstep
+//!    aggregate table surfaced in `RunReport` / `EmPqReport` and the CLI.
+//! 3. [`TraceSummary::conformance`] compares each superstep's measured
+//!    I/O counts against the [`CostModel`] prediction and reports the
+//!    attributed wall time next to the charged time (Fig. 7.8
+//!    validation); `bench::write_json_summary` persists the deviation.
+//!
+//! # Caveats
+//!
+//! The recorder is process-global (see above for why), so concurrent
+//! simulation runs in one process — e.g. `cargo test` with
+//! `PEMS2_TRACE_OUT` exported — share one superstep tag and one store.
+//! Events still record and the export stays well-formed JSON, but phase
+//! attribution across overlapping runs is not meaningful.  The CLI and
+//! the benches run one simulation at a time, which is the supported
+//! configuration for analysis.
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use super::cost::{ChargedTime, CostModel};
+use super::counters::MetricsSnapshot;
+
+/// Per-thread ring capacity (events held between drains).  Overflow drops
+/// the *oldest* event and bumps the global dropped counter.
+const THREAD_BUF_CAP: usize = 1 << 16;
+
+/// Central store capacity (events held until export).  Beyond this the
+/// aggregate tables stay exact but raw events stop being retained for the
+/// JSON export (counted as dropped).
+const STORE_CAP: usize = 1 << 20;
+
+/// Per-superstep attribution is folded into the last bucket beyond this
+/// many supersteps (keeps a runaway tag from allocating unboundedly).
+const MAX_STEPS: usize = 1 << 16;
+
+/// Number of [`Phase`] variants.
+pub const PHASES: usize = 9;
+
+/// Simulation phase a span is attributed to (the Figs. 8.12–8.14 axes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Phase {
+    /// Local computation (superstep kernels: sorts, scans, user compute).
+    Compute = 0,
+    /// Collective communication (alltoallv, bcast, gather, scatter,
+    /// reduce, barrier collectives).
+    Comm = 1,
+    /// Context swap-in (residency establishment incl. the disk read).
+    SwapIn = 2,
+    /// Context swap-out (write-back of partition memory).
+    SwapOut = 3,
+    /// Blocked on swap-in completion under the prefetch pipeline (nested
+    /// inside [`Phase::SwapIn`]).
+    SwapWait = 4,
+    /// External-memory PQ spill (heap drain + segment formation).
+    Spill = 5,
+    /// External-memory PQ segment merge/write.
+    Merge = 6,
+    /// One job executing on a [`crate::util::pool::WorkerPool`] worker.
+    PoolJob = 7,
+    /// Barrier / turn waits (superstep barriers, internal barriers,
+    /// partition-gate turns).
+    Barrier = 8,
+}
+
+impl Phase {
+    /// Every variant, in table order.
+    pub const ALL: [Phase; PHASES] = [
+        Phase::Compute,
+        Phase::Comm,
+        Phase::SwapIn,
+        Phase::SwapOut,
+        Phase::SwapWait,
+        Phase::Spill,
+        Phase::Merge,
+        Phase::PoolJob,
+        Phase::Barrier,
+    ];
+
+    /// Stable snake_case name (JSON categories, table headers).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Compute => "compute",
+            Phase::Comm => "comm",
+            Phase::SwapIn => "swap_in",
+            Phase::SwapOut => "swap_out",
+            Phase::SwapWait => "swap_wait",
+            Phase::Spill => "spill",
+            Phase::Merge => "merge",
+            Phase::PoolJob => "pool_job",
+            Phase::Barrier => "barrier",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// One recorded event, kept small and allocation-free (`&'static str`
+/// names only) so the ring buffers stay cheap.
+#[derive(Debug, Clone, Copy)]
+enum EventKind {
+    /// Completed span.
+    Span { phase: Phase, detail: &'static str, start_ns: u64, dur_ns: u64, superstep: u64 },
+    /// Point event (prefetch issue/consume/invalidate, queue submit).
+    Instant { name: &'static str, ts_ns: u64 },
+    /// Sampled counter value (per-disk async-I/O queue depth).
+    Counter { name: &'static str, index: usize, ts_ns: u64, value: u64 },
+}
+
+/// Per-thread bounded ring buffer of events.
+struct TraceBuf {
+    tid: u32,
+    events: Mutex<VecDeque<EventKind>>,
+}
+
+/// Lock helper that shrugs off poisoning (a panicking VP must not wedge
+/// the drainer, and vice versa).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Process-global recorder state; see the module docs for why this is a
+/// global rather than a per-run handle.
+struct TraceRecorder {
+    /// Time base for every timestamp in the process.
+    start: Instant,
+    /// Live per-thread buffers (pruned of dead threads at drain).
+    threads: Mutex<Vec<Arc<TraceBuf>>>,
+    /// `tid -> thread name`, append-only (export needs names after the
+    /// owning thread has exited).
+    names: Mutex<Vec<(u32, String)>>,
+    /// Drained events awaiting export, capped at [`STORE_CAP`].
+    store: Mutex<Vec<(u32, EventKind)>>,
+    /// Cumulative per-phase totals (always exact, even past the caps).
+    totals: Mutex<PhaseTotals>,
+    /// Per-superstep phase totals, indexed by superstep tag.
+    per_step: Mutex<Vec<PhaseTotals>>,
+    /// Per-superstep I/O-counter deltas captured at the barrier leader.
+    io_steps: Mutex<Vec<MetricsSnapshot>>,
+    /// Counter snapshot at the previous superstep mark.
+    last_io: Mutex<MetricsSnapshot>,
+    /// Current superstep tag new spans are stamped with.
+    superstep: AtomicU64,
+    /// Events lost to ring/store overflow.
+    dropped: AtomicU64,
+    /// Active [`Session`] count; recording is on while nonzero.
+    sessions: AtomicUsize,
+    next_tid: AtomicU32,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RECORDER: OnceLock<TraceRecorder> = OnceLock::new();
+
+fn recorder() -> &'static TraceRecorder {
+    RECORDER.get_or_init(|| TraceRecorder {
+        start: Instant::now(),
+        threads: Mutex::new(Vec::new()),
+        names: Mutex::new(Vec::new()),
+        store: Mutex::new(Vec::new()),
+        totals: Mutex::new(PhaseTotals::default()),
+        per_step: Mutex::new(Vec::new()),
+        io_steps: Mutex::new(Vec::new()),
+        last_io: Mutex::new(MetricsSnapshot::default()),
+        superstep: AtomicU64::new(0),
+        dropped: AtomicU64::new(0),
+        sessions: AtomicUsize::new(0),
+        next_tid: AtomicU32::new(0),
+    })
+}
+
+thread_local! {
+    static LOCAL: std::cell::RefCell<Option<Arc<TraceBuf>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Whether a trace session is active (one relaxed load; the single branch
+/// every disabled-path call pays).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn now_ns() -> u64 {
+    recorder().start.elapsed().as_nanos() as u64
+}
+
+fn register_thread() -> Arc<TraceBuf> {
+    let r = recorder();
+    let tid = r.next_tid.fetch_add(1, Ordering::Relaxed);
+    let name = std::thread::current()
+        .name()
+        .unwrap_or("thread")
+        .to_string();
+    let buf = Arc::new(TraceBuf { tid, events: Mutex::new(VecDeque::new()) });
+    lock(&r.names).push((tid, name));
+    lock(&r.threads).push(buf.clone());
+    buf
+}
+
+fn record(kind: EventKind) {
+    // `try_with` so a span dropped during TLS teardown is lost, not a
+    // panic in a destructor.
+    let _ = LOCAL.try_with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let buf = slot.get_or_insert_with(register_thread);
+        let mut ev = lock(&buf.events);
+        if ev.len() >= THREAD_BUF_CAP {
+            ev.pop_front();
+            recorder().dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ev.push_back(kind);
+    });
+}
+
+/// RAII span: records `(phase, wall interval, superstep)` on drop.  With
+/// tracing disabled this is an inert `Option::None` — no allocation, no
+/// clock read.
+pub struct SpanGuard {
+    meta: Option<(Phase, &'static str, u64, u64)>,
+}
+
+impl SpanGuard {
+    /// Whether this guard will record on drop (test hook).
+    pub fn is_recording(&self) -> bool {
+        self.meta.is_some()
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((phase, detail, start_ns, superstep)) = self.meta.take() {
+            // A session may have ended mid-span; skip rather than grow
+            // buffers nobody will drain.
+            if !enabled() {
+                return;
+            }
+            let dur_ns = now_ns().saturating_sub(start_ns);
+            record(EventKind::Span { phase, detail, start_ns, dur_ns, superstep });
+        }
+    }
+}
+
+/// Open a span for `phase`, named after the phase itself.
+#[inline]
+pub fn span(phase: Phase) -> SpanGuard {
+    span_named(phase, phase.name())
+}
+
+/// Open a span for `phase` with an explicit detail name (the Chrome event
+/// name; the phase stays the aggregation key).
+#[inline]
+pub fn span_named(phase: Phase, detail: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { meta: None };
+    }
+    let r = recorder();
+    SpanGuard {
+        meta: Some((phase, detail, now_ns(), r.superstep.load(Ordering::Relaxed))),
+    }
+}
+
+/// Record a point event (thread-scoped instant in the Chrome export).
+#[inline]
+pub fn instant(name: &'static str) {
+    if !enabled() {
+        return;
+    }
+    record(EventKind::Instant { name, ts_ns: now_ns() });
+}
+
+/// Record a counter sample; `index` distinguishes instances sharing a
+/// name (e.g. one async-I/O queue-depth track per disk).
+#[inline]
+pub fn counter(name: &'static str, index: usize, value: u64) {
+    if !enabled() {
+        return;
+    }
+    record(EventKind::Counter { name, index, ts_ns: now_ns(), value });
+}
+
+fn aggregate(
+    kind: &EventKind,
+    totals: &mut PhaseTotals,
+    per_step: &mut Vec<PhaseTotals>,
+) {
+    if let EventKind::Span { phase, dur_ns, superstep, .. } = kind {
+        totals.add(*phase, *dur_ns);
+        let idx = (*superstep as usize).min(MAX_STEPS - 1);
+        if per_step.len() <= idx {
+            per_step.resize(idx + 1, PhaseTotals::default());
+        }
+        per_step[idx].add(*phase, *dur_ns);
+    }
+}
+
+fn drain_all(r: &TraceRecorder) {
+    let mut threads = lock(&r.threads);
+    let mut store = lock(&r.store);
+    let mut totals = lock(&r.totals);
+    let mut per_step = lock(&r.per_step);
+    for buf in threads.iter() {
+        let mut ev = lock(&buf.events);
+        for kind in ev.drain(..) {
+            aggregate(&kind, &mut totals, &mut per_step);
+            if store.len() < STORE_CAP {
+                store.push((buf.tid, kind));
+            } else {
+                r.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    // A dead thread's TLS slot has released its Arc (strong count 1) and
+    // its events were just drained: prune so registration churn — short-
+    // lived VP threads across many runs — cannot grow the registry.
+    threads.retain(|b| Arc::strong_count(b) > 1);
+}
+
+/// Move all thread-buffer events into the central store and aggregate
+/// tables.  Called at barriers and spill boundaries; no-op when disabled.
+pub fn drain() {
+    if !enabled() {
+        return;
+    }
+    drain_all(recorder());
+}
+
+/// Superstep-barrier leader hook: drain, capture the superstep's I/O
+/// delta from `current` (the run metrics snapshot at the barrier), and
+/// advance the superstep tag.  Call from node 0 only — other nodes'
+/// leaders should call [`drain`].
+pub fn superstep_mark(current: Option<MetricsSnapshot>) {
+    if !enabled() {
+        return;
+    }
+    let r = recorder();
+    drain_all(r);
+    if let Some(snap) = current {
+        let mut last = lock(&r.last_io);
+        // Saturating: with overlapping runs (tests) snapshots from
+        // different `Metrics` instances interleave; never panic on that.
+        let delta = saturating_delta(&snap, &last);
+        *last = snap;
+        let mut io = lock(&r.io_steps);
+        if io.len() < MAX_STEPS {
+            io.push(delta);
+        }
+    }
+    r.superstep.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Field-wise `max(a - b, 0)` over [`MetricsSnapshot`].
+fn saturating_delta(a: &MetricsSnapshot, b: &MetricsSnapshot) -> MetricsSnapshot {
+    MetricsSnapshot {
+        swap_read_bytes: a.swap_read_bytes.saturating_sub(b.swap_read_bytes),
+        swap_write_bytes: a.swap_write_bytes.saturating_sub(b.swap_write_bytes),
+        deliv_read_bytes: a.deliv_read_bytes.saturating_sub(b.deliv_read_bytes),
+        deliv_write_bytes: a.deliv_write_bytes.saturating_sub(b.deliv_write_bytes),
+        swap_ops: a.swap_ops.saturating_sub(b.swap_ops),
+        deliv_ops: a.deliv_ops.saturating_sub(b.deliv_ops),
+        seeks: a.seeks.saturating_sub(b.seeks),
+        seek_distance: a.seek_distance.saturating_sub(b.seek_distance),
+        net_bytes: a.net_bytes.saturating_sub(b.net_bytes),
+        net_relations: a.net_relations.saturating_sub(b.net_relations),
+        supersteps: a.supersteps.saturating_sub(b.supersteps),
+        mmap_touched_bytes: a.mmap_touched_bytes.saturating_sub(b.mmap_touched_bytes),
+        pool_jobs: a.pool_jobs.saturating_sub(b.pool_jobs),
+        pool_batches: a.pool_batches.saturating_sub(b.pool_batches),
+        prefetch_hits: a.prefetch_hits.saturating_sub(b.prefetch_hits),
+        prefetch_misses: a.prefetch_misses.saturating_sub(b.prefetch_misses),
+        prefetch_hit_bytes: a.prefetch_hit_bytes.saturating_sub(b.prefetch_hit_bytes),
+        swap_wait_ns: a.swap_wait_ns.saturating_sub(b.swap_wait_ns),
+    }
+}
+
+/// Cumulative per-phase span totals so far (drains first); `None` when
+/// tracing is disabled.  `Copy`, so reports can embed it.
+pub fn phase_totals() -> Option<PhaseTotals> {
+    if !enabled() {
+        return None;
+    }
+    let r = recorder();
+    drain_all(r);
+    Some(*lock(&r.totals))
+}
+
+/// Per-phase span-duration totals: nanoseconds and span counts, indexed
+/// by `Phase as usize`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseTotals {
+    /// Attributed wall nanoseconds per phase.
+    pub ns: [u64; PHASES],
+    /// Completed spans per phase.
+    pub count: [u64; PHASES],
+}
+
+impl PhaseTotals {
+    fn add(&mut self, phase: Phase, dur_ns: u64) {
+        self.ns[phase.index()] += dur_ns;
+        self.count[phase.index()] += 1;
+    }
+
+    /// Nanoseconds attributed to `phase`.
+    pub fn phase_ns(&self, phase: Phase) -> u64 {
+        self.ns[phase.index()]
+    }
+
+    /// Sum over all phases, nanoseconds.
+    pub fn total_ns(&self) -> u64 {
+        self.ns.iter().sum()
+    }
+
+    /// True when no span has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count.iter().all(|&c| c == 0)
+    }
+}
+
+/// Everything a finished session distills: the phase tables, per-
+/// superstep I/O deltas, and export bookkeeping.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSummary {
+    /// Run-wide per-phase totals.
+    pub totals: PhaseTotals,
+    /// Per-superstep phase totals (index = superstep tag at span start).
+    pub per_superstep: Vec<PhaseTotals>,
+    /// Per-superstep `Metrics` deltas captured at the barrier leader.
+    pub io_per_superstep: Vec<MetricsSnapshot>,
+    /// Raw events exported to the trace file.
+    pub events: u64,
+    /// Events lost to ring/store overflow.
+    pub dropped: u64,
+}
+
+/// One superstep's measured-vs-charged comparison (Fig. 7.8).
+#[derive(Debug, Clone, Copy)]
+pub struct ConformanceRow {
+    /// Superstep index.
+    pub superstep: usize,
+    /// Wall seconds attributed to I/O-bearing phases (swap in/out/wait,
+    /// spill, merge) this superstep.
+    pub measured_io_s: f64,
+    /// Wall seconds attributed to communication this superstep.
+    pub measured_comm_s: f64,
+    /// Analytic charge for the superstep's measured I/O counts.
+    pub charged: ChargedTime,
+    /// The superstep's I/O-counter delta the charge was computed from.
+    pub io: MetricsSnapshot,
+}
+
+impl TraceSummary {
+    /// Measured-vs-analytic comparison per superstep: zips the span
+    /// tables with the captured I/O deltas and charges the latter
+    /// through `model`.
+    pub fn conformance(&self, model: &CostModel) -> Vec<ConformanceRow> {
+        let n = self.per_superstep.len().min(self.io_per_superstep.len());
+        (0..n)
+            .map(|s| {
+                let p = &self.per_superstep[s];
+                let io_ns = p.phase_ns(Phase::SwapIn)
+                    + p.phase_ns(Phase::SwapOut)
+                    + p.phase_ns(Phase::SwapWait)
+                    + p.phase_ns(Phase::Spill)
+                    + p.phase_ns(Phase::Merge);
+                ConformanceRow {
+                    superstep: s,
+                    measured_io_s: io_ns as f64 / 1e9,
+                    measured_comm_s: p.phase_ns(Phase::Comm) as f64 / 1e9,
+                    charged: model.charge(&self.io_per_superstep[s]),
+                    io: self.io_per_superstep[s],
+                }
+            })
+            .collect()
+    }
+
+    /// Run-wide deviation ratio `measured / charged` over the I/O +
+    /// communication phases; `None` when either side is empty.  1.0 means
+    /// the cost model predicts the attributed wall time exactly.
+    pub fn conformance_ratio(&self, model: &CostModel) -> Option<f64> {
+        let rows = self.conformance(model);
+        if rows.is_empty() {
+            return None;
+        }
+        let measured: f64 = rows.iter().map(|r| r.measured_io_s + r.measured_comm_s).sum();
+        let charged: f64 =
+            rows.iter().map(|r| r.charged.total() - r.charged.supersteps).sum();
+        if charged <= 0.0 {
+            return None;
+        }
+        Some(measured / charged)
+    }
+
+    /// Render the per-phase × per-superstep table (milliseconds per
+    /// cell), Figs. 8.12–8.14 style.  Supersteps with no attributed time
+    /// are elided; a totals row always prints.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str("phase_table        ms by phase (spans started in each superstep)\n");
+        out.push_str("  step  ");
+        for ph in Phase::ALL {
+            out.push_str(&format!("{:>10}", ph.name()));
+        }
+        out.push('\n');
+        let ms = |ns: u64| ns as f64 / 1e6;
+        for (s, row) in self.per_superstep.iter().enumerate() {
+            if row.is_empty() {
+                continue;
+            }
+            out.push_str(&format!("  {s:<6}"));
+            for ph in Phase::ALL {
+                out.push_str(&format!("{:>10.2}", ms(row.phase_ns(ph))));
+            }
+            out.push('\n');
+        }
+        out.push_str("  total ");
+        for ph in Phase::ALL {
+            out.push_str(&format!("{:>10.2}", ms(self.totals.phase_ns(ph))));
+        }
+        out.push('\n');
+        if self.dropped > 0 {
+            out.push_str(&format!(
+                "  ({} events dropped at ring/store capacity)\n",
+                self.dropped
+            ));
+        }
+        out
+    }
+}
+
+/// An active tracing window.  The first concurrent session enables the
+/// global recorder (resetting its state); the last one to finish disables
+/// it.  [`Session::finish`] — or drop — drains, summarizes, and writes
+/// the Chrome trace-event file (best-effort: an export I/O error is
+/// reported on stderr, never fails the run).
+pub struct Session {
+    out: PathBuf,
+    finished: bool,
+}
+
+impl Session {
+    /// Start (or join) the process-wide tracing window; the export lands
+    /// at `out` when this session finishes.
+    pub fn start(out: impl Into<PathBuf>) -> Session {
+        let r = recorder();
+        if r.sessions.fetch_add(1, Ordering::SeqCst) == 0 {
+            // First session: clear any state a previous window left.
+            {
+                let threads = lock(&r.threads);
+                for buf in threads.iter() {
+                    lock(&buf.events).clear();
+                }
+            }
+            lock(&r.store).clear();
+            *lock(&r.totals) = PhaseTotals::default();
+            lock(&r.per_step).clear();
+            lock(&r.io_steps).clear();
+            *lock(&r.last_io) = MetricsSnapshot::default();
+            r.superstep.store(0, Ordering::Relaxed);
+            r.dropped.store(0, Ordering::Relaxed);
+            ENABLED.store(true, Ordering::SeqCst);
+        }
+        Session { out: out.into(), finished: false }
+    }
+
+    /// Drain, export, and summarize; disables recording if this was the
+    /// last active session.
+    pub fn finish(mut self) -> TraceSummary {
+        self.finished = true;
+        finish_impl(&self.out)
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        if !self.finished {
+            let _ = finish_impl(&self.out);
+        }
+    }
+}
+
+fn finish_impl(out: &Path) -> TraceSummary {
+    let r = recorder();
+    drain_all(r);
+    let events: Vec<(u32, EventKind)> = std::mem::take(&mut *lock(&r.store));
+    let names: Vec<(u32, String)> = lock(&r.names).clone();
+    let summary = TraceSummary {
+        totals: *lock(&r.totals),
+        per_superstep: lock(&r.per_step).clone(),
+        io_per_superstep: lock(&r.io_steps).clone(),
+        events: events.len() as u64,
+        dropped: r.dropped.load(Ordering::Relaxed),
+    };
+    if r.sessions.fetch_sub(1, Ordering::SeqCst) == 1 {
+        ENABLED.store(false, Ordering::SeqCst);
+    }
+    if let Err(e) = export_chrome(out, &names, &events) {
+        eprintln!("pems2: trace export to {} failed: {e}", out.display());
+    }
+    summary
+}
+
+/// Minimal JSON string escape (names are ASCII in practice; this keeps
+/// the output well-formed regardless).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Write the Chrome trace-event JSON (object form with a `traceEvents`
+/// array; timestamps/durations in microseconds).
+fn export_chrome(
+    path: &Path,
+    names: &[(u32, String)],
+    events: &[(u32, EventKind)],
+) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let f = File::create(path)?;
+    let mut w = BufWriter::new(f);
+    let us = |ns: u64| ns as f64 / 1e3;
+    write!(
+        w,
+        "{{\"traceEvents\":[\n\
+         {{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
+         \"args\":{{\"name\":\"pems2\"}}}}"
+    )?;
+    for (tid, name) in names {
+        write!(
+            w,
+            ",\n{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            esc(name)
+        )?;
+    }
+    for (tid, ev) in events {
+        match ev {
+            EventKind::Span { phase, detail, start_ns, dur_ns, superstep } => write!(
+                w,
+                ",\n{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"pid\":1,\
+                 \"tid\":{tid},\"ts\":{:.3},\"dur\":{:.3},\
+                 \"args\":{{\"superstep\":{superstep}}}}}",
+                esc(detail),
+                phase.name(),
+                us(*start_ns),
+                us(*dur_ns),
+            )?,
+            EventKind::Instant { name, ts_ns } => write!(
+                w,
+                ",\n{{\"name\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":1,\
+                 \"tid\":{tid},\"ts\":{:.3}}}",
+                esc(name),
+                us(*ts_ns),
+            )?,
+            EventKind::Counter { name, index, ts_ns, value } => write!(
+                w,
+                ",\n{{\"name\":\"{}{index}\",\"ph\":\"C\",\"pid\":1,\
+                 \"tid\":{tid},\"ts\":{:.3},\"args\":{{\"value\":{value}}}}}",
+                esc(name),
+                us(*ts_ns),
+            )?,
+        }
+    }
+    write!(w, "\n],\"displayTimeUnit\":\"ms\"}}\n")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    /// Trace tests mutate process-global state; serialize them.
+    fn test_lock() -> MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        lock(&LOCK)
+    }
+
+    fn active_sessions() -> usize {
+        recorder().sessions.load(Ordering::SeqCst)
+    }
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "pems2_trace_{tag}_{}.json",
+            std::process::id()
+        ))
+    }
+
+    /// Count span events currently in the central store whose detail
+    /// matches `detail`.
+    fn store_spans_named(detail: &str) -> Vec<(u64, u64)> {
+        lock(&recorder().store)
+            .iter()
+            .filter_map(|(_, ev)| match ev {
+                EventKind::Span { detail: d, start_ns, dur_ns, .. } if *d == detail => {
+                    Some((*start_ns, *dur_ns))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn disabled_path_records_nothing() {
+        let _l = test_lock();
+        if active_sessions() != 0 {
+            return; // another test holds a live session; skip
+        }
+        std::thread::Builder::new()
+            .name("trace-disabled-probe".into())
+            .spawn(|| {
+                for _ in 0..8 {
+                    let g = span(Phase::Compute);
+                    assert!(!g.is_recording() || enabled());
+                    drop(g);
+                    instant("disabled_probe");
+                    counter("disabled_probe_q", 0, 1);
+                }
+            })
+            .unwrap()
+            .join()
+            .unwrap();
+        if active_sessions() != 0 {
+            return; // a session raced in mid-test; can't assert
+        }
+        // The probe thread never registered: the disabled path allocates
+        // nothing and touches no global state.
+        let names = lock(&recorder().names);
+        assert!(
+            !names.iter().any(|(_, n)| n == "trace-disabled-probe"),
+            "disabled-path span registered a thread buffer"
+        );
+    }
+
+    #[test]
+    fn spans_nest_within_their_parent() {
+        let _l = test_lock();
+        if active_sessions() != 0 {
+            return;
+        }
+        let s = Session::start(tmp_path("nest"));
+        {
+            let _outer = span_named(Phase::Compute, "nest_outer");
+            {
+                let _inner = span_named(Phase::PoolJob, "nest_inner");
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        drain();
+        let outer = store_spans_named("nest_outer");
+        let inner = store_spans_named("nest_inner");
+        assert_eq!(outer.len(), 1);
+        assert_eq!(inner.len(), 1);
+        let (os, od) = outer[0];
+        let (is_, id) = inner[0];
+        assert!(is_ >= os, "inner starts within outer");
+        assert!(is_ + id <= os + od, "inner ends within outer");
+        let sum = s.finish();
+        assert!(sum.totals.count[Phase::Compute as usize] >= 1);
+        assert!(sum.totals.count[Phase::PoolJob as usize] >= 1);
+    }
+
+    #[test]
+    fn barrier_drain_moves_events_in_order() {
+        let _l = test_lock();
+        if active_sessions() != 0 {
+            return;
+        }
+        let s = Session::start(tmp_path("drain"));
+        drop(span_named(Phase::Comm, "drain_first"));
+        assert!(
+            store_spans_named("drain_first").is_empty(),
+            "events stay thread-local until a drain"
+        );
+        drain();
+        assert_eq!(store_spans_named("drain_first").len(), 1);
+        drop(span_named(Phase::Comm, "drain_second"));
+        assert!(store_spans_named("drain_second").is_empty());
+        drain();
+        // Drains preserve per-thread recording order in the store.
+        let store = lock(&recorder().store);
+        let pos = |d: &str| {
+            store
+                .iter()
+                .position(|(_, ev)| {
+                    matches!(ev, EventKind::Span { detail, .. } if *detail == d)
+                })
+                .unwrap()
+        };
+        let (a, b) = (pos("drain_first"), pos("drain_second"));
+        drop(store);
+        assert!(a < b, "drain must preserve recording order");
+        s.finish();
+    }
+
+    #[test]
+    fn thread_registration_churn_is_pruned() {
+        let _l = test_lock();
+        if active_sessions() != 0 {
+            return;
+        }
+        let s = Session::start(tmp_path("churn"));
+        for wave in 0..2 {
+            let handles: Vec<_> = (0..8)
+                .map(|i| {
+                    std::thread::Builder::new()
+                        .name(format!("trace-churn-{wave}-{i}"))
+                        .spawn(|| drop(span_named(Phase::PoolJob, "churn_span")))
+                        .unwrap()
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
+        drain();
+        assert_eq!(store_spans_named("churn_span").len(), 16);
+        // All 16 threads are dead and drained: their buffers are pruned
+        // from the live registry, but their names survive for export.
+        let names = lock(&recorder().names);
+        let churn_names =
+            names.iter().filter(|(_, n)| n.starts_with("trace-churn-")).count();
+        drop(names);
+        assert_eq!(churn_names, 16);
+        let sum = s.finish();
+        assert!(sum.totals.count[Phase::PoolJob as usize] >= 16);
+        if active_sessions() == 0 {
+            let threads = lock(&recorder().threads);
+            assert!(
+                threads.iter().all(|b| Arc::strong_count(b) > 1),
+                "dead thread buffers must be pruned at drain"
+            );
+        }
+    }
+
+    #[test]
+    fn superstep_mark_attributes_and_advances() {
+        let _l = test_lock();
+        if active_sessions() != 0 {
+            return;
+        }
+        let s = Session::start(tmp_path("steps"));
+        drop(span_named(Phase::Compute, "step_span_a"));
+        let mut snap = MetricsSnapshot::default();
+        snap.swap_read_bytes = 1 << 20;
+        snap.swap_ops = 4;
+        superstep_mark(Some(snap));
+        drop(span_named(Phase::Comm, "step_span_b"));
+        let sum = s.finish();
+        assert!(sum.per_superstep.len() >= 2);
+        assert!(sum.per_superstep[0].count[Phase::Compute as usize] >= 1);
+        assert!(sum.per_superstep[1].count[Phase::Comm as usize] >= 1);
+        assert_eq!(sum.io_per_superstep.len(), 1);
+        assert_eq!(sum.io_per_superstep[0].swap_read_bytes, 1 << 20);
+        // Conformance zips spans with I/O deltas and charges them.
+        let cfg = SimConfig::builder().v(2).k(2).mu(1 << 20).build().unwrap();
+        let model = CostModel::new(cfg.cost, cfg.d);
+        let rows = sum.conformance(&model);
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].charged.swap > 0.0);
+        assert!(rows[0].measured_io_s >= 0.0);
+        let table = sum.render_table();
+        assert!(table.contains("phase_table"));
+        assert!(table.contains("swap_in"));
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json() {
+        let _l = test_lock();
+        if active_sessions() != 0 {
+            return;
+        }
+        let path = tmp_path("export");
+        let s = Session::start(&path);
+        {
+            let _sp = span_named(Phase::SwapIn, "export \"quoted\" span");
+            instant("export_instant");
+            counter("export_disk", 3, 7);
+        }
+        let sum = s.finish();
+        assert!(sum.events >= 3);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            json_valid(&text),
+            "exported trace must parse as JSON: {}",
+            &text[..text.len().min(400)]
+        );
+        assert!(text.contains("\"traceEvents\""));
+        assert!(text.contains("\"ph\":\"X\""));
+        assert!(text.contains("\"ph\":\"C\""));
+        assert!(text.contains("\"export_disk3\""));
+        assert!(text.contains("thread_name"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Minimal recursive-descent JSON syntax check (no external crates;
+    /// values are validated structurally, not interpreted).
+    fn json_valid(s: &str) -> bool {
+        let b = s.as_bytes();
+        let mut i = 0usize;
+        fn ws(b: &[u8], i: &mut usize) {
+            while *i < b.len() && (b[*i] as char).is_ascii_whitespace() {
+                *i += 1;
+            }
+        }
+        fn value(b: &[u8], i: &mut usize) -> bool {
+            ws(b, i);
+            if *i >= b.len() {
+                return false;
+            }
+            match b[*i] {
+                b'{' => {
+                    *i += 1;
+                    ws(b, i);
+                    if *i < b.len() && b[*i] == b'}' {
+                        *i += 1;
+                        return true;
+                    }
+                    loop {
+                        ws(b, i);
+                        if !string(b, i) {
+                            return false;
+                        }
+                        ws(b, i);
+                        if *i >= b.len() || b[*i] != b':' {
+                            return false;
+                        }
+                        *i += 1;
+                        if !value(b, i) {
+                            return false;
+                        }
+                        ws(b, i);
+                        if *i < b.len() && b[*i] == b',' {
+                            *i += 1;
+                            continue;
+                        }
+                        if *i < b.len() && b[*i] == b'}' {
+                            *i += 1;
+                            return true;
+                        }
+                        return false;
+                    }
+                }
+                b'[' => {
+                    *i += 1;
+                    ws(b, i);
+                    if *i < b.len() && b[*i] == b']' {
+                        *i += 1;
+                        return true;
+                    }
+                    loop {
+                        if !value(b, i) {
+                            return false;
+                        }
+                        ws(b, i);
+                        if *i < b.len() && b[*i] == b',' {
+                            *i += 1;
+                            continue;
+                        }
+                        if *i < b.len() && b[*i] == b']' {
+                            *i += 1;
+                            return true;
+                        }
+                        return false;
+                    }
+                }
+                b'"' => string(b, i),
+                b't' => lit(b, i, b"true"),
+                b'f' => lit(b, i, b"false"),
+                b'n' => lit(b, i, b"null"),
+                _ => number(b, i),
+            }
+        }
+        fn string(b: &[u8], i: &mut usize) -> bool {
+            if *i >= b.len() || b[*i] != b'"' {
+                return false;
+            }
+            *i += 1;
+            while *i < b.len() {
+                match b[*i] {
+                    b'"' => {
+                        *i += 1;
+                        return true;
+                    }
+                    b'\\' => *i += 2,
+                    _ => *i += 1,
+                }
+            }
+            false
+        }
+        fn lit(b: &[u8], i: &mut usize, l: &[u8]) -> bool {
+            if b.len() - *i >= l.len() && &b[*i..*i + l.len()] == l {
+                *i += l.len();
+                true
+            } else {
+                false
+            }
+        }
+        fn number(b: &[u8], i: &mut usize) -> bool {
+            let start = *i;
+            if *i < b.len() && (b[*i] == b'-' || b[*i] == b'+') {
+                *i += 1;
+            }
+            while *i < b.len()
+                && (b[*i].is_ascii_digit()
+                    || b[*i] == b'.'
+                    || b[*i] == b'e'
+                    || b[*i] == b'E'
+                    || b[*i] == b'-'
+                    || b[*i] == b'+')
+            {
+                *i += 1;
+            }
+            *i > start
+        }
+        if !value(b, &mut i) {
+            return false;
+        }
+        ws(b, &mut i);
+        i == b.len()
+    }
+}

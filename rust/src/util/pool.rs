@@ -20,6 +20,7 @@
 //! A panicking job does not kill its worker thread (the pool survives for
 //! later batches); the panic surfaces in `join` on the submitting thread.
 
+use crate::metrics::{trace, Phase};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
@@ -200,7 +201,10 @@ fn worker_loop(shared: &Shared) {
             // Backstop for raw `submit` jobs; batch tasks catch their own
             // panics (preserving the payload for `join`), so this only
             // keeps the worker alive — it never eats a batch payload.
-            Some(j) => drop(catch_unwind(AssertUnwindSafe(j))),
+            Some(j) => {
+                let _span = trace::span(Phase::PoolJob);
+                drop(catch_unwind(AssertUnwindSafe(j)));
+            }
             None => return,
         }
     }

@@ -34,7 +34,7 @@ use crate::alloc::ContextAlloc;
 use crate::comm::CommState;
 use crate::config::SimConfig;
 use crate::error::{Error, Result};
-use crate::metrics::{Metrics, Timeline};
+use crate::metrics::{trace, trace::Phase, Metrics, Timeline};
 use crate::net::Switch;
 use crate::runtime::Compute;
 use crate::sync::{PartitionYield, SuperstepBarrier};
@@ -299,6 +299,7 @@ impl Vp {
     /// Acquire the partition gate for a new internal superstep (ordered).
     pub(crate) fn acquire(&mut self) {
         if !self.holding {
+            let _span = trace::span_named(Phase::Barrier, "gate_turn");
             self.shared.gates[self.partition()].acquire_turn(self.round());
             self.holding = true;
         }
@@ -327,6 +328,7 @@ impl Vp {
     pub fn ensure_resident(&mut self) -> Result<()> {
         self.acquire();
         if !self.resident {
+            let _span = trace::span(Phase::SwapIn);
             let regions = self.allocated_regions();
             self.shared.store.swap_in_resident(
                 self.local,
@@ -384,6 +386,7 @@ impl Vp {
     /// Swap all (dirty) allocated regions out to disk.
     pub(crate) fn swap_out_all(&mut self) -> Result<()> {
         debug_assert!(self.holding);
+        let _span = trace::span(Phase::SwapOut);
         let regions = self.swap_out_set();
         self.shared.store.swap_out_regions(
             self.local,
@@ -401,6 +404,7 @@ impl Vp {
     /// Alg. 7.1.1 line 4).
     pub(crate) fn swap_out_except(&mut self, except: &[(u64, u64)]) -> Result<()> {
         debug_assert!(self.holding);
+        let _span = trace::span(Phase::SwapOut);
         let regions = subtract_regions(&self.swap_out_set(), except);
         self.shared.store.swap_out_regions(
             self.local,
@@ -417,6 +421,7 @@ impl Vp {
     /// Swap specific byte regions back in ("Swap message in").
     pub(crate) fn swap_in_regions(&mut self, regions: &[(u64, u64)]) -> Result<()> {
         debug_assert!(self.holding);
+        let _span = trace::span_named(Phase::SwapIn, "swap_in_regions");
         self.shared.store.swap_in_regions(
             self.local,
             self.shared.cfg.k,
@@ -436,6 +441,7 @@ impl Vp {
     /// marks metrics/timeline.
     pub(crate) fn superstep_end(&mut self) {
         debug_assert!(!self.holding, "superstep_end while holding partition");
+        let span = trace::span_named(Phase::Barrier, "superstep_barrier");
         let shared = self.shared.clone();
         self.shared.barrier.wait_leader(Some(|| {
             shared.store.flush().expect("flush failed at barrier");
@@ -444,11 +450,21 @@ impl Vp {
             }
             // Node 0's leader counts the (global) virtual superstep; the
             // cost model charges L once per superstep, matching the
-            // thesis' accounting.
+            // thesis' accounting.  The same leader is the trace drain
+            // point: every sibling VP is parked in the barrier, so the
+            // thread buffers are quiescent; the mark also captures this
+            // superstep's I/O-counter delta and advances the superstep
+            // tag (other nodes' leaders just drain).
             if shared.node == 0 {
                 shared.metrics.superstep();
+                trace::superstep_mark(
+                    trace::enabled().then(|| shared.metrics.snapshot()),
+                );
+            } else {
+                trace::drain();
             }
         }));
+        drop(span);
         self.resident = false;
         self.shared.timeline.mark(self.global);
     }
@@ -456,12 +472,16 @@ impl Vp {
     /// Internal barrier between internal supersteps of one collective.
     pub(crate) fn internal_barrier(&mut self) {
         debug_assert!(!self.holding);
+        let _span = trace::span_named(Phase::Barrier, "internal_barrier");
         let shared = self.shared.clone();
         self.shared.barrier.wait_leader(Some(|| {
             shared.store.flush().expect("flush failed at barrier");
             for g in &shared.gates {
                 g.reset_turns();
             }
+            // Internal supersteps drain too (same quiescence argument as
+            // superstep_end), but do not advance the superstep tag.
+            trace::drain();
         }));
     }
 

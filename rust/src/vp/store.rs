@@ -304,6 +304,7 @@ impl Store {
     ) -> Result<()> {
         match self {
             Store::Explicit { sched: Some(s), partitions, metrics, .. } => {
+                let _span = crate::metrics::trace::span(crate::metrics::Phase::SwapWait);
                 let t0 = std::time::Instant::now();
                 let r = if s.try_consume(local_vp, regions)? {
                     partitions[local_vp % k].flip();

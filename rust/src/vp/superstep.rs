@@ -52,7 +52,7 @@
 //! output.
 
 use crate::empq::merge::{merge_segments_into, sort_segments};
-use crate::metrics::Metrics;
+use crate::metrics::{trace, Metrics, Phase};
 use crate::runtime::Compute;
 use crate::util::pool::WorkerPool;
 use crate::util::record::Record;
@@ -165,6 +165,7 @@ impl ComputeCtx {
         &self,
         jobs: Vec<ScopedJob<'scope, R>>,
     ) -> Vec<R> {
+        let _span = trace::span_named(Phase::Compute, "run_scoped");
         match &self.pool {
             Some(pool) if jobs.len() > 1 => {
                 self.metrics.pool_batch(jobs.len() as u64);
@@ -184,6 +185,7 @@ impl ComputeCtx {
     /// sorted sequence of a multiset is unique for records whose
     /// equality is byte-equality).
     pub fn sort<T: Record>(&self, data: &mut [T]) {
+        let _span = trace::span_named(Phase::Compute, "local_sort");
         let pooled =
             self.pool.is_some() && data.len() >= (2 * self.threads()).max(POOL_MIN);
         if !pooled {
@@ -214,6 +216,7 @@ impl ComputeCtx {
     /// carry back.  Wrapping addition is associative, so the bytes match
     /// the serial scan exactly.
     pub fn scan_i32(&self, data: &mut [i32]) {
+        let _span = trace::span_named(Phase::Compute, "local_scan");
         let pooled =
             self.pool.is_some() && data.len() >= (2 * self.threads()).max(POOL_MIN);
         if !pooled {
@@ -265,6 +268,7 @@ impl ComputeCtx {
         if c == 0 {
             return;
         }
+        let _span = trace::span_named(Phase::Compute, "carry_add");
         let pooled =
             self.pool.is_some() && data.len() >= (2 * self.threads()).max(POOL_MIN);
         if !pooled {

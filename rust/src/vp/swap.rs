@@ -38,7 +38,7 @@
 use crate::disk::DiskSet;
 use crate::error::Result;
 use crate::io::ReadTicket;
-use crate::metrics::{IoClass, Metrics};
+use crate::metrics::{trace, IoClass, Metrics};
 use std::sync::{Arc, Mutex};
 
 /// An in-flight (or completed, unconsumed) prefetch owning a partition's
@@ -131,6 +131,7 @@ impl SwapScheduler {
                 let _ = t.wait();
             }
             self.metrics.prefetch_miss();
+            trace::instant("prefetch_dispose");
         }
         // Re-acquire for the issue itself: enqueue + install must be
         // atomic w.r.t. invalidators, or a write racing the issue could
@@ -172,6 +173,7 @@ impl SwapScheduler {
         }
         slot.pending =
             Some(Prefetch { local_vp, regions, tickets, bytes, invalidated: false });
+        trace::instant("prefetch_issue");
         Ok(())
     }
 
@@ -199,6 +201,7 @@ impl SwapScheduler {
                 let _ = t.wait();
             }
             self.metrics.prefetch_miss();
+            trace::instant("prefetch_dispose");
             return Ok(false);
         }
         // Wait for completion without holding the slot lock (invalidators
@@ -220,6 +223,7 @@ impl SwapScheduler {
         if usable {
             slot.pending = None;
             self.metrics.prefetch_hit(bytes);
+            trace::instant("prefetch_consume_hit");
             Ok(true)
         } else {
             // Invalidated mid-wait (tickets already complete — waited
@@ -227,6 +231,7 @@ impl SwapScheduler {
             slot.pending = None;
             drop(slot);
             self.metrics.prefetch_miss();
+            trace::instant("prefetch_dispose");
             Ok(false)
         }
     }
@@ -243,8 +248,9 @@ impl SwapScheduler {
             if let Some(p) = s.pending.as_mut() {
                 let slot_lo = p.local_vp as u64 * self.ctx_slot;
                 let slot_hi = slot_lo + self.mu;
-                if lo < slot_hi && slot_lo < hi {
+                if lo < slot_hi && slot_lo < hi && !p.invalidated {
                     p.invalidated = true;
+                    trace::instant("prefetch_invalidate");
                 }
             }
         }

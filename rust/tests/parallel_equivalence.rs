@@ -671,6 +671,49 @@ fn empq_driver_edge_generation_meters_on_the_pool() {
     assert_eq!(tf.pq.metrics.pool_jobs, 0, "serial driver leg must not pool");
 }
 
+// -------------------------------------------------------- tracing axis
+
+#[test]
+fn tracing_on_vs_off_is_byte_identical() {
+    // The trace subsystem is observe-only: the same seeded app run with
+    // a live trace session (spans recorded in every phase, Chrome JSON
+    // exported at the end) must produce byte-identical output to a run
+    // without one.
+    let out = std::env::temp_dir()
+        .join(format!("pems2-equiv-trace-{}.json", std::process::id()));
+    let mk = |trace: bool| {
+        let mut b = SimConfig::builder()
+            .v(4)
+            .k(2)
+            .mu(1 << 20)
+            .sigma(1 << 20)
+            .d(2)
+            .block(4096)
+            .io(IoStyle::Async);
+        if trace {
+            b = b.trace_out(&out);
+        }
+        b.build().unwrap()
+    };
+    let n = 30_001u64;
+    let traced = pems2::apps::run_psrs(mk(true), n, true).unwrap();
+    let plain = pems2::apps::run_psrs(mk(false), n, true).unwrap();
+    assert!(traced.verified && plain.verified, "psrs must verify on both legs");
+    assert_eq!(
+        traced.output_hash, plain.output_hash,
+        "tracing must not change the sorted output bytes"
+    );
+    assert!(traced.report.trace.is_some(), "traced run must carry a phase summary");
+    // Under the PEMS2_TRACE_OUT CI leg every run is traced via the env
+    // fallback, so the is-none half only holds without it.
+    if pems2::config::trace_out_env().is_none() {
+        assert!(plain.report.trace.is_none(), "untraced run must carry none");
+    }
+    let json = std::fs::read_to_string(&out).expect("chrome trace must be written");
+    assert!(json.contains("traceEvents"), "export must be Chrome-trace-shaped");
+    std::fs::remove_file(&out).ok();
+}
+
 #[test]
 fn prefix_sum_oracle_under_pooled_delivery() {
     // An engine app over gather/scatter: the pooled rooted fan-out must
