@@ -35,6 +35,10 @@
 //!    the async driver with a live trace session, per-phase attributed
 //!    seconds and the measured-vs-charged deviation ratio (Fig. 7.8)
 //!    persisted so commits can diff where wall time actually goes.
+//! 9. Distribution vs merge sort A/B: `dist_sort`'s pipelined
+//!    sample/partition/bucket pass against `stxxl_sort` at the same n
+//!    and RAM budget, output hashes pinned equal, with the speedup and
+//!    the partition stage's overlap-hidden read/write bytes persisted.
 //!
 //! y-values are Melem/s (wall clock); measured I/O counters are printed
 //! per phase, since on page-cached SSDs charged time is the faithful
@@ -496,6 +500,54 @@ fn main() {
         summary.push(("trace_conformance_ratio".to_string(), ratio));
     }
     println!("trace written to {trace_path}");
+
+    // ---- 9. distribution vs merge sort A/B ----
+    // Same cfg + seed => same input multiset => the order-sensitive
+    // output hashes must match exactly; the interesting numbers are the
+    // speedup and how much of the partition stage's transfer the
+    // read/classify/write pipeline actually hid.
+    let dist_n: u64 = if full_mode() { 1 << 23 } else { 1 << 19 };
+    let dist_cfg = cfg();
+    let merge_r = run_stxxl_sort(&dist_cfg, dist_n, true).unwrap();
+    let dist_r = pems2::baseline::run_dist_sort(&dist_cfg, dist_n, true).unwrap();
+    assert!(merge_r.verified && dist_r.verified);
+    assert_eq!(
+        dist_r.output_hash, merge_r.output_hash,
+        "dist sort must be byte-identical to the merge sort"
+    );
+    let merge_rate = dist_n as f64 / merge_r.wall.max(1e-9) / 1e6;
+    let dist_rate = dist_n as f64 / dist_r.wall.max(1e-9) / 1e6;
+    println!(
+        "sort A/B  merge {merge_rate:>8.2} Melem/s (io {})  dist {dist_rate:>8.2} Melem/s \
+         (io {}, {} buckets, {} resplits)",
+        human_bytes(merge_r.metrics.total_disk_bytes()),
+        human_bytes(dist_r.metrics.total_disk_bytes()),
+        dist_r.buckets,
+        dist_r.resplits,
+    );
+    println!(
+        "dist partition pipeline hid {} read / {} write; speedup {:.2}x (dist/merge)",
+        human_bytes(dist_r.hidden_read_bytes),
+        human_bytes(dist_r.hidden_write_bytes),
+        dist_rate / merge_rate.max(1e-9),
+    );
+    summary.push(("stxxl_sort_melem_s".to_string(), merge_rate));
+    summary.push(("dist_sort_melem_s".to_string(), dist_rate));
+    summary.push(("dist_vs_merge_speedup".to_string(), dist_rate / merge_rate.max(1e-9)));
+    summary.push((
+        "dist_hidden_read_mb".to_string(),
+        dist_r.hidden_read_bytes as f64 / (1 << 20) as f64,
+    ));
+    summary.push((
+        "dist_hidden_write_mb".to_string(),
+        dist_r.hidden_write_bytes as f64 / (1 << 20) as f64,
+    ));
+    summary.push(("dist_buckets".to_string(), dist_r.buckets as f64));
+    summary.push(("dist_resplits".to_string(), dist_r.resplits as f64));
+    assert!(
+        dist_r.hidden_read_bytes + dist_r.hidden_write_bytes > 0,
+        "partition pipeline must hide some transfer under the async driver"
+    );
 
     let dir = results_dir();
     write_series(

@@ -3,10 +3,11 @@
 //! The thesis' main benchmark: four communication supersteps (gather
 //! splitter samples, bcast global splitters, alltoall bucket counts,
 //! alltoallv buckets), with coarse granularity — the ideal PEMS workload.
-//! The computation supersteps — the local sort and the root's sample
-//! sort — run batched on the engine pool through
-//! [`crate::vp::ComputeCtx`] (per-segment XLA bitonic tile-sort when
-//! `cfg.use_xla` and artifacts are present), byte-identical to the
+//! The computation supersteps — the local sort, the root's sample
+//! sort, and the step-10 receive-bucket merge — run batched on the
+//! engine pool through [`crate::vp::ComputeCtx`] (per-segment XLA
+//! bitonic tile-sort when `cfg.use_xla` and artifacts are present; the
+//! merge value-range-splits across workers), byte-identical to the
 //! serial path behind the unified `SimConfig::parallel_phases` switch.
 //! (The splitter-location pass stays serial on purpose: v-1 binary
 //! searches are cheaper than a pool dispatch.)
@@ -173,7 +174,8 @@ fn psrs_vp(
     // (~v·log(chunk) comparisons — microseconds), so a pool batch would
     // cost more in dispatch than it parallelizes and add noise to the
     // pool_jobs fan-out signal.  The pooled computation supersteps of
-    // this app are the local sort and the root's sample sort.
+    // this app are the local sort, the root's sample sort, and the
+    // step-10 receive-bucket merge.
     let mut bounds = vec![0usize; v + 1];
     {
         let (d, spl) = {
@@ -234,12 +236,14 @@ fn psrs_vp(
         vp.alltoallv_regions(&sends, &recvs)?;
     }
 
-    // ---- Step 10: merge received (sorted) buckets ----
+    // ---- Step 10: merge received (sorted) buckets (computation
+    // superstep, value-range split across the engine pool) ----
     // The input chunk has been scattered to its destinations: free it so
     // the merge buffer can reuse the space.
     vp.free(data);
     let out = vp.alloc_uninit::<u32>(cap)?;
     {
+        let ctx = vp.compute_ctx();
         let (r, o) = vp.slice_pair_mut(recv, out)?;
         let mut runs: Vec<&[u32]> = Vec::with_capacity(v);
         let mut at = 0;
@@ -247,7 +251,7 @@ fn psrs_vp(
             runs.push(&r[at..at + c]);
             at += c;
         }
-        merge_runs(&runs, &mut o[..total_in]);
+        ctx.merge_runs(&runs, &mut o[..total_in]);
     }
 
     // ---- Output digest (local fold; no superstep) ----
@@ -301,25 +305,6 @@ fn psrs_vp(
     Ok(())
 }
 
-/// k-way merge of sorted runs into `out`.
-fn merge_runs(runs: &[&[u32]], out: &mut [u32]) {
-    use std::cmp::Reverse;
-    use std::collections::BinaryHeap;
-    let mut heap: BinaryHeap<Reverse<(u32, usize, usize)>> = BinaryHeap::new();
-    for (r, run) in runs.iter().enumerate() {
-        if !run.is_empty() {
-            heap.push(Reverse((run[0], r, 0)));
-        }
-    }
-    for slot in out.iter_mut() {
-        let Reverse((val, r, i)) = heap.pop().expect("merge sized correctly");
-        *slot = val;
-        if i + 1 < runs[r].len() {
-            heap.push(Reverse((runs[r][i + 1], r, i + 1)));
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -330,13 +315,6 @@ mod tests {
             let total: usize = (0..v).map(|r| chunk_len(n, v, r)).sum();
             assert_eq!(total as u64, n);
         }
-    }
-
-    #[test]
-    fn merge_runs_produces_sorted() {
-        let mut out = vec![0u32; 7];
-        merge_runs(&[&[1, 5, 9], &[2, 2], &[0, 10]], &mut out);
-        assert_eq!(out, vec![0, 1, 2, 2, 5, 9, 10]);
     }
 
     #[test]

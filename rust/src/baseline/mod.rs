@@ -6,7 +6,16 @@
 //! I/O accounting.  For the thesis' problem-size/RAM ratios this is a
 //! 2-pass sort: read+write for run formation, read+write for the merge
 //! (4n total I/O volume), the bound PEMS2 is measured against.
+//!
+//! [`dist_sort`] is the distribution (sample) sort counterpart: the
+//! same 4n I/O volume, but its partition pass pipelines reads,
+//! classification and scatter writes (hiding transfer behind CPU work
+//! where the merge's tournament tree is synchronous), with
+//! equality buckets absorbing duplicate skew.  Both produce
+//! byte-identical output on the same seeded input, so they A/B cleanly.
 
+pub mod dist_sort;
 pub mod stxxl_sort;
 
-pub use stxxl_sort::{run_stxxl_sort, StxxlSortResult};
+pub use dist_sort::{run_dist_sort, run_dist_sort_masked, DistSortResult};
+pub use stxxl_sort::{run_stxxl_sort, run_stxxl_sort_masked, StxxlSortResult};

@@ -60,6 +60,19 @@ pub struct StxxlSortResult {
 /// Sort `n` random u32 keys with RAM budget `cfg.k * cfg.mu` and the
 /// disk set described by `cfg` (layout/D/driver/block are honoured).
 pub fn run_stxxl_sort(cfg: &SimConfig, n: u64, verify: bool) -> Result<StxxlSortResult> {
+    run_stxxl_sort_masked(cfg, n, verify, u32::MAX)
+}
+
+/// [`run_stxxl_sort`] with every generated key AND-masked by `mask`.
+/// A narrow mask (say `0x3F`) collapses the key space to a handful of
+/// distinct values — the adversarially duplicate-heavy workload the
+/// equivalence suite pins the distribution sort against.
+pub fn run_stxxl_sort_masked(
+    cfg: &SimConfig,
+    n: u64,
+    verify: bool,
+    mask: u32,
+) -> Result<StxxlSortResult> {
     let metrics = Arc::new(Metrics::new());
     let driver: Arc<dyn IoDriver> = match cfg.io {
         IoStyle::Async => Arc::new(AsyncIo::new(cfg.d)),
@@ -93,8 +106,9 @@ pub fn run_stxxl_sort(cfg: &SimConfig, n: u64, verify: bool) -> Result<StxxlSort
         while at < n {
             let take = buf.len().min((n - at) as usize);
             rng.fill_u32(&mut buf[..take]);
-            for &x in &buf[..take] {
-                checksum_in = checksum_in.wrapping_add(x as u64);
+            for x in &mut buf[..take] {
+                *x &= mask;
+                checksum_in = checksum_in.wrapping_add(*x as u64);
             }
             disks.write(IoClass::Delivery, in_base + at * 4, crate::util::bytes::as_bytes(&buf[..take]))?;
             at += take as u64;

@@ -70,7 +70,7 @@ impl Cli {
     /// `--p --v --k --mu --d --sigma --alpha --io --pems1 --alloc
     /// --layout --fragmented --indirect-slot --block --timeline --xla
     /// --seed --disk-dir --unordered --threads --serial --no-prefetch
-    /// --trace-out`.
+    /// --prefetch-depth --trace-out`.
     ///
     /// Sizes accept suffixes `k`/`m`/`g` (binary).
     pub fn sim_config(&self) -> Result<SimConfig> {
@@ -87,6 +87,7 @@ impl Cli {
             .compute_threads(self.get_or("threads", 0)?)
             .parallel_phases(!self.flag("serial"))
             .swap_prefetch(!self.flag("no-prefetch"))
+            .prefetch_depth(self.get_or("prefetch-depth", 0)?)
             .record_timeline(self.flag("timeline"))
             .use_xla(self.flag("xla"))
             .ordered_rounds(!self.flag("unordered"));
@@ -200,6 +201,21 @@ mod tests {
         assert_eq!(cfg.delivery, DeliveryMode::Pems1Indirect);
         assert_eq!(cfg.alloc, AllocPolicy::Bump);
         assert!(cfg.indirect_slot > 0);
+    }
+
+    #[test]
+    fn prefetch_depth_flag_lands_in_the_config() {
+        let cfg = Cli::parse(args("x --v 8 --k 2 --d 4 --io stxxl-file --prefetch-depth 3"))
+            .unwrap()
+            .sim_config()
+            .unwrap();
+        assert_eq!(cfg.prefetch_depth, 3);
+        // Default: derived (adaptive ceil(D/k) unless the env fills it).
+        let cfg = Cli::parse(args("x --v 8 --k 2 --d 4 --io stxxl-file"))
+            .unwrap()
+            .sim_config()
+            .unwrap();
+        assert_eq!(cfg.prefetch_depth, 0);
     }
 
     #[test]

@@ -194,6 +194,18 @@ pub struct SimConfig {
     /// `--no-prefetch`; the `PEMS2_NO_PREFETCH` environment variable
     /// overrides it to off process-wide — see [`no_prefetch_env`].
     pub swap_prefetch: bool,
+    /// Outstanding context prefetches per memory partition under the
+    /// swap pipeline.  `0` (the default) resolves adaptively to
+    /// `ceil(D/k)` — one read in flight per partition when `k >= D`
+    /// (the Def. 6.5.1 regime, where the `k` per-partition prefetches
+    /// already cover every disk), deeper when `k < D` so the per-node
+    /// in-flight read count still reaches `D` and no disk idles.  An
+    /// explicit value wins over the adaptive rule; the
+    /// `PEMS2_PREFETCH_DEPTH` environment variable fills the derived
+    /// default like `PEMS2_POOL_THREADS` does for the pool width — see
+    /// [`prefetch_depth_env`] and [`SimConfig::swap_prefetch_depth`].
+    /// Partition RAM scales as `(1 + depth)·kµ`.
+    pub prefetch_depth: usize,
     /// Record per-thread per-superstep timelines (Figs. 8.12–8.14).
     pub record_timeline: bool,
     /// Export a phase-attributed Chrome trace-event file to this path
@@ -267,6 +279,25 @@ impl SimConfig {
     /// stores never swap at all).
     pub fn swap_prefetch_active(&self) -> bool {
         self.swap_prefetch && self.io == IoStyle::Async && !no_prefetch_env()
+    }
+
+    /// Resolved prefetch depth: outstanding context prefetches (and
+    /// shadow buffers) per memory partition.  `0` when the swap
+    /// pipeline is off; otherwise the explicit
+    /// [`SimConfig::prefetch_depth`] when set, else the
+    /// `PEMS2_PREFETCH_DEPTH` environment override
+    /// ([`prefetch_depth_env`]) when present, else the adaptive
+    /// `ceil(D/k)` rule — depth 1 (the classic double buffer) for
+    /// `k >= D`, deeper for `k < D` shapes so the node still keeps ~`D`
+    /// reads in flight across its `k` partitions.
+    pub fn swap_prefetch_depth(&self) -> usize {
+        if !self.swap_prefetch_active() {
+            return 0;
+        }
+        if self.prefetch_depth != 0 {
+            return self.prefetch_depth;
+        }
+        prefetch_depth_env().unwrap_or_else(|| self.d.div_ceil(self.k).max(1))
     }
 
     /// Resolved trace-export path: the explicit [`SimConfig::trace_out`]
@@ -387,6 +418,18 @@ pub fn no_prefetch_env() -> bool {
     truthy(std::env::var("PEMS2_NO_PREFETCH").ok())
 }
 
+/// Prefetch-depth override from `PEMS2_PREFETCH_DEPTH` (an integer
+/// ≥ 1): a process-wide default for the per-partition prefetch depth
+/// wherever a config leaves it derived
+/// ([`SimConfig::prefetch_depth`]` == 0`), mirroring the
+/// `PEMS2_POOL_THREADS` scheme — an explicit config value always wins.
+/// `0` is rejected (falls back to the adaptive rule): depth 0 is the
+/// pipeline-off state, which has its own switches (`--no-prefetch` /
+/// `PEMS2_NO_PREFETCH`).
+pub fn prefetch_depth_env() -> Option<usize> {
+    std::env::var("PEMS2_PREFETCH_DEPTH").ok()?.parse().ok().filter(|&d| d > 0)
+}
+
 /// Trace-export path from `PEMS2_TRACE_OUT` (a non-empty file path):
 /// a process-wide default wherever a config leaves
 /// [`SimConfig::trace_out`] unset, mirroring the other `PEMS2_*`
@@ -431,6 +474,7 @@ impl Default for SimConfigBuilder {
                 compute_threads: 0,
                 parallel_phases: true,
                 swap_prefetch: true,
+                prefetch_depth: 0,
                 record_timeline: false,
                 trace_out: None,
                 use_xla: false,
@@ -488,6 +532,8 @@ impl SimConfigBuilder {
         parallel_phases: bool,
         /// Swap-pipeline (double-buffer + prefetch) switch.
         swap_prefetch: bool,
+        /// Prefetch depth per partition (0 = adaptive `ceil(D/k)`).
+        prefetch_depth: usize,
         /// Record timelines.
         record_timeline: bool,
         /// Enable XLA compute path.
@@ -644,6 +690,51 @@ mod tests {
             .unwrap();
         assert!(!c.swap_prefetch_active());
         assert!(!mk(IoStyle::Mem, true).swap_prefetch_active());
+    }
+
+    #[test]
+    fn prefetch_depth_resolves_adaptively() {
+        let mk = |k: usize, d: usize, depth: usize| {
+            SimConfig::builder()
+                .v(8)
+                .k(k)
+                .d(d)
+                .io(IoStyle::Async)
+                .prefetch_depth(depth)
+                .build()
+                .unwrap()
+        };
+        // Pipeline off (unix driver / --no-prefetch): depth is 0.
+        let c = SimConfig::builder().v(8).k(2).d(4).build().unwrap();
+        assert_eq!(c.swap_prefetch_depth(), 0, "unix driver has no pipeline");
+        let c = SimConfig::builder()
+            .v(8)
+            .k(2)
+            .d(4)
+            .io(IoStyle::Async)
+            .swap_prefetch(false)
+            .build()
+            .unwrap();
+        assert_eq!(c.swap_prefetch_depth(), 0, "switched-off pipeline has depth 0");
+        if no_prefetch_env() {
+            return; // the PEMS2_NO_PREFETCH CI leg: every depth resolves to 0
+        }
+        // Explicit depth always wins.
+        assert_eq!(mk(2, 4, 3).swap_prefetch_depth(), 3);
+        if prefetch_depth_env().is_none() {
+            // Adaptive rule: ceil(D/k), floored at 1 (k >= D keeps the
+            // classic single-shadow double buffer).
+            assert_eq!(mk(4, 2, 0).swap_prefetch_depth(), 1);
+            assert_eq!(mk(2, 2, 0).swap_prefetch_depth(), 1);
+            assert_eq!(mk(2, 4, 0).swap_prefetch_depth(), 2);
+            assert_eq!(mk(1, 3, 0).swap_prefetch_depth(), 3);
+        } else {
+            assert_eq!(mk(2, 4, 0).swap_prefetch_depth(), prefetch_depth_env().unwrap());
+        }
+        // Env parser contract: integers >= 1 only.
+        assert_eq!("2".parse::<usize>().ok().filter(|&d| d > 0), Some(2));
+        assert_eq!("0".parse::<usize>().ok().filter(|&d| d > 0), None);
+        assert_eq!("x".parse::<usize>().ok().filter(|&d| d > 0), None);
     }
 
     #[test]

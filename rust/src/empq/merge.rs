@@ -27,7 +27,10 @@
 //! [`WorkerPool`], with an overlap window for caller bookkeeping) and
 //! [`merge_write_segments`] (tournament-merge the sorted segments and
 //! stream the result out in block-sized chunks, so merge CPU overlaps
-//! the async driver's write-behind).
+//! the async driver's write-behind).  [`parallel_merge_into`] is the
+//! pooled RAM-to-RAM merge (value-range splitting, one chunk job per
+//! quantile window) shared by PSRS step 10's receive-bucket merge and
+//! the distribution sort's bucket reassembly.
 
 use crate::disk::DiskSet;
 use crate::error::Result;
@@ -426,10 +429,22 @@ pub fn sort_segments<T: Record>(
 /// whose `Ord`-equality implies byte-equality (every in-tree `Record`),
 /// the result is byte-identical to sorting the concatenation directly.
 pub fn merge_segments_into<T: Record>(segments: &[Vec<T>], out: &mut [T]) {
-    debug_assert!(segments.iter().all(|s| s.windows(2).all(|w| w[0] <= w[1])));
-    let total: usize = segments.iter().map(Vec::len).sum();
-    debug_assert_eq!(total, out.len(), "merge_segments_into: output size mismatch");
-    let live: Vec<&Vec<T>> = segments.iter().filter(|s| !s.is_empty()).collect();
+    let runs: Vec<&[T]> = segments.iter().map(Vec::as_slice).collect();
+    merge_runs_into(&runs, out);
+}
+
+/// [`merge_segments_into`] over borrowed runs — the serial tournament
+/// core shared by the pooled value-range splitter
+/// ([`parallel_merge_into`]), which hands each chunk job a set of run
+/// *sub*-slices.
+pub fn merge_runs_into<T: Record>(runs: &[&[T]], out: &mut [T]) {
+    debug_assert!(runs.iter().all(|s| s.windows(2).all(|w| w[0] <= w[1])));
+    let total: usize = runs.iter().map(|s| s.len()).sum();
+    debug_assert_eq!(total, out.len(), "merge_runs_into: output size mismatch");
+    // Filtering empty runs preserves the relative order of the live
+    // ones, so tie-breaking by live index equals tie-breaking by
+    // original run index.
+    let live: Vec<&[T]> = runs.iter().filter(|s| !s.is_empty()).copied().collect();
     if live.len() <= 1 {
         if let Some(s) = live.first() {
             out.copy_from_slice(s);
@@ -441,12 +456,97 @@ pub fn merge_segments_into<T: Record>(segments: &[Vec<T>], out: &mut [T]) {
     let mut tree = TournamentTree::new(&keys);
     for slot in out.iter_mut() {
         let w = tree.winner();
-        let e = keys[w].take().expect("merge sized to the segment total");
+        let e = keys[w].take().expect("merge sized to the run total");
         pos[w] += 1;
         keys[w] = live[w].get(pos[w]).copied();
         tree.update(&keys);
         *slot = e;
     }
+}
+
+/// Don't bother splitting a merge across the pool below this many
+/// elements — chunk bookkeeping would cost more than the merge.
+const PARALLEL_MERGE_MIN: usize = 1 << 12;
+
+/// Merge already-sorted `runs` into `out` by **value-range splitting**
+/// on the pool: sample the runs, cut every run at the sample quantiles,
+/// and tournament-merge each value range into its (disjoint,
+/// presummable) output window as one pool job — the receive-bucket
+/// merge discipline the distribution sort and PSRS step 10 share.
+///
+/// Byte-identical to the serial [`merge_runs_into`]: every cut is at
+/// `partition_point(|x| x < boundary)`, so equal elements never span a
+/// chunk boundary, and within a chunk ties break by run index exactly
+/// as the serial tournament does.  Falls back to the serial core when
+/// `pool` is `None`, the pool is 1 wide, or the input is small.
+pub fn parallel_merge_into<T: Record>(
+    runs: &[&[T]],
+    out: &mut [T],
+    pool: Option<&WorkerPool>,
+    metrics: &Metrics,
+) {
+    let _span = crate::metrics::trace::span(crate::metrics::Phase::Merge);
+    let total: usize = runs.iter().map(|s| s.len()).sum();
+    debug_assert_eq!(total, out.len(), "parallel_merge_into: output size mismatch");
+    let threads = pool.map_or(1, WorkerPool::threads);
+    let live = runs.iter().filter(|s| !s.is_empty()).count();
+    if threads < 2 || live < 2 || total < PARALLEL_MERGE_MIN.max(2 * threads) {
+        merge_runs_into(runs, out);
+        return;
+    }
+    let pool = pool.expect("threads >= 2 implies a pool");
+    // Proportional sampling: each run contributes samples at evenly
+    // spaced positions, ~OVERSAMPLE·threads in total, so the sorted
+    // sample's quantiles approximate the merged output's quantiles.
+    const OVERSAMPLE: usize = 8;
+    let mut samples: Vec<T> = Vec::new();
+    for r in runs {
+        let s = (r.len() * OVERSAMPLE * threads).div_ceil(total).min(r.len());
+        for j in 0..s {
+            samples.push(r[j * r.len() / s]);
+        }
+    }
+    samples.sort_unstable();
+    // Quantile boundaries, deduplicated (a value-heavy sample would
+    // otherwise produce empty chunks); chunk c covers values in
+    // [bounds[c-1], bounds[c]).
+    let mut bounds: Vec<T> = Vec::new();
+    for c in 1..threads {
+        let b = samples[c * samples.len() / threads];
+        if bounds.last().map_or(true, |l| *l < b) {
+            bounds.push(b);
+        }
+    }
+    if bounds.is_empty() {
+        merge_runs_into(runs, out);
+        return;
+    }
+    // Per-run cut positions: cuts[r] = run r's first index >= each
+    // boundary.  Equal values land entirely in the chunk *starting* at
+    // their boundary, never split across two.
+    let cuts: Vec<Vec<usize>> = runs
+        .iter()
+        .map(|r| bounds.iter().map(|b| r.partition_point(|x| x < b)).collect())
+        .collect();
+    let nchunks = bounds.len() + 1;
+    metrics.pool_batch(nchunks as u64);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(nchunks);
+    let mut rest = out;
+    for c in 0..nchunks {
+        let mut chunk_runs: Vec<&[T]> = Vec::with_capacity(runs.len());
+        let mut chunk_len = 0usize;
+        for (r, run) in runs.iter().enumerate() {
+            let lo = if c == 0 { 0 } else { cuts[r][c - 1] };
+            let hi = if c == nchunks - 1 { run.len() } else { cuts[r][c] };
+            chunk_len += hi - lo;
+            chunk_runs.push(&run[lo..hi]);
+        }
+        let (win, tail) = rest.split_at_mut(chunk_len);
+        rest = tail;
+        jobs.push(Box::new(move || merge_runs_into(&chunk_runs, win)));
+    }
+    debug_assert!(rest.is_empty(), "chunk windows must cover the output exactly");
+    pool.run_scoped(jobs);
 }
 
 /// Tournament-merge sorted `segments` and stream the result to
@@ -842,6 +942,59 @@ mod tests {
         let mut back = vec![0u32; want.len()];
         disks.read(IoClass::Swap, 64, as_bytes_mut(&mut back)).unwrap();
         assert_eq!(back, want, "streamed output is the full sorted merge");
+    }
+
+    #[test]
+    fn parallel_merge_matches_serial_and_meters() {
+        // Large enough to clear PARALLEL_MERGE_MIN, with duplicates and
+        // skewed run lengths so the quantile cuts are exercised.
+        let mut rng = XorShift64::new(55);
+        let mut segs: Vec<Vec<u32>> = vec![
+            (0..9000).map(|_| rng.next_u32() % 500).collect(), // duplicate-heavy
+            (0..100).map(|_| rng.next_u32()).collect(),
+            Vec::new(),
+            (0..4000).map(|_| rng.next_u32() % 500).collect(),
+        ];
+        for s in segs.iter_mut() {
+            s.sort_unstable();
+        }
+        let runs: Vec<&[u32]> = segs.iter().map(Vec::as_slice).collect();
+        let total: usize = runs.iter().map(|r| r.len()).sum();
+        let mut serial = vec![0u32; total];
+        merge_runs_into(&runs, &mut serial);
+        let mut want = segs.concat();
+        want.sort_unstable();
+        assert_eq!(serial, want);
+        let pool = WorkerPool::new(3);
+        let metrics = Metrics::new();
+        let mut par = vec![0u32; total];
+        parallel_merge_into(&runs, &mut par, Some(&pool), &metrics);
+        assert_eq!(par, serial, "pooled value-range split must be byte-identical");
+        assert!(metrics.snapshot().pool_batches > 0, "large merge must use the pool");
+        // No pool: same bytes through the serial core.
+        let mut nop = vec![0u32; total];
+        parallel_merge_into(&runs, &mut nop, None, &metrics);
+        assert_eq!(nop, serial);
+    }
+
+    #[test]
+    fn parallel_merge_degenerate_shapes() {
+        let pool = WorkerPool::new(2);
+        let metrics = Metrics::new();
+        // Empty input.
+        let mut out: Vec<u32> = Vec::new();
+        parallel_merge_into::<u32>(&[], &mut out, Some(&pool), &metrics);
+        // One run (already sorted): pure copy.
+        let a: Vec<u32> = (0..100).collect();
+        let mut out = vec![0u32; 100];
+        parallel_merge_into(&[&a[..]], &mut out, Some(&pool), &metrics);
+        assert_eq!(out, a);
+        // All elements equal: boundary dedup collapses to one chunk.
+        let b = vec![7u32; 10_000];
+        let c = vec![7u32; 10_000];
+        let mut out = vec![0u32; 20_000];
+        parallel_merge_into(&[&b[..], &c[..]], &mut out, Some(&pool), &metrics);
+        assert!(out.iter().all(|&x| x == 7));
     }
 
     #[test]

@@ -3,7 +3,10 @@
 //! Writes are *write-behind*: the call copies the buffer, enqueues a
 //! request on the worker thread that owns the target disk, and returns
 //! immediately, letting the virtual processor overlap computation and
-//! communication with disk I/O.  Reads come in two flavours: the
+//! communication with disk I/O.  [`IoDriver::write_at_async`] is the
+//! zero-copy variant: the caller keeps the source buffer frozen until
+//! the returned [`WriteTicket`] completes — what the distribution
+//! sort's bucket-run scatter writes use.  Reads come in two flavours: the
 //! blocking [`IoDriver::read_at`] (ordered after pending writes to the
 //! same disk — the barrier semantics of §5.1.2) and the deferred
 //! [`IoDriver::read_at_async`], which enqueues the read on the disk's
@@ -23,7 +26,10 @@
 //! silently dropped.
 
 use crate::error::Result;
-use crate::io::{DiskFile, IoDriver, IoFault, ReadCompletion, ReadDst, ReadTicket};
+use crate::io::{
+    DiskFile, IoDriver, IoFault, ReadCompletion, ReadDst, ReadTicket, WriteCompletion,
+    WriteSrc, WriteTicket,
+};
 use crate::metrics::trace;
 use std::collections::HashMap;
 use std::fs::File;
@@ -45,6 +51,16 @@ enum Req {
         dst: ReadDst,
         disk: usize,
         completion: ReadCompletion,
+    },
+    /// Zero-copy deferred write: the caller keeps the source buffer
+    /// alive and frozen until the ticket completes ([`WriteSrc`]'s
+    /// contract), so unlike [`Req::Write`] no copy is queued.
+    WriteZc {
+        file: Arc<File>,
+        off: u64,
+        src: WriteSrc,
+        disk: usize,
+        completion: WriteCompletion,
     },
 }
 
@@ -103,6 +119,20 @@ impl AsyncIo {
                                     error: e.to_string(),
                                 });
                             }
+                            disk
+                        }
+                        Req::WriteZc { file, off, src, disk, completion } => {
+                            let data = unsafe {
+                                std::slice::from_raw_parts(src.ptr, src.len)
+                            };
+                            let r = file.write_all_at(data, off).map_err(|e| IoFault {
+                                disk,
+                                off,
+                                len: src.len,
+                                op: "write",
+                                error: e.to_string(),
+                            });
+                            completion.complete(r);
                             disk
                         }
                         Req::Read { file, off, dst, disk, completion } => {
@@ -223,6 +253,16 @@ impl IoDriver for AsyncIo {
         Ok(ticket)
     }
 
+    fn write_at_async(&self, disk: &DiskFile, off: u64, src: WriteSrc) -> Result<WriteTicket> {
+        let file = self.handle_for(disk)?;
+        let (ticket, completion) = WriteTicket::pending();
+        self.enqueue(
+            disk.index,
+            Req::WriteZc { file, off, src, disk: disk.index, completion },
+        )?;
+        Ok(ticket)
+    }
+
     fn flush_disk(&self, disk_index: usize) -> Result<()> {
         self.wait_disk(disk_index)
     }
@@ -337,6 +377,22 @@ mod tests {
         let mut buf = [0u8; 8];
         let err = d.read_at(&disk, 0, &mut buf).unwrap_err().to_string();
         assert!(err.contains("disk 0") && err.contains("512"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn failed_zero_copy_write_reports_through_the_ticket() {
+        let (dir, disk) = scratch_file("zc-fault", false);
+        let d = AsyncIo::new(1);
+        let data = vec![9u8; 128];
+        let t = d
+            .write_at_async(&disk, 256, WriteSrc { ptr: data.as_ptr(), len: data.len() })
+            .unwrap();
+        let err = t.wait().unwrap_err().to_string();
+        assert!(err.contains("disk 0") && err.contains("256"), "{err}");
+        assert!(err.contains("write"), "{err}");
+        // The ticketed path does not pollute the flush fault list.
+        d.flush_all().unwrap();
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -144,6 +144,90 @@ impl ReadCompletion {
     }
 }
 
+/// Source of an asynchronous zero-copy write: a raw pointer + length
+/// handed across to the driver's worker thread.  The dual of
+/// [`ReadDst`], introduced for the distribution sort's write-behind
+/// bucket runs, where copying each run into the driver's deferred-write
+/// queue would double the partition pass' memory traffic.
+///
+/// # Safety contract
+/// The caller guarantees the region stays valid and **unmodified** by
+/// anyone until the returned [`WriteTicket`] completes (the dist-sort
+/// run buffers satisfy this: a run buffer is only recycled after its
+/// ticket is waited on).
+pub struct WriteSrc {
+    /// Source base pointer.
+    pub ptr: *const u8,
+    /// Bytes to write.
+    pub len: usize,
+}
+
+// SAFETY: the pointer crosses to exactly one worker thread, which only
+// reads it, and the caller keeps the region alive and frozen until the
+// ticket completes (see the contract above).
+unsafe impl Send for WriteSrc {}
+
+/// Completion token for a deferred zero-copy write.  Same semantics as
+/// [`ReadTicket`] (cloneable, idempotent wait); a separate type so the
+/// two directions' safety contracts cannot be mixed up.
+#[derive(Debug, Clone)]
+pub struct WriteTicket {
+    /// `None` = the write completed synchronously at issue time.
+    inner: Option<Arc<TicketState>>,
+}
+
+impl WriteTicket {
+    /// A ticket that is already complete (synchronous drivers).
+    pub fn ready() -> WriteTicket {
+        WriteTicket { inner: None }
+    }
+
+    /// A pending ticket plus its completion handle for the worker side.
+    pub fn pending() -> (WriteTicket, WriteCompletion) {
+        let state = Arc::new(TicketState { done: Mutex::new(None), cv: Condvar::new() });
+        (WriteTicket { inner: Some(state.clone()) }, WriteCompletion { state })
+    }
+
+    /// Block until the write finished; surfaces the worker-side fault
+    /// (disk index + offset) as an I/O error.
+    pub fn wait(&self) -> Result<()> {
+        let Some(state) = &self.inner else { return Ok(()) };
+        let mut done = state.done.lock().unwrap();
+        while done.is_none() {
+            done = state.cv.wait(done).unwrap();
+        }
+        match done.as_ref().unwrap() {
+            Ok(()) => Ok(()),
+            Err(fault) => Err(crate::error::Error::Io(std::io::Error::other(
+                fault.to_string(),
+            ))),
+        }
+    }
+
+    /// True once the write finished (without blocking).
+    pub fn is_done(&self) -> bool {
+        match &self.inner {
+            None => true,
+            Some(state) => state.done.lock().unwrap().is_some(),
+        }
+    }
+}
+
+/// Worker-side handle used to complete a [`WriteTicket`].
+pub struct WriteCompletion {
+    state: Arc<TicketState>,
+}
+
+impl WriteCompletion {
+    /// Mark the write done and wake all waiters.
+    pub fn complete(self, result: std::result::Result<(), IoFault>) {
+        let mut done = self.state.done.lock().unwrap();
+        *done = Some(result);
+        drop(done);
+        self.state.cv.notify_all();
+    }
+}
+
 /// Abstract positional I/O to one disk file.
 ///
 /// All offsets are *physical* (post-layout, post-fragmentation-permutation);
@@ -169,6 +253,24 @@ pub trait IoDriver: Send + Sync {
         let buf = unsafe { std::slice::from_raw_parts_mut(dst.ptr, dst.len) };
         self.read_at(disk, off, buf)?;
         Ok(ReadTicket::ready())
+    }
+
+    /// Positional write that may complete asynchronously **without
+    /// copying** `src`; the returned ticket reports completion.  Unlike
+    /// [`IoDriver::write_at`] (which defers by copying), the caller
+    /// keeps ownership of the source region and must keep it frozen
+    /// until the ticket completes — the contract the distribution
+    /// sort's double-buffered bucket runs rely on to stream writes
+    /// behind the partition pass.  Per-disk request queues order the
+    /// write after earlier operations on the same disk.  The default
+    /// performs the write synchronously at issue time (same bytes, no
+    /// overlap).
+    ///
+    /// See [`WriteSrc`] for the source-buffer safety contract.
+    fn write_at_async(&self, disk: &DiskFile, off: u64, src: WriteSrc) -> Result<WriteTicket> {
+        let data = unsafe { std::slice::from_raw_parts(src.ptr, src.len) };
+        self.write_at(disk, off, data)?;
+        Ok(WriteTicket::ready())
     }
 
     /// Wait for all outstanding deferred operations on `disk`.
@@ -286,6 +388,68 @@ mod tests {
         ticket.wait().unwrap();
         assert_eq!(buf, vec![0x5C; 256]);
         std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn default_write_at_async_is_synchronous_and_correct() {
+        let driver = UnixIo::new();
+        let (path, disk) = tmpfile();
+        let data = vec![0x3D; 512];
+        let ticket = driver
+            .write_at_async(&disk, 2048, WriteSrc { ptr: data.as_ptr(), len: data.len() })
+            .unwrap();
+        assert!(ticket.is_done(), "blocking default completes at issue time");
+        ticket.wait().unwrap();
+        let mut back = vec![0u8; 512];
+        driver.read_at(&disk, 2048, &mut back).unwrap();
+        assert_eq!(back, data);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn async_write_ticket_round_trip_without_copy() {
+        let driver = AsyncIo::new(2);
+        let (path, disk) = tmpfile();
+        let data = vec![0x71; 4096];
+        let ticket = driver
+            .write_at_async(&disk, 8192, WriteSrc { ptr: data.as_ptr(), len: data.len() })
+            .unwrap();
+        // The source buffer must stay frozen until here.
+        ticket.wait().unwrap();
+        let mut back = vec![0u8; 4096];
+        driver.read_at(&disk, 8192, &mut back).unwrap();
+        assert_eq!(back, data);
+        // Ordering: a queued read after a queued zero-copy write to the
+        // same disk observes the written bytes.
+        let data2 = vec![0x4E; 1024];
+        let t2 = driver
+            .write_at_async(&disk, 0, WriteSrc { ptr: data2.as_ptr(), len: data2.len() })
+            .unwrap();
+        let mut back2 = vec![0u8; 1024];
+        let rt = driver
+            .read_at_async(&disk, 0, ReadDst { ptr: back2.as_mut_ptr(), len: back2.len() })
+            .unwrap();
+        rt.wait().unwrap();
+        t2.wait().unwrap();
+        assert_eq!(back2, data2);
+        driver.flush_all().unwrap();
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn write_ticket_fault_carries_disk_and_offset() {
+        let (t, c) = WriteTicket::pending();
+        assert!(!t.is_done());
+        c.complete(Err(IoFault {
+            disk: 1,
+            off: 4096,
+            len: 128,
+            op: "write",
+            error: "boom".into(),
+        }));
+        let err = t.wait().unwrap_err().to_string();
+        assert!(err.contains("disk 1"), "fault must name the disk: {err}");
+        assert!(err.contains("4096"), "fault must name the offset: {err}");
     }
 
     #[test]

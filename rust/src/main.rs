@@ -39,6 +39,7 @@ fn real_main(args: Vec<String>) -> Result<()> {
         "time-forward" => cmd_time_forward(&cli),
         "sssp" => cmd_sssp(&cli),
         "stxxl-sort" => cmd_stxxl_sort(&cli),
+        "dist-sort" => cmd_dist_sort(&cli),
         "alltoallv" => cmd_alltoallv(&cli),
         "info" => cmd_info(&cli),
         "help" | "--help" | "-h" => {
@@ -65,6 +66,9 @@ COMMANDS
   time-forward  time-forward DAG processing on the bulk EM priority queue
   sssp          semi-external Dijkstra on the bulk EM priority queue
   stxxl-sort    hand-crafted EM multiway-merge sort baseline
+                (--algo dist runs the distribution sort instead)
+  dist-sort     EM distribution (sample) sort baseline: pipelined
+                sample/partition/bucket-sort with equality buckets
   alltoallv     a single Alltoallv over the whole data set (Fig. 7.2)
   info          print the resolved configuration and disk-space needs
 
@@ -94,6 +98,9 @@ SIMULATION FLAGS (Appendix B.3)
                   (double-buffered partitions + shadow prefetch; takes
                   effect with --io stxxl-file); PEMS2_NO_PREFETCH=1 does
                   the same globally — off = the legacy synchronous path
+  --prefetch-depth N  shadow buffers (and prefetches in flight) per
+                  partition for the swap pipeline; 0 = adaptive
+                  ceil(D/k), env PEMS2_PREFETCH_DEPTH overrides   [0]
   --timeline      record per-thread superstep timelines (Figs. 8.12-8.14)
   --trace-out FILE  record phase-attributed spans (compute, comm, swap,
                   spill, pool jobs) and write a Chrome/Perfetto trace
@@ -113,6 +120,7 @@ WORKLOAD FLAGS
   --src N         source node (sssp)                                [0]
   --serial-spill  disable the empq worker-pool spill pipeline (sssp)
   --elems N       elements per VP (alltoallv)
+  --algo A        merge | dist — sort algorithm (stxxl-sort)    [merge]
   --verify        verify the result (extra supersteps)
   --timeline-out FILE   write the gnuplot timeline here
 ";
@@ -303,6 +311,17 @@ fn cmd_sssp(cli: &Cli) -> Result<()> {
 }
 
 fn cmd_stxxl_sort(cli: &Cli) -> Result<()> {
+    // `--algo dist` makes the sort benchmark run the distribution sort
+    // instead of the multiway merge — one command, A/B by flag.
+    match cli.options.get("algo").map(String::as_str) {
+        Some("dist") => return cmd_dist_sort(cli),
+        Some("merge") | None => {}
+        Some(other) => {
+            return Err(pems2::error::Error::usage(format!(
+                "unknown --algo '{other}' (expected merge | dist)"
+            )))
+        }
+    }
     let cfg = cli.sim_config()?;
     let n: u64 = cli.get_or("n", 1_000_000)?;
     let session = cfg.trace_path().map(pems2::metrics::trace::Session::start);
@@ -313,6 +332,29 @@ fn cmd_stxxl_sort(cli: &Cli) -> Result<()> {
     println!("wall_seconds       {:.3}", r.wall);
     println!("charged_seconds    {:.3}", r.charged);
     println!("io_volume          {}", human_bytes(r.metrics.total_disk_bytes()));
+    print_counters(&r.metrics);
+    print_phase_table(trace.as_ref());
+    verdict(r.verified)
+}
+
+fn cmd_dist_sort(cli: &Cli) -> Result<()> {
+    let cfg = cli.sim_config()?;
+    let n: u64 = cli.get_or("n", 1_000_000)?;
+    let session = cfg.trace_path().map(pems2::metrics::trace::Session::start);
+    let r = pems2::baseline::run_dist_sort(&cfg, n, cli.flag("verify"))?;
+    let trace = session.map(|s| s.finish());
+    println!("app                dist-sort");
+    println!("n                  {}", r.n);
+    println!("wall_seconds       {:.3}", r.wall);
+    println!("charged_seconds    {:.3}", r.charged);
+    println!("io_volume          {}", human_bytes(r.metrics.total_disk_bytes()));
+    println!("buckets            {}", r.buckets);
+    println!("resplits           {} ({} giveups)", r.resplits, r.resplit_giveups);
+    println!(
+        "hidden_io          {} read / {} write",
+        human_bytes(r.hidden_read_bytes),
+        human_bytes(r.hidden_write_bytes)
+    );
     print_counters(&r.metrics);
     print_phase_table(trace.as_ref());
     verdict(r.verified)

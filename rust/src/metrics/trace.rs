@@ -79,7 +79,7 @@ const STORE_CAP: usize = 1 << 20;
 const MAX_STEPS: usize = 1 << 16;
 
 /// Number of [`Phase`] variants.
-pub const PHASES: usize = 9;
+pub const PHASES: usize = 10;
 
 /// Simulation phase a span is attributed to (the Figs. 8.12–8.14 axes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -106,6 +106,10 @@ pub enum Phase {
     /// Barrier / turn waits (superstep barriers, internal barriers,
     /// partition-gate turns).
     Barrier = 8,
+    /// Distribution-sort partition stage: classifying a streamed input
+    /// chunk into splitter buckets (the middle stage of the
+    /// read/partition/write pipeline in `baseline/dist_sort.rs`).
+    Partition = 9,
 }
 
 impl Phase {
@@ -120,6 +124,7 @@ impl Phase {
         Phase::Merge,
         Phase::PoolJob,
         Phase::Barrier,
+        Phase::Partition,
     ];
 
     /// Stable snake_case name (JSON categories, table headers).
@@ -134,6 +139,7 @@ impl Phase {
             Phase::Merge => "merge",
             Phase::PoolJob => "pool_job",
             Phase::Barrier => "barrier",
+            Phase::Partition => "partition",
         }
     }
 

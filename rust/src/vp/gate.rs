@@ -105,6 +105,30 @@ impl PartitionGate {
         Some(self.state.lock().unwrap().next_turn)
     }
 
+    /// The next `n` rounds ordered turn-taking will admit, in admission
+    /// order, skipping retired rounds (empty for unordered gates).  The
+    /// multi-turn form of [`PartitionGate::peek_next_turn`], used by the
+    /// depth-`d` swap pipeline to keep several successors' prefetches in
+    /// flight.  Rounds beyond the caller's VP count may appear at the
+    /// tail (the gate does not know how many rounds exist); callers
+    /// filter on their own bound.
+    pub fn peek_next_turns(&self, n: usize) -> Vec<usize> {
+        if !self.ordered || n == 0 {
+            return Vec::new();
+        }
+        let st = self.state.lock().unwrap();
+        let mut out = Vec::with_capacity(n);
+        let mut turn = st.next_turn;
+        while out.len() < n {
+            while st.retired.contains(&turn) {
+                turn += 1;
+            }
+            out.push(turn);
+            turn += 1;
+        }
+        out
+    }
+
     /// Reset turn counting for a new internal superstep (called by the
     /// barrier leader).
     pub fn reset_turns(&self) {
@@ -194,6 +218,19 @@ mod tests {
         gate.release();
         // Unordered gates expose no schedule.
         assert_eq!(PartitionGate::new(false).peek_next_turn(), None);
+    }
+
+    #[test]
+    fn peek_next_turns_skips_retired_in_order() {
+        let gate = PartitionGate::new(true);
+        assert_eq!(gate.peek_next_turns(3), vec![0, 1, 2]);
+        gate.acquire_turn(0);
+        gate.release();
+        gate.retire(2);
+        // Post-admission from round 1, round 2 retired: 1, 3, 4.
+        assert_eq!(gate.peek_next_turns(3), vec![1, 3, 4]);
+        assert_eq!(gate.peek_next_turns(0), Vec::<usize>::new());
+        assert_eq!(PartitionGate::new(false).peek_next_turns(2), Vec::<usize>::new());
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //!
 //! Submodules: [`gate`] (Def. 6.5.1 turn-taking), [`store`] (where
 //! contexts live: explicit/mmap/mem backends), [`swap`] (the
-//! asynchronous double-buffered swap pipeline), and [`superstep`] (the
+//! asynchronous multi-buffered swap pipeline), and [`superstep`] (the
 //! [`ComputeCtx`] handle that runs the apps' computation supersteps on
 //! the engine pool).
 
@@ -177,6 +177,35 @@ impl NodeShared {
         class: crate::metrics::IoClass,
     ) -> Result<()> {
         self.store.raw_read(off, out, class)
+    }
+
+    /// Cross-barrier prefetch warm-up: issue the *first* gate turns'
+    /// context prefetches for every partition while all VPs are still
+    /// parked in the barrier.  Without this, round 0 of each internal
+    /// superstep always misses (there is no predecessor admission to
+    /// issue its prefetch).  Leader-hook only — the quiescence of every
+    /// sibling VP is what substitutes for holding the gates; must run
+    /// after `reset_turns` (so `peek_next_turns` names the new
+    /// schedule's first rounds) and after the barrier flush (so the
+    /// reads queue behind all prior write-behind on the disk FIFOs).
+    pub(crate) fn warm_prefetch(&self) {
+        if !self.store.prefetch_enabled() {
+            return;
+        }
+        let depth = self.cfg.swap_prefetch_depth();
+        for p in 0..self.cfg.k {
+            for next in self.gates[p].peek_next_turns(depth) {
+                let target = next * self.cfg.k + p;
+                if target >= self.v_per_p() {
+                    break; // rounds only grow from here
+                }
+                let regions = self.allocs[target].lock().unwrap().allocated_regions();
+                if regions.is_empty() {
+                    continue;
+                }
+                let _ = self.store.prefetch(target, regions);
+            }
+        }
     }
 }
 
@@ -344,31 +373,38 @@ impl Vp {
         Ok(())
     }
 
-    /// Pipeline the next context switch: ask the gate who runs next on
-    /// this partition (Def. 6.5.1 ordered turns) and issue asynchronous
-    /// reads of that VP's allocated regions into the shadow buffer.
-    /// Best-effort — an issue failure just means the successor takes the
-    /// blocking path (where the error properly surfaces).
+    /// Pipeline the next context switches: ask the gate who runs next
+    /// on this partition (Def. 6.5.1 ordered turns) and issue
+    /// asynchronous reads of the next `depth` VPs' allocated regions
+    /// into the partition's shadow buffers (in-flight targets dedup to
+    /// no-ops inside the scheduler).  Best-effort — an issue failure
+    /// just means the successor takes the blocking path (where the
+    /// error properly surfaces).
     fn prefetch_successor(&self) {
         let sh = &self.shared;
         if !sh.store.prefetch_enabled() {
             return;
         }
         let p = self.partition();
-        let Some(next) = sh.gates[p].peek_next_turn() else { return };
-        let target = next * sh.cfg.k + p;
-        if target >= sh.v_per_p() || target == self.local {
-            return;
+        let depth = sh.cfg.swap_prefetch_depth();
+        for next in sh.gates[p].peek_next_turns(depth) {
+            let target = next * sh.cfg.k + p;
+            if target >= sh.v_per_p() {
+                break; // rounds only grow from here
+            }
+            if target == self.local {
+                continue;
+            }
+            // The target's allocator is stable until it next holds this
+            // gate, which is exactly when the prefetch is consumed; a
+            // free() slipping in without the gate shows up as a
+            // region-list mismatch and falls back to the blocking path.
+            let regions = sh.allocs[target].lock().unwrap().allocated_regions();
+            if regions.is_empty() {
+                continue;
+            }
+            let _ = sh.store.prefetch(target, regions);
         }
-        // The target's allocator is stable until it next holds this
-        // gate, which is exactly when the prefetch is consumed; a free()
-        // slipping in without the gate shows up as a region-list
-        // mismatch and falls back to the blocking path.
-        let regions = sh.allocs[target].lock().unwrap().allocated_regions();
-        if regions.is_empty() {
-            return;
-        }
-        let _ = sh.store.prefetch(target, regions);
     }
 
     /// The regions a swap-out must write: allocated ∩ dirty (under the
@@ -448,6 +484,7 @@ impl Vp {
             for g in &shared.gates {
                 g.reset_turns();
             }
+            shared.warm_prefetch();
             // Node 0's leader counts the (global) virtual superstep; the
             // cost model charges L once per superstep, matching the
             // thesis' accounting.  The same leader is the trace drain
@@ -479,6 +516,7 @@ impl Vp {
             for g in &shared.gates {
                 g.reset_turns();
             }
+            shared.warm_prefetch();
             // Internal supersteps drain too (same quiescence argument as
             // superstep_end), but do not advance the superstep tag.
             trace::drain();

@@ -64,21 +64,21 @@ impl Drop for Mapping {
 }
 
 /// One partition's buffer set: the *active* buffer VPs compute in, plus
-/// (under the swap pipeline) a *shadow* buffer prefetches fill.  The
-/// active index flips at a prefetch hit — the context switch becomes a
-/// pointer swap instead of a blocking read.
+/// (under the swap pipeline) `depth` *shadow* buffers prefetches fill.
+/// The active index flips to the hit buffer at a prefetch hit — the
+/// context switch becomes a pointer swap instead of a blocking read.
 pub struct PartitionBufs {
-    /// 1 buffer (legacy) or 2 (double-buffered pipeline), each µ bytes.
+    /// 1 buffer (legacy) or `1 + depth` (pipeline), each µ bytes.
     bufs: Vec<RawBufHandle>,
     /// Index of the buffer VPs currently compute in.
     active: AtomicUsize,
 }
 
 impl PartitionBufs {
-    fn new(mu: usize, double: bool) -> PartitionBufs {
-        let n = if double { 2 } else { 1 };
+    /// A partition's buffers: one active plus `depth` shadows.
+    fn new(mu: usize, depth: usize) -> PartitionBufs {
         PartitionBufs {
-            bufs: (0..n).map(|_| RawBufHandle(RawBuf::owned(mu))).collect(),
+            bufs: (0..1 + depth).map(|_| RawBufHandle(RawBuf::owned(mu))).collect(),
             active: AtomicUsize::new(0),
         }
     }
@@ -88,20 +88,25 @@ impl PartitionBufs {
         self.bufs[self.active.load(Ordering::Acquire)].ptr()
     }
 
-    /// The prefetch target (None without double buffering).
-    fn shadow_ptr(&self) -> Option<*mut u8> {
-        if self.bufs.len() < 2 {
-            return None;
-        }
-        Some(self.bufs[1 - self.active.load(Ordering::Acquire)].ptr())
+    /// Number of buffers (1 + depth).
+    fn num_bufs(&self) -> usize {
+        self.bufs.len()
     }
 
-    /// Make the shadow buffer active (prefetch-hit admission).  Only the
+    /// Base pointer of buffer `idx` (shadow registration at creation).
+    fn buf_ptr(&self, idx: usize) -> *mut u8 {
+        self.bufs[idx].ptr()
+    }
+
+    /// Make buffer `idx` the active one (prefetch-hit admission) and
+    /// return the displaced buffer `(index, base)` so the caller can
+    /// hand it back to the scheduler as a fresh shadow.  Only the
     /// thread holding the partition's gate may call this.
-    fn flip(&self) {
+    fn make_active(&self, idx: usize) -> (usize, *mut u8) {
         let cur = self.active.load(Ordering::Acquire);
-        debug_assert!(self.bufs.len() == 2, "flip without a shadow buffer");
-        self.active.store(1 - cur, Ordering::Release);
+        debug_assert!(idx < self.bufs.len() && idx != cur, "flip to a non-shadow buffer");
+        self.active.store(idx, Ordering::Release);
+        (cur, self.bufs[cur].ptr())
     }
 }
 
@@ -109,12 +114,13 @@ impl PartitionBufs {
 pub enum Store {
     /// Explicit swapping through a disk set.
     Explicit {
-        /// The swap pipeline (prefetch + double buffering); `None` runs
+        /// The swap pipeline (prefetch + shadow buffering); `None` runs
         /// the byte-identical legacy path.  Declared before the buffers
         /// so its drop quiesces in-flight prefetch reads first.
         sched: Option<SwapScheduler>,
-        /// `k` partition buffer sets (µ bytes each; ×2 under the
-        /// pipeline — the `2kµ` budget, see README "Swap pipeline").
+        /// `k` partition buffer sets (µ bytes each; ×(1 + depth) under
+        /// the pipeline — the `(1+depth)kµ` budget, see README "Swap
+        /// pipeline").
         partitions: Vec<PartitionBufs>,
         /// The node's disks.
         disks: Arc<DiskSet>,
@@ -168,14 +174,26 @@ impl Store {
         let ctx_slot = align_up(cfg.mu, cfg.block());
         match cfg.io {
             crate::config::IoStyle::Unix | crate::config::IoStyle::Async => {
-                let pipeline = cfg.swap_prefetch_active();
+                // 0 when the pipeline is off; ≥ 1 (explicit, env, or
+                // adaptive ceil(D/k)) when it is on.
+                let depth = cfg.swap_prefetch_depth();
+                let sched = (depth > 0)
+                    .then(|| SwapScheduler::new(cfg.k, ctx_slot, cfg.mu, metrics.clone()));
+                let partitions: Vec<PartitionBufs> = (0..cfg.k)
+                    .map(|_| PartitionBufs::new(cfg.mu as usize, depth))
+                    .collect();
+                if let Some(s) = &sched {
+                    // Hand every shadow buffer (all but the initially
+                    // active buffer 0) to the scheduler's free lists.
+                    for (p, bufs) in partitions.iter().enumerate() {
+                        for b in 1..bufs.num_bufs() {
+                            s.release(p, b, bufs.buf_ptr(b));
+                        }
+                    }
+                }
                 Ok(Store::Explicit {
-                    sched: pipeline.then(|| {
-                        SwapScheduler::new(cfg.k, ctx_slot, cfg.mu, metrics.clone())
-                    }),
-                    partitions: (0..cfg.k)
-                        .map(|_| PartitionBufs::new(cfg.mu as usize, pipeline))
-                        .collect(),
+                    sched,
+                    partitions,
                     disks: disks.expect("explicit store requires disks"),
                     ctx_slot,
                     metrics,
@@ -276,15 +294,14 @@ impl Store {
     }
 
     /// Issue an asynchronous prefetch of `regions` of `local_vp`'s
-    /// context into its partition's shadow buffer.  The next full
-    /// swap-in for that VP ([`Store::swap_in_resident`]) consumes it with
-    /// a buffer flip instead of blocking reads.  No-op without the
-    /// pipeline.  Caller must hold the partition's gate.
+    /// context into one of its partition's shadow buffers.  The next
+    /// full swap-in for that VP ([`Store::swap_in_resident`]) consumes
+    /// it with a buffer flip instead of blocking reads.  No-op without
+    /// the pipeline.  Caller must hold the partition's gate (or be the
+    /// barrier leader doing the cross-barrier warm-up).
     pub fn prefetch(&self, local_vp: usize, regions: Vec<(u64, u64)>) -> Result<()> {
-        if let Store::Explicit { sched: Some(s), partitions, disks, .. } = self {
-            let pair = &partitions[local_vp % partitions.len()];
-            let Some(shadow) = pair.shadow_ptr() else { return Ok(()) };
-            s.issue(disks, local_vp, regions, shadow)?;
+        if let Store::Explicit { sched: Some(s), disks, .. } = self {
+            s.issue(disks, local_vp, regions)?;
         }
         Ok(())
     }
@@ -306,8 +323,11 @@ impl Store {
             Store::Explicit { sched: Some(s), partitions, metrics, .. } => {
                 let _span = crate::metrics::trace::span(crate::metrics::Phase::SwapWait);
                 let t0 = std::time::Instant::now();
-                let r = if s.try_consume(local_vp, regions)? {
-                    partitions[local_vp % k].flip();
+                let r = if let Some(buf) = s.try_consume(local_vp, regions)? {
+                    // Flip the hit buffer in; the displaced active
+                    // buffer becomes a fresh shadow for the scheduler.
+                    let (old, old_ptr) = partitions[local_vp % k].make_active(buf);
+                    s.release(local_vp % k, old, old_ptr);
                     Ok(())
                 } else {
                     self.blocking_swap_in(local_vp, k, mu, regions)

@@ -206,6 +206,21 @@ impl ComputeCtx {
         merge_segments_into(&sorted, data);
     }
 
+    /// Merge already-sorted `runs` into `out` — pooled by value-range
+    /// splitting ([`crate::empq::merge::parallel_merge_into`]) when the
+    /// phase switch is on, the serial tournament merge otherwise.
+    /// Byte-identical either way: chunk boundaries never split a value
+    /// class and ties break by run index inside each chunk, exactly as
+    /// in the serial merge.
+    pub fn merge_runs<T: Record>(&self, runs: &[&[T]], out: &mut [T]) {
+        crate::empq::merge::parallel_merge_into(
+            runs,
+            out,
+            self.pool.as_deref(),
+            &self.metrics,
+        );
+    }
+
     /// Inclusive wrapping prefix sum of `data` in place — the
     /// computation-superstep local scan ([`Compute::local_scan_i32`]
     /// semantics, XLA scan kernel per segment when enabled).

@@ -4,19 +4,22 @@
 //! With the legacy explicit store every VP handoff stalls its partition
 //! for both I/O legs: the departing VP's swap-out *and* the arriving
 //! VP's swap-in run synchronously while the gate is held.  The pipeline
-//! double-buffers each of the `k` partitions (an *active* and a *shadow*
-//! buffer of µ — `2kµ` of partition RAM, see README "Swap pipeline") and
-//! hides both legs:
+//! multi-buffers each of the `k` partitions — one *active* buffer plus
+//! `depth` *shadow* buffers of µ each (`(1 + depth)·kµ` of partition
+//! RAM, see README "Swap pipeline") — and hides both legs:
 //!
 //! * **write-behind** — swap-outs go through the async driver's per-disk
 //!   queues (the driver copies at enqueue, so the buffer is immediately
 //!   reusable);
 //! * **prefetch** — the ordered turn-taking of [`crate::vp::gate`]
 //!   (Def. 6.5.1) tells the scheduler exactly who runs next on each
-//!   partition, so when VP `r·k+p` is admitted it issues asynchronous
-//!   reads of VP `(r+1)·k+p`'s allocated regions into the shadow buffer;
-//!   admission of the successor then just *flips* active/shadow and
-//!   waits only on prefetch completion, never on writeback.
+//!   partition, so an admitted VP issues asynchronous reads of the next
+//!   `depth` successors' allocated regions into the partition's shadow
+//!   buffers; admission of a successor then just *flips* the hit buffer
+//!   in as the active one and waits only on prefetch completion, never
+//!   on writeback.  Depth > 1 keeps `k·depth ≈ D` read tickets in
+//!   flight per node so `k < D` shapes still load every disk (see
+//!   [`crate::config::SimConfig::swap_prefetch_depth`]).
 //!
 //! Correctness is invalidation-based: prefetched data is consumed only
 //! if the target context's on-disk slot was untouched since issue.
@@ -28,21 +31,31 @@
 //! results either way, pinned by `rust/tests/parallel_equivalence.rs`.
 //!
 //! Serialization argument: prefetch issue and consumption for partition
-//! `p` only ever run on the thread currently holding gate `p`, so the
-//! slot state needs its mutex only against concurrent *invalidators*
-//! (delivery writers on other threads), which touch nothing but the
-//! `invalidated` flag.  The shadow buffer is owned exclusively by the
-//! pending prefetch from issue until disposal/consumption, which is what
-//! makes handing its raw pointer to the I/O workers sound.
+//! `p` only ever run on the thread currently holding gate `p` — or, for
+//! the cross-barrier warm-up, on the barrier leader while every VP is
+//! parked in the barrier — so the slot state needs its mutex only
+//! against concurrent *invalidators* (delivery writers on other
+//! threads), which touch nothing but the `invalidated` flags.  Each
+//! shadow buffer is owned exclusively by its pending prefetch from
+//! issue until disposal/consumption, which is what makes handing its
+//! raw pointer to the I/O workers sound.
 
 use crate::disk::DiskSet;
 use crate::error::Result;
 use crate::io::ReadTicket;
 use crate::metrics::{trace, IoClass, Metrics};
+use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 
-/// An in-flight (or completed, unconsumed) prefetch owning a partition's
-/// shadow buffer.
+/// A shadow-buffer base pointer, tagged `Send` so slots can hold it
+/// across threads.  Exclusivity is enforced by the slot state: a
+/// pointer lives either on the free list or inside exactly one pending
+/// prefetch.
+struct BufPtr(*mut u8);
+unsafe impl Send for BufPtr {}
+
+/// An in-flight (or completed, unconsumed) prefetch owning one of a
+/// partition's shadow buffers.
 struct Prefetch {
     /// Local VP whose context is being read.
     local_vp: usize,
@@ -55,15 +68,26 @@ struct Prefetch {
     bytes: u64,
     /// Set by a disk write overlapping the target's context slot.
     invalidated: bool,
+    /// Index of the shadow buffer holding the data (the store's
+    /// `PartitionBufs` buffer number — what `try_consume` hands back so
+    /// the caller can flip it active).
+    buf: usize,
+    /// The buffer's base pointer (returned to the free list on
+    /// disposal; surrendered to the store on a hit).
+    ptr: BufPtr,
 }
 
 #[derive(Default)]
 struct Slot {
-    pending: Option<Prefetch>,
+    /// In-flight prefetches in issue order (front = oldest).
+    pending: VecDeque<Prefetch>,
+    /// Registered shadow buffers not currently backing a prefetch.
+    free: Vec<(usize, BufPtr)>,
 }
 
-/// Per-node scheduler for the double-buffered swap pipeline: one slot
-/// per memory partition tracking the shadow buffer's pending prefetch.
+/// Per-node scheduler for the multi-buffered swap pipeline: one slot
+/// per memory partition tracking that partition's shadow buffers and
+/// their pending prefetches.
 pub struct SwapScheduler {
     slots: Vec<Mutex<Slot>>,
     /// Context slot size (µ aligned up to B) — locates a VP's slot in
@@ -81,7 +105,8 @@ impl std::fmt::Debug for SwapScheduler {
 }
 
 impl SwapScheduler {
-    /// Scheduler for `k` partitions.
+    /// Scheduler for `k` partitions.  Shadow buffers are handed over
+    /// one by one via [`SwapScheduler::release`] after construction.
     pub fn new(k: usize, ctx_slot: u64, mu: u64, metrics: Arc<Metrics>) -> SwapScheduler {
         SwapScheduler {
             slots: (0..k).map(|_| Mutex::new(Slot::default())).collect(),
@@ -96,43 +121,78 @@ impl SwapScheduler {
         self.slots.len()
     }
 
-    /// True when the partition's shadow buffer already holds a pending
-    /// prefetch (opportunistic issuers — `PartitionYield::yield_to` —
-    /// skip rather than displace a turn-order prefetch).
-    pub fn has_pending(&self, partition: usize) -> bool {
-        self.slots[partition].lock().unwrap().pending.is_some()
-    }
-
-    /// Issue a prefetch of `regions` of `local_vp`'s context into the
-    /// partition's shadow buffer (`shadow`, µ bytes).  An unconsumed
-    /// previous prefetch on the partition is disposed first (counted as
-    /// a miss).  Must be called by the thread holding the partition's
-    /// gate.
+    /// Hand shadow buffer `buf` (base `ptr`, µ bytes) of `partition` to
+    /// the scheduler: initial registration at store creation, and the
+    /// return path for the displaced previously-active buffer after a
+    /// consume hit flips buffers.
     ///
     /// # Safety contract
-    /// `shadow` is the partition's shadow buffer; exclusivity until
-    /// consumption/disposal is guaranteed by the slot state itself.
-    pub fn issue(
-        &self,
-        disks: &DiskSet,
-        local_vp: usize,
-        regions: Vec<(u64, u64)>,
-        shadow: *mut u8,
-    ) -> Result<()> {
-        let idx = local_vp % self.slots.len();
-        // Dispose a displaced prefetch *outside* the slot lock: its
-        // in-flight reads must land before new ones target the same
-        // shadow bytes, but invalidators must not block behind that
-        // disk latency.  The gap (pending = None) is safe — there is
-        // nothing to invalidate, and only the gate holder can issue.
-        let displaced = self.slots[idx].lock().unwrap().pending.take();
-        if let Some(old) = displaced {
-            for t in &old.tickets {
-                let _ = t.wait();
-            }
-            self.metrics.prefetch_miss();
-            trace::instant("prefetch_dispose");
+    /// The buffer must stay allocated for the scheduler's lifetime and
+    /// must not be touched by the caller until a `try_consume` hit
+    /// hands it back.
+    pub fn release(&self, partition: usize, buf: usize, ptr: *mut u8) {
+        self.slots[partition].lock().unwrap().free.push((buf, BufPtr(ptr)));
+    }
+
+    /// True when the partition has at least one in-flight prefetch
+    /// (opportunistic issuers — `PartitionYield::yield_to` — skip
+    /// rather than displace turn-order prefetches).
+    pub fn has_pending(&self, partition: usize) -> bool {
+        !self.slots[partition].lock().unwrap().pending.is_empty()
+    }
+
+    /// Wait out a removed prefetch's reads and count the miss; returns
+    /// its buffer for reuse.  Never called under a slot lock —
+    /// invalidators must not block behind disk latency.
+    fn dispose(&self, p: Prefetch) -> (usize, BufPtr) {
+        for t in &p.tickets {
+            let _ = t.wait();
         }
+        self.metrics.prefetch_miss();
+        trace::instant("prefetch_dispose");
+        (p.buf, p.ptr)
+    }
+
+    /// Issue a prefetch of `regions` of `local_vp`'s context into one
+    /// of the partition's shadow buffers.  If a matching prefetch for
+    /// the same VP is already in flight this is a no-op (depth-`d`
+    /// issuers overlap: successive admissions re-request the same
+    /// successors).  With no free buffer, the oldest pending prefetch
+    /// is displaced first (counted as a miss).  Must be called by the
+    /// thread holding the partition's gate, or by the barrier leader
+    /// while every VP is parked (cross-barrier warm-up).
+    pub fn issue(&self, disks: &DiskSet, local_vp: usize, regions: Vec<(u64, u64)>) -> Result<()> {
+        let idx = local_vp % self.slots.len();
+        // Acquire a buffer under the lock; dispose any displaced
+        // prefetch *outside* it (its in-flight reads must land before
+        // new ones target the same bytes, but invalidators must not
+        // block behind that disk latency).  The gap is safe — a
+        // removed prefetch is invisible to invalidators, and only the
+        // serialized issuer can touch the queue.
+        let displaced;
+        let mut acquired = None;
+        {
+            let mut slot = self.slots[idx].lock().unwrap();
+            if let Some(pos) = slot.pending.iter().position(|p| p.local_vp == local_vp) {
+                if !slot.pending[pos].invalidated && slot.pending[pos].regions == regions {
+                    return Ok(()); // already in flight
+                }
+                // Stale duplicate (invalidated, or the allocator
+                // changed the region list): replace it.
+                displaced = slot.pending.remove(pos);
+            } else if let Some(f) = slot.free.pop() {
+                acquired = Some(f);
+                displaced = None;
+            } else {
+                displaced = slot.pending.pop_front();
+            }
+        }
+        if let Some(old) = displaced {
+            acquired = Some(self.dispose(old));
+        }
+        let Some((buf, ptr)) = acquired else {
+            return Ok(()); // no shadow buffers registered at all
+        };
         // Re-acquire for the issue itself: enqueue + install must be
         // atomic w.r.t. invalidators, or a write racing the issue could
         // land unflagged (the reads are cheap enqueues under the async
@@ -148,7 +208,7 @@ impl SwapScheduler {
                 disks.read_async(
                     IoClass::Swap,
                     base + off,
-                    shadow.add(off as usize),
+                    ptr.0.add(off as usize),
                     len as usize,
                 )
             };
@@ -164,76 +224,81 @@ impl SwapScheduler {
             }
         }
         if let Some(e) = issue_err {
-            // Partially issued: the already-queued reads still target the
-            // shadow buffer — wait them out before abandoning it.
+            // Partially issued: the already-queued reads still target
+            // the buffer — wait them out before returning it.
+            drop(slot);
             for t in &tickets {
                 let _ = t.wait();
             }
+            self.slots[idx].lock().unwrap().free.push((buf, ptr));
             return Err(e);
         }
-        slot.pending =
-            Some(Prefetch { local_vp, regions, tickets, bytes, invalidated: false });
+        slot.pending.push_back(Prefetch {
+            local_vp,
+            regions,
+            tickets,
+            bytes,
+            invalidated: false,
+            buf,
+            ptr,
+        });
         trace::instant("prefetch_issue");
         Ok(())
     }
 
-    /// Try to satisfy a full swap-in of `regions` for `local_vp` from the
+    /// Try to satisfy a full swap-in of `regions` for `local_vp` from a
     /// shadow buffer.  On a hit, waits for the outstanding reads and
-    /// returns `true` — the caller then flips active/shadow.  Returns
-    /// `false` (after disposing an unusable prefetch) when the caller
-    /// must take the blocking path.  Must be called by the thread holding
-    /// the partition's gate.
-    pub fn try_consume(&self, local_vp: usize, regions: &[(u64, u64)]) -> Result<bool> {
+    /// returns the buffer index now holding the context — the caller
+    /// flips it active and [`releases`](SwapScheduler::release) the
+    /// displaced one.  Returns `None` (after disposing an unusable
+    /// prefetch) when the caller must take the blocking path; pending
+    /// prefetches for *other* VPs are left in flight.  Must be called
+    /// by the thread holding the partition's gate.
+    pub fn try_consume(&self, local_vp: usize, regions: &[(u64, u64)]) -> Result<Option<usize>> {
         let idx = local_vp % self.slots.len();
         let mut slot = self.slots[idx].lock().unwrap();
-        let Some(p) = slot.pending.as_ref() else { return Ok(false) };
-        if p.local_vp != local_vp {
-            // A prefetch for a different VP stays pending: its target may
-            // still be admitted later (it is disposed at the next issue).
-            return Ok(false);
-        }
-        if p.invalidated || p.regions != regions {
-            // Dispose: free the shadow buffer by waiting the reads out;
-            // read errors re-surface on the blocking fallback.
-            let p = slot.pending.take().unwrap();
+        let Some(pos) = slot.pending.iter().position(|p| p.local_vp == local_vp) else {
+            return Ok(None);
+        };
+        if slot.pending[pos].invalidated || slot.pending[pos].regions != regions {
+            // Dispose: free the buffer by waiting the reads out; read
+            // errors re-surface on the blocking fallback.
+            let p = slot.pending.remove(pos).unwrap();
             drop(slot);
-            for t in &p.tickets {
-                let _ = t.wait();
-            }
-            self.metrics.prefetch_miss();
-            trace::instant("prefetch_dispose");
-            return Ok(false);
+            let freed = self.dispose(p);
+            self.slots[idx].lock().unwrap().free.push(freed);
+            return Ok(None);
         }
-        // Wait for completion without holding the slot lock (invalidators
-        // must not block behind disk latency); tickets are cloneable and
-        // waiting is idempotent.
-        let tickets = p.tickets.clone();
-        let bytes = p.bytes;
+        // Wait for completion without holding the slot lock
+        // (invalidators must not block behind disk latency); tickets
+        // are cloneable and waiting is idempotent.
+        let tickets = slot.pending[pos].tickets.clone();
         drop(slot);
         for t in &tickets {
             t.wait()?;
         }
         // Re-check under the lock: a delivery may have invalidated the
-        // slot while we waited.
+        // slot while we waited.  Only invalidators ran meanwhile (the
+        // issuer is us), so the entry is still there — re-find it
+        // rather than trusting the old position.
         let mut slot = self.slots[idx].lock().unwrap();
-        let usable = matches!(
-            slot.pending.as_ref(),
-            Some(p) if p.local_vp == local_vp && !p.invalidated && p.regions == regions
-        );
-        if usable {
-            slot.pending = None;
-            self.metrics.prefetch_hit(bytes);
-            trace::instant("prefetch_consume_hit");
-            Ok(true)
-        } else {
+        let Some(pos) = slot.pending.iter().position(|p| p.local_vp == local_vp) else {
+            return Ok(None);
+        };
+        let p = slot.pending.remove(pos).unwrap();
+        if p.invalidated || p.regions != regions {
             // Invalidated mid-wait (tickets already complete — waited
-            // above — so the shadow buffer is free).
-            slot.pending = None;
+            // above — so the buffer is immediately reusable).
+            slot.free.push((p.buf, p.ptr));
             drop(slot);
             self.metrics.prefetch_miss();
             trace::instant("prefetch_dispose");
-            Ok(false)
+            return Ok(None);
         }
+        drop(slot);
+        self.metrics.prefetch_hit(p.bytes);
+        trace::instant("prefetch_consume_hit");
+        Ok(Some(p.buf))
     }
 
     /// A disk write landed in the node-logical byte range `[lo, hi)`:
@@ -245,7 +310,7 @@ impl SwapScheduler {
         }
         for slot in &self.slots {
             let mut s = slot.lock().unwrap();
-            if let Some(p) = s.pending.as_mut() {
+            for p in s.pending.iter_mut() {
                 let slot_lo = p.local_vp as u64 * self.ctx_slot;
                 let slot_hi = slot_lo + self.mu;
                 if lo < slot_hi && slot_lo < hi && !p.invalidated {
@@ -263,16 +328,16 @@ impl SwapScheduler {
     }
 
     /// Dispose every pending prefetch, waiting out in-flight reads (so
-    /// the shadow buffers are safe to free).  Pending-but-unconsumed
-    /// prefetches count as misses.
+    /// the shadow buffers are safe to free) and returning their
+    /// buffers to the free lists.  Pending-but-unconsumed prefetches
+    /// count as misses.
     pub fn quiesce(&self) {
         for slot in &self.slots {
-            let taken = slot.lock().unwrap().pending.take();
-            if let Some(p) = taken {
-                for t in &p.tickets {
-                    let _ = t.wait();
-                }
-                self.metrics.prefetch_miss();
+            loop {
+                let taken = slot.lock().unwrap().pending.pop_front();
+                let Some(p) = taken else { break };
+                let freed = self.dispose(p);
+                slot.lock().unwrap().free.push(freed);
             }
         }
     }
@@ -295,18 +360,34 @@ mod tests {
     use crate::io::IoDriver;
     use std::sync::Arc;
 
-    fn mk(async_io: bool) -> (DiskSet, SwapScheduler, Arc<Metrics>) {
-        let cfg = SimConfig::builder().v(4).k(2).mu(1 << 16).block(4096).build().unwrap();
+    /// Scheduler with `depth` shadow buffers per partition; buffer `b`
+    /// of partition `p` is `bufs[p][b]`.
+    fn mk(
+        async_io: bool,
+        depth: usize,
+    ) -> (DiskSet, SwapScheduler, Arc<Metrics>, Vec<Vec<Vec<u8>>>) {
+        let cfg = SimConfig::builder().v(8).k(2).mu(1 << 16).block(4096).build().unwrap();
         let metrics = Arc::new(Metrics::new());
         let driver: Arc<dyn IoDriver> =
             if async_io { Arc::new(AsyncIo::new(1)) } else { Arc::new(UnixIo::new()) };
         let disks = DiskSet::create(&cfg, 0, driver, metrics.clone()).unwrap();
         let sched = SwapScheduler::new(cfg.k, cfg.ctx_slot(), cfg.mu, metrics.clone());
-        (disks, sched, metrics)
+        let mut bufs: Vec<Vec<Vec<u8>>> = Vec::new();
+        for p in 0..cfg.k {
+            let mut row = Vec::new();
+            for b in 0..depth {
+                let mut v = vec![0u8; 1 << 16];
+                sched.release(p, b, v.as_mut_ptr());
+                row.push(v);
+            }
+            bufs.push(row);
+        }
+        (disks, sched, metrics, bufs)
     }
 
     fn write_pattern(disks: &DiskSet, base: u64, len: usize, seed: u8) {
-        let data: Vec<u8> = (0..len).map(|i| (i as u8).wrapping_mul(31).wrapping_add(seed)).collect();
+        let data: Vec<u8> =
+            (0..len).map(|i| (i as u8).wrapping_mul(31).wrapping_add(seed)).collect();
         disks.write(IoClass::Swap, base, &data).unwrap();
         disks.flush().unwrap();
     }
@@ -314,18 +395,18 @@ mod tests {
     #[test]
     fn prefetch_hit_round_trip() {
         for async_io in [false, true] {
-            let (disks, sched, metrics) = mk(async_io);
+            let (disks, sched, metrics, bufs) = mk(async_io, 1);
             let ctx_slot = 1u64 << 16;
             write_pattern(&disks, 2 * ctx_slot, 4096, 7); // local vp 2, partition 0
-            let mut shadow = vec![0u8; 1 << 16];
             let regions = vec![(0u64, 4096u64)];
-            sched.issue(&disks, 2, regions.clone(), shadow.as_mut_ptr()).unwrap();
+            sched.issue(&disks, 2, regions.clone()).unwrap();
             assert!(sched.has_pending(0));
             assert!(!sched.has_pending(1));
-            assert!(sched.try_consume(2, &regions).unwrap(), "must hit (async={async_io})");
+            let hit = sched.try_consume(2, &regions).unwrap();
+            assert_eq!(hit, Some(0), "must hit buffer 0 (async={async_io})");
             assert!(!sched.has_pending(0));
             for i in 0..4096usize {
-                assert_eq!(shadow[i], (i as u8).wrapping_mul(31).wrapping_add(7));
+                assert_eq!(bufs[0][0][i], (i as u8).wrapping_mul(31).wrapping_add(7));
             }
             let s = metrics.snapshot();
             assert_eq!((s.prefetch_hits, s.prefetch_misses), (1, 0));
@@ -335,79 +416,101 @@ mod tests {
 
     #[test]
     fn invalidation_forces_the_blocking_path() {
-        let (disks, sched, metrics) = mk(true);
+        let (disks, sched, metrics, _bufs) = mk(true, 1);
         let ctx_slot = 1u64 << 16;
         write_pattern(&disks, 0, 4096, 1); // local vp 0
-        let mut shadow = vec![0u8; 1 << 16];
         let regions = vec![(0u64, 4096u64)];
-        sched.issue(&disks, 0, regions.clone(), shadow.as_mut_ptr()).unwrap();
+        sched.issue(&disks, 0, regions.clone()).unwrap();
         // A delivery lands in vp 0's slot: the prefetched bytes are stale.
         sched.invalidate_range(100, 200);
-        assert!(!sched.try_consume(0, &regions).unwrap(), "invalidated must miss");
+        assert!(sched.try_consume(0, &regions).unwrap().is_none(), "invalidated must miss");
         let s = metrics.snapshot();
         assert_eq!((s.prefetch_hits, s.prefetch_misses), (0, 1));
         // A disjoint-slot write must NOT invalidate.
-        sched.issue(&disks, 0, regions.clone(), shadow.as_mut_ptr()).unwrap();
+        sched.issue(&disks, 0, regions.clone()).unwrap();
         sched.invalidate_vp(1); // partition 1's vp — different slot
         sched.invalidate_range(2 * ctx_slot, 3 * ctx_slot); // vp 2's slot
-        assert!(sched.try_consume(0, &regions).unwrap(), "disjoint writes must not kill it");
+        assert!(
+            sched.try_consume(0, &regions).unwrap().is_some(),
+            "disjoint writes must not kill it"
+        );
     }
 
     #[test]
     fn wrong_target_or_regions_do_not_consume() {
-        let (disks, sched, metrics) = mk(false);
+        let (disks, sched, metrics, _bufs) = mk(false, 1);
         write_pattern(&disks, 0, 8192, 3);
-        let mut shadow = vec![0u8; 1 << 16];
         let regions = vec![(0u64, 8192u64)];
-        sched.issue(&disks, 0, regions.clone(), shadow.as_mut_ptr()).unwrap();
+        sched.issue(&disks, 0, regions.clone()).unwrap();
         // Different VP on the same partition: pending survives for its
         // real target.
-        assert!(!sched.try_consume(2, &regions).unwrap());
+        assert!(sched.try_consume(2, &regions).unwrap().is_none());
         assert!(sched.has_pending(0));
         // Same VP, different region list (allocator changed): disposed.
-        assert!(!sched.try_consume(0, &[(0, 4096)]).unwrap());
+        assert!(sched.try_consume(0, &[(0, 4096)]).unwrap().is_none());
         assert!(!sched.has_pending(0));
         assert_eq!(metrics.snapshot().prefetch_misses, 1);
-        // And a fresh issue over the disposed slot works.
-        sched.issue(&disks, 0, regions.clone(), shadow.as_mut_ptr()).unwrap();
-        assert!(sched.try_consume(0, &regions).unwrap());
+        // And a fresh issue over the freed buffer works.
+        sched.issue(&disks, 0, regions.clone()).unwrap();
+        assert!(sched.try_consume(0, &regions).unwrap().is_some());
     }
 
     #[test]
-    fn reissue_disposes_the_previous_prefetch() {
-        let (disks, sched, metrics) = mk(true);
+    fn reissue_displaces_the_oldest_prefetch() {
+        let (disks, sched, metrics, bufs) = mk(true, 1);
         let ctx_slot = 1u64 << 16;
         write_pattern(&disks, 0, 4096, 1);
         write_pattern(&disks, 2 * ctx_slot, 4096, 2);
-        let mut shadow = vec![0u8; 1 << 16];
-        sched.issue(&disks, 0, vec![(0, 4096)], shadow.as_mut_ptr()).unwrap();
-        // Turn moved on without vp 0 being admitted: the next issue on
-        // the partition displaces it.
-        sched.issue(&disks, 2, vec![(0, 4096)], shadow.as_mut_ptr()).unwrap();
+        sched.issue(&disks, 0, vec![(0, 4096)]).unwrap();
+        // Turn moved on without vp 0 being admitted: with a single
+        // shadow buffer, the next issue on the partition displaces it.
+        sched.issue(&disks, 2, vec![(0, 4096)]).unwrap();
         assert_eq!(metrics.snapshot().prefetch_misses, 1);
-        assert!(sched.try_consume(2, &[(0, 4096)]).unwrap());
-        assert_eq!(shadow[0], 2, "shadow must hold the second target's bytes");
+        assert_eq!(sched.try_consume(2, &[(0, 4096)]).unwrap(), Some(0));
+        assert_eq!(bufs[0][0][0], 2, "buffer must hold the second target's bytes");
+    }
+
+    #[test]
+    fn depth_two_keeps_both_successors_in_flight() {
+        let (disks, sched, metrics, bufs) = mk(true, 2);
+        let ctx_slot = 1u64 << 16;
+        write_pattern(&disks, 0, 4096, 1); // vp 0 (partition 0, round 0)
+        write_pattern(&disks, 2 * ctx_slot, 4096, 2); // vp 2 (partition 0, round 1)
+        sched.issue(&disks, 0, vec![(0, 4096)]).unwrap();
+        sched.issue(&disks, 2, vec![(0, 4096)]).unwrap();
+        // Re-issuing an in-flight target is a dedup no-op, not a miss.
+        sched.issue(&disks, 0, vec![(0, 4096)]).unwrap();
+        assert_eq!(metrics.snapshot().prefetch_misses, 0);
+        // Both consume as hits, in either order.
+        let b2 = sched.try_consume(2, &[(0, 4096)]).unwrap().unwrap();
+        let b0 = sched.try_consume(0, &[(0, 4096)]).unwrap().unwrap();
+        assert_ne!(b0, b2, "each target owns its own shadow buffer");
+        assert_eq!(bufs[0][b0][0], 1);
+        assert_eq!(bufs[0][b2][0], 2);
+        let s = metrics.snapshot();
+        assert_eq!((s.prefetch_hits, s.prefetch_misses), (2, 0));
     }
 
     #[test]
     fn quiesce_drains_in_flight_reads() {
-        let (disks, sched, metrics) = mk(true);
+        let (disks, sched, metrics, bufs) = mk(true, 1);
         write_pattern(&disks, 0, 4096, 9);
-        let mut shadow = vec![0u8; 1 << 16];
-        sched.issue(&disks, 0, vec![(0, 4096)], shadow.as_mut_ptr()).unwrap();
+        sched.issue(&disks, 0, vec![(0, 4096)]).unwrap();
         sched.quiesce();
         assert!(!sched.has_pending(0));
         assert_eq!(metrics.snapshot().prefetch_misses, 1);
         // Shadow buffer safe to reuse/free: the read landed.
-        assert_eq!(shadow[0], 9);
+        assert_eq!(bufs[0][0][0], 9);
+        // The buffer went back on the free list: a fresh issue works.
+        sched.issue(&disks, 0, vec![(0, 4096)]).unwrap();
+        assert!(sched.try_consume(0, &[(0, 4096)]).unwrap().is_some());
     }
 
     #[test]
     fn empty_region_prefetch_hits_trivially() {
-        let (disks, sched, metrics) = mk(false);
-        let mut shadow = vec![0u8; 1 << 16];
-        sched.issue(&disks, 1, Vec::new(), shadow.as_mut_ptr()).unwrap();
-        assert!(sched.try_consume(1, &[]).unwrap());
+        let (disks, sched, metrics, _bufs) = mk(false, 1);
+        sched.issue(&disks, 1, Vec::new()).unwrap();
+        assert!(sched.try_consume(1, &[]).unwrap().is_some());
         assert_eq!(metrics.snapshot().prefetch_hit_bytes, 0);
     }
 }

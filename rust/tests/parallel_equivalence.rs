@@ -18,7 +18,9 @@
 //! assertions are gated on `SimConfig::swap_prefetch_active()` the same
 //! way, so the `PEMS2_NO_PREFETCH` CI leg stays green too.
 
-use pems2::baseline::run_stxxl_sort;
+use pems2::baseline::{
+    run_dist_sort, run_dist_sort_masked, run_stxxl_sort, run_stxxl_sort_masked,
+};
 use pems2::config::{IoStyle, Layout, SimConfig};
 use pems2::empq::{EmPq, Entry};
 use pems2::engine::run;
@@ -58,6 +60,96 @@ fn stxxl_sort_equivalence_across_sizes() {
             assert!(par.metrics.pool_jobs > 0, "parallel leg must meter pool jobs");
         }
     }
+}
+
+// ----------------------------------------------------- distribution sort
+
+/// Sort-baseline config on an explicit axis: `Async` is the pipelined
+/// path (async read tickets + zero-copy scatter write-behind), `Unix`
+/// the synchronous-driver fallback — the dist sort's pipeline-on/off
+/// axis, analogous to the engine's prefetch switch.
+fn dist_cfg(io: IoStyle, parallel: bool) -> SimConfig {
+    SimConfig::builder()
+        .v(2)
+        .k(2)
+        .mu(64 << 10)
+        .d(2)
+        .block(4096)
+        .io(io)
+        .parallel_phases(parallel)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn dist_sort_matches_merge_sort_across_shapes_and_modes() {
+    // Same cfg + seed => same input multiset => the unique sorted
+    // sequence, so the merge sort is a byte-exact oracle.  Shapes
+    // straddle empty/tiny/one-bucket/many-bucket and are deliberately
+    // not multiples of k = 2; both drivers × both phase modes.
+    for io in [IoStyle::Async, IoStyle::Unix] {
+        for n in [0u64, 1, 2, 4095, 40_001] {
+            let oracle = (n > 0).then(|| {
+                run_stxxl_sort(&dist_cfg(io, false), n, true).unwrap()
+            });
+            for parallel in [true, false] {
+                let d = run_dist_sort(&dist_cfg(io, parallel), n, true).unwrap();
+                assert!(d.verified, "dist sort must verify ({io:?} n={n} par={parallel})");
+                match &oracle {
+                    Some(s) => assert_eq!(
+                        d.output_hash, s.output_hash,
+                        "dist output must match the merge sort ({io:?} n={n} par={parallel})"
+                    ),
+                    None => assert_eq!(d.output_hash, 0, "empty input hashes to 0"),
+                }
+                if !parallel {
+                    assert_eq!(
+                        d.metrics.pool_jobs, 0,
+                        "serial dist leg must not touch the pool ({io:?} n={n})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dist_sort_duplicate_heavy_equivalence() {
+    // Adversarially skewed input: 16 distinct key values over 40k
+    // elements (2500x duplication).  The equality-bucket scheme must
+    // absorb the skew without in-RAM give-ups, and the bytes must still
+    // match the merge sort on the identical masked input.
+    let n = 40_003u64;
+    let mask = 0xFu32;
+    for io in [IoStyle::Async, IoStyle::Unix] {
+        let oracle = run_stxxl_sort_masked(&dist_cfg(io, false), n, true, mask).unwrap();
+        assert!(oracle.verified);
+        for parallel in [true, false] {
+            let d = run_dist_sort_masked(&dist_cfg(io, parallel), n, true, mask).unwrap();
+            assert!(d.verified, "skewed dist sort must verify ({io:?} par={parallel})");
+            assert_eq!(
+                d.output_hash, oracle.output_hash,
+                "skewed dist output must match the merge sort ({io:?} par={parallel})"
+            );
+            assert_eq!(
+                d.resplit_giveups, 0,
+                "equality buckets must absorb duplicate skew ({io:?} par={parallel})"
+            );
+        }
+    }
+}
+
+#[test]
+fn dist_sort_pipeline_hides_bytes_under_async() {
+    // The acceptance pin on the partition pipeline itself: under the
+    // async driver some of the stream's reads and scatter writes must
+    // complete entirely under classification.
+    let r = run_dist_sort(&dist_cfg(IoStyle::Async, true), 200_000, true).unwrap();
+    assert!(r.verified);
+    assert!(
+        r.hidden_read_bytes + r.hidden_write_bytes > 0,
+        "partition pipeline must hide transfer behind classification: {r:?}"
+    );
 }
 
 // ------------------------------------------------------------ delivery
@@ -385,6 +477,54 @@ fn swap_round_trip_byte_identical_across_prefetch_modes() {
             );
             assert!(on_m.prefetch_hit_bytes > 0, "hidden bytes must be metered ({io:?})");
         }
+    }
+}
+
+#[test]
+fn cross_barrier_warm_up_prefetches_first_admission() {
+    // v/P == k -> exactly one gate round per partition per superstep,
+    // so the within-superstep successor prefetch never has a successor
+    // to fetch: every hit must come from the warm-up the barrier leader
+    // issues for the NEXT superstep's first turns.  Three barriers give
+    // two warmed supersteps.
+    let cfg = prefetch_cfg(IoStyle::Async, 2, 2, true);
+    let (hashes, m) = swap_round_trip(cfg);
+    assert!(hashes.iter().all(|&h| h != 0), "every VP must round-trip");
+    if prefetch_cfg(IoStyle::Async, 2, 2, true).swap_prefetch_active() {
+        assert!(
+            m.prefetch_hits > 0,
+            "first admissions after a barrier must hit the warm-up prefetch: {m:?}"
+        );
+        assert!(m.prefetch_hit_bytes > 0, "warm-up hits must meter hidden bytes");
+    }
+}
+
+#[test]
+fn deep_prefetch_byte_identical_and_still_hits() {
+    // The k < D shape (k=1, D=2) resolves to adaptive depth 2; an
+    // explicit depth 3 must also be byte-identical.  Results must not
+    // depend on how many shadow buffers the pipeline runs ahead.
+    let mk = |depth: usize| {
+        SimConfig::builder()
+            .v(4)
+            .k(1)
+            .mu(1 << 16)
+            .sigma(1 << 16)
+            .d(2)
+            .block(4096)
+            .io(IoStyle::Async)
+            .swap_prefetch(true)
+            .prefetch_depth(depth)
+            .build()
+            .unwrap()
+    };
+    let (adaptive, am) = swap_round_trip(mk(0));
+    let (deep, dm) = swap_round_trip(mk(3));
+    assert_eq!(adaptive, deep, "swap contents must not depend on prefetch depth");
+    if mk(0).swap_prefetch_active() {
+        assert_eq!(mk(0).swap_prefetch_depth(), pems2::config::prefetch_depth_env().unwrap_or(2));
+        assert_eq!(mk(3).swap_prefetch_depth(), 3, "explicit depth must win");
+        assert!(am.prefetch_hits > 0 && dm.prefetch_hits > 0, "both depths must hit");
     }
 }
 
