@@ -39,6 +39,10 @@
 //!    sample/partition/bucket pass against `stxxl_sort` at the same n
 //!    and RAM budget, output hashes pinned equal, with the speedup and
 //!    the partition stage's overlap-hidden read/write bytes persisted.
+//! 10. Fault-injection leg: a queue round trip under the CI fault leg's
+//!    transient plan vs the clean run — fault accounting (injected ==
+//!    retried, nothing fatal) and the retry wall-clock overhead
+//!    persisted so commits can diff the cost of healing.
 //!
 //! y-values are Melem/s (wall clock); measured I/O counters are printed
 //! per phase, since on page-cached SSDs charged time is the faithful
@@ -548,6 +552,74 @@ fn main() {
         dist_r.hidden_read_bytes + dist_r.hidden_write_bytes > 0,
         "partition pipeline must hide some transfer under the async driver"
     );
+
+    // ---- 10. fault-injection leg: retry overhead + accounting ----
+    // The CI fault leg's deterministic plan (minus the seeded rand
+    // clause — here the exact counter values matter), pushed through a
+    // full queue round trip.  Every window fits the 4-retry budget, so
+    // the run must heal invisibly; the persisted numbers are the fault
+    // accounting (injected == retried, nothing fatal) and the wall-clock
+    // cost of the retries relative to the clean leg.
+    let fi_n = *sizes.last().unwrap();
+    let fi_plan = "read@*:7x2,write@*:11x2,short@*:23";
+    let mut fi_secs = [0.0f64; 2];
+    for (i, plan) in ["", fi_plan].into_iter().enumerate() {
+        let fcfg = SimConfig::builder()
+            .v(2)
+            .k(2)
+            .mu(256 << 10)
+            .d(2)
+            .block(64 << 10)
+            .io(IoStyle::Async)
+            .fault_plan(plan)
+            .build()
+            .unwrap();
+        let mut pq: EmPq = EmPq::new(&fcfg, fi_n).unwrap();
+        let mut rng = XorShift64::new(fcfg.seed);
+        let t = std::time::Instant::now();
+        let mut buf = Vec::with_capacity(batch);
+        let mut left = fi_n;
+        while left > 0 {
+            buf.clear();
+            let take = (batch as u64).min(left);
+            for _ in 0..take {
+                buf.push(Entry::new(rng.next_u64(), 0));
+            }
+            pq.push_batch(&buf).unwrap();
+            left -= take;
+        }
+        let mut got = 0u64;
+        loop {
+            let chunk = pq.extract_min_batch(batch).unwrap();
+            if chunk.is_empty() {
+                break;
+            }
+            got += chunk.len() as u64;
+        }
+        assert_eq!(got, fi_n, "element conservation under plan {plan:?}");
+        fi_secs[i] = t.elapsed().as_secs_f64();
+        let m = pq.metrics();
+        if i == 0 {
+            assert_eq!(m.io_faults_injected, 0, "clean leg must not inject");
+        } else {
+            assert!(m.io_faults_injected > 0, "fault plan never fired at n={fi_n}");
+            assert_eq!(m.io_fault_fatal, 0, "transient plan must not go fatal");
+            assert_eq!(m.io_faults_injected, m.io_retries + m.io_fault_fatal);
+            println!(
+                "fault leg n={fi_n}: {} injected / {} retried / {} fatal, \
+                 {:.2}x wall vs clean",
+                m.io_faults_injected,
+                m.io_retries,
+                m.io_fault_fatal,
+                fi_secs[1] / fi_secs[0].max(1e-9),
+            );
+            summary.push(("fault_injected".to_string(), m.io_faults_injected as f64));
+            summary.push(("fault_retried".to_string(), m.io_retries as f64));
+            summary.push(("fault_fatal".to_string(), m.io_fault_fatal as f64));
+            summary
+                .push(("fault_leg_slowdown".to_string(), fi_secs[1] / fi_secs[0].max(1e-9)));
+        }
+    }
 
     let dir = results_dir();
     write_series(

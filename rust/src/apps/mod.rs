@@ -51,5 +51,5 @@ pub use euler_tour::run_euler_tour;
 pub use list_ranking::run_list_ranking;
 pub use prefix_sum::run_prefix_sum;
 pub use psrs::run_psrs;
-pub use sssp::{run_sssp, run_sssp_with};
-pub use time_forward::run_time_forward;
+pub use sssp::{run_sssp, run_sssp_resumable, run_sssp_with};
+pub use time_forward::{run_time_forward, run_time_forward_resumable};

@@ -33,12 +33,14 @@ use crate::apps::graph_gen::{self, degree_draw};
 use crate::config::SimConfig;
 use crate::empq::{EmPq, EmPqReport};
 use crate::error::{Error, Result};
-use crate::util::bytes::Pod;
+use crate::runtime::{hex_decode, hex_encode};
+use crate::util::bytes::{as_bytes, as_bytes_mut, Pod};
 use crate::util::record::Record;
 use crate::util::XorShift64;
 use crate::vp::{ComputeCtx, ScopedJob};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::path::Path;
 
 /// A shortest-path relaxation: `node` is reachable at distance `dist`
 /// via `pred`.  24 bytes on disk, no padding; ordered by distance first
@@ -174,6 +176,28 @@ pub fn run_sssp_with(
     verify: bool,
     parallel_spill: bool,
 ) -> Result<SsspResult> {
+    run_sssp_resumable(cfg, n, avg_deg, wmax, src, verify, parallel_spill, None, None)
+}
+
+/// [`run_sssp_with`] with crash-recovery hooks, mirroring
+/// [`crate::apps::time_forward::run_time_forward_resumable`]:
+/// `checkpoint_at = Some((stop, path))` snapshots the queue plus the
+/// driver state (settled bitmap, counters, and — under `verify` — the
+/// dist/pred arrays) before processing frontier round `stop` and
+/// returns early; `restore_from` resumes from such a manifest.  The
+/// continuation's `checksum`/`total_dist` equal an uninterrupted run's.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sssp_resumable(
+    cfg: &SimConfig,
+    n: u64,
+    avg_deg: u64,
+    wmax: u64,
+    src: u64,
+    verify: bool,
+    parallel_spill: bool,
+    checkpoint_at: Option<(u64, &Path)>,
+    restore_from: Option<&Path>,
+) -> Result<SsspResult> {
     if n == 0 {
         return Err(Error::config("sssp needs n >= 1"));
     }
@@ -182,26 +206,79 @@ pub fn run_sssp_with(
     }
     let seed = cfg.seed;
     let m = edge_count(seed, n, avg_deg);
-    // Lifetime pushes are bounded by m + 1; with run reclamation the live
-    // footprint is far smaller, but the bound is always safe.
-    let mut pq: EmPq<SsspRecord> = EmPq::new(cfg, m + 1)?;
+
+    let start = std::time::Instant::now();
+    let mut pq: EmPq<SsspRecord>;
+    let mut settled;
+    let mut dist_of;
+    let mut pred_of;
+    let (mut relaxed, mut reached, mut rounds, mut total_dist, mut checksum);
+    match restore_from {
+        Some(path) => {
+            let (q, app) = EmPq::<SsspRecord>::restore(cfg, path)?;
+            pq = q;
+            let find = |key: &str| -> Result<&str> {
+                app.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str()).ok_or_else(
+                    || Error::config(format!("checkpoint is missing app key `{key}`")),
+                )
+            };
+            let get = |key: &str| -> Result<u64> {
+                find(key)?.parse().map_err(|_| {
+                    Error::config(format!("checkpoint app key `{key}` malformed"))
+                })
+            };
+            if (get("n")?, get("avg_deg")?, get("wmax")?, get("src")?, get("seed")?)
+                != (n, avg_deg, wmax, src, seed)
+                || get("verify")? != verify as u64
+            {
+                return Err(Error::config(
+                    "checkpoint was taken with different sssp parameters \
+                     (n/avg-deg/wmax/src/seed/verify must match)",
+                ));
+            }
+            let bits = hex_decode(find("settled")?)?;
+            if bits.len() != (n as usize).div_ceil(8) {
+                return Err(Error::config("checkpoint settled bitmap has the wrong size"));
+            }
+            settled =
+                (0..n as usize).map(|i| bits[i / 8] >> (i % 8) & 1 == 1).collect::<Vec<bool>>();
+            let decode_u64s = |key: &str| -> Result<Vec<u64>> {
+                let raw = hex_decode(find(key)?)?;
+                if raw.len() != n as usize * 8 {
+                    return Err(Error::config(format!(
+                        "checkpoint `{key}` array has the wrong size"
+                    )));
+                }
+                let mut v = vec![0u64; n as usize];
+                as_bytes_mut(&mut v).copy_from_slice(&raw);
+                Ok(v)
+            };
+            dist_of = if verify { decode_u64s("dist")? } else { Vec::new() };
+            pred_of = if verify { decode_u64s("pred")? } else { Vec::new() };
+            relaxed = get("relaxed")?;
+            reached = get("reached")?;
+            rounds = get("rounds")?;
+            total_dist = get("total_dist")?;
+            checksum = get("checksum")?;
+        }
+        None => {
+            // Lifetime pushes are bounded by m + 1; with run reclamation
+            // the live footprint is far smaller, but the bound is always
+            // safe.
+            pq = EmPq::new(cfg, m + 1)?;
+            // The only per-node RAM on the EM path: the settled flag
+            // (one byte).
+            settled = vec![false; n as usize];
+            // Oracle-comparison state, allocated only under `verify`.
+            dist_of = if verify { vec![u64::MAX; n as usize] } else { Vec::new() };
+            pred_of = if verify { vec![u64::MAX; n as usize] } else { Vec::new() };
+            pq.push(SsspRecord::new(0, src, src))?;
+            (relaxed, reached, rounds, total_dist, checksum) = (1, 0, 0, 0, 0);
+        }
+    }
     if !parallel_spill {
         pq.set_spill_parallel(false);
     }
-
-    // The only per-node RAM on the EM path: the settled flag (one byte).
-    let mut settled = vec![false; n as usize];
-    // Oracle-comparison state, allocated only under `verify`.
-    let mut dist_of = if verify { vec![u64::MAX; n as usize] } else { Vec::new() };
-    let mut pred_of = if verify { vec![u64::MAX; n as usize] } else { Vec::new() };
-
-    let start = std::time::Instant::now();
-    pq.push(SsspRecord::new(0, src, src))?;
-    let mut relaxed = 1u64;
-    let mut reached = 0u64;
-    let mut rounds = 0u64;
-    let mut total_dist = 0u64;
-    let mut checksum = 0u64;
     // The driver's computation superstep — frontier out-edge
     // regeneration — runs batched on the queue's own worker pool
     // (shared with the spill pipeline; pool batches meter into the
@@ -211,6 +288,48 @@ pub fn run_sssp_with(
     let ctx = ComputeCtx::with_pool(pq.compute_pool(), pq.metrics_handle());
     let mut outbox: Vec<SsspRecord> = Vec::new();
     while let Some(head) = pq.peek_min() {
+        if let Some((stop, path)) = checkpoint_at {
+            if rounds == stop {
+                let mut bits = vec![0u8; (n as usize).div_ceil(8)];
+                for (i, &s) in settled.iter().enumerate() {
+                    if s {
+                        bits[i / 8] |= 1 << (i % 8);
+                    }
+                }
+                let mut app = vec![
+                    ("workload".to_string(), "sssp".to_string()),
+                    ("n".to_string(), n.to_string()),
+                    ("avg_deg".to_string(), avg_deg.to_string()),
+                    ("wmax".to_string(), wmax.to_string()),
+                    ("src".to_string(), src.to_string()),
+                    ("seed".to_string(), seed.to_string()),
+                    ("verify".to_string(), (verify as u64).to_string()),
+                    ("relaxed".to_string(), relaxed.to_string()),
+                    ("reached".to_string(), reached.to_string()),
+                    ("rounds".to_string(), rounds.to_string()),
+                    ("total_dist".to_string(), total_dist.to_string()),
+                    ("checksum".to_string(), checksum.to_string()),
+                    ("settled".to_string(), hex_encode(&bits)),
+                ];
+                if verify {
+                    app.push(("dist".to_string(), hex_encode(as_bytes(&dist_of))));
+                    app.push(("pred".to_string(), hex_encode(as_bytes(&pred_of))));
+                }
+                pq.checkpoint(path, &app)?;
+                return Ok(SsspResult {
+                    n,
+                    edges: m,
+                    relaxed,
+                    reached,
+                    rounds,
+                    total_dist,
+                    checksum,
+                    verified: true,
+                    wall: start.elapsed().as_secs_f64(),
+                    pq: pq.report(),
+                });
+            }
+        }
         // One equal-distance frontier per round: every record at the
         // current minimum distance, across RAM heaps and external arrays.
         let frontier = pq.extract_while_key_le(head.dist)?;
@@ -450,6 +569,47 @@ mod tests {
     fn nonzero_source() {
         let r = run_sssp(&cfg(), 1_500, 3, 20, 42, true).unwrap();
         assert!(r.verified);
+    }
+
+    /// Crash-recovery round trip: checkpoint at a frontier-round
+    /// boundary, drop all state, restore, finish — distances, checksum,
+    /// and round count must equal an uninterrupted run's, and the
+    /// restored run must still pass the in-RAM oracle.
+    #[test]
+    fn checkpoint_restore_resumes_identically() {
+        let c = cfg();
+        let full = run_sssp(&c, 1_200, 4, 50, 0, true).unwrap();
+        assert!(full.rounds > 8, "workload must have enough rounds to interrupt");
+        let dir = std::env::temp_dir().join(format!("pems2-sssp-ck-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sssp.ck");
+        let stop = full.rounds / 2;
+        let part = run_sssp_resumable(
+            &c,
+            1_200,
+            4,
+            50,
+            0,
+            true,
+            true,
+            Some((stop, &path)),
+            None,
+        )
+        .unwrap();
+        assert_eq!(part.rounds, stop, "partial run stops at the checkpoint round");
+        let resumed =
+            run_sssp_resumable(&c, 1_200, 4, 50, 0, true, true, None, Some(&path)).unwrap();
+        assert!(resumed.verified, "resumed run must pass the oracle");
+        assert_eq!(resumed.checksum, full.checksum);
+        assert_eq!(resumed.total_dist, full.total_dist);
+        assert_eq!(resumed.reached, full.reached);
+        assert_eq!(resumed.rounds, full.rounds);
+        assert_eq!(resumed.relaxed, full.relaxed);
+        // A checkpoint from different workload parameters is rejected.
+        let err = run_sssp_resumable(&c, 1_200, 4, 51, 0, true, true, None, Some(&path))
+            .unwrap_err();
+        assert!(err.to_string().contains("parameters"), "got {err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::empq::{EmPq, EmPqReport, Entry};
 use crate::error::{Error, Result};
 use crate::util::XorShift64;
 use crate::vp::{ComputeCtx, ScopedJob};
+use std::path::Path;
 
 /// Lookahead window (nodes) for pooled out-edge regeneration: edge lists
 /// are pure per-node PRNG functions, so a window regenerates batched on
@@ -94,12 +95,61 @@ pub fn run_time_forward(
     bulk: bool,
     verify: bool,
 ) -> Result<TimeForwardResult> {
+    run_time_forward_resumable(cfg, n, avg_deg, bulk, verify, None, None)
+}
+
+/// [`run_time_forward`] with crash-recovery hooks.
+///
+/// * `checkpoint_at = Some((stop, path))` — before processing node
+///   `stop`, snapshot the queue plus the driver loop's state (next node,
+///   running checksum, workload parameters) into a
+///   [`crate::runtime::Checkpoint`] manifest at `path` and return early.
+///   The partial result reports `stop` as its node count and carries the
+///   running checksum; `verified` is vacuously true.
+/// * `restore_from = Some(path)` — rebuild the queue from the manifest
+///   and resume the loop at the recorded node.  The out-edge window
+///   regenerates purely from the seed, so the continuation is
+///   byte-identical to never having stopped — the crash-recovery tests
+///   pin `checksum` equality against an uninterrupted run.
+pub fn run_time_forward_resumable(
+    cfg: &SimConfig,
+    n: u64,
+    avg_deg: u64,
+    bulk: bool,
+    verify: bool,
+    checkpoint_at: Option<(u64, &Path)>,
+    restore_from: Option<&Path>,
+) -> Result<TimeForwardResult> {
     if n == 0 {
         return Err(Error::config("time-forward needs n >= 1"));
     }
     let seed = cfg.seed;
     let m = edge_count(seed, n, avg_deg);
-    let mut pq: EmPq<Entry> = EmPq::new(cfg, m.max(1))?;
+    let (mut pq, start_node, mut checksum): (EmPq<Entry>, u64, u64) = match restore_from {
+        Some(path) => {
+            let (pq, app) = EmPq::<Entry>::restore(cfg, path)?;
+            let get = |key: &str| -> Result<u64> {
+                app.iter()
+                    .find(|(k, _)| k == key)
+                    .ok_or_else(|| {
+                        Error::config(format!("checkpoint is missing app key `{key}`"))
+                    })?
+                    .1
+                    .parse()
+                    .map_err(|_| Error::config(format!("checkpoint app key `{key}` malformed")))
+            };
+            if (get("n")?, get("avg_deg")?, get("seed")?, get("bulk")?)
+                != (n, avg_deg, seed, bulk as u64)
+            {
+                return Err(Error::config(
+                    "checkpoint was taken with different time-forward parameters \
+                     (n/avg-deg/seed/bulk must match)",
+                ));
+            }
+            (pq, get("next")?, get("checksum")?)
+        }
+        None => (EmPq::new(cfg, m.max(1))?, 0, 0),
+    };
     // The driver's computation superstep — out-edge regeneration — runs
     // batched over a lookahead window (see EDGE_WINDOW) on the queue's
     // own worker pool (shared with the spill pipeline: the two issue
@@ -110,10 +160,34 @@ pub fn run_time_forward(
     let ctx = ComputeCtx::with_pool(pq.compute_pool(), pq.metrics_handle());
 
     let start = std::time::Instant::now();
-    let mut checksum = 0u64;
     let mut window: Vec<Vec<u64>> = Vec::new();
-    let mut window_base = 0u64;
-    for i in 0..n {
+    let mut window_base = start_node;
+    for i in start_node..n {
+        if let Some((stop, path)) = checkpoint_at {
+            if i == stop {
+                pq.checkpoint(
+                    path,
+                    &[
+                        ("workload".to_string(), "time-forward".to_string()),
+                        ("next".to_string(), i.to_string()),
+                        ("checksum".to_string(), checksum.to_string()),
+                        ("n".to_string(), n.to_string()),
+                        ("avg_deg".to_string(), avg_deg.to_string()),
+                        ("seed".to_string(), seed.to_string()),
+                        ("bulk".to_string(), (bulk as u64).to_string()),
+                    ],
+                )?;
+                return Ok(TimeForwardResult {
+                    n: i,
+                    edges: m,
+                    checksum,
+                    verified: true,
+                    wall: start.elapsed().as_secs_f64(),
+                    pq: pq.report(),
+                    bulk,
+                });
+            }
+        }
         if i >= window_base + window.len() as u64 {
             window_base = i;
             let end = (i + EDGE_WINDOW).min(n);
@@ -245,5 +319,30 @@ mod tests {
         let r = run_time_forward(&cfg(), 1, 4, true, true).unwrap();
         assert!(r.verified);
         assert_eq!(r.edges, 0);
+    }
+
+    /// Crash-recovery round trip: checkpoint mid-workload, drop all
+    /// state, restore, finish — the checksum must equal an
+    /// uninterrupted run's (and the in-RAM oracle's).
+    #[test]
+    fn checkpoint_restore_resumes_identically() {
+        let c = cfg();
+        let full = run_time_forward(&c, 1500, 4, true, true).unwrap();
+        let dir = std::env::temp_dir().join(format!("pems2-tf-ck-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tf.ck");
+        let part =
+            run_time_forward_resumable(&c, 1500, 4, true, false, Some((700, &path)), None)
+                .unwrap();
+        assert_eq!(part.n, 700, "partial run stops at the checkpoint node");
+        let resumed =
+            run_time_forward_resumable(&c, 1500, 4, true, true, None, Some(&path)).unwrap();
+        assert!(resumed.verified, "resumed run must pass the oracle");
+        assert_eq!(resumed.checksum, full.checksum, "must match the uninterrupted run");
+        // A checkpoint from different workload parameters is rejected.
+        let err = run_time_forward_resumable(&c, 1500, 5, true, false, None, Some(&path))
+            .unwrap_err();
+        assert!(err.to_string().contains("parameters"), "got {err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

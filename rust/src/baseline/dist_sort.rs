@@ -334,6 +334,7 @@ pub fn run_dist_sort_masked(
         IoStyle::Async => Arc::new(AsyncIo::new(cfg.d)),
         _ => Arc::new(UnixIo::new()),
     };
+    let driver = crate::io::faulty::wrap_driver(driver, cfg, &metrics)?;
     // Scratch byte space: input | output | level-0 bucket runs |
     // re-split sub-runs (each region `bytes` long).
     let bytes = n * 4;

@@ -78,6 +78,7 @@ pub fn run_stxxl_sort_masked(
         IoStyle::Async => Arc::new(AsyncIo::new(cfg.d)),
         _ => Arc::new(UnixIo::new()),
     };
+    let driver = crate::io::faulty::wrap_driver(driver, cfg, &metrics)?;
     // Dedicated data file: element space lives in a scratch config whose
     // "context region" covers the input + output (ping-pong halves).
     let bytes = n * 4;

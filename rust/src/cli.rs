@@ -70,7 +70,7 @@ impl Cli {
     /// `--p --v --k --mu --d --sigma --alpha --io --pems1 --alloc
     /// --layout --fragmented --indirect-slot --block --timeline --xla
     /// --seed --disk-dir --unordered --threads --serial --no-prefetch
-    /// --prefetch-depth --trace-out`.
+    /// --prefetch-depth --trace-out --fault-plan`.
     ///
     /// Sizes accept suffixes `k`/`m`/`g` (binary).
     pub fn sim_config(&self) -> Result<SimConfig> {
@@ -129,6 +129,9 @@ impl Cli {
         }
         if let Some(path) = self.options.get("trace-out") {
             b = b.trace_out(path.clone());
+        }
+        if let Some(plan) = self.options.get("fault-plan") {
+            b = b.fault_plan(plan.clone());
         }
         b.build()
     }
@@ -263,6 +266,18 @@ mod tests {
         // Default: unset (falls back to the PEMS2_TRACE_OUT env var).
         let cfg = Cli::parse(args("x --v 4")).unwrap().sim_config().unwrap();
         assert!(cfg.trace_out.is_none());
+    }
+
+    #[test]
+    fn fault_plan_flag_lands_in_the_config() {
+        let cfg = Cli::parse(args("x --v 4 --fault-plan read@0:3x2,rand:2:42"))
+            .unwrap()
+            .sim_config()
+            .unwrap();
+        assert_eq!(cfg.fault_plan.as_deref(), Some("read@0:3x2,rand:2:42"));
+        // Default: unset (falls back to the PEMS2_FAULT_PLAN env var).
+        let cfg = Cli::parse(args("x --v 4")).unwrap().sim_config().unwrap();
+        assert!(cfg.fault_plan.is_none());
     }
 
     #[test]

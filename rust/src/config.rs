@@ -214,6 +214,14 @@ pub struct SimConfig {
     /// [`trace_out_env`].  Tracing is observe-only: application output is
     /// byte-identical with it on or off.
     pub trace_out: Option<PathBuf>,
+    /// Deterministic fault-injection plan (CLI `--fault-plan`); `None`
+    /// falls back to the `PEMS2_FAULT_PLAN` environment variable — see
+    /// [`SimConfig::fault_plan_spec`] and [`fault_plan_env`].  When a
+    /// plan is armed, every driver construction site wraps its driver
+    /// in [`crate::io::faulty::FaultyDriver`] (grammar documented
+    /// there).  Transient faults heal in the driver path, so
+    /// application output stays byte-identical.
+    pub fault_plan: Option<String>,
     /// Use the XLA/PJRT artifacts for computation supersteps when available.
     pub use_xla: bool,
     /// Workload seed.
@@ -306,6 +314,16 @@ impl SimConfig {
     /// default — one branch per span site, no allocation).
     pub fn trace_path(&self) -> Option<PathBuf> {
         self.trace_out.clone().or_else(trace_out_env)
+    }
+
+    /// Resolved fault-injection plan: the explicit
+    /// [`SimConfig::fault_plan`] when set, else the `PEMS2_FAULT_PLAN`
+    /// environment variable ([`fault_plan_env`]); `None` means fault
+    /// injection stays off (the default — drivers run unwrapped).  An
+    /// explicit plan always beats the env, so tests that pin exact
+    /// fault sites stay deterministic under the CI fault leg.
+    pub fn fault_plan_spec(&self) -> Option<String> {
+        self.fault_plan.clone().or_else(fault_plan_env)
     }
 
     /// Bytes of indirect area per node (PEMS1: slots for **all** `v`
@@ -441,6 +459,15 @@ pub fn trace_out_env() -> Option<PathBuf> {
     std::env::var("PEMS2_TRACE_OUT").ok().filter(|s| !s.is_empty()).map(PathBuf::from)
 }
 
+/// Fault-plan spec from `PEMS2_FAULT_PLAN` (a non-empty plan string):
+/// a process-wide default wherever a config leaves
+/// [`SimConfig::fault_plan`] unset, mirroring `PEMS2_TRACE_OUT` — CI's
+/// fault leg runs the whole suite with a transient-only plan this way.
+/// Like the trace knob it carries a value, so truthiness does not apply.
+pub fn fault_plan_env() -> Option<String> {
+    std::env::var("PEMS2_FAULT_PLAN").ok().filter(|s| !s.is_empty())
+}
+
 fn truthy(v: Option<String>) -> bool {
     matches!(v.as_deref(), Some("1") | Some("true") | Some("yes"))
 }
@@ -477,6 +504,7 @@ impl Default for SimConfigBuilder {
                 prefetch_depth: 0,
                 record_timeline: false,
                 trace_out: None,
+                fault_plan: None,
                 use_xla: false,
                 seed: 0xF00D,
             },
@@ -551,6 +579,15 @@ impl SimConfigBuilder {
     /// Export a phase-attributed Chrome trace to this path.
     pub fn trace_out(mut self, path: impl Into<PathBuf>) -> Self {
         self.cfg.trace_out = Some(path.into());
+        self
+    }
+
+    /// Arm a deterministic fault-injection plan (see
+    /// [`crate::io::faulty`] for the grammar).  An explicit plan beats
+    /// the `PEMS2_FAULT_PLAN` environment variable; the empty string
+    /// pins injection *off* even under the CI fault leg.
+    pub fn fault_plan(mut self, spec: impl Into<String>) -> Self {
+        self.cfg.fault_plan = Some(spec.into());
         self
     }
 
@@ -745,6 +782,20 @@ mod tests {
         assert_eq!(c.trace_path().unwrap(), PathBuf::from("/tmp/t.json"));
         let c = SimConfig::builder().build().unwrap();
         assert_eq!(c.trace_path(), trace_out_env());
+    }
+
+    #[test]
+    fn fault_plan_prefers_explicit_over_env() {
+        // The env var is process-global; only the explicit-plan side is
+        // asserted unconditionally.
+        let c = SimConfig::builder().fault_plan("read@0:3").build().unwrap();
+        assert_eq!(c.fault_plan_spec().as_deref(), Some("read@0:3"));
+        // The empty string is still "explicit": it beats the env, which
+        // is how fault-site-pinning tests opt out of the CI fault leg.
+        let c = SimConfig::builder().fault_plan("").build().unwrap();
+        assert_eq!(c.fault_plan_spec().as_deref(), Some(""));
+        let c = SimConfig::builder().build().unwrap();
+        assert_eq!(c.fault_plan_spec(), fault_plan_env());
     }
 
     #[test]

@@ -342,6 +342,13 @@ impl<T: Record> MultiwayMerge<T> {
         self.cursors.len()
     }
 
+    /// Read-only view of the live run cursors, in merge order.  Used by
+    /// checkpointing to serialize each run's `(base, total, consumed)`
+    /// extent state without disturbing the tournament tree.
+    pub fn cursors(&self) -> &[RunCursor<T>] {
+        &self.cursors
+    }
+
     /// Drop every exhausted run and return the `(base, byte_len)` disk
     /// extents they occupied, so the owner can recycle the space (the
     /// `empq` arena free-list).  Rebuilds the tree only if something was

@@ -49,12 +49,13 @@ use crate::disk::DiskSet;
 use crate::error::{Error, Result};
 use crate::io::{aio::AsyncIo, unix::UnixIo, IoDriver};
 use crate::metrics::{trace, CostModel, IoClass, Metrics, MetricsSnapshot, Phase, PhaseTotals};
-use crate::runtime::Compute;
-use crate::util::bytes::Pod;
+use crate::runtime::{Checkpoint, Compute, RunState};
+use crate::util::bytes::{as_bytes, as_bytes_mut, Pod};
 use crate::util::pool::WorkerPool;
 use crate::util::record::Record;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::path::Path;
 use std::sync::Arc;
 
 /// A priority-queue element: ordered by `key` (then `val`), carrying a
@@ -250,6 +251,7 @@ impl<T: Record> EmPq<T> {
             IoStyle::Async => Arc::new(AsyncIo::new(cfg.d)),
             _ => Arc::new(UnixIo::new()),
         };
+        let driver = crate::io::faulty::wrap_driver(driver, cfg, &metrics)?;
         let arena_cap = capacity.max(1) * T::SIZE as u64;
         // Scratch single-VP config whose "context space" is the arena
         // (same trick as the stxxl_sort baseline).
@@ -438,8 +440,11 @@ impl<T: Record> EmPq<T> {
                 if self.parallel_spill { self.heaps.len().min(items.len()) } else { 1 };
             let per = items.len().div_ceil(nseg).max(1);
             let segments: Vec<Vec<T>> = items.chunks(per).map(<[T]>::to_vec).collect();
-            self.write_segments_at(base, segments)?;
+            // Count the batch *before* staging: if the staged drain fails
+            // and rolls back, the elements land in the insertion heaps —
+            // already owned by the queue, so `len()` must include them.
             self.bump_len(items.len() as u64);
+            self.write_segments_at(base, segments)?;
             return Ok(());
         }
         let k = self.heaps.len();
@@ -609,12 +614,148 @@ impl<T: Record> EmPq<T> {
     /// (useful before measuring a pure-extraction phase).
     ///
     /// # Errors
-    /// An [`Error::Alloc`] (spill arena exhausted) leaves the queue fully
-    /// consistent and extractable.  An I/O error from the disk layer does
-    /// not: the queue should be dropped.
+    /// Both error classes leave the queue fully consistent and
+    /// extractable: an [`Error::Alloc`] (spill arena exhausted) fails
+    /// before the heaps drain, and an I/O error rolls the staged drain
+    /// back — the sorted elements return to the insertion heaps and the
+    /// scratch extent to the free list (see `write_segments_at`) — so
+    /// transient faults can simply be retried with another `flush`.
     pub fn flush(&mut self) -> Result<()> {
         self.spill()?;
         self.disks.flush()
+    }
+
+    // ------------------------------------------------- checkpoint/restore
+
+    /// Snapshot the queue's durable state into a versioned
+    /// [`Checkpoint`] manifest at `path` (written atomically via
+    /// temp-file + rename).
+    ///
+    /// Deferred writes are flushed first so the on-disk run bytes equal
+    /// the logical state; each run's unconsumed suffix is then embedded
+    /// in the manifest (the disk set's backing directory is per-instance
+    /// scratch, deleted on drop — the manifest is the only durable
+    /// copy).  Heap residue is serialized sorted so reruns of the same
+    /// workload produce byte-identical manifests.  `app` carries the
+    /// caller's own resume state (loop index, running checksum, …)
+    /// and is returned verbatim by [`EmPq::restore`].
+    pub fn checkpoint(&self, path: impl AsRef<Path>, app: &[(String, String)]) -> Result<()> {
+        self.disks.flush()?;
+        let mut runs = Vec::with_capacity(self.ext.num_runs());
+        for c in self.ext.cursors() {
+            let remaining = c.remaining();
+            let consumed = c.total_len() - remaining;
+            let mut data = vec![0u8; remaining as usize * T::SIZE];
+            if remaining > 0 {
+                // Runs are immutable once published, so the bytes at
+                // `base + consumed·SIZE` equal the logically remaining
+                // elements even when some are buffered in RAM.
+                self.disks.read(
+                    IoClass::Swap,
+                    c.base() + consumed * T::SIZE as u64,
+                    &mut data,
+                )?;
+            }
+            runs.push(RunState {
+                base: c.base(),
+                total: c.total_len(),
+                consumed,
+                buf_cap: c.buf_cap(),
+                data,
+            });
+        }
+        let heaps = self
+            .heaps
+            .iter()
+            .map(|h| {
+                let mut v: Vec<T> = h.iter().map(|r| r.0).collect();
+                v.sort_unstable();
+                as_bytes(&v).to_vec()
+            })
+            .collect();
+        let ck = Checkpoint {
+            record_size: T::SIZE,
+            capacity: (self.arena_cap / T::SIZE as u64) as usize,
+            len: self.len,
+            max_len: self.max_len,
+            arena_at: self.arena_at,
+            arena_reused: self.arena_reused,
+            runs_created: self.runs_created,
+            next_heap: self.next_heap,
+            runs,
+            free: self.free.spans.clone(),
+            heaps,
+            app: app.to_vec(),
+        };
+        ck.save(path)
+    }
+
+    /// Rebuild a queue from a [`Checkpoint`] manifest written by
+    /// [`EmPq::checkpoint`], returning it with the manifest's `app`
+    /// key/value state.  `cfg` must give the same `k` (heap count) and
+    /// element type as the checkpointed queue; run bytes are rewritten
+    /// into a fresh disk set at their original logical offsets.
+    pub fn restore(cfg: &SimConfig, path: impl AsRef<Path>) -> Result<(EmPq<T>, Vec<(String, String)>)> {
+        let ck = Checkpoint::load(path)?;
+        if ck.record_size != T::SIZE {
+            return Err(Error::config(format!(
+                "checkpoint record size {} B does not match this queue's element ({} B)",
+                ck.record_size,
+                T::SIZE
+            )));
+        }
+        let mut pq = EmPq::new(cfg, ck.capacity as u64)?;
+        if ck.heaps.len() != pq.heaps.len() {
+            return Err(Error::config(format!(
+                "checkpoint has {} insertion heaps but the config gives {} \
+                 (restore with the same k)",
+                ck.heaps.len(),
+                pq.heaps.len()
+            )));
+        }
+        for r in &ck.runs {
+            let rem = r.total - r.consumed;
+            let start = r.base + r.consumed * T::SIZE as u64;
+            if rem > 0 {
+                pq.disks.write(IoClass::Swap, start, &r.data)?;
+                let cursor = RunCursor::new(start, rem, r.buf_cap, IoClass::Swap);
+                pq.ext.add_run(cursor, &pq.disks)?;
+            }
+            // The consumed prefix is dead space: hand it to the free
+            // list now, so retiring the (shortened) suffix run later
+            // balances the arena accounting exactly.
+            pq.free.insert(r.base, r.consumed * T::SIZE as u64);
+        }
+        for &(base, len) in &ck.free {
+            pq.free.insert(base, len);
+        }
+        for (i, hb) in ck.heaps.iter().enumerate() {
+            let n = hb.len() / T::SIZE;
+            if n == 0 {
+                continue;
+            }
+            // Decode into typed storage rather than casting the raw byte
+            // buffer: a parsed Vec<u8> has no alignment guarantee.
+            let mut elems = vec![T::zeroed(); n];
+            as_bytes_mut(&mut elems).copy_from_slice(hb);
+            pq.heaps[i].extend(elems.into_iter().map(Reverse));
+            pq.ram_len += n;
+        }
+        pq.arena_at = ck.arena_at;
+        pq.arena_reused = ck.arena_reused;
+        pq.runs_created = ck.runs_created;
+        pq.next_heap = ck.next_heap % pq.heaps.len();
+        pq.len = ck.len;
+        pq.max_len = ck.max_len;
+        pq.disks.flush()?;
+        let live = pq.ram_len as u64 + pq.ext.remaining();
+        if live != pq.len {
+            return Err(Error::runtime(format!(
+                "checkpoint inconsistent: manifest claims {} live elements, restored {live}",
+                pq.len
+            )));
+        }
+        Ok((pq, ck.app))
     }
 
     /// Return every exhausted external array's extent to the free-list;
@@ -657,10 +798,12 @@ impl<T: Record> EmPq<T> {
         self.reclaim();
         // Allocate *before* draining the heaps: an arena-exhaustion error
         // must leave the queue consistent — every element stays
-        // extractable from RAM and `len()` stays truthful.  (A *disk
-        // write* error further down is not recoverable: the drained
-        // elements are in flight and the queue must be discarded — the
-        // same contract as the seed's single-write spill.)
+        // extractable from RAM and `len()` stays truthful.  A *disk
+        // write* error further down is recoverable too: the drain is
+        // staged through a scratch run that `write_segments_at` only
+        // publishes after every write ticket completes, and on failure
+        // the sorted segments are pushed back into the insertion heaps
+        // and the staged extent returns to the free list.
         let base = self.alloc_extent((self.ram_len * T::SIZE) as u64)?;
         let segments: Vec<Vec<T>> = if self.parallel_spill && self.heaps.len() > 1 {
             self.heaps
@@ -719,9 +862,16 @@ impl<T: Record> EmPq<T> {
         Ok(base)
     }
 
-    /// Sort `segments` (on the pool when parallel), merge them and stream
-    /// the result to `[base, base + total·SIZE)` in block-sized chunks,
-    /// then register the new run with a resident head.
+    /// Sort `segments` (on the pool when parallel), stage them as a
+    /// scratch run at `[base, base + total·SIZE)`, and atomically
+    /// publish the run into the external-array set only once every
+    /// write ticket has completed ([`EmPq::publish_run`]).
+    ///
+    /// On *any* staging failure the drain is rolled back: the staged
+    /// extent returns to the free list (no scratch run is left behind)
+    /// and the already-sorted segments are pushed back into the
+    /// insertion heaps, so every element stays extractable and a later
+    /// retry (e.g. under a healed transient fault plan) can spill again.
     ///
     /// The pipeline itself is the shared [`merge::sort_segments`] /
     /// [`merge::merge_write_segments`] pair (also driving `stxxl_sort`
@@ -748,12 +898,45 @@ impl<T: Record> EmPq<T> {
                 ext.set_buf_caps(cap)
             })
         };
-        // One disk block per write chunk (`cap` never exceeds it — see
-        // `next_run_buf_cap`'s clamp); the run's head stays resident so
-        // the merge needs no immediate read-back.
+        match self.publish_run(base, &segments, cap, total) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                // Roll the staged drain back.  The extent may hold a
+                // partial scratch run; freeing it both deletes the
+                // scratch (logically — it can never be read) and keeps
+                // arena accounting exact.  Segment -> heap assignment is
+                // deterministic (i mod k) so a seeded rerun rebuilds the
+                // identical RAM state.
+                self.free.insert(base, (total * T::SIZE) as u64);
+                let k = self.heaps.len();
+                for (i, seg) in segments.into_iter().enumerate() {
+                    self.heaps[i % k].extend(seg.into_iter().map(Reverse));
+                }
+                self.ram_len += total;
+                Err(e)
+            }
+        }
+    }
+
+    /// Stage-then-publish: stream the sorted segments to disk, *wait for
+    /// every write ticket* (the stage barrier — under async I/O
+    /// `merge_write_segments` returns with writes still in flight, and a
+    /// deferred failure must surface before the run becomes visible),
+    /// and only then register the run with the external merge.
+    ///
+    /// One disk block per write chunk (`cap` never exceeds it — see
+    /// `next_run_buf_cap`'s clamp); the run's head stays resident so the
+    /// merge needs no immediate read-back.
+    fn publish_run(
+        &mut self,
+        base: u64,
+        segments: &[Vec<T>],
+        cap: usize,
+        total: usize,
+    ) -> Result<()> {
         let merge_span = trace::span(Phase::Merge);
         let head = merge::merge_write_segments(
-            &segments,
+            segments,
             &self.disks,
             base,
             IoClass::Swap,
@@ -761,10 +944,14 @@ impl<T: Record> EmPq<T> {
             cap.min(total),
         )?;
         drop(merge_span);
-        self.runs_created += 1;
+        // Stage barrier: every deferred write completes (or fails) here,
+        // while the run is still private scratch state.
+        self.disks.flush()?;
         let cursor =
             RunCursor::with_resident_head(base, total as u64, cap, IoClass::Swap, head);
-        self.ext.add_run(cursor, &self.disks)
+        self.ext.add_run(cursor, &self.disks)?;
+        self.runs_created += 1;
+        Ok(())
     }
 }
 
@@ -1142,6 +1329,161 @@ mod tests {
             "later rounds must be served from retired extents (reused {})",
             report.arena_reused
         );
+    }
+
+    // -------------------------------------------- staged drain & recovery
+
+    /// A spill whose write fails before publish must roll back
+    /// completely: no run published, no scratch extent leaked (it
+    /// returns to the free list), every element still extractable, and
+    /// the injected faults fully accounted (injected = retried + fatal).
+    #[test]
+    fn failed_spill_rolls_back_and_reclaims_the_staged_extent() {
+        let cfg = SimConfig::builder()
+            .v(2)
+            .k(2)
+            .mu(16 << 10)
+            .d(2)
+            .block(4096)
+            .io(IoStyle::Async)
+            .fault_plan("write@*:1x999") // every write fails, forever
+            .build()
+            .unwrap();
+        let mut pq: EmPq = EmPq::new(&cfg, 1 << 16).unwrap();
+        let mut pushed = 0u64;
+        let mut spill_err = None;
+        for i in 0..pq.ram_capacity() as u64 + 8 {
+            pushed += 1; // a failed spill still keeps the pushed element
+            if let Err(e) = pq.push(Entry::new(i ^ 0x5a5a, i)) {
+                spill_err = Some(e);
+                break;
+            }
+        }
+        let err = spill_err.expect("persistent write faults must fail the spill");
+        assert!(matches!(err, Error::Io(_)), "got {err}");
+        assert_eq!(pq.external_runs(), 0, "failed spill must not publish a run");
+        assert_eq!(pq.len(), pushed, "no element may be lost");
+        assert_eq!(pq.ram_resident() as u64, pushed, "rollback refills the heaps");
+        assert_eq!(
+            pq.free.total(),
+            pushed * 16,
+            "the staged extent must return to the free list, not leak"
+        );
+        // A retry fails again (the plan is persistent) but stays consistent.
+        assert!(pq.flush().is_err());
+        assert_eq!(pq.len(), pushed);
+        let snap = pq.metrics();
+        assert!(snap.io_faults_injected > 0);
+        assert_eq!(snap.io_faults_injected, snap.io_retries + snap.io_fault_fatal);
+        // Extraction touches no writes: the full, sorted content drains.
+        let out = pq.extract_min_batch(usize::MAX).unwrap();
+        assert_eq!(out.len() as u64, pushed);
+        assert!(out.windows(2).all(|w| w[0] <= w[1]));
+        assert!(pq.is_empty());
+    }
+
+    /// Transient write faults heal inside the driver's retry budget, so
+    /// the staged drain publishes normally and extraction matches a
+    /// fault-free queue byte for byte.
+    #[test]
+    fn transient_faults_leave_spills_byte_identical() {
+        let mut rng = XorShift64::new(4242);
+        let items: Vec<Entry> =
+            (0..5000).map(|i| Entry::new(rng.next_u64() % 2000, i)).collect();
+        let drain = |plan: &str| -> (Vec<Entry>, MetricsSnapshot) {
+            let cfg = SimConfig::builder()
+                .v(2)
+                .k(2)
+                .mu(16 << 10)
+                .d(2)
+                .block(4096)
+                .io(IoStyle::Async)
+                .fault_plan(plan)
+                .build()
+                .unwrap();
+            let mut pq: EmPq = EmPq::new(&cfg, 1 << 16).unwrap();
+            for &e in &items {
+                pq.push(e).unwrap();
+            }
+            (pq.extract_min_batch(usize::MAX).unwrap(), pq.metrics())
+        };
+        let (clean, m0) = drain("");
+        let (faulty, m1) = drain("write@*:3x2,read@*:5x2,short@*:7");
+        assert_eq!(m0.io_faults_injected, 0, "empty plan must stay unarmed");
+        assert!(m1.io_faults_injected > 0, "plan must actually fire");
+        assert_eq!(m1.io_fault_fatal, 0, "x2 windows heal within the budget");
+        assert_eq!(m1.io_faults_injected, m1.io_retries);
+        assert_eq!(faulty, clean, "healed faults must not change the output");
+    }
+
+    // ------------------------------------------------ checkpoint/restore
+
+    /// Mid-stream snapshot: spill, partially consume the external merge,
+    /// leave heap residue, checkpoint, destroy the queue (its disk
+    /// directory included), restore from the manifest alone, and finish —
+    /// the continuation must equal the uninterrupted run exactly.
+    #[test]
+    fn checkpoint_restore_round_trips_mid_stream() {
+        let cfg = tiny_cfg();
+        let mut pq: EmPq = EmPq::new(&cfg, 1 << 16).unwrap();
+        let mut rng = XorShift64::new(77);
+        let items: Vec<Entry> =
+            (0..6000).map(|i| Entry::new(rng.next_u64() % 10_000, i)).collect();
+        pq.push_batch(&items[..5000]).unwrap();
+        let head = pq.extract_min_batch(1200).unwrap(); // consume a run prefix
+        pq.push_batch(&items[5000..]).unwrap(); // fresh heap residue
+        assert!(pq.external_runs() > 0 && pq.ram_resident() > 0, "setup straddles");
+
+        let dir = std::env::temp_dir().join(format!("pems2-empq-ck-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pq.ck");
+        let app = vec![("cursor".to_string(), "1200".to_string())];
+        pq.checkpoint(&path, &app).unwrap();
+
+        let want = pq.extract_min_batch(usize::MAX).unwrap();
+        drop(pq); // removes the backing disk directory
+
+        let (mut rq, app_back) = EmPq::<Entry>::restore(&cfg, &path).unwrap();
+        assert_eq!(app_back, app, "app state round-trips verbatim");
+        assert_eq!(rq.len() as usize, items.len() - head.len());
+        let got = rq.extract_min_batch(usize::MAX).unwrap();
+        assert_eq!(got, want, "restored queue must continue identically");
+        assert!(rq.is_empty());
+
+        // Checkpointing is repeatable: the restored queue's empty state
+        // snapshots and restores too.
+        rq.checkpoint(&path, &[]).unwrap();
+        let (eq, _) = EmPq::<Entry>::restore(&cfg, &path).unwrap();
+        assert!(eq.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Restore validates the manifest against the element type and the
+    /// config's heap count instead of corrupting silently.
+    #[test]
+    fn restore_rejects_mismatched_geometry() {
+        let cfg = tiny_cfg();
+        let pq: EmPq = EmPq::new(&cfg, 1 << 12).unwrap();
+        let dir = std::env::temp_dir().join(format!("pems2-empq-geo-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pq.ck");
+        pq.checkpoint(&path, &[]).unwrap();
+        // Wrong element type: Entry manifests say 16 B, u64 wants 8 B.
+        let err = EmPq::<u64>::restore(&cfg, &path).unwrap_err();
+        assert!(err.to_string().contains("record size"), "got {err}");
+        // Wrong k: the manifest froze 2 insertion heaps.
+        let cfg1 = SimConfig::builder()
+            .v(2)
+            .k(1)
+            .mu(16 << 10)
+            .d(2)
+            .block(4096)
+            .io(IoStyle::Async)
+            .build()
+            .unwrap();
+        let err = EmPq::<Entry>::restore(&cfg1, &path).unwrap_err();
+        assert!(err.to_string().contains("heaps"), "got {err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

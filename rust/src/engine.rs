@@ -86,6 +86,7 @@ pub fn run_arc(
             IoStyle::Async => Arc::new(AsyncIo::new(cfg.d)),
             _ => Arc::new(UnixIo::new()),
         };
+        let driver = crate::io::faulty::wrap_driver(driver, &cfg, &metrics)?;
         let disks = if cfg.io == IoStyle::Mem {
             None
         } else {

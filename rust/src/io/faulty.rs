@@ -1,0 +1,732 @@
+//! Deterministic fault injection over any [`IoDriver`] (ISSUE 8).
+//!
+//! [`FaultyDriver`] wraps an inner driver and executes a seeded, fully
+//! deterministic [`FaultPlan`]: transient `EIO` on the Nth read/write to
+//! disk d, short writes, and delayed completions.  A bounded
+//! retry/backoff policy lives *in the driver path*, so transient faults
+//! heal invisibly (same bytes as a fault-free run) and persistent ones
+//! surface as the existing structured [`IoFault`] — through the same
+//! ticket/error channels real write-behind and prefetch failures use.
+//!
+//! # Plan grammar
+//!
+//! A plan is a comma- or semicolon-separated list of clauses:
+//!
+//! ```text
+//! kind@disk:nth[xcount]     kind ∈ read | write | short | delay
+//! rand:permille[:seed]
+//! ```
+//!
+//! * `read@2:5` — the 5th read op on disk 2 fails with a transient EIO.
+//! * `write@*:7x3` — on every disk, write ops 7, 8 and 9 fail.
+//! * `short@0:4` — the 4th write op on disk 0 lands only a prefix of its
+//!   bytes, then reports failure (the retry rewrites the full range, so
+//!   a healed short write is byte-identical).
+//! * `delay@1:3x2` — read ops 3 and 4 on disk 1 complete late (a fixed
+//!   deterministic sleep); no error, no fault counters, trace only.
+//! * `rand:2:42` — every read/write op additionally fails with
+//!   probability 2‰, decided by a pure hash of
+//!   `(seed, disk, op-kind, op-index)` — no shared RNG stream, so
+//!   reruns and retries see identical verdicts per op index.
+//!
+//! Op indices are 1-based and **per (disk, kind)**, where `short`
+//! clauses match the write counter and `delay` clauses the read
+//! counter.  Every physical attempt — including each retry — consumes
+//! the next index, so `write@0:5x3` makes the op-5 attempt and its
+//! first two retries fail, and the third retry (op 8) heal.
+//!
+//! # Retry policy and accounting
+//!
+//! Up to [`MAX_RETRIES`] retries per logical operation with a small
+//! deterministic doubling backoff.  Every failed attempt increments
+//! `io_faults_injected`; every retry increments `io_retries`; giving up
+//! increments `io_fault_fatal` and surfaces the [`IoFault`].  The
+//! invariant `io_faults_injected == io_retries + io_fault_fatal` holds
+//! at every quiescent point — no injected fault is silently swallowed.
+//! Fault-plan windows of `count <= MAX_RETRIES` therefore always heal;
+//! longer windows (and unlucky `rand` streaks) go fatal.
+//!
+//! The wrapper sits *below* [`crate::disk::DiskSet`]'s byte metering,
+//! so retries do not inflate the `io_volume` counters the cost-model
+//! conformance checks pin.
+
+use crate::config::SimConfig;
+use crate::error::{Error, Result};
+use crate::io::{DiskFile, IoDriver, IoFault, ReadDst, ReadTicket, WriteSrc, WriteTicket};
+use crate::metrics::{trace, Metrics};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Maximum retries after the first failed attempt of one logical op.
+pub const MAX_RETRIES: u32 = 4;
+
+/// Sleep applied by a `delay` clause (deterministic, completion-order
+/// preserving: the op still runs, just late).
+const DELAY: Duration = Duration::from_millis(1);
+
+/// Base backoff before the first retry; doubles per retry.
+const BACKOFF_BASE_US: u64 = 100;
+
+/// Which per-disk op counter a clause matches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum OpClass {
+    Read = 0,
+    Write = 1,
+}
+
+/// What a clause does to a matched op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FaultKind {
+    /// Transient EIO on a read.
+    Read,
+    /// Transient EIO on a write (nothing is written).
+    Write,
+    /// Short write: a prefix lands, then the op reports failure.
+    Short,
+    /// Delayed completion of a read; no error.
+    Delay,
+}
+
+impl FaultKind {
+    fn class(self) -> OpClass {
+        match self {
+            FaultKind::Read | FaultKind::Delay => OpClass::Read,
+            FaultKind::Write | FaultKind::Short => OpClass::Write,
+        }
+    }
+}
+
+/// One `kind@disk:nth[xcount]` clause.
+#[derive(Debug, Clone)]
+struct Clause {
+    kind: FaultKind,
+    /// `None` = `*` (all disks).
+    disk: Option<usize>,
+    /// First 1-based op index the clause fires on.
+    nth: u64,
+    /// Number of consecutive op indices it fires on.
+    count: u64,
+}
+
+impl Clause {
+    fn matches(&self, disk: usize, class: OpClass, op: u64) -> bool {
+        self.kind.class() == class
+            && self.disk.map(|d| d == disk).unwrap_or(true)
+            && op >= self.nth
+            && op < self.nth + self.count
+    }
+}
+
+/// `rand:permille[:seed]` — stateless per-op coin flips.
+#[derive(Debug, Clone, Copy)]
+struct RandSpec {
+    permille: u32,
+    seed: u64,
+}
+
+impl RandSpec {
+    /// Pure function of (seed, disk, kind, op index): rerunning the same
+    /// plan over the same op sequence reproduces every verdict.
+    fn fails(&self, disk: usize, class: OpClass, op: u64) -> bool {
+        let mut x = self
+            .seed
+            .wrapping_add((disk as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add(op.wrapping_mul(0xBF58_476D_1CE4_E5B9))
+            .wrapping_add((class as u64) << 62);
+        // splitmix64 finalizer.
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x ^= x >> 27;
+        x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+        x % 1000 < self.permille as u64
+    }
+}
+
+/// A parsed, immutable fault plan (see the module docs for the grammar).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    clauses: Vec<Clause>,
+    rand: Option<RandSpec>,
+}
+
+/// The verdict for one physical op attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Verdict {
+    Pass,
+    Fail,
+    Short,
+    Delay,
+}
+
+impl FaultPlan {
+    /// Parse a plan spec; `Error::Config` on malformed clauses.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for raw in spec.split([',', ';']) {
+            let clause = raw.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(rest) = clause.strip_prefix("rand:") {
+                let mut it = rest.splitn(2, ':');
+                let permille: u32 = it
+                    .next()
+                    .unwrap_or("")
+                    .parse()
+                    .map_err(|_| bad(clause, "permille must be an integer"))?;
+                if permille > 1000 {
+                    return Err(bad(clause, "permille must be <= 1000"));
+                }
+                let seed: u64 = match it.next() {
+                    Some(s) => s.parse().map_err(|_| bad(clause, "seed must be an integer"))?,
+                    None => 0,
+                };
+                plan.rand = Some(RandSpec { permille, seed });
+                continue;
+            }
+            let (kind_s, rest) = clause
+                .split_once('@')
+                .ok_or_else(|| bad(clause, "expected kind@disk:nth[xcount]"))?;
+            let kind = match kind_s {
+                "read" => FaultKind::Read,
+                "write" => FaultKind::Write,
+                "short" => FaultKind::Short,
+                "delay" => FaultKind::Delay,
+                _ => return Err(bad(clause, "kind must be read|write|short|delay")),
+            };
+            let (disk_s, nth_s) = rest
+                .split_once(':')
+                .ok_or_else(|| bad(clause, "expected kind@disk:nth[xcount]"))?;
+            let disk = if disk_s == "*" {
+                None
+            } else {
+                Some(disk_s.parse().map_err(|_| bad(clause, "disk must be an integer or *"))?)
+            };
+            let (nth_s, count_s) = match nth_s.split_once('x') {
+                Some((a, b)) => (a, Some(b)),
+                None => (nth_s, None),
+            };
+            let nth: u64 =
+                nth_s.parse().map_err(|_| bad(clause, "nth must be a positive integer"))?;
+            if nth == 0 {
+                return Err(bad(clause, "op indices are 1-based"));
+            }
+            let count: u64 = match count_s {
+                Some(c) => c.parse().map_err(|_| bad(clause, "count must be a positive integer"))?,
+                None => 1,
+            };
+            if count == 0 {
+                return Err(bad(clause, "count must be >= 1"));
+            }
+            plan.clauses.push(Clause { kind, disk, nth, count });
+        }
+        Ok(plan)
+    }
+
+    /// True when the plan injects nothing (no clauses, no rand).
+    pub fn is_empty(&self) -> bool {
+        self.clauses.is_empty() && self.rand.is_none()
+    }
+
+    fn verdict(&self, disk: usize, class: OpClass, op: u64) -> Verdict {
+        for c in &self.clauses {
+            if c.matches(disk, class, op) {
+                return match c.kind {
+                    FaultKind::Read | FaultKind::Write => Verdict::Fail,
+                    FaultKind::Short => Verdict::Short,
+                    FaultKind::Delay => Verdict::Delay,
+                };
+            }
+        }
+        if let Some(r) = self.rand {
+            if r.fails(disk, class, op) {
+                return Verdict::Fail;
+            }
+        }
+        Verdict::Pass
+    }
+}
+
+fn bad(clause: &str, why: &str) -> Error {
+    Error::config(format!("fault plan clause `{clause}`: {why}"))
+}
+
+/// Per-disk read/write op counters (index 0 = read, 1 = write).
+struct DiskCounters {
+    ops: [AtomicU64; 2],
+}
+
+/// An [`IoDriver`] that injects a [`FaultPlan`] over an inner driver.
+///
+/// Non-injected async ops delegate untouched to the inner driver (the
+/// write-behind / prefetch overlap the async driver provides is
+/// preserved); injected ops run their retry loop inline and complete a
+/// pending ticket with the outcome, so a fatal injection on a prefetch
+/// yields a ticket whose `wait()` fails — exactly the path the swap
+/// scheduler's blocking fallback covers.
+pub struct FaultyDriver {
+    inner: Arc<dyn IoDriver>,
+    plan: FaultPlan,
+    metrics: Arc<Metrics>,
+    disks: Vec<DiskCounters>,
+}
+
+impl FaultyDriver {
+    /// Wrap `inner`, injecting `plan` over `d` disks.
+    pub fn new(inner: Arc<dyn IoDriver>, plan: FaultPlan, d: usize, metrics: Arc<Metrics>) -> Self {
+        let disks = (0..d.max(1))
+            .map(|_| DiskCounters { ops: [AtomicU64::new(0), AtomicU64::new(0)] })
+            .collect();
+        FaultyDriver { inner, plan, metrics, disks }
+    }
+
+    /// Consume the next 1-based op index for (disk, class) and return
+    /// the plan's verdict for it.  Per-disk request queues process ops
+    /// FIFO, so per-(disk, class) indices are deterministic across runs.
+    fn decide(&self, disk: usize, class: OpClass) -> Verdict {
+        let slot = disk.min(self.disks.len() - 1);
+        let op = self.disks[slot].ops[class as usize].fetch_add(1, Ordering::Relaxed) + 1;
+        self.plan.verdict(disk, class, op)
+    }
+
+    fn note_injected(&self) {
+        self.metrics.fault_injected();
+        trace::instant("io_fault_injected");
+    }
+
+    fn note_retry(&self, attempt: u32) {
+        self.metrics.fault_retry();
+        trace::instant("io_fault_retry");
+        // Deterministic doubling backoff: 200us, 400us, 800us, 1.6ms.
+        std::thread::sleep(Duration::from_micros(BACKOFF_BASE_US << attempt.min(6)));
+    }
+
+    fn fatal(&self, disk: usize, off: u64, len: usize, op: &'static str) -> IoFault {
+        self.metrics.fault_fatal();
+        trace::instant("io_fault_fatal");
+        IoFault { disk, off, len, op, error: "injected EIO (fault plan)".into() }
+    }
+
+    /// Retry loop after a read attempt already failed (its injection is
+    /// already counted).  Ok(Ok) = healed, Ok(Err) = fatal injected
+    /// fault, Err = real inner-driver error.
+    fn retry_read(
+        &self,
+        disk: &DiskFile,
+        off: u64,
+        buf: &mut [u8],
+    ) -> Result<std::result::Result<(), IoFault>> {
+        let mut attempt = 0u32;
+        loop {
+            if attempt >= MAX_RETRIES {
+                return Ok(Err(self.fatal(disk.index, off, buf.len(), "read")));
+            }
+            attempt += 1;
+            self.note_retry(attempt);
+            match self.decide(disk.index, OpClass::Read) {
+                Verdict::Fail => self.note_injected(),
+                Verdict::Delay => {
+                    trace::instant("io_fault_delay");
+                    std::thread::sleep(DELAY);
+                    self.inner.read_at(disk, off, buf)?;
+                    return Ok(Ok(()));
+                }
+                // `Short` cannot match the read counter.
+                Verdict::Pass | Verdict::Short => {
+                    self.inner.read_at(disk, off, buf)?;
+                    return Ok(Ok(()));
+                }
+            }
+        }
+    }
+
+    /// Retry loop after a write attempt already failed.  A `Short`
+    /// verdict lands a prefix through the inner driver before counting
+    /// the failure; per-disk FIFO ordering means the healing rewrite
+    /// overwrites the prefix, so a healed short write is byte-identical.
+    fn retry_write(
+        &self,
+        disk: &DiskFile,
+        off: u64,
+        data: &[u8],
+    ) -> Result<std::result::Result<(), IoFault>> {
+        let mut attempt = 0u32;
+        loop {
+            if attempt >= MAX_RETRIES {
+                return Ok(Err(self.fatal(disk.index, off, data.len(), "write")));
+            }
+            attempt += 1;
+            self.note_retry(attempt);
+            match self.decide(disk.index, OpClass::Write) {
+                Verdict::Fail => self.note_injected(),
+                Verdict::Short => {
+                    self.short_prefix(disk, off, data)?;
+                    self.note_injected();
+                }
+                Verdict::Pass | Verdict::Delay => {
+                    self.inner.write_at(disk, off, data)?;
+                    return Ok(Ok(()));
+                }
+            }
+        }
+    }
+
+    /// Land the prefix of a short write through the inner driver.
+    fn short_prefix(&self, disk: &DiskFile, off: u64, data: &[u8]) -> Result<()> {
+        let half = data.len() / 2;
+        if half > 0 {
+            self.inner.write_at(disk, off, &data[..half])?;
+        }
+        Ok(())
+    }
+
+    fn surface(fault: IoFault) -> Error {
+        Error::Io(std::io::Error::other(fault.to_string()))
+    }
+}
+
+impl IoDriver for FaultyDriver {
+    fn read_at(&self, disk: &DiskFile, off: u64, buf: &mut [u8]) -> Result<()> {
+        match self.decide(disk.index, OpClass::Read) {
+            Verdict::Pass | Verdict::Short => self.inner.read_at(disk, off, buf),
+            Verdict::Delay => {
+                trace::instant("io_fault_delay");
+                std::thread::sleep(DELAY);
+                self.inner.read_at(disk, off, buf)
+            }
+            Verdict::Fail => {
+                self.note_injected();
+                match self.retry_read(disk, off, buf)? {
+                    Ok(()) => Ok(()),
+                    Err(fault) => Err(Self::surface(fault)),
+                }
+            }
+        }
+    }
+
+    fn write_at(&self, disk: &DiskFile, off: u64, data: &[u8]) -> Result<()> {
+        match self.decide(disk.index, OpClass::Write) {
+            Verdict::Pass | Verdict::Delay => self.inner.write_at(disk, off, data),
+            v @ (Verdict::Fail | Verdict::Short) => {
+                if v == Verdict::Short {
+                    self.short_prefix(disk, off, data)?;
+                }
+                self.note_injected();
+                match self.retry_write(disk, off, data)? {
+                    Ok(()) => Ok(()),
+                    Err(fault) => Err(Self::surface(fault)),
+                }
+            }
+        }
+    }
+
+    fn read_at_async(&self, disk: &DiskFile, off: u64, dst: ReadDst) -> Result<ReadTicket> {
+        match self.decide(disk.index, OpClass::Read) {
+            // Not injected: delegate untouched, preserving the inner
+            // driver's overlap (the prefetch pipeline stays async).
+            Verdict::Pass | Verdict::Short => self.inner.read_at_async(disk, off, dst),
+            Verdict::Delay => {
+                trace::instant("io_fault_delay");
+                std::thread::sleep(DELAY);
+                self.inner.read_at_async(disk, off, dst)
+            }
+            Verdict::Fail => {
+                self.note_injected();
+                // SAFETY: per the ReadDst contract the region is valid
+                // and exclusively ours until the ticket completes; the
+                // ticket completes before this call returns.
+                let buf = unsafe { std::slice::from_raw_parts_mut(dst.ptr, dst.len) };
+                let (ticket, completion) = ReadTicket::pending();
+                completion.complete(self.retry_read(disk, off, buf)?);
+                Ok(ticket)
+            }
+        }
+    }
+
+    fn write_at_async(&self, disk: &DiskFile, off: u64, src: WriteSrc) -> Result<WriteTicket> {
+        match self.decide(disk.index, OpClass::Write) {
+            Verdict::Pass | Verdict::Delay => self.inner.write_at_async(disk, off, src),
+            v @ (Verdict::Fail | Verdict::Short) => {
+                // SAFETY: per the WriteSrc contract the region stays
+                // valid and frozen until the ticket completes; the
+                // ticket completes before this call returns.
+                let data = unsafe { std::slice::from_raw_parts(src.ptr, src.len) };
+                if v == Verdict::Short {
+                    self.short_prefix(disk, off, data)?;
+                }
+                self.note_injected();
+                let (ticket, completion) = WriteTicket::pending();
+                completion.complete(self.retry_write(disk, off, data)?);
+                Ok(ticket)
+            }
+        }
+    }
+
+    fn flush_disk(&self, disk_index: usize) -> Result<()> {
+        self.inner.flush_disk(disk_index)
+    }
+
+    fn flush_all(&self) -> Result<()> {
+        self.inner.flush_all()
+    }
+
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+}
+
+/// Wrap `driver` in a [`FaultyDriver`] when the config (or the
+/// `PEMS2_FAULT_PLAN` environment variable) carries a fault plan;
+/// otherwise hand `driver` back unchanged.  Every driver construction
+/// site routes through here so one knob arms the whole tree.
+pub fn wrap_driver(
+    driver: Arc<dyn IoDriver>,
+    cfg: &SimConfig,
+    metrics: &Arc<Metrics>,
+) -> Result<Arc<dyn IoDriver>> {
+    match cfg.fault_plan_spec() {
+        None => Ok(driver),
+        Some(spec) => {
+            let plan = FaultPlan::parse(&spec)?;
+            if plan.is_empty() {
+                return Ok(driver);
+            }
+            Ok(Arc::new(FaultyDriver::new(driver, plan, cfg.d, metrics.clone())))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::unix::UnixIo;
+
+    fn tmpdisk() -> (std::path::PathBuf, DiskFile) {
+        let dir = std::env::temp_dir().join(format!(
+            "pems2-faulty-test-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("d0.dat");
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .open(&path)
+            .unwrap();
+        file.set_len(1 << 20).unwrap();
+        (path, DiskFile { index: 0, file })
+    }
+
+    fn faulty(plan: &str) -> (FaultyDriver, Arc<Metrics>) {
+        let metrics = Arc::new(Metrics::new());
+        let d = FaultyDriver::new(
+            Arc::new(UnixIo::new()),
+            FaultPlan::parse(plan).unwrap(),
+            2,
+            metrics.clone(),
+        );
+        (d, metrics)
+    }
+
+    fn invariant(m: &Metrics) {
+        let s = m.snapshot();
+        assert_eq!(
+            s.io_faults_injected,
+            s.io_retries + s.io_fault_fatal,
+            "no injected fault may be silently swallowed"
+        );
+    }
+
+    #[test]
+    fn parse_accepts_the_documented_grammar() {
+        let p = FaultPlan::parse("read@2:5, write@*:7x3; short@0:4, delay@1:3x2, rand:2:42")
+            .unwrap();
+        assert_eq!(p.clauses.len(), 4);
+        assert_eq!(p.clauses[1].disk, None);
+        assert_eq!(p.clauses[1].count, 3);
+        assert_eq!(p.rand.unwrap().permille, 2);
+        assert_eq!(p.rand.unwrap().seed, 42);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("rand:0").unwrap().rand.is_some());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_clauses() {
+        for bad in [
+            "nonsense",
+            "read@0",
+            "read@x:1",
+            "read@0:0",
+            "write@0:1x0",
+            "flip@0:1",
+            "rand:1001",
+            "rand:abc",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn transient_write_fault_heals_byte_identically() {
+        let (drv, m) = faulty("write@0:1x2");
+        let (path, disk) = tmpdisk();
+        let data = vec![0xC3u8; 4096];
+        drv.write_at(&disk, 8192, &data).unwrap();
+        let mut back = vec![0u8; 4096];
+        drv.read_at(&disk, 8192, &mut back).unwrap();
+        assert_eq!(back, data);
+        let s = m.snapshot();
+        assert_eq!((s.io_faults_injected, s.io_retries, s.io_fault_fatal), (2, 2, 0));
+        invariant(&m);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn short_write_heals_byte_identically() {
+        let (drv, m) = faulty("short@0:1");
+        let (path, disk) = tmpdisk();
+        // Distinct halves so a surviving prefix-only write is caught.
+        let mut data = vec![0x11u8; 4096];
+        data[2048..].fill(0x22);
+        drv.write_at(&disk, 0, &data).unwrap();
+        let mut back = vec![0u8; 4096];
+        drv.read_at(&disk, 0, &mut back).unwrap();
+        assert_eq!(back, data, "healed short write must land all bytes");
+        let s = m.snapshot();
+        assert_eq!((s.io_faults_injected, s.io_retries, s.io_fault_fatal), (1, 1, 0));
+        invariant(&m);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn persistent_fault_surfaces_as_structured_io_fault() {
+        // Window longer than the retry budget: 1 initial + MAX_RETRIES
+        // attempts all fail, then the op gives up.
+        let (drv, m) = faulty("read@0:1x99");
+        let (path, disk) = tmpdisk();
+        let mut buf = vec![0u8; 512];
+        let err = drv.read_at(&disk, 4096, &mut buf).unwrap_err().to_string();
+        assert!(err.contains("disk 0"), "fault must name the disk: {err}");
+        assert!(err.contains("4096"), "fault must name the offset: {err}");
+        assert!(err.contains("injected"), "fault must say it was injected: {err}");
+        let s = m.snapshot();
+        assert_eq!(s.io_faults_injected, 1 + MAX_RETRIES as u64);
+        assert_eq!(s.io_retries, MAX_RETRIES as u64);
+        assert_eq!(s.io_fault_fatal, 1);
+        invariant(&m);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn injected_async_read_yields_failing_ticket() {
+        // The swap scheduler's prefetch path: a fatal injection must
+        // come back as a ticket whose wait() fails, not a panic.
+        let (drv, m) = faulty("read@0:1x99");
+        let (path, disk) = tmpdisk();
+        let mut buf = vec![0u8; 256];
+        let ticket = drv
+            .read_at_async(&disk, 0, ReadDst { ptr: buf.as_mut_ptr(), len: buf.len() })
+            .unwrap();
+        assert!(ticket.is_done());
+        let err = ticket.wait().unwrap_err().to_string();
+        assert!(err.contains("disk 0"), "ticket must carry the fault: {err}");
+        invariant(&m);
+        // A later read heals once the window is past... it is not (x99),
+        // so instead check a different disk index is unaffected.
+        let file2 = std::fs::OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .open(path.parent().unwrap().join("d1.dat"))
+            .unwrap();
+        file2.set_len(1 << 16).unwrap();
+        let disk1 = DiskFile { index: 1, file: file2 };
+        let mut b1 = vec![0u8; 64];
+        drv.read_at(&disk1, 0, &mut b1).unwrap();
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn injected_async_write_completes_ticket_with_outcome() {
+        let (drv, m) = faulty("write@0:1");
+        let (path, disk) = tmpdisk();
+        let data = vec![0x5Au8; 1024];
+        let ticket = drv
+            .write_at_async(&disk, 2048, WriteSrc { ptr: data.as_ptr(), len: data.len() })
+            .unwrap();
+        assert!(ticket.is_done());
+        ticket.wait().unwrap();
+        let mut back = vec![0u8; 1024];
+        drv.read_at(&disk, 2048, &mut back).unwrap();
+        assert_eq!(back, data);
+        let s = m.snapshot();
+        assert_eq!((s.io_faults_injected, s.io_retries, s.io_fault_fatal), (1, 1, 0));
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn delay_clause_changes_no_bytes_and_no_fault_counters() {
+        let (drv, m) = faulty("delay@0:1x2");
+        let (path, disk) = tmpdisk();
+        let data = vec![0x77u8; 128];
+        drv.write_at(&disk, 0, &data).unwrap();
+        let mut back = vec![0u8; 128];
+        drv.read_at(&disk, 0, &mut back).unwrap();
+        assert_eq!(back, data);
+        let s = m.snapshot();
+        assert_eq!((s.io_faults_injected, s.io_retries, s.io_fault_fatal), (0, 0, 0));
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn rand_verdicts_are_pure_per_op_index() {
+        let r = RandSpec { permille: 500, seed: 7 };
+        let first: Vec<bool> =
+            (1..=64).map(|op| r.fails(0, OpClass::Read, op)).collect();
+        let second: Vec<bool> =
+            (1..=64).map(|op| r.fails(0, OpClass::Read, op)).collect();
+        assert_eq!(first, second, "rand verdicts must be a pure function of the op index");
+        assert!(first.iter().any(|&b| b) && first.iter().any(|&b| !b));
+        // Different kinds and disks draw independent verdicts.
+        let writes: Vec<bool> =
+            (1..=64).map(|op| r.fails(0, OpClass::Write, op)).collect();
+        assert_ne!(first, writes);
+    }
+
+    #[test]
+    fn reruns_inject_at_identical_sites() {
+        // Same plan, same op sequence, two driver instances: identical
+        // metrics — the determinism contract of the acceptance criteria.
+        let run = || {
+            let (drv, m) = faulty("write@0:3x2,read@0:2,rand:200:9");
+            let (path, disk) = tmpdisk();
+            let data = vec![1u8; 256];
+            // Seeded rand streaks can legitimately go fatal; record the
+            // per-op outcome instead of unwrapping so the pinned value
+            // is the full fault pattern.
+            let mut outcomes = Vec::new();
+            for i in 0..8u64 {
+                outcomes.push(drv.write_at(&disk, i * 256, &data).is_ok());
+            }
+            let mut buf = vec![0u8; 256];
+            for i in 0..8u64 {
+                outcomes.push(drv.read_at(&disk, i * 256, &mut buf).is_ok());
+            }
+            std::fs::remove_dir_all(path.parent().unwrap()).ok();
+            let s = m.snapshot();
+            (outcomes, s.io_faults_injected, s.io_retries, s.io_fault_fatal)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        assert!(a.1 >= 3, "the explicit clauses alone inject 3 faults");
+        assert_eq!(a.1, a.2 + a.3, "injected == retried + fatal");
+    }
+}

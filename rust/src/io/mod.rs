@@ -8,12 +8,15 @@
 //!   (the thesis' "stxxl-file" driver; STXXL itself is not available, and
 //!   tokio is not in the offline crate set, so the request-queue design of
 //!   §5.1.2 is implemented directly).
+//! * [`faulty::FaultyDriver`] — deterministic fault injection over either
+//!   of the above, armed by `--fault-plan` / `PEMS2_FAULT_PLAN`.
 //!
 //! The `mmap` and `mem` styles of Ch. 5 do not perform explicit I/O at all;
 //! they are implemented by the context-store layer in [`crate::vp`], not as
 //! `IoDriver`s.
 
 pub mod aio;
+pub mod faulty;
 pub mod unix;
 
 use crate::error::Result;

@@ -106,6 +106,12 @@ SIMULATION FLAGS (Appendix B.3)
                   spill, pool jobs) and write a Chrome/Perfetto trace
                   JSON here; also prints the per-superstep phase table;
                   PEMS2_TRACE_OUT=FILE does the same globally
+  --fault-plan SPEC  deterministic I/O fault injection: comma-separated
+                  clauses kind@disk:nth[xcount] (kind = read | write |
+                  short | delay, disk = index | *) and rand:permille[:seed];
+                  transient faults heal via bounded retry, persistent ones
+                  surface as structured errors; PEMS2_FAULT_PLAN does the
+                  same globally (an explicit --fault-plan \"\" disarms it)
   --xla           run computation supersteps on the AOT XLA kernels
   --seed N        workload seed
   --disk-dir PATH backing files location (default: temp dir)
@@ -121,6 +127,12 @@ WORKLOAD FLAGS
   --serial-spill  disable the empq worker-pool spill pipeline (sssp)
   --elems N       elements per VP (alltoallv)
   --algo A        merge | dist — sort algorithm (stxxl-sort)    [merge]
+  --checkpoint FILE     snapshot queue + driver state into a versioned
+                  manifest and stop early (time-forward: before node
+                  --checkpoint-at N; sssp: before frontier round N)
+  --checkpoint-at N     where to take the --checkpoint snapshot      [n/2]
+  --restore FILE  resume a previously checkpointed run (time-forward,
+                  sssp); same workload flags required
   --verify        verify the result (extra supersteps)
   --timeline-out FILE   write the gnuplot timeline here
 ";
@@ -144,6 +156,10 @@ fn print_counters(m: &pems2::metrics::MetricsSnapshot) {
         human_bytes(m.prefetch_hit_bytes)
     );
     println!("swap_wait_seconds  {:.3}", m.swap_wait_ns as f64 / 1e9);
+    println!(
+        "io_faults          {} injected / {} retried / {} fatal",
+        m.io_faults_injected, m.io_retries, m.io_fault_fatal
+    );
 }
 
 /// The per-phase × per-superstep attribution table (present when a
@@ -253,12 +269,26 @@ fn cmd_time_forward(cli: &Cli) -> Result<()> {
     let n: u64 = cli.get_or("n", 100_000)?;
     let deg: u64 = cli.get_or("deg", 4)?;
     let bulk = !cli.flag("single");
+    let checkpoint = cli.options.get("checkpoint").cloned();
+    let checkpoint_at: u64 = cli.get_or("checkpoint-at", n / 2)?;
+    let restore = cli.options.get("restore").cloned();
     // Non-engine command: the trace session is owned here (engine
     // subcommands get theirs inside `engine::run`).
     let session = cfg.trace_path().map(pems2::metrics::trace::Session::start);
-    let r = pems2::apps::run_time_forward(&cfg, n, deg, bulk, cli.flag("verify"))?;
+    let r = pems2::apps::run_time_forward_resumable(
+        &cfg,
+        n,
+        deg,
+        bulk,
+        cli.flag("verify"),
+        checkpoint.as_ref().map(|p| (checkpoint_at, std::path::Path::new(p))),
+        restore.as_deref().map(std::path::Path::new),
+    )?;
     let trace = session.map(|s| s.finish());
     println!("app                time-forward");
+    if checkpoint.is_some() {
+        println!("checkpointed_at    {}", r.n);
+    }
     println!("n                  {}", r.n);
     println!("edges              {}", r.edges);
     println!("mode               {}", if r.bulk { "bulk" } else { "single" });
@@ -279,8 +309,11 @@ fn cmd_sssp(cli: &Cli) -> Result<()> {
     let deg: u64 = cli.get_or("deg", 4)?;
     let wmax: u64 = cli.get_or("wmax", 100)?;
     let src: u64 = cli.get_or("src", 0)?;
+    let checkpoint = cli.options.get("checkpoint").cloned();
+    let checkpoint_at: u64 = cli.get_or("checkpoint-at", n / 2)?;
+    let restore = cli.options.get("restore").cloned();
     let session = cfg.trace_path().map(pems2::metrics::trace::Session::start);
-    let r = pems2::apps::run_sssp_with(
+    let r = pems2::apps::run_sssp_resumable(
         &cfg,
         n,
         deg,
@@ -288,9 +321,14 @@ fn cmd_sssp(cli: &Cli) -> Result<()> {
         src,
         cli.flag("verify"),
         !cli.flag("serial-spill"),
+        checkpoint.as_ref().map(|p| (checkpoint_at, std::path::Path::new(p))),
+        restore.as_deref().map(std::path::Path::new),
     )?;
     let trace = session.map(|s| s.finish());
     println!("app                sssp");
+    if checkpoint.is_some() {
+        println!("checkpointed_at    {}", r.rounds);
+    }
     println!("n                  {}", r.n);
     println!("edges              {}", r.edges);
     println!("relaxations        {}", r.relaxed);

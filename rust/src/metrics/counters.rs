@@ -36,6 +36,9 @@ pub struct Metrics {
     prefetch_misses: AtomicU64,
     prefetch_hit_bytes: AtomicU64,
     swap_wait_ns: AtomicU64,
+    io_faults_injected: AtomicU64,
+    io_retries: AtomicU64,
+    io_fault_fatal: AtomicU64,
 }
 
 impl Metrics {
@@ -128,6 +131,28 @@ impl Metrics {
         self.swap_wait_ns.fetch_add(ns, Ordering::Relaxed);
     }
 
+    /// Record one injected I/O fault attempt (a deterministic
+    /// [`crate::io::faulty::FaultyDriver`] plan clause fired and the
+    /// operation attempt failed).  The fault-accounting invariant the
+    /// injection tests pin is `io_faults_injected == io_retries +
+    /// io_fault_fatal`: every failed attempt is either followed by a
+    /// retry or surfaces as a fatal structured fault — never silently
+    /// swallowed.
+    pub fn fault_injected(&self) {
+        self.io_faults_injected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one bounded-backoff retry of a faulted I/O operation.
+    pub fn fault_retry(&self) {
+        self.io_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an injected fault that exhausted its retry budget and
+    /// surfaced to the caller as a structured [`crate::io::IoFault`].
+    pub fn fault_fatal(&self) {
+        self.io_fault_fatal.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Total swap I/O volume (read + write), bytes.
     pub fn swap_bytes(&self) -> u64 {
         self.swap_read_bytes.load(Ordering::Relaxed)
@@ -161,6 +186,9 @@ impl Metrics {
             prefetch_misses: self.prefetch_misses.load(Ordering::Relaxed),
             prefetch_hit_bytes: self.prefetch_hit_bytes.load(Ordering::Relaxed),
             swap_wait_ns: self.swap_wait_ns.load(Ordering::Relaxed),
+            io_faults_injected: self.io_faults_injected.load(Ordering::Relaxed),
+            io_retries: self.io_retries.load(Ordering::Relaxed),
+            io_fault_fatal: self.io_fault_fatal.load(Ordering::Relaxed),
         }
     }
 }
@@ -206,6 +234,17 @@ pub struct MetricsSnapshot {
     /// Nanoseconds VP threads spent blocked on swap-in completion under
     /// the swap pipeline.
     pub swap_wait_ns: u64,
+    /// I/O fault attempts injected by a seeded fault plan
+    /// (`--fault-plan` / `PEMS2_FAULT_PLAN`): failed operation attempts,
+    /// always equal to `io_retries + io_fault_fatal`.
+    pub io_faults_injected: u64,
+    /// Bounded-backoff retries the faulty driver performed after an
+    /// injected failure (the healed-transient count plus intermediate
+    /// attempts of eventually-fatal faults).
+    pub io_retries: u64,
+    /// Injected faults that exhausted the retry budget and surfaced as
+    /// structured `IoFault` errors.
+    pub io_fault_fatal: u64,
 }
 
 impl MetricsSnapshot {
@@ -248,6 +287,9 @@ impl MetricsSnapshot {
             prefetch_misses: self.prefetch_misses - earlier.prefetch_misses,
             prefetch_hit_bytes: self.prefetch_hit_bytes - earlier.prefetch_hit_bytes,
             swap_wait_ns: self.swap_wait_ns - earlier.swap_wait_ns,
+            io_faults_injected: self.io_faults_injected - earlier.io_faults_injected,
+            io_retries: self.io_retries - earlier.io_retries,
+            io_fault_fatal: self.io_fault_fatal - earlier.io_fault_fatal,
         }
     }
 }
@@ -313,6 +355,33 @@ mod tests {
         let d = m.snapshot().delta(&s);
         assert_eq!((d.prefetch_hits, d.prefetch_hit_bytes), (1, 8));
         assert_eq!(d.prefetch_misses, 0);
+    }
+
+    #[test]
+    fn fault_counters_accumulate_and_delta() {
+        let m = Metrics::new();
+        // Two transient faults (each retried once) + one three-attempt
+        // fatal: injected == retried + fatal must hold at every snapshot.
+        m.fault_injected();
+        m.fault_retry();
+        m.fault_injected();
+        m.fault_retry();
+        let s = m.snapshot();
+        assert_eq!(s.io_faults_injected, 2);
+        assert_eq!(s.io_retries, 2);
+        assert_eq!(s.io_fault_fatal, 0);
+        assert_eq!(s.io_faults_injected, s.io_retries + s.io_fault_fatal);
+        m.fault_injected();
+        m.fault_retry();
+        m.fault_injected();
+        m.fault_retry();
+        m.fault_injected();
+        m.fault_fatal();
+        let d = m.snapshot().delta(&s);
+        assert_eq!(d.io_faults_injected, 3);
+        assert_eq!(d.io_retries, 2);
+        assert_eq!(d.io_fault_fatal, 1);
+        assert_eq!(d.io_faults_injected, d.io_retries + d.io_fault_fatal);
     }
 
     #[test]

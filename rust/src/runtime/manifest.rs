@@ -1,8 +1,36 @@
-//! Artifact manifest parsing (`artifacts/manifest.txt`).
+//! Manifest formats: artifact manifests (`artifacts/manifest.txt`) and
+//! the versioned checkpoint/restore manifest ([`Checkpoint`]) behind
+//! `EmPq::checkpoint`/`EmPq::restore` (ISSUE 8).
 //!
-//! Plain-text, one artifact per line: `name dtype rows cols file`.
-//! (serde is not in the offline crate set; the format is deliberately
-//! trivial.)
+//! Both are plain text (serde is not in the offline crate set; the
+//! formats are deliberately trivial).  Artifact lines: `name dtype rows
+//! cols file`.  Checkpoint format (one keyword per line, `#` comments):
+//!
+//! ```text
+//! pems2-checkpoint 1
+//! record_size 16
+//! capacity 65536
+//! len 123
+//! max_len 456
+//! arena 8192
+//! reused 0
+//! runs_created 2
+//! next_heap 1
+//! run <base> <total> <consumed> <buf_cap> <hex-of-remaining-bytes|->
+//! free <base> <len>
+//! heap <index> <count> <hex|->
+//! app <key> <value…>
+//! end
+//! ```
+//!
+//! The run *data* is embedded (hex) because the disk set's backing
+//! files live in a unique per-instance temp directory removed on drop:
+//! the manifest is the only durable copy, and restore rewrites the
+//! remaining bytes into a fresh disk set at the original logical
+//! offsets.  The trailing `end` line makes a truncated manifest (crash
+//! mid-write) detectable; [`Checkpoint::save`] additionally writes to a
+//! temp file and renames, so a checkpoint is atomically either the old
+//! or the new state.
 
 use crate::error::{Error, Result};
 use std::collections::HashMap;
@@ -91,6 +119,330 @@ impl Manifest {
     }
 }
 
+/// Current checkpoint format version (`pems2-checkpoint <version>`).
+pub const CHECKPOINT_VERSION: u32 = 1;
+
+/// One external run's frozen state inside a [`Checkpoint`].
+///
+/// `data` holds only the *unconsumed* suffix — `(total - consumed)`
+/// records starting at logical byte `base + consumed * record_size` —
+/// because the consumed prefix is dead and its extent is returned to
+/// the free list on restore.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RunState {
+    /// Logical base offset of the run's extent (bytes).
+    pub base: u64,
+    /// Total length of the run in records (as originally written).
+    pub total: u64,
+    /// Records already merged out of this run before the checkpoint.
+    pub consumed: u64,
+    /// Refill buffer capacity in records at checkpoint time.
+    pub buf_cap: usize,
+    /// Raw bytes of the unconsumed suffix.
+    pub data: Vec<u8>,
+}
+
+/// Versioned, self-contained snapshot of an `EmPq`'s durable state:
+/// external-run extents (with their remaining bytes embedded), the
+/// extent free list, insertion-heap residue, and arena bookkeeping,
+/// plus an opaque `app` key/value section for the caller's own resume
+/// state (loop index, running checksum, …).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Checkpoint {
+    /// `size_of::<T>()` of the queue's record type (validated on restore).
+    pub record_size: usize,
+    /// Capacity (records) the queue was created with; restore rebuilds
+    /// the same arena geometry from it.
+    pub capacity: usize,
+    /// Live record count at checkpoint time.
+    pub len: u64,
+    /// High-water mark of `len`.
+    pub max_len: u64,
+    /// Arena watermark (bytes ever bump-allocated).
+    pub arena_at: u64,
+    /// Bytes served from the free list instead of the arena.
+    pub arena_reused: u64,
+    /// Runs created so far (monotone counter, not live run count).
+    pub runs_created: u64,
+    /// Round-robin insertion-heap index.
+    pub next_heap: usize,
+    /// Live external runs.
+    pub runs: Vec<RunState>,
+    /// Free-list spans as `(base, len)` byte ranges.
+    pub free: Vec<(u64, u64)>,
+    /// Per-heap residue, serialized as sorted records (raw bytes).
+    pub heaps: Vec<Vec<u8>>,
+    /// Application resume state, round-tripped verbatim.
+    pub app: Vec<(String, String)>,
+}
+
+/// Hex-encode bytes (lowercase, no separator) — the encoding checkpoint
+/// data fields use; public so applications can pack auxiliary resume
+/// state (bitmaps, arrays) into `app` values the same way.
+pub fn hex_encode(bytes: &[u8]) -> String {
+    const DIGITS: &[u8; 16] = b"0123456789abcdef";
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        s.push(DIGITS[(b >> 4) as usize] as char);
+        s.push(DIGITS[(b & 0xf) as usize] as char);
+    }
+    s
+}
+
+/// Inverse of [`hex_encode`]; rejects odd lengths and non-hex bytes.
+pub fn hex_decode(s: &str) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return Err(Error::runtime("checkpoint: odd-length hex field"));
+    }
+    let nib = |c: u8| -> Result<u8> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => Err(Error::runtime("checkpoint: non-hex byte in data field")),
+        }
+    };
+    let raw = s.as_bytes();
+    let mut out = Vec::with_capacity(raw.len() / 2);
+    for pair in raw.chunks_exact(2) {
+        out.push((nib(pair[0])? << 4) | nib(pair[1])?);
+    }
+    Ok(out)
+}
+
+/// `-` stands for an empty byte string so every line keeps its field count.
+fn hex_field(bytes: &[u8]) -> String {
+    if bytes.is_empty() {
+        "-".to_string()
+    } else {
+        hex_encode(bytes)
+    }
+}
+
+fn parse_hex_field(s: &str) -> Result<Vec<u8>> {
+    if s == "-" {
+        Ok(Vec::new())
+    } else {
+        hex_decode(s)
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(field: &str, what: &str) -> Result<T> {
+    field
+        .parse()
+        .map_err(|_| Error::runtime(format!("checkpoint: bad {what} `{field}`")))
+}
+
+impl Checkpoint {
+    /// Serialize to the plain-text format documented at module level.
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("pems2-checkpoint {CHECKPOINT_VERSION}\n"));
+        s.push_str(&format!("record_size {}\n", self.record_size));
+        s.push_str(&format!("capacity {}\n", self.capacity));
+        s.push_str(&format!("len {}\n", self.len));
+        s.push_str(&format!("max_len {}\n", self.max_len));
+        s.push_str(&format!("arena {}\n", self.arena_at));
+        s.push_str(&format!("reused {}\n", self.arena_reused));
+        s.push_str(&format!("runs_created {}\n", self.runs_created));
+        s.push_str(&format!("next_heap {}\n", self.next_heap));
+        s.push_str(&format!("heaps {}\n", self.heaps.len()));
+        for r in &self.runs {
+            s.push_str(&format!(
+                "run {} {} {} {} {}\n",
+                r.base,
+                r.total,
+                r.consumed,
+                r.buf_cap,
+                hex_field(&r.data)
+            ));
+        }
+        for &(base, len) in &self.free {
+            s.push_str(&format!("free {base} {len}\n"));
+        }
+        for (i, h) in self.heaps.iter().enumerate() {
+            let count = if self.record_size == 0 { 0 } else { h.len() / self.record_size };
+            s.push_str(&format!("heap {i} {count} {}\n", hex_field(h)));
+        }
+        for (k, v) in &self.app {
+            s.push_str(&format!("app {k} {v}\n"));
+        }
+        s.push_str("end\n");
+        s
+    }
+
+    /// Parse checkpoint text; rejects unknown versions, malformed
+    /// lines, and manifests missing the trailing `end` marker.
+    pub fn parse(text: &str) -> Result<Checkpoint> {
+        let mut lines = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'));
+        let header = lines
+            .next()
+            .ok_or_else(|| Error::runtime("checkpoint: empty file"))?;
+        let mut hp = header.split_whitespace();
+        if hp.next() != Some("pems2-checkpoint") {
+            return Err(Error::runtime("checkpoint: missing `pems2-checkpoint` header"));
+        }
+        let version: u32 = parse_num(hp.next().unwrap_or(""), "version")?;
+        if version != CHECKPOINT_VERSION {
+            return Err(Error::runtime(format!(
+                "checkpoint: unsupported version {version} (supported: {CHECKPOINT_VERSION})"
+            )));
+        }
+        let mut ck = Checkpoint::default();
+        let mut heap_count: Option<usize> = None;
+        let mut saw_end = false;
+        for line in lines {
+            if saw_end {
+                return Err(Error::runtime("checkpoint: content after `end` marker"));
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            let need = |n: usize| -> Result<()> {
+                if fields.len() < n {
+                    Err(Error::runtime(format!(
+                        "checkpoint: `{}` line needs {} fields, got {}",
+                        fields[0],
+                        n,
+                        fields.len()
+                    )))
+                } else {
+                    Ok(())
+                }
+            };
+            match fields[0] {
+                "record_size" => {
+                    need(2)?;
+                    ck.record_size = parse_num(fields[1], "record_size")?;
+                }
+                "capacity" => {
+                    need(2)?;
+                    ck.capacity = parse_num(fields[1], "capacity")?;
+                }
+                "len" => {
+                    need(2)?;
+                    ck.len = parse_num(fields[1], "len")?;
+                }
+                "max_len" => {
+                    need(2)?;
+                    ck.max_len = parse_num(fields[1], "max_len")?;
+                }
+                "arena" => {
+                    need(2)?;
+                    ck.arena_at = parse_num(fields[1], "arena")?;
+                }
+                "reused" => {
+                    need(2)?;
+                    ck.arena_reused = parse_num(fields[1], "reused")?;
+                }
+                "runs_created" => {
+                    need(2)?;
+                    ck.runs_created = parse_num(fields[1], "runs_created")?;
+                }
+                "next_heap" => {
+                    need(2)?;
+                    ck.next_heap = parse_num(fields[1], "next_heap")?;
+                }
+                "heaps" => {
+                    need(2)?;
+                    let k: usize = parse_num(fields[1], "heaps count")?;
+                    heap_count = Some(k);
+                    ck.heaps = vec![Vec::new(); k];
+                }
+                "run" => {
+                    need(6)?;
+                    let base = parse_num(fields[1], "run base")?;
+                    let total: u64 = parse_num(fields[2], "run total")?;
+                    let consumed: u64 = parse_num(fields[3], "run consumed")?;
+                    let buf_cap = parse_num(fields[4], "run buf_cap")?;
+                    let data = parse_hex_field(fields[5])?;
+                    if consumed > total {
+                        return Err(Error::runtime("checkpoint: run consumed > total"));
+                    }
+                    let expect = (total - consumed) as usize * ck.record_size;
+                    if data.len() != expect {
+                        return Err(Error::runtime(format!(
+                            "checkpoint: run data {} bytes, expected {expect}",
+                            data.len()
+                        )));
+                    }
+                    ck.runs.push(RunState { base, total, consumed, buf_cap, data });
+                }
+                "free" => {
+                    need(3)?;
+                    ck.free.push((
+                        parse_num(fields[1], "free base")?,
+                        parse_num(fields[2], "free len")?,
+                    ));
+                }
+                "heap" => {
+                    need(4)?;
+                    let i: usize = parse_num(fields[1], "heap index")?;
+                    let count: usize = parse_num(fields[2], "heap count")?;
+                    let data = parse_hex_field(fields[3])?;
+                    if data.len() != count * ck.record_size {
+                        return Err(Error::runtime(format!(
+                            "checkpoint: heap {i} data {} bytes, expected {}",
+                            data.len(),
+                            count * ck.record_size
+                        )));
+                    }
+                    let k = heap_count
+                        .ok_or_else(|| Error::runtime("checkpoint: `heap` before `heaps`"))?;
+                    if i >= k {
+                        return Err(Error::runtime(format!("checkpoint: heap index {i} >= {k}")));
+                    }
+                    ck.heaps[i] = data;
+                }
+                "app" => {
+                    need(2)?;
+                    let key = fields[1].to_string();
+                    // Value is the raw remainder of the line after the key,
+                    // so it may itself contain spaces.
+                    let value = line
+                        .splitn(3, char::is_whitespace)
+                        .nth(2)
+                        .unwrap_or("")
+                        .to_string();
+                    ck.app.push((key, value));
+                }
+                "end" => saw_end = true,
+                other => {
+                    return Err(Error::runtime(format!("checkpoint: unknown keyword `{other}`")))
+                }
+            }
+        }
+        if !saw_end {
+            return Err(Error::runtime("checkpoint: missing `end` marker (truncated file?)"));
+        }
+        Ok(ck)
+    }
+
+    /// Write atomically: serialize to `<path>.tmp`, then rename over
+    /// `path`, so an interrupted save never clobbers a prior checkpoint.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_text())
+            .map_err(|e| Error::runtime(format!("checkpoint write {tmp:?}: {e}")))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| Error::runtime(format!("checkpoint rename {tmp:?} -> {path:?}: {e}")))
+    }
+
+    /// Load and parse a checkpoint manifest.
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error::runtime(format!("checkpoint {:?}: {e}", path.as_ref())))?;
+        Checkpoint::parse(&text)
+    }
+
+    /// Look up an `app` key (first match).
+    pub fn app_get(&self, key: &str) -> Option<&str> {
+        self.app.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,5 +473,72 @@ mod tests {
     fn load_missing_file_mentions_make_artifacts() {
         let e = Manifest::load("/nonexistent/manifest.txt").unwrap_err();
         assert!(e.to_string().contains("make artifacts"));
+    }
+
+    fn sample_checkpoint() -> Checkpoint {
+        Checkpoint {
+            record_size: 4,
+            capacity: 1024,
+            len: 7,
+            max_len: 9,
+            arena_at: 8192,
+            arena_reused: 4096,
+            runs_created: 3,
+            next_heap: 1,
+            runs: vec![RunState {
+                base: 4096,
+                total: 4,
+                consumed: 2,
+                buf_cap: 64,
+                data: vec![1, 2, 3, 4, 5, 6, 7, 8],
+            }],
+            free: vec![(0, 4096), (16384, 8192)],
+            heaps: vec![vec![9, 8, 7, 6], Vec::new()],
+            app: vec![
+                ("next".to_string(), "42".to_string()),
+                ("note".to_string(), "two words".to_string()),
+            ],
+        }
+    }
+
+    #[test]
+    fn checkpoint_text_round_trip() {
+        let ck = sample_checkpoint();
+        let back = Checkpoint::parse(&ck.to_text()).unwrap();
+        assert_eq!(back, ck);
+        assert_eq!(back.app_get("note"), Some("two words"));
+        assert_eq!(back.app_get("missing"), None);
+    }
+
+    #[test]
+    fn checkpoint_file_round_trip_is_atomic() {
+        let dir = std::env::temp_dir().join(format!("pems2-ck-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ck");
+        let ck = sample_checkpoint();
+        ck.save(&path).unwrap();
+        assert!(!path.with_extension("tmp").exists());
+        assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_truncation_and_bad_versions() {
+        let ck = sample_checkpoint();
+        let text = ck.to_text();
+        // Missing `end` marker reads as a truncated file.
+        let cut = text.strip_suffix("end\n").unwrap();
+        assert!(Checkpoint::parse(cut).unwrap_err().to_string().contains("end"));
+        // Unknown version.
+        let v2 = text.replace("pems2-checkpoint 1", "pems2-checkpoint 2");
+        assert!(Checkpoint::parse(&v2).unwrap_err().to_string().contains("version"));
+        // Run data length must match (total - consumed) * record_size.
+        let short = text.replace("0102030405060708", "0102");
+        assert!(Checkpoint::parse(&short).is_err());
+        // Garbage keyword.
+        assert!(Checkpoint::parse("pems2-checkpoint 1\nbogus 1\nend\n").is_err());
+        // Odd hex / non-hex bytes.
+        assert!(hex_decode("abc").is_err());
+        assert!(hex_decode("zz").is_err());
     }
 }

@@ -18,7 +18,7 @@
 
 pub mod manifest;
 
-pub use manifest::{Manifest, ManifestEntry};
+pub use manifest::{hex_decode, hex_encode, Checkpoint, Manifest, ManifestEntry, RunState};
 
 use crate::error::{Error, Result};
 #[cfg(feature = "xla")]

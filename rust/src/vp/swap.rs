@@ -274,8 +274,28 @@ impl SwapScheduler {
         // are cloneable and waiting is idempotent.
         let tickets = slot.pending[pos].tickets.clone();
         drop(slot);
+        let mut read_fault = false;
         for t in &tickets {
-            t.wait()?;
+            if t.wait().is_err() {
+                read_fault = true;
+            }
+        }
+        if read_fault {
+            // A prefetch read failed terminally (e.g. a persistent
+            // injected fault).  Every ticket has completed — waited
+            // above — so the shadow buffer is immediately reusable;
+            // dispose the entry as a miss and let the caller's blocking
+            // fallback re-read synchronously, surfacing its own error
+            // only if the fault persists there too.
+            let mut slot = self.slots[idx].lock().unwrap();
+            if let Some(pos) = slot.pending.iter().position(|p| p.local_vp == local_vp) {
+                let p = slot.pending.remove(pos).unwrap();
+                slot.free.push((p.buf, p.ptr));
+            }
+            drop(slot);
+            self.metrics.prefetch_miss();
+            trace::instant("prefetch_read_fault");
+            return Ok(None);
         }
         // Re-check under the lock: a delivery may have invalidated the
         // slot while we waited.  Only invalidators ran meanwhile (the
@@ -504,6 +524,51 @@ mod tests {
         // The buffer went back on the free list: a fresh issue works.
         sched.issue(&disks, 0, vec![(0, 4096)]).unwrap();
         assert!(sched.try_consume(0, &[(0, 4096)]).unwrap().is_some());
+    }
+
+    /// Satellite fault-coverage path: a pending prefetch whose read
+    /// fails terminally must surface as a miss — `try_consume` returns
+    /// `None`, sending the caller down the blocking fallback, which
+    /// re-reads the true bytes — never as a swallowed error or a hit on
+    /// garbage data.
+    #[test]
+    fn failed_prefetch_read_falls_back_to_the_blocking_path() {
+        use crate::io::faulty::{FaultPlan, FaultyDriver};
+        let cfg = SimConfig::builder().v(8).k(2).mu(1 << 16).block(4096).build().unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let inner: Arc<dyn IoDriver> = Arc::new(AsyncIo::new(1));
+        // The first read's full retry budget (1 + MAX_RETRIES = 5
+        // attempts) faults, so the prefetch ticket fails; the very next
+        // read — the blocking fallback — passes.
+        let plan = FaultPlan::parse("read@*:1x5").unwrap();
+        let driver: Arc<dyn IoDriver> =
+            Arc::new(FaultyDriver::new(inner, plan, 1, metrics.clone()));
+        let disks = DiskSet::create(&cfg, 0, driver, metrics.clone()).unwrap();
+        let sched = SwapScheduler::new(cfg.k, cfg.ctx_slot(), cfg.mu, metrics.clone());
+        let mut buf = vec![0u8; 1 << 16];
+        sched.release(0, 0, buf.as_mut_ptr());
+        write_pattern(&disks, 0, 4096, 5);
+        let regions = vec![(0u64, 4096u64)];
+        sched.issue(&disks, 0, regions.clone()).unwrap();
+        assert!(sched.has_pending(0));
+        // The failed ticket must not bubble out of the consume.
+        assert_eq!(sched.try_consume(0, &regions).unwrap(), None);
+        assert!(!sched.has_pending(0));
+        let s = metrics.snapshot();
+        assert_eq!((s.prefetch_hits, s.prefetch_misses), (0, 1));
+        assert!(s.io_fault_fatal >= 1, "the injection must be accounted, not lost");
+        assert_eq!(s.io_faults_injected, s.io_retries + s.io_fault_fatal);
+        // Blocking fallback: the synchronous re-read (past the fault
+        // window) returns the true bytes.
+        let mut out = vec![0u8; 4096];
+        disks.read(IoClass::Swap, 0, &mut out).unwrap();
+        for (i, &b) in out.iter().enumerate() {
+            assert_eq!(b, (i as u8).wrapping_mul(31).wrapping_add(5));
+        }
+        // The shadow buffer went back to the free list: a fresh issue
+        // over it prefetches and hits normally.
+        sched.issue(&disks, 0, regions.clone()).unwrap();
+        assert_eq!(sched.try_consume(0, &regions).unwrap(), Some(0));
     }
 
     #[test]

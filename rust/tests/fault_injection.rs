@@ -1,0 +1,264 @@
+//! Fault-injection sweeps and crash-recovery round trips.
+//!
+//! Property tests drive randomized — but fully seeded — `FaultPlan`s
+//! through the external-memory queue and the sort baselines, pinning the
+//! two invariants of the harness:
+//!
+//!  * determinism — the same plan over the same workload injects at the
+//!    same sites and produces byte-identical output on every rerun;
+//!  * accounting — every injected fault is either retried-and-healed or
+//!    surfaced as a structured error (`injected == retried + fatal`).
+//!
+//! The crash-recovery tests checkpoint a workload mid-stream, drop all
+//! state, restore from the manifest, finish, and pin output-hash
+//! equality against the uninterrupted run — with a fault plan armed on
+//! both sides of the crash.
+
+use pems2::apps;
+use pems2::baseline::{run_dist_sort, run_stxxl_sort};
+use pems2::config::{IoStyle, SimConfig};
+use pems2::empq::{EmPq, Entry};
+use pems2::metrics::MetricsSnapshot;
+use pems2::util::proptest_mini::Prop;
+use std::path::PathBuf;
+
+/// k=2 cores x µ=32 KiB => 64 KiB RAM budget.  The plan is always set
+/// explicitly — including `""` for the clean legs — so these tests pin
+/// exact fault sites even under the CI `PEMS2_FAULT_PLAN` leg.
+fn cfg_with_plan(plan: &str) -> SimConfig {
+    SimConfig::builder()
+        .v(2)
+        .k(2)
+        .mu(32 << 10)
+        .d(2)
+        .block(4096)
+        .io(IoStyle::Async)
+        .fault_plan(plan)
+        .build()
+        .unwrap()
+}
+
+/// Fresh scratch path for a checkpoint manifest.
+fn ck_path(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pems2-fi-{}-{}", tag, std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join("state.ck")
+}
+
+/// Push `n` seeded entries through an `EmPq` in batches, drain it fully,
+/// and return the extracted sequence plus the final metrics snapshot.
+fn drain_empq(plan: &str, n: u64, seed: u64) -> (Vec<Entry>, MetricsSnapshot) {
+    let cfg = cfg_with_plan(plan);
+    let mut pq = EmPq::new(&cfg, n).unwrap();
+    let mut rng = pems2::util::XorShift64::new(seed);
+    let mut buf = Vec::new();
+    let mut pushed = 0u64;
+    while pushed < n {
+        let take = (rng.range(1, 2_000) as u64).min(n - pushed);
+        buf.clear();
+        for _ in 0..take {
+            buf.push(Entry::new(rng.next_u64(), pushed));
+        }
+        pq.push_batch(&buf).unwrap();
+        pushed += take;
+    }
+    assert!(pq.external_runs() > 0, "workload must spill");
+    let got = pq.extract_min_batch(usize::MAX).unwrap();
+    assert_eq!(got.len(), n as usize, "element conservation");
+    let report = pq.report();
+    (got, report.metrics)
+}
+
+/// Randomized transient plans (every fault window fits inside the retry
+/// budget) must heal invisibly: output byte-identical to the clean run,
+/// `fatal == 0`, and `injected == retried`.
+#[test]
+fn property_transient_plans_heal_and_preserve_output() {
+    let (clean, m0) = drain_empq("", 12_000, 0xFA11);
+    assert_eq!(m0.io_faults_injected, 0, "clean leg must not inject");
+
+    Prop::new("transient_plans_heal", 6).max_size(8).run(|g| {
+        // Fault windows of 1..=4 consecutive ops heal within the retry
+        // budget (4 retries after the first failure) as long as windows
+        // in the same I/O class never touch: retries consume fresh op
+        // indices, so two adjacent windows would chain into one failure
+        // run longer than the budget.  Reads and writes count on
+        // separate per-disk indices, so only the `short` clause (a
+        // write-class fault) needs a gap from the `write` window.
+        let w_nth = g.usize_in(1, 7);
+        let w_cnt = g.usize_in(1, 5);
+        let s_nth = w_nth + w_cnt + 1 + g.usize_in(1, 4);
+        let r_nth = g.usize_in(1, 7);
+        let r_cnt = g.usize_in(1, 5);
+        let plan = format!("write@*:{w_nth}x{w_cnt},short@*:{s_nth},read@*:{r_nth}x{r_cnt}");
+
+        let (got, m) = drain_empq(&plan, 12_000, 0xFA11);
+        assert!(m.io_faults_injected > 0, "plan {plan:?} never fired");
+        assert_eq!(m.io_fault_fatal, 0, "transient plan {plan:?} went fatal");
+        assert_eq!(
+            m.io_faults_injected, m.io_retries,
+            "every injected fault must be retried (plan {plan:?})"
+        );
+        assert_eq!(got, clean, "plan {plan:?} changed the extracted sequence");
+    });
+}
+
+/// The same seeded plan over the same workload must inject at identical
+/// sites: fault counters and output are equal across reruns, including
+/// for probabilistic `rand:` clauses (their permille draws are seeded).
+#[test]
+fn seeded_plans_rerun_identically() {
+    let plan = "write@*:3x2,read@*:7x2,rand:2:1234";
+    let (a, ma) = drain_empq(plan, 10_000, 0xBEEF);
+    let (b, mb) = drain_empq(plan, 10_000, 0xBEEF);
+    assert_eq!(a, b, "same plan + same workload must be byte-identical");
+    assert_eq!(ma.io_faults_injected, mb.io_faults_injected);
+    assert_eq!(ma.io_retries, mb.io_retries);
+    assert_eq!(ma.io_fault_fatal, mb.io_fault_fatal);
+    assert!(ma.io_faults_injected > 0, "plan never fired");
+    assert_eq!(
+        ma.io_faults_injected,
+        ma.io_retries + ma.io_fault_fatal,
+        "fault accounting must balance"
+    );
+}
+
+/// Differential run: the merge sort and the distribution sort consume
+/// the same seeded input; a transient fault plan must leave both
+/// output hashes equal to each other and to their clean runs.
+#[test]
+fn sort_baselines_agree_under_transient_faults() {
+    let n = 60_000u64;
+    let plan = "read@*:4x2,write@*:6x2,short@*:9";
+
+    let clean_merge = run_stxxl_sort(&cfg_with_plan(""), n, true).unwrap();
+    let clean_dist = run_dist_sort(&cfg_with_plan(""), n, true).unwrap();
+    assert!(clean_merge.verified && clean_dist.verified);
+    assert_eq!(
+        clean_merge.output_hash, clean_dist.output_hash,
+        "baselines disagree before any fault is armed"
+    );
+
+    let faulty_merge = run_stxxl_sort(&cfg_with_plan(plan), n, true).unwrap();
+    let faulty_dist = run_dist_sort(&cfg_with_plan(plan), n, true).unwrap();
+    assert!(faulty_merge.verified, "merge sort failed verification under faults");
+    assert!(faulty_dist.verified, "dist sort failed verification under faults");
+    assert_eq!(faulty_merge.output_hash, clean_merge.output_hash);
+    assert_eq!(faulty_dist.output_hash, clean_dist.output_hash);
+
+    for (name, m) in [("merge", &faulty_merge.metrics), ("dist", &faulty_dist.metrics)] {
+        assert!(m.io_faults_injected > 0, "{name}: plan never fired");
+        assert_eq!(m.io_fault_fatal, 0, "{name}: transient plan went fatal");
+        assert_eq!(
+            m.io_faults_injected,
+            m.io_retries + m.io_fault_fatal,
+            "{name}: fault accounting must balance"
+        );
+    }
+}
+
+/// Checkpoint a time-forward run mid-stream (with a transient fault plan
+/// armed), drop everything, restore from the manifest, and finish: the
+/// resumed run must verify against the in-RAM oracle and reproduce the
+/// uninterrupted checksum exactly.
+#[test]
+fn time_forward_crash_recovery_round_trip() {
+    let plan = "write@*:3x2,read@*:7x2";
+    let (n, deg) = (1_400u64, 4u64);
+    let path = ck_path("tf");
+
+    let full =
+        apps::run_time_forward_resumable(&cfg_with_plan(plan), n, deg, true, true, None, None)
+            .unwrap();
+    assert!(full.verified);
+
+    let part = apps::run_time_forward_resumable(
+        &cfg_with_plan(plan),
+        n,
+        deg,
+        true,
+        true,
+        Some((600, &path)),
+        None,
+    )
+    .unwrap();
+    assert_eq!(part.n, 600, "checkpoint must stop before the target node");
+
+    // All in-RAM state from the first half is gone; only the manifest
+    // survives the simulated crash.
+    let resumed = apps::run_time_forward_resumable(
+        &cfg_with_plan(plan),
+        n,
+        deg,
+        true,
+        true,
+        None,
+        Some(&path),
+    )
+    .unwrap();
+    assert!(resumed.verified, "resumed run failed oracle verification");
+    assert_eq!(
+        resumed.checksum, full.checksum,
+        "interrupted + resumed run must match the uninterrupted checksum"
+    );
+
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}
+
+/// Same round trip for SSSP: checkpoint before a mid-run frontier round,
+/// restore, and pin every result counter against the uninterrupted run.
+#[test]
+fn sssp_crash_recovery_round_trip() {
+    let (n, deg, wmax, src) = (1_200u64, 4u64, 50u64, 0u64);
+    let path = ck_path("sssp");
+
+    let full = apps::run_sssp_resumable(
+        &cfg_with_plan(""),
+        n,
+        deg,
+        wmax,
+        src,
+        true,
+        true,
+        None,
+        None,
+    )
+    .unwrap();
+    assert!(full.verified && full.rounds > 4, "workload too small to interrupt");
+
+    let stop = full.rounds / 2;
+    let part = apps::run_sssp_resumable(
+        &cfg_with_plan(""),
+        n,
+        deg,
+        wmax,
+        src,
+        true,
+        true,
+        Some((stop, &path)),
+        None,
+    )
+    .unwrap();
+    assert_eq!(part.rounds, stop);
+
+    let resumed = apps::run_sssp_resumable(
+        &cfg_with_plan(""),
+        n,
+        deg,
+        wmax,
+        src,
+        true,
+        true,
+        None,
+        Some(&path),
+    )
+    .unwrap();
+    assert!(resumed.verified, "resumed run failed oracle verification");
+    assert_eq!(resumed.checksum, full.checksum);
+    assert_eq!(resumed.total_dist, full.total_dist);
+    assert_eq!(resumed.reached, full.reached);
+    assert_eq!(resumed.rounds, full.rounds);
+    assert_eq!(resumed.relaxed, full.relaxed);
+
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}
