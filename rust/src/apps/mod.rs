@@ -37,6 +37,66 @@ pub(crate) fn combine_rank_hashes(per_rank: &[u64]) -> u64 {
     per_rank.iter().fold(0x9E37_79B9_7F4A_7C15, |h, &x| fold_u64(h, x))
 }
 
+/// Little-endian u64 word blob for the finale exchange.
+pub(crate) fn u64s_to_bytes(words: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(words.len() * 8);
+    for w in words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`u64s_to_bytes`]; trailing partial words are dropped.
+pub(crate) fn bytes_to_u64s(bytes: &[u8]) -> Vec<u64> {
+    bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+        .collect()
+}
+
+/// Finale exchange for distributed transports: allgather each node's
+/// result words so every rank's driver reports the full run.
+///
+/// Under the in-process switch every VP writes into the same
+/// driver-owned atomics/hash table, so this is a no-op (the mem path
+/// stays byte-identical).  Under a distributed transport each process
+/// runs one node's VPs against its own copies of that state, so only
+/// the local slots fill; here all local VPs rendezvous, the barrier
+/// leader allgathers `build()`'s word blob (one switch call per node —
+/// the MPI-lockstep invariant) and folds every remote node's words back
+/// in via `merge(node, words)` before the barrier releases.
+///
+/// Must be called by **every** VP at the same program point.  Follows
+/// the same release discipline as [`crate::comm::barrier`]: the VP
+/// swaps out and drops its partition gate before blocking, so VPs of
+/// other gate turns can reach the rendezvous.
+pub(crate) fn exchange_node_results(
+    vp: &mut crate::vp::Vp,
+    build: &dyn Fn() -> Vec<u64>,
+    merge: &dyn Fn(usize, &[u64]),
+) -> crate::error::Result<()> {
+    let sh = vp.shared().clone();
+    if !sh.cfg.transport().is_distributed() || sh.cfg.p == 1 {
+        return Ok(());
+    }
+    if vp.resident {
+        vp.swap_out_all()?;
+        vp.resident = false;
+    }
+    vp.release();
+    let sh2 = sh.clone();
+    sh.barrier_with(|| {
+        let blobs = sh2.switch.allgather(sh2.node, u64s_to_bytes(&build()));
+        for (nd, blob) in blobs.iter().enumerate() {
+            if nd != sh2.node {
+                merge(nd, &bytes_to_u64s(blob));
+            }
+        }
+    });
+    sh.timeline.mark(vp.rank());
+    Ok(())
+}
+
 pub mod cgm_sort;
 pub mod euler_tour;
 pub mod graph_gen;
@@ -53,3 +113,17 @@ pub use prefix_sum::run_prefix_sum;
 pub use psrs::run_psrs;
 pub use sssp::{run_sssp, run_sssp_resumable, run_sssp_with};
 pub use time_forward::{run_time_forward, run_time_forward_resumable};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_blob_round_trips() {
+        let words = vec![0u64, 1, u64::MAX, 0x0123_4567_89AB_CDEF];
+        assert_eq!(bytes_to_u64s(&u64s_to_bytes(&words)), words);
+        assert!(u64s_to_bytes(&[]).is_empty());
+        // Trailing partial words are dropped, not mis-decoded.
+        assert_eq!(bytes_to_u64s(&[1, 0, 0, 0, 0, 0, 0, 0, 9, 9]), vec![1]);
+    }
+}

@@ -160,6 +160,31 @@ fn prefix_vp(
             }
         }
     }
+
+    // ---- Finale exchange (distributed transport only) ----
+    // Under TCP only this node's hash slots and verdict are filled
+    // locally; allgather them so every rank's `PrefixSumResult` reports
+    // the full run.  No-op under the in-process switch.
+    let node = vp.node();
+    let vpp = vp.shared().cfg.vps_per_node();
+    crate::apps::exchange_node_results(
+        vp,
+        &|| {
+            let h = hashes.lock().unwrap();
+            let mut words = vec![ok.load(Ordering::SeqCst) as u64];
+            words.extend_from_slice(&h[node * vpp..(node + 1) * vpp]);
+            words
+        },
+        &|nd, words| {
+            if words[0] == 0 {
+                ok.store(false, Ordering::SeqCst);
+            }
+            let mut h = hashes.lock().unwrap();
+            for (t, &x) in words[1..].iter().enumerate() {
+                h[nd * vpp + t] = x;
+            }
+        },
+    )?;
     Ok(())
 }
 

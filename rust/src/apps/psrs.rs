@@ -302,6 +302,41 @@ fn psrs_vp(
             }
         }
     }
+
+    // ---- Finale exchange (distributed transport only) ----
+    // Under TCP each process runs one node's VPs against its own copies
+    // of the driver atomics and the hash table, so only local slots are
+    // filled here.  Allgather each node's verdict words so every rank's
+    // `PsrsResult` reports the full run; a no-op under the in-process
+    // switch (the mem path stays byte-identical).
+    let node = vp.node();
+    let vpp = vp.shared().cfg.vps_per_node();
+    crate::apps::exchange_node_results(
+        vp,
+        &|| {
+            let h = hashes.lock().unwrap();
+            let mut words = vec![
+                ok.load(Ordering::SeqCst) as u64,
+                sum_in.load(Ordering::SeqCst),
+                sum_out.load(Ordering::SeqCst),
+                count_out.load(Ordering::SeqCst),
+            ];
+            words.extend_from_slice(&h[node * vpp..(node + 1) * vpp]);
+            words
+        },
+        &|nd, words| {
+            if words[0] == 0 {
+                ok.store(false, Ordering::SeqCst);
+            }
+            sum_in.fetch_add(words[1], Ordering::SeqCst);
+            sum_out.fetch_add(words[2], Ordering::SeqCst);
+            count_out.fetch_add(words[3], Ordering::SeqCst);
+            let mut h = hashes.lock().unwrap();
+            for (t, &x) in words[4..].iter().enumerate() {
+                h[nd * vpp + t] = x;
+            }
+        },
+    )?;
     Ok(())
 }
 

@@ -107,12 +107,14 @@ pub struct SsspResult {
 /// uncorrelated with the time-forward DAG under one `cfg.seed`.
 const NODE_SALT: u64 = 0xD1B5_4A32_D192_ED03;
 
-/// Frontier window (records) for pooled edge regeneration: bounds the
-/// resident edge-list RAM to one window (`window × avg_deg` pairs)
-/// regardless of how large an equal-distance frontier gets — low-weight
-/// graphs produce O(n)-record frontiers, which must not turn the serial
-/// path's O(deg) transient into an O(frontier × deg) resident buffer.
-const FRONTIER_WINDOW: usize = 4096;
+// Frontier window (records) for pooled edge regeneration: bounds the
+// resident edge-list RAM to one window (`window × avg_deg` pairs)
+// regardless of how large an equal-distance frontier gets — low-weight
+// graphs produce O(n)-record frontiers, which must not turn the serial
+// path's O(deg) transient into an O(frontier × deg) resident buffer.
+// Sized adaptively from µ by `SimConfig::pq_frontier_window` (was a
+// fixed 4096 constant, overridable via `PEMS2_FRONTIER_WINDOW`);
+// results are window-size independent, so the oracle pins hold.
 
 /// Node `u`'s PRNG stream (see [`graph_gen`]).
 fn node_rng(seed: u64, u: u64) -> XorShift64 {
@@ -286,6 +288,7 @@ pub fn run_sssp_resumable(
     // `SimConfig::parallel_phases` switch — and `--serial-spill`, which
     // forces the whole queue (spills + driver compute) serial.
     let ctx = ComputeCtx::with_pool(pq.compute_pool(), pq.metrics_handle());
+    let frontier_window = cfg.pq_frontier_window(avg_deg);
     let mut outbox: Vec<SsspRecord> = Vec::new();
     while let Some(head) = pq.peek_min() {
         if let Some((stop, path)) = checkpoint_at {
@@ -336,7 +339,7 @@ pub fn run_sssp_resumable(
         debug_assert!(frontier.iter().all(|r| r.dist == head.dist));
         rounds += 1;
         // The frontier processes in bounded windows (like time-forward's
-        // EDGE_WINDOW): per window, a pooled pass regenerates the edge
+        // edge window): per window, a pooled pass regenerates the edge
         // list of each node's first occurrence, if the node is still
         // unsettled when the window starts (edge lists are pure per-node
         // PRNG functions — the round's dominant compute), then a
@@ -350,7 +353,7 @@ pub fn run_sssp_resumable(
         // in this window — are skipped, their lists unused.  Resident
         // RAM stays at one window of edge lists, not the whole frontier.
         outbox.clear();
-        for window in frontier.chunks(FRONTIER_WINDOW) {
+        for window in frontier.chunks(frontier_window) {
             // First-occurrence mask: a node is generated once per window,
             // even when the window holds many lazy-deleted duplicates of
             // it (common on low-weight graphs) — the sequential pass

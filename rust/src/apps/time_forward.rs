@@ -13,9 +13,10 @@
 //!
 //! The graph itself is never materialized: out-edges are regenerated
 //! from a per-node seeded PRNG in a bounded lookahead window
-//! (`EDGE_WINDOW` nodes), batched on the compute pool — so the only
-//! RAM the driver holds is the window plus the verification oracle
-//! (8 bytes/node, only when `verify` is on).
+//! ([`SimConfig::pq_edge_window`] nodes, scaled to the context size µ
+//! and overridable via `PEMS2_EDGE_WINDOW`), batched on the compute
+//! pool — so the only RAM the driver holds is the window plus the
+//! verification oracle (8 bytes/node, only when `verify` is on).
 
 use crate::apps::graph_gen::{self, degree_draw};
 use crate::config::SimConfig;
@@ -25,12 +26,13 @@ use crate::util::XorShift64;
 use crate::vp::{ComputeCtx, ScopedJob};
 use std::path::Path;
 
-/// Lookahead window (nodes) for pooled out-edge regeneration: edge lists
-/// are pure per-node PRNG functions, so a window regenerates batched on
-/// the compute pool while the value recurrence stays strictly
-/// sequential.  Bounds driver RAM to `window × avg_deg` targets — the
-/// "graph never materialized" property holds up to this constant.
-const EDGE_WINDOW: u64 = 4096;
+// Lookahead window for pooled out-edge regeneration: edge lists are
+// pure per-node PRNG functions, so a window regenerates batched on the
+// compute pool while the value recurrence stays strictly sequential.
+// Bounds driver RAM to `window × avg_deg` targets — the "graph never
+// materialized" property holds up to this bound.  Sized adaptively from
+// µ by `SimConfig::pq_edge_window` (was a fixed 4096 constant); results
+// are window-size independent, so the oracle pins are unaffected.
 
 /// Outcome of a time-forward run.
 #[derive(Debug)]
@@ -151,13 +153,14 @@ pub fn run_time_forward_resumable(
         None => (EmPq::new(cfg, m.max(1))?, 0, 0),
     };
     // The driver's computation superstep — out-edge regeneration — runs
-    // batched over a lookahead window (see EDGE_WINDOW) on the queue's
-    // own worker pool (shared with the spill pipeline: the two issue
-    // from this one thread and are never busy at once); pool batches
-    // meter into the queue's report.  Serial path behind the unified
+    // batched over a lookahead window on the queue's own worker pool
+    // (shared with the spill pipeline: the two issue from this one
+    // thread and are never busy at once); pool batches meter into the
+    // queue's report.  Serial path behind the unified
     // `SimConfig::parallel_phases` switch, byte-identical (edge lists
     // are pure functions of the id).
     let ctx = ComputeCtx::with_pool(pq.compute_pool(), pq.metrics_handle());
+    let edge_window = cfg.pq_edge_window(avg_deg);
 
     let start = std::time::Instant::now();
     let mut window: Vec<Vec<u64>> = Vec::new();
@@ -190,7 +193,7 @@ pub fn run_time_forward_resumable(
         }
         if i >= window_base + window.len() as u64 {
             window_base = i;
-            let end = (i + EDGE_WINDOW).min(n);
+            let end = (i + edge_window).min(n);
             let parts: Vec<Vec<Vec<u64>>> = ctx.run_scoped(
                 ctx.chunks((end - i) as usize)
                     .into_iter()

@@ -5,7 +5,7 @@
 //! or manual experimentation").  `clap` is not in the offline crate set;
 //! this is a small hand-rolled parser.
 
-use crate::config::{AllocPolicy, DeliveryMode, FileAlloc, IoStyle, Layout, SimConfig};
+use crate::config::{AllocPolicy, DeliveryMode, FileAlloc, IoStyle, Layout, SimConfig, Transport};
 use crate::error::{Error, Result};
 use std::collections::HashMap;
 
@@ -70,9 +70,12 @@ impl Cli {
     /// `--p --v --k --mu --d --sigma --alpha --io --pems1 --alloc
     /// --layout --fragmented --indirect-slot --block --timeline --xla
     /// --seed --disk-dir --unordered --threads --serial --no-prefetch
-    /// --prefetch-depth --trace-out --fault-plan`.
+    /// --prefetch-depth --trace-out --fault-plan --transport --rank
+    /// --peers`.
     ///
-    /// Sizes accept suffixes `k`/`m`/`g` (binary).
+    /// Sizes accept suffixes `k`/`m`/`g` (binary).  `--peers` is a
+    /// comma-separated `host:port` list, one per rank in rank order;
+    /// `--rank` is this process' node index into it.
     pub fn sim_config(&self) -> Result<SimConfig> {
         let mut b = SimConfig::builder()
             .p(self.get_or("p", 1)?)
@@ -132,6 +135,19 @@ impl Cli {
         }
         if let Some(plan) = self.options.get("fault-plan") {
             b = b.fault_plan(plan.clone());
+        }
+        if let Some(t) = self.options.get("transport") {
+            b = b.transport(Transport::parse(t)?);
+        }
+        b = b.net_rank(self.get_or("rank", 0)?);
+        if let Some(peers) = self.options.get("peers") {
+            b = b.peers(
+                peers
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect(),
+            );
         }
         b.build()
     }
@@ -278,6 +294,37 @@ mod tests {
         // Default: unset (falls back to the PEMS2_FAULT_PLAN env var).
         let cfg = Cli::parse(args("x --v 4")).unwrap().sim_config().unwrap();
         assert!(cfg.fault_plan.is_none());
+    }
+
+    #[test]
+    fn transport_flags_land_in_the_config() {
+        let cfg = Cli::parse(args(
+            "psrs --p 2 --v 4 --k 2 --transport tcp --rank 1 \
+             --peers 127.0.0.1:7501,127.0.0.1:7502",
+        ))
+        .unwrap()
+        .sim_config()
+        .unwrap();
+        assert_eq!(cfg.transport(), Transport::Tcp);
+        assert_eq!(cfg.net_rank, 1);
+        assert_eq!(cfg.peers, vec!["127.0.0.1:7501", "127.0.0.1:7502"]);
+        // Validation: a tcp transport with no peer list is rejected.
+        assert!(Cli::parse(args("psrs --p 2 --v 4 --k 2 --transport tcp"))
+            .unwrap()
+            .sim_config()
+            .is_err());
+        // Unknown transport names are a usage error.
+        assert!(Cli::parse(args("psrs --v 4 --transport carrier-pigeon"))
+            .unwrap()
+            .sim_config()
+            .is_err());
+        // Default: in-process switch, rank 0, no peers.
+        if crate::config::transport_env().is_none() {
+            let cfg = Cli::parse(args("psrs --v 4")).unwrap().sim_config().unwrap();
+            assert_eq!(cfg.transport(), Transport::Mem);
+            assert_eq!(cfg.net_rank, 0);
+            assert!(cfg.peers.is_empty());
+        }
     }
 
     #[test]

@@ -25,7 +25,10 @@ pub fn barrier(vp: &mut Vp) -> Result<()> {
         for g in &sh2.gates {
             g.reset_turns();
         }
-        if sh2.node == 0 {
+        // Node 0 counts the superstep — every rank under a distributed
+        // transport, where each process owns its own Metrics (see the
+        // matching condition in vp::superstep_end).
+        if sh2.node == 0 || sh2.cfg.transport().is_distributed() {
             sh2.metrics.superstep();
         }
     });

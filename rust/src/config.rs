@@ -91,6 +91,46 @@ pub enum FileAlloc {
     Fragmented,
 }
 
+/// Network transport backing the [`crate::net::Switch`] collectives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transport {
+    /// In-process memcpy switch: all `P` nodes live in one process and
+    /// exchange through a shared grid.  The default, byte-identical to
+    /// every pre-transport run.
+    Mem,
+    /// Persistent per-peer TCP connections with a length-prefixed
+    /// framed protocol and per-peer sender/receiver threads
+    /// ([`crate::net::tcp`]): one process per node, rendezvous via
+    /// `--peers host:port,...` + `--rank N`.
+    Tcp,
+}
+
+impl Transport {
+    /// Parse from the CLI / `PEMS2_TRANSPORT` names.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "mem" => Ok(Transport::Mem),
+            "tcp" => Ok(Transport::Tcp),
+            other => Err(Error::config(format!("unknown transport '{other}'"))),
+        }
+    }
+
+    /// Label used in reports and plot output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Transport::Mem => "mem",
+            Transport::Tcp => "tcp",
+        }
+    }
+
+    /// True when ranks live in separate processes, so this process
+    /// hosts exactly one node ([`SimConfig::net_rank`]) and cross-node
+    /// traffic really crosses a socket.
+    pub fn is_distributed(&self) -> bool {
+        matches!(self, Transport::Tcp)
+    }
+}
+
 /// Cost-model coefficients (Appendix B.4).  Units are seconds per block /
 /// per message / per superstep; defaults model a 2009-era SATA disk and
 /// gigabit ethernet so that *charged* times land in the thesis' regime.
@@ -222,6 +262,20 @@ pub struct SimConfig {
     /// there).  Transient faults heal in the driver path, so
     /// application output stays byte-identical.
     pub fault_plan: Option<String>,
+    /// Network transport backing the collectives (CLI `--transport`);
+    /// `None` falls back to the `PEMS2_TRANSPORT` environment variable
+    /// ([`transport_env`]), else [`Transport::Mem`] — see the
+    /// [`SimConfig::transport`](SimConfig::transport()) resolver.
+    pub transport: Option<Transport>,
+    /// This process's node id under a distributed transport (CLI
+    /// `--rank`).  Ignored for [`Transport::Mem`], where one process
+    /// hosts all `P` nodes.
+    pub net_rank: usize,
+    /// Rendezvous addresses, one `host:port` per rank, in rank order
+    /// and identical on every rank (CLI `--peers`): rank `i` listens on
+    /// `peers[i]` and connects to every lower rank.  Must have length
+    /// `P` under [`Transport::Tcp`].
+    pub peers: Vec<String>,
     /// Use the XLA/PJRT artifacts for computation supersteps when available.
     pub use_xla: bool,
     /// Workload seed.
@@ -294,10 +348,16 @@ impl SimConfig {
     /// pipeline is off; otherwise the explicit
     /// [`SimConfig::prefetch_depth`] when set, else the
     /// `PEMS2_PREFETCH_DEPTH` environment override
-    /// ([`prefetch_depth_env`]) when present, else the adaptive
-    /// `ceil(D/k)` rule — depth 1 (the classic double buffer) for
+    /// ([`prefetch_depth_env`]) when present, else the adaptive rule:
+    /// target `ceil(D/k)` — depth 1 (the classic double buffer) for
     /// `k >= D`, deeper for `k < D` shapes so the node still keeps ~`D`
-    /// reads in flight across its `k` partitions.
+    /// reads in flight across its `k` partitions — clamped against the
+    /// free shadow-buffer budget (the baseline double buffer is always
+    /// granted; each *extra* shadow level costs another `kµ`, which
+    /// must fit in the node's shared buffer `σ`) and against the gate
+    /// round count (lookahead past the end of the schedule prefetches
+    /// nothing).  Explicit/env depths are taken as stated — deliberate
+    /// overcommit stays expressible.
     pub fn swap_prefetch_depth(&self) -> usize {
         if !self.swap_prefetch_active() {
             return 0;
@@ -305,7 +365,50 @@ impl SimConfig {
         if self.prefetch_depth != 0 {
             return self.prefetch_depth;
         }
-        prefetch_depth_env().unwrap_or_else(|| self.d.div_ceil(self.k).max(1))
+        prefetch_depth_env().unwrap_or_else(|| {
+            let target = self.d.div_ceil(self.k).max(1);
+            let extra_levels = (self.sigma / (self.k as u64 * self.mu).max(1)) as usize;
+            let rounds = self.vps_per_node().div_ceil(self.k);
+            target.min(1 + extra_levels).min(rounds).max(1)
+        })
+    }
+
+    /// Resolved network transport: the explicit [`SimConfig::transport`]
+    /// field when set, else the `PEMS2_TRANSPORT` environment override
+    /// ([`transport_env`]), else [`Transport::Mem`] — so every config
+    /// that never mentions transports keeps the in-process switch and
+    /// its byte-identical behaviour.
+    pub fn transport(&self) -> Transport {
+        self.transport.or_else(transport_env).unwrap_or(Transport::Mem)
+    }
+
+    /// Derived lookahead window for the PQ drivers' batched edge
+    /// regeneration (time-forward's node window, sssp's frontier
+    /// window): the `PEMS2_EDGE_WINDOW` environment override
+    /// ([`edge_window_env`]) when present, else sized so one window of
+    /// regenerated edges (~8 bytes of priority-queue payload per edge)
+    /// fills about a quarter of one context `µ` — scaling with the RAM
+    /// the run was given instead of a fixed constant — clamped to
+    /// [1024, 2^20] nodes.  Results are window-size independent (the
+    /// oracle pins don't move); only batching granularity changes.
+    pub fn pq_edge_window(&self, avg_degree: u64) -> u64 {
+        edge_window_env().unwrap_or_else(|| Self::pq_window(self.mu, avg_degree, 8))
+    }
+
+    /// Frontier-batch window for the sssp driver: the
+    /// `PEMS2_FRONTIER_WINDOW` environment override
+    /// ([`frontier_window_env`]) when present, else derived like
+    /// [`SimConfig::pq_edge_window`] but at ~16 bytes per relaxation
+    /// (tentative-distance records are wider than plain edges).
+    pub fn pq_frontier_window(&self, avg_degree: u64) -> usize {
+        frontier_window_env().unwrap_or_else(|| Self::pq_window(self.mu, avg_degree, 16)) as usize
+    }
+
+    /// Common window rule: `(µ/4) / (bytes_per_edge · degree)` nodes,
+    /// clamped so degenerate shapes (tiny `µ`, dense graphs, degree 0)
+    /// stay in a sane batching range.
+    fn pq_window(mu: u64, avg_degree: u64, bytes_per_edge: u64) -> u64 {
+        ((mu / 4) / (bytes_per_edge * avg_degree.max(1))).clamp(1024, 1 << 20)
     }
 
     /// Resolved trace-export path: the explicit [`SimConfig::trace_out`]
@@ -391,6 +494,21 @@ impl SimConfig {
                 "mmap I/O requires layout=per-vp (contiguous contexts in one file)",
             ));
         }
+        if self.transport() == Transport::Tcp {
+            if self.peers.len() != self.p {
+                return Err(Error::config(format!(
+                    "tcp transport needs one peer address per rank: got {} peers for p = {}",
+                    self.peers.len(),
+                    self.p
+                )));
+            }
+            if self.net_rank >= self.p {
+                return Err(Error::config(format!(
+                    "rank ({}) must be < p ({})",
+                    self.net_rank, self.p
+                )));
+            }
+        }
         if self.p > 1 && !self.ordered_rounds {
             return Err(Error::config(
                 "multi-node runs require ordered rounds (the round structure \
@@ -468,6 +586,34 @@ pub fn fault_plan_env() -> Option<String> {
     std::env::var("PEMS2_FAULT_PLAN").ok().filter(|s| !s.is_empty())
 }
 
+/// Transport override from `PEMS2_TRANSPORT` (`mem` | `tcp`): a
+/// process-wide default wherever a config leaves
+/// [`SimConfig::transport`] unset, mirroring the other `PEMS2_*`
+/// overrides — an explicit config value always wins.  Unparsable
+/// values are ignored (fall back to mem) rather than failing every
+/// config in the process.  Note that `tcp` makes validation demand
+/// `--peers`/`--rank` on every config built in the process, so this
+/// knob is for single-run CLI convenience, not test-suite sweeps.
+pub fn transport_env() -> Option<Transport> {
+    Transport::parse(&std::env::var("PEMS2_TRANSPORT").ok()?).ok()
+}
+
+/// Edge-window override from `PEMS2_EDGE_WINDOW` (an integer ≥ 1): a
+/// process-wide default for the time-forward driver's regeneration
+/// window wherever the derived [`SimConfig::pq_edge_window`] rule
+/// would apply, mirroring the `PEMS2_PREFETCH_DEPTH` scheme.  `0` is
+/// rejected (an empty window would make the drivers spin).
+pub fn edge_window_env() -> Option<u64> {
+    std::env::var("PEMS2_EDGE_WINDOW").ok()?.parse().ok().filter(|&w| w > 0)
+}
+
+/// Frontier-window override from `PEMS2_FRONTIER_WINDOW` (an integer
+/// ≥ 1): the sssp counterpart of [`edge_window_env`], filling the
+/// derived [`SimConfig::pq_frontier_window`] rule.
+pub fn frontier_window_env() -> Option<u64> {
+    std::env::var("PEMS2_FRONTIER_WINDOW").ok()?.parse().ok().filter(|&w| w > 0)
+}
+
 fn truthy(v: Option<String>) -> bool {
     matches!(v.as_deref(), Some("1") | Some("true") | Some("yes"))
 }
@@ -505,6 +651,9 @@ impl Default for SimConfigBuilder {
                 record_timeline: false,
                 trace_out: None,
                 fault_plan: None,
+                transport: None,
+                net_rank: 0,
+                peers: Vec::new(),
                 use_xla: false,
                 seed: 0xF00D,
             },
@@ -564,6 +713,8 @@ impl SimConfigBuilder {
         prefetch_depth: usize,
         /// Record timelines.
         record_timeline: bool,
+        /// Node id of this process under a distributed transport.
+        net_rank: usize,
         /// Enable XLA compute path.
         use_xla: bool,
         /// Workload seed.
@@ -588,6 +739,20 @@ impl SimConfigBuilder {
     /// pins injection *off* even under the CI fault leg.
     pub fn fault_plan(mut self, spec: impl Into<String>) -> Self {
         self.cfg.fault_plan = Some(spec.into());
+        self
+    }
+
+    /// Select the network transport explicitly (beats the
+    /// `PEMS2_TRANSPORT` environment variable).
+    pub fn transport(mut self, t: Transport) -> Self {
+        self.cfg.transport = Some(t);
+        self
+    }
+
+    /// Rendezvous addresses, one `host:port` per rank in rank order
+    /// (tcp transport; must be identical on every rank).
+    pub fn peers(mut self, peers: Vec<String>) -> Self {
+        self.cfg.peers = peers;
         self
     }
 
@@ -731,11 +896,16 @@ mod tests {
 
     #[test]
     fn prefetch_depth_resolves_adaptively() {
+        // A small µ against the default σ = 4 MiB keeps the
+        // shadow-buffer budget out of the way, so these pins exercise
+        // the pure ceil(D/k) rule; the clamps are pinned separately
+        // below.
         let mk = |k: usize, d: usize, depth: usize| {
             SimConfig::builder()
                 .v(8)
                 .k(k)
                 .d(d)
+                .mu(1 << 16)
                 .io(IoStyle::Async)
                 .prefetch_depth(depth)
                 .build()
@@ -765,6 +935,29 @@ mod tests {
             assert_eq!(mk(2, 2, 0).swap_prefetch_depth(), 1);
             assert_eq!(mk(2, 4, 0).swap_prefetch_depth(), 2);
             assert_eq!(mk(1, 3, 0).swap_prefetch_depth(), 3);
+            // Budget clamp: at the builder defaults µ = σ = 4 MiB one
+            // extra shadow level per partition costs kµ ≥ σ, so the
+            // k < D target is cut back to what the free buffer affords
+            // (the baseline double buffer is always granted).
+            let tight = |k: usize, d: usize| {
+                SimConfig::builder().v(8).k(k).d(d).io(IoStyle::Async).build().unwrap()
+            };
+            assert_eq!(tight(2, 4).swap_prefetch_depth(), 1, "σ/(kµ) = 0 extra levels");
+            assert_eq!(tight(1, 3).swap_prefetch_depth(), 2, "σ/(kµ) = 1 extra level");
+            // Rounds clamp: k = 4 over v/P = 8 VPs is 2 gate rounds, so
+            // a 64-disk array cannot usefully pipeline deeper than 2.
+            let c = SimConfig::builder()
+                .v(8)
+                .k(4)
+                .d(64)
+                .mu(1 << 12)
+                .io(IoStyle::Async)
+                .build()
+                .unwrap();
+            assert_eq!(c.swap_prefetch_depth(), 2, "lookahead capped at the round count");
+            // An explicit depth is never clamped: deliberate overcommit
+            // of the budget stays expressible.
+            assert_eq!(mk(2, 4, 9).swap_prefetch_depth(), 9);
         } else {
             assert_eq!(mk(2, 4, 0).swap_prefetch_depth(), prefetch_depth_env().unwrap());
         }
@@ -796,6 +989,71 @@ mod tests {
         assert_eq!(c.fault_plan_spec().as_deref(), Some(""));
         let c = SimConfig::builder().build().unwrap();
         assert_eq!(c.fault_plan_spec(), fault_plan_env());
+    }
+
+    #[test]
+    fn transport_knobs_resolve_and_validate() {
+        if transport_env().is_none() {
+            let c = SimConfig::builder().build().unwrap();
+            assert_eq!(c.transport(), Transport::Mem, "default transport is the mem switch");
+        }
+        assert_eq!(Transport::parse("mem").unwrap(), Transport::Mem);
+        assert_eq!(Transport::parse("tcp").unwrap(), Transport::Tcp);
+        assert!(Transport::parse("udp").is_err());
+        assert_eq!(Transport::Tcp.label(), "tcp");
+        assert!(!Transport::Mem.is_distributed());
+        assert!(Transport::Tcp.is_distributed());
+        // tcp validation: one peer address per rank, rank < p.
+        let peers = vec!["127.0.0.1:7401".to_string(), "127.0.0.1:7402".to_string()];
+        let ok = SimConfig::builder()
+            .p(2)
+            .v(8)
+            .transport(Transport::Tcp)
+            .peers(peers.clone())
+            .net_rank(1)
+            .build();
+        assert!(ok.is_ok());
+        assert_eq!(ok.unwrap().transport(), Transport::Tcp, "explicit transport wins");
+        let short = SimConfig::builder()
+            .p(2)
+            .v(8)
+            .transport(Transport::Tcp)
+            .peers(vec!["127.0.0.1:7401".into()])
+            .build();
+        assert!(short.is_err(), "peer list must cover every rank");
+        let bad_rank = SimConfig::builder()
+            .p(2)
+            .v(8)
+            .transport(Transport::Tcp)
+            .peers(peers)
+            .net_rank(2)
+            .build();
+        assert!(bad_rank.is_err(), "rank must be < p");
+    }
+
+    #[test]
+    fn pq_windows_scale_with_mu_and_clamp() {
+        if edge_window_env().is_some() || frontier_window_env().is_some() {
+            return; // process-global env override in play
+        }
+        // Builder default µ = 4 MiB: (µ/4)/(8·deg) nodes for the edge
+        // window, half that for the wider frontier records.
+        let c = SimConfig::builder().build().unwrap();
+        assert_eq!(c.pq_edge_window(4), (4 << 20) / 4 / (8 * 4)); // 32768
+        assert_eq!(c.pq_frontier_window(4), (4 << 20) / 4 / (16 * 4)); // 16384
+        assert_eq!(c.pq_edge_window(8), c.pq_edge_window(4) / 2, "denser ⇒ smaller window");
+        // Tiny µ / dense graphs floor at 1024 (never degenerate to
+        // per-node batches) …
+        let tiny = SimConfig::builder().mu(1 << 12).build().unwrap();
+        assert_eq!(tiny.pq_edge_window(64), 1024);
+        // … and huge µ / sparse graphs cap at 2^20 (bounded batch RAM).
+        let big = SimConfig::builder().mu(1 << 30).build().unwrap();
+        assert_eq!(big.pq_edge_window(1), 1 << 20);
+        assert_eq!(big.pq_frontier_window(0), 1 << 20, "degree 0 must not divide by zero");
+        // Env parser contract: integers >= 1 only.
+        assert_eq!("8192".parse::<u64>().ok().filter(|&w| w > 0), Some(8192));
+        assert_eq!("0".parse::<u64>().ok().filter(|&w| w > 0), None);
+        assert_eq!("x".parse::<u64>().ok().filter(|&w| w > 0), None);
     }
 
     #[test]

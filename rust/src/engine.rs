@@ -71,12 +71,22 @@ pub fn run_arc(
     let trace_session = cfg.trace_path().map(trace::Session::start);
     let metrics = Arc::new(Metrics::new());
     let timeline = Arc::new(Timeline::new(cfg.v, cfg.record_timeline));
-    let switch = Switch::new(cfg.p, metrics.clone());
+    let switch = Switch::for_config(&cfg, metrics.clone())?;
     let compute = Arc::new(Compute::auto("artifacts", cfg.use_xla));
 
+    // The nodes this process hosts: all `P` under the in-process mem
+    // transport, exactly one (`cfg.net_rank`) under a distributed
+    // transport — there, the other ranks are separate processes on the
+    // far side of the switch.
+    let local_nodes: Vec<usize> = if cfg.transport().is_distributed() {
+        vec![cfg.net_rank]
+    } else {
+        (0..cfg.p).collect()
+    };
+
     // Build the nodes.
-    let mut nodes: Vec<Arc<NodeShared>> = Vec::with_capacity(cfg.p);
-    for node in 0..cfg.p {
+    let mut nodes: Vec<Arc<NodeShared>> = Vec::with_capacity(local_nodes.len());
+    for &node in &local_nodes {
         // One async worker per disk: strict per-disk queue partitioning,
         // so swap-out write-behind, context prefetch and message delivery
         // targeting distinct disks proceed concurrently (and requests to

@@ -16,6 +16,10 @@ pub enum Error {
     Alloc(String),
     /// Communication misuse (size mismatch, bad rank, buffer overflow).
     Comm(String),
+    /// Network transport failure (handshake mismatch, malformed frame,
+    /// peer disconnect) — distinct from [`Error::Comm`] so callers can
+    /// tell a wire fault from an API misuse.
+    Net(String),
     /// XLA runtime failure (artifact missing, compile/execute error).
     Runtime(String),
     /// A simulated virtual processor panicked.
@@ -31,6 +35,7 @@ impl fmt::Display for Error {
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Alloc(s) => write!(f, "allocation error: {s}"),
             Error::Comm(s) => write!(f, "communication error: {s}"),
+            Error::Net(s) => write!(f, "network error: {s}"),
             Error::Runtime(s) => write!(f, "xla runtime error: {s}"),
             Error::VpPanic(vp, s) => write!(f, "virtual processor {vp} panicked: {s}"),
             Error::Usage(s) => write!(f, "usage error: {s}"),
@@ -61,6 +66,10 @@ impl Error {
     /// Shorthand constructor for [`Error::Comm`].
     pub fn comm(msg: impl Into<String>) -> Self {
         Error::Comm(msg.into())
+    }
+    /// Shorthand constructor for [`Error::Net`].
+    pub fn net(msg: impl Into<String>) -> Self {
+        Error::Net(msg.into())
     }
     /// Shorthand constructor for [`Error::Alloc`].
     pub fn alloc(msg: impl Into<String>) -> Self {

@@ -41,6 +41,7 @@ fn real_main(args: Vec<String>) -> Result<()> {
         "stxxl-sort" => cmd_stxxl_sort(&cli),
         "dist-sort" => cmd_dist_sort(&cli),
         "alltoallv" => cmd_alltoallv(&cli),
+        "launch" => cmd_launch(&cli),
         "info" => cmd_info(&cli),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -70,6 +71,8 @@ COMMANDS
   dist-sort     EM distribution (sample) sort baseline: pipelined
                 sample/partition/bucket-sort with equality buckets
   alltoallv     a single Alltoallv over the whole data set (Fig. 7.2)
+  launch        spawn --p local ranks of a subcommand over loopback TCP
+                (pems2 launch psrs --p 2 --n 1000000 --v 4 --verify)
   info          print the resolved configuration and disk-space needs
 
 SIMULATION FLAGS (Appendix B.3)
@@ -115,6 +118,13 @@ SIMULATION FLAGS (Appendix B.3)
   --xla           run computation supersteps on the AOT XLA kernels
   --seed N        workload seed
   --disk-dir PATH backing files location (default: temp dir)
+  --transport T   mem | tcp — inter-node switch backend; mem is the
+                  in-process switch, tcp runs this process as one node
+                  of a distributed run (PEMS2_TRANSPORT does the same
+                  globally)                                  [mem]
+  --peers LIST    comma-separated host:port, one per rank in rank order;
+                  rank i listens on the i-th entry (tcp only)
+  --rank N        this process' node index into --peers (tcp only)  [0]
 
 WORKLOAD FLAGS
   --n N           elements (psrs, cgm-sort, prefix-sum, list-ranking, stxxl-sort)
@@ -146,6 +156,14 @@ fn print_counters(m: &pems2::metrics::MetricsSnapshot) {
     println!("seeks              {}", m.seeks);
     println!("net_bytes          {}", human_bytes(m.net_bytes));
     println!("net_relations      {}", m.net_relations);
+    if m.net_bytes_tx > 0 || m.net_bytes_rx > 0 {
+        println!(
+            "net_wire           {} tx / {} rx",
+            human_bytes(m.net_bytes_tx),
+            human_bytes(m.net_bytes_rx)
+        );
+        println!("net_stall_seconds  {:.3}", m.net_stall_ns as f64 / 1e9);
+    }
     println!("supersteps         {}", m.supersteps);
     println!("mmap_touched       {}", human_bytes(m.mmap_touched_bytes));
     println!("pool_jobs          {} ({} batches)", m.pool_jobs, m.pool_batches);
@@ -405,6 +423,91 @@ fn cmd_alltoallv(cli: &Cli) -> Result<()> {
     println!("app                alltoallv");
     println!("elems_per_vp       {elems}");
     finish(&r.report, cli, r.verified)
+}
+
+/// `pems2 launch <subcommand> --p N [flags...]`: spawn `N` copies of
+/// this binary as local TCP ranks over loopback and relay their output.
+///
+/// Free ports are picked by binding ephemeral listeners and handing the
+/// resulting `host:port` list to every child via `--peers`; any
+/// `--transport/--rank/--peers` on the launch line itself are dropped
+/// (the launcher owns them).  Children run concurrently — the TCP
+/// rendezvous requires it — and their stdout/stderr are buffered and
+/// printed per rank in rank order once all exit.
+fn cmd_launch(cli: &Cli) -> Result<()> {
+    let sub = cli
+        .positional
+        .first()
+        .ok_or_else(|| pems2::error::Error::usage("launch needs a subcommand to run"))?;
+    if sub == "launch" {
+        return Err(pems2::error::Error::usage("launch cannot launch itself"));
+    }
+    let p: usize = cli.get_or("p", 2)?;
+    if p == 0 {
+        return Err(pems2::error::Error::usage("launch needs --p >= 1"));
+    }
+
+    // Reserve one loopback port per rank.  The listeners close before
+    // the children bind; the race window is tolerated the same way MPI
+    // launchers tolerate it (ports are handed out, not leased).
+    let mut peers = Vec::with_capacity(p);
+    {
+        let mut probes = Vec::with_capacity(p);
+        for _ in 0..p {
+            let l = std::net::TcpListener::bind("127.0.0.1:0")?;
+            peers.push(format!("127.0.0.1:{}", l.local_addr()?.port()));
+            probes.push(l);
+        }
+    }
+    let peer_list = peers.join(",");
+
+    // Forward everything except the transport trio and --p (each child
+    // gets the full node count so v/k/mu resolve identically).
+    let mut forwarded: Vec<String> = vec![sub.clone()];
+    forwarded.extend(cli.positional.iter().skip(1).cloned());
+    let mut opts: Vec<(&String, &String)> = cli.options.iter().collect();
+    opts.sort(); // HashMap order is nondeterministic; children must agree
+    for (k, v) in opts {
+        if matches!(k.as_str(), "transport" | "rank" | "peers") {
+            continue;
+        }
+        forwarded.push(format!("--{k}={v}"));
+    }
+    forwarded.push(format!("--p={p}"));
+
+    let exe = std::env::current_exe()?;
+    let mut children = Vec::with_capacity(p);
+    for rank in 0..p {
+        let child = std::process::Command::new(&exe)
+            .args(&forwarded)
+            .arg("--transport=tcp")
+            .arg(format!("--rank={rank}"))
+            .arg(format!("--peers={peer_list}"))
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::piped())
+            .spawn()?;
+        children.push(child);
+    }
+
+    let mut failed = Vec::new();
+    for (rank, child) in children.into_iter().enumerate() {
+        let out = child.wait_with_output()?;
+        println!("---- rank {rank}/{p} ({sub}) ----");
+        print!("{}", String::from_utf8_lossy(&out.stdout));
+        let err = String::from_utf8_lossy(&out.stderr);
+        if !err.is_empty() {
+            eprint!("{err}");
+        }
+        if !out.status.success() {
+            failed.push(rank);
+        }
+    }
+    if !failed.is_empty() {
+        return Err(pems2::error::Error::comm(format!(
+            "launch: rank(s) {failed:?} exited with failure"
+        )));
+    }
+    Ok(())
 }
 
 fn cmd_info(cli: &Cli) -> Result<()> {

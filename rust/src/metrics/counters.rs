@@ -28,6 +28,9 @@ pub struct Metrics {
     seek_distance: AtomicU64,
     net_bytes: AtomicU64,
     net_relations: AtomicU64,
+    net_bytes_tx: AtomicU64,
+    net_bytes_rx: AtomicU64,
+    net_stall_ns: AtomicU64,
     supersteps: AtomicU64,
     mmap_touched_bytes: AtomicU64,
     pool_jobs: AtomicU64,
@@ -87,6 +90,28 @@ impl Metrics {
     pub fn net_relation(&self, bytes: u64) {
         self.net_bytes.fetch_add(bytes, Ordering::Relaxed);
         self.net_relations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` bytes written to a peer socket by a TCP-transport
+    /// sender thread (frame headers included).  Stays zero under the
+    /// in-process mem transport, which moves bytes by memcpy.
+    pub fn net_tx(&self, n: u64) {
+        self.net_bytes_tx.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record `n` bytes read from a peer socket by a TCP-transport
+    /// receiver thread (frame headers included).
+    pub fn net_rx(&self, n: u64) {
+        self.net_bytes_rx.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record `ns` nanoseconds a thread spent blocked on the network
+    /// transport: a collective waiting for a peer's payload to finish
+    /// arriving, or a send handoff blocked on a full per-peer ring.
+    /// The residual latency the per-peer overlap did not hide — the
+    /// network analogue of `swap_wait_ns`.
+    pub fn net_stall(&self, ns: u64) {
+        self.net_stall_ns.fetch_add(ns, Ordering::Relaxed);
     }
 
     /// Record a (virtual or internal) superstep barrier crossing.
@@ -178,6 +203,9 @@ impl Metrics {
             seek_distance: self.seek_distance.load(Ordering::Relaxed),
             net_bytes: self.net_bytes.load(Ordering::Relaxed),
             net_relations: self.net_relations.load(Ordering::Relaxed),
+            net_bytes_tx: self.net_bytes_tx.load(Ordering::Relaxed),
+            net_bytes_rx: self.net_bytes_rx.load(Ordering::Relaxed),
+            net_stall_ns: self.net_stall_ns.load(Ordering::Relaxed),
             supersteps: self.supersteps.load(Ordering::Relaxed),
             mmap_touched_bytes: self.mmap_touched_bytes.load(Ordering::Relaxed),
             pool_jobs: self.pool_jobs.load(Ordering::Relaxed),
@@ -216,6 +244,16 @@ pub struct MetricsSnapshot {
     pub net_bytes: u64,
     /// Network h-relations performed.
     pub net_relations: u64,
+    /// Bytes actually written to peer sockets (TCP transport only;
+    /// includes frame headers — the wire-volume counterpart of the
+    /// cost-model `net_bytes`).
+    pub net_bytes_tx: u64,
+    /// Bytes actually read from peer sockets (TCP transport only).
+    pub net_bytes_rx: u64,
+    /// Nanoseconds threads spent blocked on the network transport
+    /// (payload-completion waits and full-ring send handoffs) — the
+    /// residual latency per-peer overlap did not hide.
+    pub net_stall_ns: u64,
     /// Superstep barriers crossed.
     pub supersteps: u64,
     /// Bytes touched via mmap'd contexts.
@@ -279,6 +317,9 @@ impl MetricsSnapshot {
             seek_distance: self.seek_distance - earlier.seek_distance,
             net_bytes: self.net_bytes - earlier.net_bytes,
             net_relations: self.net_relations - earlier.net_relations,
+            net_bytes_tx: self.net_bytes_tx - earlier.net_bytes_tx,
+            net_bytes_rx: self.net_bytes_rx - earlier.net_bytes_rx,
+            net_stall_ns: self.net_stall_ns - earlier.net_stall_ns,
             supersteps: self.supersteps - earlier.supersteps,
             mmap_touched_bytes: self.mmap_touched_bytes - earlier.mmap_touched_bytes,
             pool_jobs: self.pool_jobs - earlier.pool_jobs,
@@ -355,6 +396,26 @@ mod tests {
         let d = m.snapshot().delta(&s);
         assert_eq!((d.prefetch_hits, d.prefetch_hit_bytes), (1, 8));
         assert_eq!(d.prefetch_misses, 0);
+    }
+
+    #[test]
+    fn net_wire_counters_accumulate_and_delta() {
+        let m = Metrics::new();
+        m.net_tx(100);
+        m.net_rx(40);
+        m.net_stall(2_000);
+        let s = m.snapshot();
+        assert_eq!(s.net_bytes_tx, 100);
+        assert_eq!(s.net_bytes_rx, 40);
+        assert_eq!(s.net_stall_ns, 2_000);
+        // Wire counters are independent of the cost-model h-relation
+        // accounting (the mem transport keeps them at zero).
+        assert_eq!(s.net_bytes, 0);
+        assert_eq!(s.net_relations, 0);
+        m.net_tx(1);
+        m.net_rx(2);
+        let d = m.snapshot().delta(&s);
+        assert_eq!((d.net_bytes_tx, d.net_bytes_rx, d.net_stall_ns), (1, 2, 0));
     }
 
     #[test]

@@ -79,7 +79,7 @@ const STORE_CAP: usize = 1 << 20;
 const MAX_STEPS: usize = 1 << 16;
 
 /// Number of [`Phase`] variants.
-pub const PHASES: usize = 10;
+pub const PHASES: usize = 11;
 
 /// Simulation phase a span is attributed to (the Figs. 8.12–8.14 axes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -110,6 +110,12 @@ pub enum Phase {
     /// chunk into splitter buckets (the middle stage of the
     /// read/partition/write pipeline in `baseline/dist_sort.rs`).
     Partition = 9,
+    /// Network transport activity (TCP backend only): per-peer sender /
+    /// receiver threads streaming frames, and collectives blocked on a
+    /// peer payload or a full send ring.  Overlap shows up as `net`
+    /// spans on the `net-tx-*`/`net-rx-*` threads running concurrently
+    /// with [`Phase::Comm`] on the VP threads.
+    Net = 10,
 }
 
 impl Phase {
@@ -125,6 +131,7 @@ impl Phase {
         Phase::PoolJob,
         Phase::Barrier,
         Phase::Partition,
+        Phase::Net,
     ];
 
     /// Stable snake_case name (JSON categories, table headers).
@@ -140,6 +147,7 @@ impl Phase {
             Phase::PoolJob => "pool_job",
             Phase::Barrier => "barrier",
             Phase::Partition => "partition",
+            Phase::Net => "net",
         }
     }
 

@@ -1,24 +1,41 @@
 //! The inter-node "network" (substitute for MPI over gigabit ethernet).
 //!
 //! The thesis runs on a cluster of `P` machines connected by a switched
-//! ethernet network, using MPI collectives for node-to-node traffic.  Here
-//! the `P` real processors are in-process nodes, and this module is the
-//! switch between them: a rendezvous-based exchange with BSP\* cost
-//! accounting (`g`, `l`, `b` — Appendix B.4).  The *algorithmic* structure
-//! (which node sends what to whom, in how many h-relations) is identical
-//! to the MPI version; only the transport differs (memcpy instead of TCP),
-//! and the cost model charges the h-relations the thesis' analysis counts.
+//! ethernet network, using MPI collectives for node-to-node traffic.  This
+//! module is the switch between the `P` real processors, behind one
+//! collective API ([`Switch`]) with two transports:
+//!
+//! * [`MemSwitch`] (the default): the `P` nodes are in-process and
+//!   exchange through a shared grid — a rendezvous-based memcpy exchange
+//!   with BSP\* cost accounting (`g`, `l`, `b` — Appendix B.4).
+//! * [`tcp::TcpSwitch`] (`--transport tcp`): one process per node,
+//!   persistent per-peer TCP connections carrying a length-prefixed
+//!   framed protocol, with per-peer sender/receiver threads overlapping
+//!   the per-peer streams (see the module docs in [`tcp`]).
+//!
+//! The *algorithmic* structure (which node sends what to whom, in how many
+//! h-relations) is identical across transports; only the byte movement
+//! differs (memcpy vs sockets), and the cost model charges the h-relations
+//! the thesis' analysis counts either way.
 //!
 //! Every collective must be invoked exactly once per node (by exactly one
 //! thread of that node) and in the same order on all nodes, mirroring MPI
-//! semantics.
+//! semantics.  The TCP backend leans on this lockstep invariant: it
+//! sequence-numbers collectives and matches frames by (peer, seq), which
+//! is unambiguous precisely because all nodes issue the same collectives
+//! in the same order.
 
+pub mod tcp;
+
+use crate::config::SimConfig;
+use crate::error::Result;
 use crate::metrics::Metrics;
 use crate::sync::SuperstepBarrier;
 use std::sync::{Arc, Condvar, Mutex};
 
-/// The switch connecting `P` nodes.
-pub struct Switch {
+/// The in-process transport: `P` nodes in one process exchanging through
+/// a shared message grid.
+pub struct MemSwitch {
     p: usize,
     /// P×P message grid for the current exchange.
     grid: Mutex<Vec<Vec<Option<Vec<u8>>>>>,
@@ -29,23 +46,23 @@ pub struct Switch {
     metrics: Arc<Metrics>,
 }
 
-impl std::fmt::Debug for Switch {
+impl std::fmt::Debug for MemSwitch {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Switch").field("p", &self.p).finish()
+        f.debug_struct("MemSwitch").field("p", &self.p).finish()
     }
 }
 
-impl Switch {
-    /// A switch over `p` nodes.
-    pub fn new(p: usize, metrics: Arc<Metrics>) -> Arc<Switch> {
-        Arc::new(Switch {
+impl MemSwitch {
+    /// An in-process switch over `p` nodes.
+    pub fn new(p: usize, metrics: Arc<Metrics>) -> MemSwitch {
+        MemSwitch {
             p,
             grid: Mutex::new(vec![(0..p).map(|_| None).collect(); p]),
             barrier: SuperstepBarrier::new(p),
             slot: Mutex::new(None),
             slot_cv: Condvar::new(),
             metrics,
-        })
+        }
     }
 
     /// Number of nodes.
@@ -135,14 +152,101 @@ impl Switch {
             data
         }
     }
+}
+
+/// The switch connecting `P` nodes: the collective API the engine and
+/// comm layer program against, dispatching to the configured transport.
+///
+/// The derived collectives (gather/scatter/allgather/reduce) are
+/// implemented here once, on top of the transport's `alltoallv`, so both
+/// backends share one code path and the byte-level message structure is
+/// identical by construction.
+///
+/// The TCP backend's collectives are fallible (a peer can disconnect
+/// mid-run); this enum's methods keep the infallible signatures the rest
+/// of the tree programs against and panic on a wire fault.  The panic
+/// unwinds the calling VP thread and surfaces as
+/// [`Error::VpPanic`](crate::error::Error::VpPanic) at the engine
+/// boundary — a deliberate trade: the
+/// sibling ranks of a dead peer cannot make progress anyway, and
+/// threading `Result` through every collective call site would put an
+/// error branch on the hot path of the mem transport.  Tests that want
+/// the structured [`crate::error::Error::Net`] assert on
+/// [`tcp::TcpSwitch`] directly.
+#[derive(Debug)]
+pub enum Switch {
+    /// In-process memcpy transport (the default).
+    Mem(MemSwitch),
+    /// One-process-per-node TCP transport.
+    Tcp(tcp::TcpSwitch),
+}
+
+impl Switch {
+    /// An in-process switch over `p` nodes (the mem transport — the
+    /// historical constructor, kept so every existing call site and its
+    /// behaviour stay byte-identical).
+    pub fn new(p: usize, metrics: Arc<Metrics>) -> Arc<Switch> {
+        Arc::new(Switch::Mem(MemSwitch::new(p, metrics)))
+    }
+
+    /// Build the switch the config asks for: the mem transport unless
+    /// [`SimConfig::transport`](SimConfig::transport()) resolves to tcp,
+    /// in which case this process hosts node `cfg.net_rank` only and
+    /// rendezvouses with its peers (blocking until all are connected).
+    pub fn for_config(cfg: &SimConfig, metrics: Arc<Metrics>) -> Result<Arc<Switch>> {
+        if cfg.transport().is_distributed() {
+            let t = tcp::TcpSwitch::connect(cfg.p, cfg.net_rank, &cfg.peers, metrics)?;
+            Ok(Arc::new(Switch::Tcp(t)))
+        } else {
+            Ok(Switch::new(cfg.p, metrics))
+        }
+    }
+
+    /// Number of nodes.
+    pub fn nodes(&self) -> usize {
+        match self {
+            Switch::Mem(s) => s.nodes(),
+            Switch::Tcp(s) => s.nodes(),
+        }
+    }
+
+    /// Node-level barrier (MPI_Barrier).
+    pub fn barrier(&self) {
+        match self {
+            Switch::Mem(s) => s.barrier(),
+            Switch::Tcp(s) => s.barrier().unwrap_or_else(|e| panic!("{e}")),
+        }
+    }
+
+    /// Node-level Alltoallv: `out[j]` is this node's message for node `j`.
+    /// Returns `in_[i]` = node `i`'s message for this node.  Charges one
+    /// h-relation of size `max_j(total bytes sent by node j)` (the tcp
+    /// transport charges each rank its own send volume — see
+    /// [`tcp::TcpSwitch::alltoallv`]).
+    pub fn alltoallv(&self, me: usize, out: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        match self {
+            Switch::Mem(s) => s.alltoallv(me, out),
+            Switch::Tcp(s) => s.alltoallv(me, out).unwrap_or_else(|e| panic!("{e}")),
+        }
+    }
+
+    /// Node-level broadcast from `root`'s thread; non-root nodes pass
+    /// `None` and receive the payload.
+    pub fn bcast(&self, me: usize, root: usize, payload: Option<Vec<u8>>) -> Vec<u8> {
+        match self {
+            Switch::Mem(s) => s.bcast(me, root, payload),
+            Switch::Tcp(s) => s.bcast(me, root, payload).unwrap_or_else(|e| panic!("{e}")),
+        }
+    }
 
     /// Node-level gather to `root`: every node contributes `data`; the
     /// root receives all `P` contributions (indexed by node).
     pub fn gather(&self, me: usize, root: usize, data: Vec<u8>) -> Option<Vec<Vec<u8>>> {
-        if self.p == 1 {
+        let p = self.nodes();
+        if p == 1 {
             return Some(vec![data]);
         }
-        let mut out: Vec<Vec<u8>> = (0..self.p).map(|_| Vec::new()).collect();
+        let mut out: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
         out[root] = data;
         let cols = self.alltoallv(me, out);
         if me == root {
@@ -154,13 +258,14 @@ impl Switch {
 
     /// Node-level scatter from `root`: root provides one payload per node.
     pub fn scatter(&self, me: usize, root: usize, data: Option<Vec<Vec<u8>>>) -> Vec<u8> {
-        if self.p == 1 {
+        let p = self.nodes();
+        if p == 1 {
             return data.expect("root payloads").into_iter().next().unwrap();
         }
         let out = if me == root {
             data.expect("root payloads")
         } else {
-            (0..self.p).map(|_| Vec::new()).collect()
+            (0..p).map(|_| Vec::new()).collect()
         };
         let mut cols = self.alltoallv(me, out);
         std::mem::take(&mut cols[root])
@@ -169,10 +274,11 @@ impl Switch {
     /// Node-level allgather: every node contributes `data`, every node
     /// receives all `P` contributions.
     pub fn allgather(&self, me: usize, data: Vec<u8>) -> Vec<Vec<u8>> {
-        if self.p == 1 {
+        let p = self.nodes();
+        if p == 1 {
             return vec![data];
         }
-        let out: Vec<Vec<u8>> = (0..self.p).map(|_| data.clone()).collect();
+        let out: Vec<Vec<u8>> = (0..p).map(|_| data.clone()).collect();
         self.alltoallv(me, out)
     }
 
@@ -186,29 +292,30 @@ impl Switch {
         data: Vec<u8>,
         combine: &dyn Fn(&mut [u8], &[u8]),
     ) -> Option<Vec<u8>> {
-        if self.p == 1 {
+        let p = self.nodes();
+        if p == 1 {
             return Some(data);
         }
         // Tree reduction in lg(P) rounds, re-rooted so `root` is rank 0.
-        let rank = (me + self.p - root) % self.p;
+        let rank = (me + p - root) % p;
         let mut acc = Some(data);
         let mut stride = 1usize;
-        while stride < self.p {
+        while stride < p {
             // Pair (rank, rank+stride); implemented over alltoallv so all
             // nodes participate in each round (MPI-like lockstep).
-            let mut out: Vec<Vec<u8>> = (0..self.p).map(|_| Vec::new()).collect();
+            let mut out: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
             let active = rank % (2 * stride) == 0;
             let sender = rank % (2 * stride) == stride;
             if sender {
                 let dst_rank = rank - stride;
-                let dst = (dst_rank + root) % self.p;
+                let dst = (dst_rank + root) % p;
                 out[dst] = acc.take().expect("sender holds data");
             }
             let cols = self.alltoallv(me, out);
             if active {
                 let src_rank = rank + stride;
-                if src_rank < self.p {
-                    let src = (src_rank + root) % self.p;
+                if src_rank < p {
+                    let src = (src_rank + root) % p;
                     let other = &cols[src];
                     if !other.is_empty() {
                         combine(acc.as_mut().expect("active holds acc"), other);
@@ -373,5 +480,15 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.net_relations, 1);
         assert_eq!(s.net_bytes, 150); // max per-node volume
+    }
+
+    #[test]
+    fn for_config_defaults_to_mem() {
+        let cfg = SimConfig::builder().p(1).v(4).build().unwrap();
+        if !cfg.transport().is_distributed() {
+            let sw = Switch::for_config(&cfg, Arc::new(Metrics::new())).unwrap();
+            assert!(matches!(*sw, Switch::Mem(_)));
+            assert_eq!(sw.nodes(), 1);
+        }
     }
 }

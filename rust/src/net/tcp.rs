@@ -1,0 +1,875 @@
+//! TCP transport: one process per node, streaming framed collectives.
+//!
+//! The distributed counterpart of [`super::MemSwitch`].  Each rank is a
+//! separate OS process hosting exactly one node
+//! ([`crate::config::SimConfig::net_rank`]); the collectives move bytes
+//! over persistent per-peer TCP connections instead of a shared grid.
+//!
+//! # Rendezvous
+//!
+//! Every rank gets the same `--peers host:port,...` list (one address
+//! per rank, in rank order).  Rank `i` binds a listener on `peers[i]`
+//! *first*, then connects to every lower rank (retrying until the
+//! listener is up) and accepts from every higher rank — the OS accept
+//! backlog makes the order deadlock-free.  Both directions of every
+//! connection exchange an 18-byte HELLO (magic, protocol version, rank,
+//! `P`) before any frame, so a misconfigured peer list or version skew
+//! fails fast with a structured [`Error::Net`] instead of garbled
+//! frames.
+//!
+//! # Framing
+//!
+//! All traffic after the HELLO is length-prefixed frames:
+//!
+//! ```text
+//! kind: u8   | 1 = DATA, 2 = BARRIER
+//! seq:  u64  | collective sequence number (see below)
+//! total:u64  | full payload size of this (peer, seq) message
+//! off:  u64  | offset of this chunk within the payload
+//! len:  u64  | bytes of chunk payload following the header
+//! ```
+//!
+//! all little-endian, 33 bytes.  A message is cut into
+//! [`CHUNK_BYTES`]-sized chunks; an *empty* message is one frame with
+//! `total == 0` (presence must be signalled — alltoallv receivers wait
+//! for every peer every round, empty or not).  Frame matching needs no
+//! per-message routing state: the module-level MPI-lockstep invariant
+//! (every collective invoked once per node, same order on all nodes —
+//! see [`super`]) plus per-connection TCP FIFO means `seq`, a plain
+//! per-switch counter, identifies the collective on both ends.
+//!
+//! # Overlap (the perf core)
+//!
+//! Each peer connection owns a sender thread and a receiver thread
+//! joined to the caller by a bounded ring ([`RING_FRAMES`] frames): a
+//! collective *classifies* the next chunk and hands it off while the
+//! previous chunks are still on the wire, and all `P-1` peer streams
+//! progress concurrently — no serialization through one grid lock.
+//! Chunks are enqueued round-robin across peers so every stream starts
+//! immediately.  Receive side, frames assemble into per-`seq` buffers
+//! as they arrive (also concurrently across peers); the collective then
+//! hands the assembled columns to the existing pooled delivery fan-out
+//! exactly like the mem transport.  Blocked time — a full send ring, or
+//! a wait for a payload that has not finished arriving — is metered as
+//! `net_stall_ns` and shows up as [`Phase::Net`] spans next to the
+//! sender/receiver threads' own `net` spans in the trace export.
+//!
+//! # Cost accounting
+//!
+//! Wire volume is metered per rank as `net_bytes_tx`/`net_bytes_rx`
+//! (headers included).  The BSP `g`/`l` charge (`net_relation`) is the
+//! rank's own send volume per collective — each process owns its
+//! `Metrics`, so the mem switch's "leader charges the global max"
+//! accounting is approximated per-rank; the *count* of h-relations per
+//! rank matches the mem transport exactly.
+//!
+//! # Errors
+//!
+//! [`TcpSwitch`] methods return `Result`: a peer disconnect (clean EOF
+//! included), torn frame, or handshake mismatch surfaces as
+//! [`Error::Net`] naming the peer, never a hang — receiver threads
+//! always poison their inbox on exit and wake every waiter.  Payloads
+//! fully received before the disconnect stay consumable.  The
+//! [`super::Switch`] enum converts these into panics (→ `VpPanic` at
+//! the engine boundary); see its docs for the rationale.
+
+use crate::error::{Error, Result};
+use crate::metrics::{trace, Metrics, Phase};
+use std::collections::{HashMap, HashSet};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// HELLO magic, first bytes on every new connection.
+const MAGIC: [u8; 6] = *b"PEMS2N";
+/// Framed-protocol version, bumped on any wire-format change.
+const VERSION: u32 = 1;
+/// HELLO size: magic + version + rank + p.
+const HELLO_LEN: usize = 6 + 4 + 4 + 4;
+/// Frame header size: kind + seq + total + off + len.
+pub const HEADER_LEN: usize = 33;
+/// Chunk size messages are cut into — large enough to amortize the
+/// header and syscall, small enough that all peer streams interleave.
+pub const CHUNK_BYTES: usize = 256 * 1024;
+/// Bounded send-ring depth per peer (frames).  Beyond this the
+/// enqueueing collective blocks (metered as `net_stall_ns`).
+pub const RING_FRAMES: usize = 8;
+/// Sanity bound on a single message (1 TiB) — a `total` beyond this is
+/// a corrupt or hostile frame, not a real collective.
+const MAX_FRAME_TOTAL: u64 = 1 << 40;
+/// Rendezvous patience: how long connect retries / accept polling keep
+/// trying before giving up on a peer.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(20);
+
+const KIND_DATA: u8 = 1;
+const KIND_BARRIER: u8 = 2;
+
+/// Decoded frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// `KIND_DATA` or `KIND_BARRIER`.
+    pub kind: u8,
+    /// Collective sequence number.
+    pub seq: u64,
+    /// Full payload size of the (peer, seq) message.
+    pub total: u64,
+    /// Chunk offset within the payload.
+    pub off: u64,
+    /// Chunk payload bytes following the header.
+    pub len: u64,
+}
+
+/// Encode a frame header into `buf` (little-endian).
+pub fn encode_header(buf: &mut [u8; HEADER_LEN], h: &FrameHeader) {
+    buf[0] = h.kind;
+    buf[1..9].copy_from_slice(&h.seq.to_le_bytes());
+    buf[9..17].copy_from_slice(&h.total.to_le_bytes());
+    buf[17..25].copy_from_slice(&h.off.to_le_bytes());
+    buf[25..33].copy_from_slice(&h.len.to_le_bytes());
+}
+
+/// Decode and validate a frame header.  Rejects unknown kinds, insane
+/// totals, chunks past the end of their message, and barrier frames
+/// carrying payload.
+pub fn decode_header(buf: &[u8; HEADER_LEN]) -> Result<FrameHeader> {
+    let h = FrameHeader {
+        kind: buf[0],
+        seq: u64::from_le_bytes(buf[1..9].try_into().unwrap()),
+        total: u64::from_le_bytes(buf[9..17].try_into().unwrap()),
+        off: u64::from_le_bytes(buf[17..25].try_into().unwrap()),
+        len: u64::from_le_bytes(buf[25..33].try_into().unwrap()),
+    };
+    match h.kind {
+        KIND_DATA => {
+            if h.total > MAX_FRAME_TOTAL {
+                return Err(Error::net(format!("frame total {} exceeds sanity bound", h.total)));
+            }
+            let end = h.off.checked_add(h.len).ok_or_else(|| {
+                Error::net(format!("frame chunk overflows: off {} + len {}", h.off, h.len))
+            })?;
+            if end > h.total {
+                return Err(Error::net(format!(
+                    "frame chunk [{}, {}) past message end {}",
+                    h.off, end, h.total
+                )));
+            }
+        }
+        KIND_BARRIER => {
+            if h.total != 0 || h.off != 0 || h.len != 0 {
+                return Err(Error::net("barrier frame carries payload".to_string()));
+            }
+        }
+        other => return Err(Error::net(format!("unknown frame kind {other}"))),
+    }
+    Ok(h)
+}
+
+/// Fill `buf` from the reader, looping over partial reads.  `Ok(false)`
+/// is a clean EOF *at a frame boundary* (nothing read); EOF mid-buffer
+/// (a torn header or truncated chunk) is an error.
+pub fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        let n = r.read(&mut buf[filled..])?;
+        if n == 0 {
+            if filled == 0 {
+                return Ok(false);
+            }
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                format!("torn frame: EOF after {filled} of {} bytes", buf.len()),
+            ));
+        }
+        filled += n;
+    }
+    Ok(true)
+}
+
+/// One chunk handed from a collective to a peer's sender thread.  The
+/// payload `Arc` is shared across all chunks of a message — the handoff
+/// copies nothing.
+struct Job {
+    header: FrameHeader,
+    payload: Arc<Vec<u8>>,
+}
+
+/// Received-message state for one peer, shared between its receiver
+/// thread and the collectives waiting on it.
+#[derive(Default)]
+struct InboxState {
+    /// Messages still assembling: seq → (buffer, bytes filled).
+    partial: HashMap<u64, (Vec<u8>, u64)>,
+    /// Fully assembled messages, awaiting their collective.
+    done: HashMap<u64, Vec<u8>>,
+    /// Barrier seqs seen.
+    barriers: HashSet<u64>,
+    /// Set once, on any wire fault (clean EOF included); all waiters
+    /// wake and fail structurally instead of hanging.
+    error: Option<String>,
+}
+
+#[derive(Default)]
+struct Inbox {
+    state: Mutex<InboxState>,
+    cv: Condvar,
+}
+
+impl Inbox {
+    /// Poison the inbox and wake every waiter.  First error wins (a
+    /// send-side failure does not mask the receive-side cause).
+    fn fail(&self, msg: String) {
+        let mut st = self.state.lock().unwrap();
+        st.error.get_or_insert(msg);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Record one received frame.
+    fn deliver(&self, h: FrameHeader, body: Vec<u8>) {
+        let mut st = self.state.lock().unwrap();
+        if h.kind == KIND_BARRIER {
+            st.barriers.insert(h.seq);
+        } else if h.total == 0 {
+            st.done.insert(h.seq, Vec::new());
+        } else {
+            let entry =
+                st.partial.entry(h.seq).or_insert_with(|| (vec![0u8; h.total as usize], 0));
+            entry.0[h.off as usize..(h.off + h.len) as usize].copy_from_slice(&body);
+            entry.1 += h.len;
+            if entry.1 >= h.total {
+                let (buf, _) = st.partial.remove(&h.seq).unwrap();
+                st.done.insert(h.seq, buf);
+            }
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+/// Completed wait outcome: `Some` = ready, `None` = keep waiting.
+fn take_ready(st: &mut InboxState, seq: u64, barrier: bool) -> Option<Vec<u8>> {
+    if barrier {
+        st.barriers.remove(&seq).then(Vec::new)
+    } else {
+        st.done.remove(&seq)
+    }
+}
+
+/// One connected peer: the send ring into its sender thread plus the
+/// inbox its receiver thread fills.
+struct Peer {
+    /// `None` after shutdown began (Drop takes it to close the ring).
+    tx: Option<SyncSender<Job>>,
+    inbox: Arc<Inbox>,
+    sender: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Peer {
+    fn spawn(me: usize, j: usize, stream: TcpStream, metrics: Arc<Metrics>) -> Result<Peer> {
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(None)?;
+        let read_half = stream.try_clone()?;
+        let inbox = Arc::new(Inbox::default());
+        let (tx, rx) = mpsc::sync_channel::<Job>(RING_FRAMES);
+        let sender = {
+            let inbox = inbox.clone();
+            let metrics = metrics.clone();
+            std::thread::Builder::new()
+                .name(format!("net-tx-{me}-{j}"))
+                .spawn(move || sender_loop(stream, rx, inbox, metrics))
+                .map_err(Error::Io)?
+        };
+        {
+            let inbox = inbox.clone();
+            std::thread::Builder::new()
+                .name(format!("net-rx-{me}-{j}"))
+                .spawn(move || receiver_loop(read_half, inbox, metrics))
+                .map_err(Error::Io)?;
+        }
+        Ok(Peer { tx: Some(tx), inbox, sender: Some(sender) })
+    }
+}
+
+/// Drain the send ring onto the socket.  Exits when the ring closes
+/// (switch dropped — flush then shut down the write half so the peer's
+/// receiver sees a clean EOF) or on a write error (poison the inbox so
+/// local callers fail structurally).
+fn sender_loop(mut stream: TcpStream, rx: Receiver<Job>, inbox: Arc<Inbox>, metrics: Arc<Metrics>) {
+    let mut header = [0u8; HEADER_LEN];
+    while let Ok(job) = rx.recv() {
+        let _span = trace::span_named(Phase::Net, "net_tx_frame");
+        encode_header(&mut header, &job.header);
+        let body = &job.payload[job.header.off as usize..(job.header.off + job.header.len) as usize];
+        if let Err(e) = stream.write_all(&header).and_then(|()| stream.write_all(body)) {
+            inbox.fail(format!("send failed: {e}"));
+            return;
+        }
+        metrics.net_tx(HEADER_LEN as u64 + job.header.len);
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+}
+
+/// Read frames off the socket into the inbox until EOF or error.  The
+/// inbox is *always* poisoned on exit — after a normal run nobody is
+/// waiting and the note is inert, but a mid-run disconnect turns every
+/// pending and future wait into a structured error instead of a hang.
+fn receiver_loop(mut stream: TcpStream, inbox: Arc<Inbox>, metrics: Arc<Metrics>) {
+    let mut header = [0u8; HEADER_LEN];
+    loop {
+        match read_exact_or_eof(&mut stream, &mut header) {
+            Ok(false) => {
+                inbox.fail("connection closed by peer".to_string());
+                return;
+            }
+            Err(e) => {
+                inbox.fail(format!("recv failed: {e}"));
+                return;
+            }
+            Ok(true) => {}
+        }
+        let _span = trace::span_named(Phase::Net, "net_rx_frame");
+        let h = match decode_header(&header) {
+            Ok(h) => h,
+            Err(e) => {
+                inbox.fail(e.to_string());
+                return;
+            }
+        };
+        let mut body = vec![0u8; h.len as usize];
+        if let Err(e) = stream.read_exact(&mut body) {
+            inbox.fail(format!("recv failed mid-chunk: {e}"));
+            return;
+        }
+        metrics.net_rx(HEADER_LEN as u64 + h.len);
+        inbox.deliver(h, body);
+    }
+}
+
+fn write_hello(stream: &mut TcpStream, rank: usize, p: usize) -> Result<()> {
+    let mut buf = [0u8; HELLO_LEN];
+    buf[..6].copy_from_slice(&MAGIC);
+    buf[6..10].copy_from_slice(&VERSION.to_le_bytes());
+    buf[10..14].copy_from_slice(&(rank as u32).to_le_bytes());
+    buf[14..18].copy_from_slice(&(p as u32).to_le_bytes());
+    stream.write_all(&buf).map_err(|e| Error::net(format!("hello send failed: {e}")))
+}
+
+fn read_hello(stream: &mut TcpStream, p: usize) -> Result<usize> {
+    let mut buf = [0u8; HELLO_LEN];
+    stream.read_exact(&mut buf).map_err(|e| Error::net(format!("hello recv failed: {e}")))?;
+    if buf[..6] != MAGIC {
+        return Err(Error::net("handshake magic mismatch (not a pems2 peer?)".to_string()));
+    }
+    let version = u32::from_le_bytes(buf[6..10].try_into().unwrap());
+    if version != VERSION {
+        return Err(Error::net(format!("protocol version mismatch: peer {version}, us {VERSION}")));
+    }
+    let rank = u32::from_le_bytes(buf[10..14].try_into().unwrap()) as usize;
+    let peer_p = u32::from_le_bytes(buf[14..18].try_into().unwrap()) as usize;
+    if peer_p != p {
+        return Err(Error::net(format!("world-size mismatch: peer says p = {peer_p}, us {p}")));
+    }
+    if rank >= p {
+        return Err(Error::net(format!("peer claims rank {rank} >= p {p}")));
+    }
+    Ok(rank)
+}
+
+fn connect_retry(addr: &str, deadline: Instant) -> Result<TcpStream> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(Error::net(format!("connect to {addr} timed out: {e}")));
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    }
+}
+
+/// The TCP switch for one rank: `P-1` persistent peer connections, each
+/// with its own sender/receiver thread pair.  See the module docs.
+pub struct TcpSwitch {
+    p: usize,
+    me: usize,
+    /// Indexed by rank; `None` at `me`.
+    peers: Vec<Option<Peer>>,
+    /// Collective sequence counter (see the framing docs).
+    next_seq: AtomicU64,
+    metrics: Arc<Metrics>,
+}
+
+impl std::fmt::Debug for TcpSwitch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TcpSwitch").field("p", &self.p).field("me", &self.me).finish()
+    }
+}
+
+impl TcpSwitch {
+    /// Rendezvous with all peers (see the module docs) and return the
+    /// connected switch.  Blocks up to ~20 s for stragglers.
+    pub fn connect(p: usize, me: usize, peers: &[String], metrics: Arc<Metrics>) -> Result<TcpSwitch> {
+        if peers.len() != p {
+            return Err(Error::net(format!("{} peer addresses for p = {p}", peers.len())));
+        }
+        if me >= p {
+            return Err(Error::net(format!("rank {me} >= p {p}")));
+        }
+        let deadline = Instant::now() + CONNECT_TIMEOUT;
+        let mut streams: Vec<Option<TcpStream>> = (0..p).map(|_| None).collect();
+        if p > 1 {
+            let listener = TcpListener::bind(&peers[me])
+                .map_err(|e| Error::net(format!("bind {} failed: {e}", peers[me])))?;
+            listener.set_nonblocking(true).map_err(Error::Io)?;
+            // Lower ranks are (or will be) listening: dial them.
+            for (j, addr) in peers.iter().enumerate().take(me) {
+                let mut s = connect_retry(addr, deadline)?;
+                s.set_read_timeout(Some(CONNECT_TIMEOUT)).map_err(Error::Io)?;
+                write_hello(&mut s, me, p)?;
+                let r = read_hello(&mut s, p)?;
+                if r != j {
+                    return Err(Error::net(format!("dialed rank {j} at {addr}, got rank {r}")));
+                }
+                streams[j] = Some(s);
+            }
+            // Higher ranks dial us; their HELLO says who they are.
+            let mut remaining = p - me - 1;
+            while remaining > 0 {
+                match listener.accept() {
+                    Ok((mut s, _)) => {
+                        s.set_nonblocking(false).map_err(Error::Io)?;
+                        s.set_read_timeout(Some(CONNECT_TIMEOUT)).map_err(Error::Io)?;
+                        let r = read_hello(&mut s, p)?;
+                        if r <= me || streams[r].is_some() {
+                            return Err(Error::net(format!("unexpected HELLO from rank {r}")));
+                        }
+                        write_hello(&mut s, me, p)?;
+                        streams[r] = Some(s);
+                        remaining -= 1;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        if Instant::now() >= deadline {
+                            return Err(Error::net(format!(
+                                "rendezvous timed out with {remaining} peer(s) missing"
+                            )));
+                        }
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) => return Err(Error::net(format!("accept failed: {e}"))),
+                }
+            }
+        }
+        let mut peer_slots = Vec::with_capacity(p);
+        for (j, s) in streams.into_iter().enumerate() {
+            peer_slots.push(match s {
+                Some(s) => Some(Peer::spawn(me, j, s, metrics.clone())?),
+                None => None,
+            });
+        }
+        Ok(TcpSwitch { p, me, peers: peer_slots, next_seq: AtomicU64::new(0), metrics })
+    }
+
+    /// Number of nodes.
+    pub fn nodes(&self) -> usize {
+        self.p
+    }
+
+    fn check_me(&self, me: usize) -> Result<()> {
+        if me != self.me {
+            return Err(Error::comm(format!(
+                "collective invoked as rank {me} on a rank-{} switch",
+                self.me
+            )));
+        }
+        Ok(())
+    }
+
+    /// The structured error a dead peer left behind.
+    fn peer_error(&self, j: usize) -> Error {
+        let st = self.peers[j].as_ref().unwrap().inbox.state.lock().unwrap();
+        let msg = st.error.clone().unwrap_or_else(|| "send ring closed".to_string());
+        Error::net(format!("peer {j}: {msg}"))
+    }
+
+    /// Hand one chunk to peer `j`'s sender thread.  Fast path is a
+    /// non-blocking ring push; a full ring blocks (the classification
+    /// side got ahead of the wire) and meters the wait.
+    fn enqueue(&self, j: usize, job: Job) -> Result<()> {
+        let tx = self.peers[j].as_ref().unwrap().tx.as_ref().unwrap();
+        match tx.try_send(job) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(job)) => {
+                let _span = trace::span_named(Phase::Net, "net_ring_full");
+                let t0 = Instant::now();
+                let r = tx.send(job);
+                self.metrics.net_stall(t0.elapsed().as_nanos() as u64);
+                r.map_err(|_| self.peer_error(j))
+            }
+            Err(TrySendError::Disconnected(_)) => Err(self.peer_error(j)),
+        }
+    }
+
+    /// Cut every non-self row of `out` into chunk jobs and enqueue them
+    /// round-robin across peers, so all streams progress together.
+    /// Empty rows still send their one `total == 0` presence frame.
+    fn stream_out(&self, seq: u64, out: Vec<Option<Vec<u8>>>) -> Result<()> {
+        let arcs: Vec<Option<Arc<Vec<u8>>>> =
+            out.into_iter().map(|m| m.map(Arc::new)).collect();
+        let mut cursor = vec![0u64; self.p];
+        let mut announced = vec![false; self.p];
+        loop {
+            let mut progressed = false;
+            for (j, arc) in arcs.iter().enumerate() {
+                let Some(arc) = arc else { continue };
+                let total = arc.len() as u64;
+                if total == 0 {
+                    if !announced[j] {
+                        announced[j] = true;
+                        let header = FrameHeader { kind: KIND_DATA, seq, total: 0, off: 0, len: 0 };
+                        self.enqueue(j, Job { header, payload: arc.clone() })?;
+                        progressed = true;
+                    }
+                    continue;
+                }
+                if cursor[j] >= total {
+                    continue;
+                }
+                let len = (total - cursor[j]).min(CHUNK_BYTES as u64);
+                let header = FrameHeader { kind: KIND_DATA, seq, total, off: cursor[j], len };
+                cursor[j] += len;
+                self.enqueue(j, Job { header, payload: arc.clone() })?;
+                progressed = true;
+            }
+            if !progressed {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Block until peer `j`'s message (or barrier mark) for `seq` is
+    /// fully assembled.  Time actually spent blocked — overlap the
+    /// streams didn't hide — is metered as `net_stall_ns`.
+    fn wait_for(&self, j: usize, seq: u64, barrier: bool) -> Result<Vec<u8>> {
+        let inbox = &self.peers[j].as_ref().unwrap().inbox;
+        {
+            // Fast path: assembled while we were streaming elsewhere.
+            let mut st = inbox.state.lock().unwrap();
+            if let Some(buf) = take_ready(&mut st, seq, barrier) {
+                return Ok(buf);
+            }
+            if let Some(e) = &st.error {
+                return Err(Error::net(format!("peer {j}: {e}")));
+            }
+        }
+        let _span = trace::span_named(Phase::Net, "net_wait_payload");
+        let t0 = Instant::now();
+        let mut st = inbox.state.lock().unwrap();
+        let out = loop {
+            if let Some(buf) = take_ready(&mut st, seq, barrier) {
+                break Ok(buf);
+            }
+            if let Some(e) = &st.error {
+                break Err(Error::net(format!("peer {j}: {e}")));
+            }
+            st = inbox.cv.wait(st).unwrap();
+        };
+        drop(st);
+        self.metrics.net_stall(t0.elapsed().as_nanos() as u64);
+        out
+    }
+
+    /// Node-level Alltoallv over the peer streams (see
+    /// [`alltoallv`](super::Switch::alltoallv) on the enum for the
+    /// contract).  Charges this rank's own send volume (diagonal
+    /// included) as the h-relation.
+    pub fn alltoallv(&self, me: usize, mut out: Vec<Vec<u8>>) -> Result<Vec<Vec<u8>>> {
+        self.check_me(me)?;
+        if out.len() != self.p {
+            return Err(Error::comm(format!("alltoallv rows {} != p {}", out.len(), self.p)));
+        }
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        if self.p == 1 {
+            self.metrics.net_relation(0); // local only, like the mem switch
+            return Ok(out);
+        }
+        let h: u64 = out.iter().map(|m| m.len() as u64).sum();
+        self.metrics.net_relation(h);
+        let mine = std::mem::take(&mut out[me]);
+        let rows: Vec<Option<Vec<u8>>> = out
+            .into_iter()
+            .enumerate()
+            .map(|(j, m)| if j == me { None } else { Some(m) })
+            .collect();
+        self.stream_out(seq, rows)?;
+        let mut result: Vec<Vec<u8>> = (0..self.p).map(|_| Vec::new()).collect();
+        result[me] = mine;
+        for j in (0..self.p).filter(|&j| j != me) {
+            result[j] = self.wait_for(j, seq, false)?;
+        }
+        Ok(result)
+    }
+
+    /// Node-level broadcast from `root` (see [`super::Switch::bcast`]).
+    /// The root streams to all peers concurrently and charges
+    /// `len·(P-1)`, mirroring the mem switch.
+    pub fn bcast(&self, me: usize, root: usize, payload: Option<Vec<u8>>) -> Result<Vec<u8>> {
+        self.check_me(me)?;
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        if self.p == 1 {
+            return Ok(payload.expect("root payload"));
+        }
+        if me == root {
+            let data = payload.expect("root payload");
+            self.metrics.net_relation(data.len() as u64 * (self.p as u64 - 1));
+            let rows: Vec<Option<Vec<u8>>> = (0..self.p)
+                .map(|j| if j == me { None } else { Some(data.clone()) })
+                .collect();
+            self.stream_out(seq, rows)?;
+            Ok(data)
+        } else {
+            self.wait_for(root, seq, false)
+        }
+    }
+
+    /// Node-level barrier: one BARRIER frame to every peer, then wait
+    /// for everyone's.  Charges nothing, like the mem switch.
+    pub fn barrier(&self) -> Result<()> {
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        if self.p == 1 {
+            return Ok(());
+        }
+        let empty = Arc::new(Vec::new());
+        for j in (0..self.p).filter(|&j| j != self.me) {
+            let header = FrameHeader { kind: KIND_BARRIER, seq, total: 0, off: 0, len: 0 };
+            self.enqueue(j, Job { header, payload: empty.clone() })?;
+        }
+        for j in (0..self.p).filter(|&j| j != self.me) {
+            self.wait_for(j, seq, true)?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for TcpSwitch {
+    /// Close every send ring and join the sender threads, flushing any
+    /// queued frames and half-closing the sockets so peer receivers see
+    /// a clean EOF.  Receiver threads are detached; they exit on that
+    /// EOF from the other side.
+    fn drop(&mut self) {
+        for peer in self.peers.iter_mut().flatten() {
+            peer.tx.take();
+        }
+        for peer in self.peers.iter_mut().flatten() {
+            if let Some(h) = peer.sender.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reserve `n` distinct loopback `host:port` strings by binding
+    /// ephemeral listeners, then releasing them.
+    pub fn free_peers(n: usize) -> Vec<String> {
+        let listeners: Vec<TcpListener> =
+            (0..n).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+        listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect()
+    }
+
+    fn run_ranks<F, R>(p: usize, f: F) -> Vec<R>
+    where
+        F: Fn(usize, TcpSwitch) -> R + Send + Sync + 'static,
+        R: Send + 'static,
+    {
+        let peers = Arc::new(free_peers(p));
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..p)
+            .map(|me| {
+                let peers = peers.clone();
+                let f = f.clone();
+                std::thread::spawn(move || {
+                    let sw = TcpSwitch::connect(p, me, &peers, Arc::new(Metrics::new())).unwrap();
+                    f(me, sw)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn header_round_trips() {
+        let h = FrameHeader { kind: KIND_DATA, seq: 7, total: 1 << 20, off: 256 * 1024, len: 999 };
+        let mut buf = [0u8; HEADER_LEN];
+        encode_header(&mut buf, &h);
+        assert_eq!(decode_header(&buf).unwrap(), h);
+    }
+
+    #[test]
+    fn decode_rejects_malformed_frames() {
+        let mut buf = [0u8; HEADER_LEN];
+        // Unknown kind.
+        encode_header(&mut buf, &FrameHeader { kind: 9, seq: 0, total: 0, off: 0, len: 0 });
+        assert!(matches!(decode_header(&buf), Err(Error::Net(_))));
+        // Insane total.
+        encode_header(
+            &mut buf,
+            &FrameHeader { kind: KIND_DATA, seq: 0, total: u64::MAX, off: 0, len: 0 },
+        );
+        assert!(matches!(decode_header(&buf), Err(Error::Net(_))));
+        // Chunk past message end.
+        encode_header(
+            &mut buf,
+            &FrameHeader { kind: KIND_DATA, seq: 0, total: 10, off: 8, len: 8 },
+        );
+        assert!(matches!(decode_header(&buf), Err(Error::Net(_))));
+        // Barrier with payload.
+        encode_header(
+            &mut buf,
+            &FrameHeader { kind: KIND_BARRIER, seq: 0, total: 0, off: 0, len: 3 },
+        );
+        assert!(matches!(decode_header(&buf), Err(Error::Net(_))));
+    }
+
+    /// A reader that trickles one byte per `read` call — the worst
+    /// partial-read stream a socket can produce.
+    struct Trickle<'a>(&'a [u8]);
+    impl Read for Trickle<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.0.is_empty() || buf.is_empty() {
+                return Ok(0);
+            }
+            buf[0] = self.0[0];
+            self.0 = &self.0[1..];
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn frame_reader_handles_partial_reads_and_torn_prefix() {
+        let h = FrameHeader { kind: KIND_DATA, seq: 3, total: 4, off: 0, len: 4 };
+        let mut wire = [0u8; HEADER_LEN];
+        encode_header(&mut wire, &h);
+        let mut full: Vec<u8> = wire.to_vec();
+        full.extend_from_slice(&[9, 8, 7, 6]);
+
+        // One byte at a time: the header loop must reassemble it.
+        let mut r = Trickle(&full);
+        let mut buf = [0u8; HEADER_LEN];
+        assert!(read_exact_or_eof(&mut r, &mut buf).unwrap());
+        assert_eq!(decode_header(&buf).unwrap(), h);
+
+        // Clean EOF at a frame boundary is Ok(false)…
+        let mut r = Trickle(&[]);
+        assert!(!read_exact_or_eof(&mut r, &mut buf).unwrap());
+
+        // …but a torn length prefix (EOF mid-header) is an error.
+        let mut r = Trickle(&full[..10]);
+        let e = read_exact_or_eof(&mut r, &mut buf).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn tcp_alltoallv_delivers_matrix() {
+        let results = run_ranks(3, |me, sw| {
+            let out: Vec<Vec<u8>> = (0..3).map(|j| vec![(me * 10 + j) as u8; 3]).collect();
+            sw.alltoallv(me, out).unwrap()
+        });
+        for (me, cols) in results.iter().enumerate() {
+            for (i, col) in cols.iter().enumerate() {
+                assert_eq!(col, &vec![(i * 10 + me) as u8; 3]);
+            }
+        }
+    }
+
+    #[test]
+    fn tcp_repeated_rounds_with_empty_and_large_messages() {
+        let results = run_ranks(2, |me, sw| {
+            let mut got = Vec::new();
+            for round in 0..4usize {
+                // Round 1 sends nothing at all; round 3 exceeds one
+                // chunk so the off/total reassembly path runs.
+                let n = match round {
+                    1 => 0,
+                    3 => CHUNK_BYTES + 12345,
+                    r => r * 7 + 1,
+                };
+                let out: Vec<Vec<u8>> =
+                    (0..2).map(|_| vec![(round * 2 + me) as u8; n]).collect();
+                got.push(sw.alltoallv(me, out).unwrap());
+            }
+            (got, sw.metrics.snapshot())
+        });
+        for (me, (rounds, m)) in results.iter().enumerate() {
+            for (round, cols) in rounds.iter().enumerate() {
+                let n = match round {
+                    1 => 0,
+                    3 => CHUNK_BYTES + 12345,
+                    r => r * 7 + 1,
+                };
+                for (i, col) in cols.iter().enumerate() {
+                    assert_eq!(col, &vec![(round * 2 + i) as u8; n], "rank {me} round {round}");
+                }
+            }
+            assert!(m.net_bytes_tx > 0, "wire tx bytes must be metered");
+            assert!(m.net_bytes_rx > 0, "wire rx bytes must be metered");
+            assert_eq!(m.net_relations, 4, "one h-relation per exchange per rank");
+        }
+    }
+
+    #[test]
+    fn tcp_bcast_and_barrier() {
+        let results = run_ranks(3, |me, sw| {
+            sw.barrier().unwrap();
+            let payload = if me == 1 { Some(vec![42; 10]) } else { None };
+            let got = sw.bcast(me, 1, payload).unwrap();
+            sw.barrier().unwrap();
+            got
+        });
+        for r in results {
+            assert_eq!(r, vec![42; 10]);
+        }
+    }
+
+    #[test]
+    fn disconnect_surfaces_structured_error() {
+        let peers = Arc::new(free_peers(2));
+        let p2 = peers.clone();
+        let quitter = std::thread::spawn(move || {
+            let sw = TcpSwitch::connect(2, 1, &p2, Arc::new(Metrics::new())).unwrap();
+            drop(sw); // leave without ever joining a collective
+        });
+        let sw = TcpSwitch::connect(2, 0, &peers, Arc::new(Metrics::new())).unwrap();
+        quitter.join().unwrap();
+        let err = sw.alltoallv(0, vec![vec![1], vec![2]]).unwrap_err();
+        match err {
+            Error::Net(msg) => assert!(msg.contains("peer 1"), "error names the peer: {msg}"),
+            other => panic!("expected Error::Net, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rendezvous_rejects_bad_shapes() {
+        let m = Arc::new(Metrics::new());
+        assert!(matches!(
+            TcpSwitch::connect(2, 0, &["127.0.0.1:1".to_string()], m.clone()),
+            Err(Error::Net(_))
+        ));
+        assert!(matches!(
+            TcpSwitch::connect(1, 5, &["127.0.0.1:1".to_string()], m.clone()),
+            Err(Error::Net(_))
+        ));
+        // p == 1 needs no sockets at all.
+        let sw = TcpSwitch::connect(1, 0, &["unused".to_string()], m).unwrap();
+        let r = sw.alltoallv(0, vec![vec![1, 2]]).unwrap();
+        assert_eq!(r[0], vec![1, 2]);
+        sw.barrier().unwrap();
+    }
+}

@@ -491,8 +491,12 @@ impl Vp {
             // point: every sibling VP is parked in the barrier, so the
             // thread buffers are quiescent; the mark also captures this
             // superstep's I/O-counter delta and advances the superstep
-            // tag (other nodes' leaders just drain).
-            if shared.node == 0 {
+            // tag (other nodes' leaders just drain).  Under a
+            // distributed transport each process hosts one node and owns
+            // its own Metrics/trace recorder, so *every* rank's leader
+            // counts — per-process superstep counts then match the mem
+            // run's global count.
+            if shared.node == 0 || shared.cfg.transport().is_distributed() {
                 shared.metrics.superstep();
                 trace::superstep_mark(
                     trace::enabled().then(|| shared.metrics.snapshot()),

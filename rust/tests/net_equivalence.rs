@@ -1,0 +1,191 @@
+//! Transport equivalence: the TCP backend must be invisible to results.
+//!
+//! Every rank of a loopback-TCP run must report the same `output_hash`
+//! (and verification verdict) as the single-process in-memory switch
+//! over the same seeded workload — the network-backend counterpart of
+//! the serial/parallel and prefetch-on/off equivalence axes.  The
+//! in-process "ranks" here are threads, each building its own
+//! `SimConfig` with `transport = tcp` and rendezvousing over ephemeral
+//! loopback ports, exactly like separate `pems2 --transport tcp`
+//! processes would (the framed wire protocol does not care which).
+//!
+//! Also pinned: wire counters are nonzero under TCP (the transport is
+//! actually exercised, not silently falling back to mem), PQ drivers
+//! are transport-independent by construction, and the `pems2 launch`
+//! helper drives a real multi-process run end to end.
+
+use pems2::apps::{run_prefix_sum, run_psrs, run_time_forward};
+use pems2::config::{IoStyle, SimConfig, Transport};
+use std::sync::Arc;
+
+/// Reserve `n` distinct loopback `host:port` strings by binding (and
+/// immediately dropping) ephemeral listeners.
+fn free_peers(n: usize) -> Vec<String> {
+    let probes: Vec<std::net::TcpListener> = (0..n)
+        .map(|_| std::net::TcpListener::bind("127.0.0.1:0").expect("bind ephemeral"))
+        .collect();
+    probes
+        .iter()
+        .map(|l| format!("127.0.0.1:{}", l.local_addr().unwrap().port()))
+        .collect()
+}
+
+/// Run `f(rank)` on `p` concurrent threads (the ranks must rendezvous,
+/// so they cannot run sequentially) and collect the results in order.
+fn run_ranks<R, F>(p: usize, f: F) -> Vec<R>
+where
+    R: Send + 'static,
+    F: Fn(usize) -> R + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let handles: Vec<_> = (0..p)
+        .map(|rank| {
+            let f = f.clone();
+            std::thread::Builder::new()
+                .name(format!("tcp-rank-{rank}"))
+                .spawn(move || f(rank))
+                .expect("spawn rank")
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().expect("rank panicked")).collect()
+}
+
+fn mem_cfg(p: usize, v: usize, k: usize) -> SimConfig {
+    SimConfig::builder()
+        .p(p)
+        .v(v)
+        .k(k)
+        .mu(256 << 10)
+        .block(4096)
+        .io(IoStyle::Async)
+        .build()
+        .unwrap()
+}
+
+fn tcp_cfg(p: usize, v: usize, k: usize, rank: usize, peers: Vec<String>) -> SimConfig {
+    SimConfig::builder()
+        .p(p)
+        .v(v)
+        .k(k)
+        .mu(256 << 10)
+        .block(4096)
+        .io(IoStyle::Async)
+        .transport(Transport::Tcp)
+        .net_rank(rank)
+        .peers(peers)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn psrs_over_loopback_tcp_matches_mem() {
+    let (p, v, k, n) = (2usize, 4usize, 2usize, 20_000u64);
+    let mem = run_psrs(mem_cfg(p, v, k), n, true).unwrap();
+    assert!(mem.verified);
+
+    let peers = free_peers(p);
+    let results = run_ranks(p, move |rank| {
+        run_psrs(tcp_cfg(p, v, k, rank, peers.clone()), n, true).unwrap()
+    });
+    for (rank, r) in results.iter().enumerate() {
+        assert!(r.verified, "rank {rank} must verify the full (merged) run");
+        assert_eq!(
+            r.output_hash, mem.output_hash,
+            "rank {rank}: TCP output must be byte-identical to the mem switch"
+        );
+        // The wire was actually used: every rank both sent and received
+        // framed payload (PSRS has bcast + alltoallv traffic each way).
+        assert!(r.report.metrics.net_bytes_tx > 0, "rank {rank} sent no frames");
+        assert!(r.report.metrics.net_bytes_rx > 0, "rank {rank} received no frames");
+    }
+}
+
+#[test]
+fn psrs_tcp_handles_empty_buckets_and_odd_rounds() {
+    // n = 10 over v = 6 VPs: chunks of 1–2 elements make most alltoallv
+    // buckets empty (presence frames with no payload), and v/p = 3 local
+    // VPs over k = 2 partitions give a non-multiple-of-k round schedule.
+    let (p, v, k, n) = (2usize, 6usize, 2usize, 10u64);
+    let mem = run_psrs(mem_cfg(p, v, k), n, true).unwrap();
+    assert!(mem.verified);
+
+    let peers = free_peers(p);
+    let results = run_ranks(p, move |rank| {
+        run_psrs(tcp_cfg(p, v, k, rank, peers.clone()), n, true).unwrap()
+    });
+    for (rank, r) in results.iter().enumerate() {
+        assert!(r.verified, "rank {rank} failed on the sparse workload");
+        assert_eq!(r.output_hash, mem.output_hash, "rank {rank} hash diverged");
+    }
+}
+
+#[test]
+fn prefix_sum_over_loopback_tcp_matches_mem() {
+    let (p, v, k, n) = (2usize, 4usize, 2usize, 5_000u64);
+    let mem = run_prefix_sum(mem_cfg(p, v, k), n, true).unwrap();
+    assert!(mem.verified);
+
+    let peers = free_peers(p);
+    let results = run_ranks(p, move |rank| {
+        run_prefix_sum(tcp_cfg(p, v, k, rank, peers.clone()), n, true).unwrap()
+    });
+    for (rank, r) in results.iter().enumerate() {
+        assert!(r.verified, "rank {rank} must verify");
+        assert_eq!(r.output_hash, mem.output_hash, "rank {rank} hash diverged");
+        assert!(r.report.metrics.net_bytes_tx > 0);
+        assert!(r.report.metrics.net_bytes_rx > 0);
+    }
+}
+
+#[test]
+fn pq_drivers_are_transport_independent() {
+    // time-forward drives the external PQ directly — it never builds a
+    // switch, so a tcp-configured run (p = 1: no sockets either) must be
+    // bit-equal to the mem default.  This is the PQ drivers' half of the
+    // transport-equivalence contract.
+    let mem = run_time_forward(&mem_cfg(1, 2, 2), 2_000, 4, true, true).unwrap();
+    let tcp_cfg = SimConfig::builder()
+        .p(1)
+        .v(2)
+        .k(2)
+        .mu(256 << 10)
+        .block(4096)
+        .io(IoStyle::Async)
+        .transport(Transport::Tcp)
+        .peers(vec!["127.0.0.1:1".to_string()]) // never dialed at p = 1
+        .build()
+        .unwrap();
+    let tcp = run_time_forward(&tcp_cfg, 2_000, 4, true, true).unwrap();
+    assert!(mem.verified && tcp.verified);
+    assert_eq!(tcp.checksum, mem.checksum);
+    assert_eq!(tcp.pq.metrics.net_bytes_tx, 0, "no switch, no wire traffic");
+}
+
+#[test]
+fn launch_runs_a_real_multi_process_loopback_job() {
+    // End-to-end: the `pems2 launch` helper forks two real OS processes,
+    // hands them ephemeral loopback ports, and both must verify.
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_pems2"))
+        .args([
+            "launch", "psrs", "--p", "2", "--n", "20000", "--v", "4", "--k", "2", "--mu",
+            "256k", "--verify",
+        ])
+        .output()
+        .expect("spawn pems2 launch");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        out.status.success(),
+        "launch failed\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    assert_eq!(
+        stdout.matches("verified           true").count(),
+        2,
+        "both ranks must print a passing verdict\nstdout:\n{stdout}"
+    );
+    assert!(stdout.contains("---- rank 0/2"), "per-rank headers expected\n{stdout}");
+    assert!(
+        stdout.contains("net_wire"),
+        "wire counters must be nonzero (and printed) under tcp\n{stdout}"
+    );
+}
