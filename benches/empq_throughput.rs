@@ -43,12 +43,19 @@
 //!    transient plan vs the clean run — fault accounting (injected ==
 //!    retried, nothing fatal) and the retry wall-clock overhead
 //!    persisted so commits can diff the cost of healing.
+//! 11. Distributed distribution sort A/B: 2-rank `dsort` (records
+//!    streaming toward their owner rank while the next chunk reads)
+//!    vs the single-machine `dist_sort` and `stxxl_sort` at the same
+//!    total n — output hashes pinned equal across all three, with the
+//!    dsort rate, per-rank overlap-hidden bytes, cross-rank traffic,
+//!    and the measured-vs-2n I/O-bound ratios persisted.
 //!
 //! y-values are Melem/s (wall clock); measured I/O counters are printed
 //! per phase, since on page-cached SSDs charged time is the faithful
 //! signal (see metrics::cost).  A flat summary lands in
 //! `BENCH_empq.json` so successive commits can diff the perf trajectory.
 
+use pems2::apps::run_dsort;
 use pems2::apps::sssp::run_sssp_with;
 use pems2::apps::time_forward::run_time_forward;
 use pems2::baseline::run_stxxl_sort;
@@ -620,6 +627,58 @@ fn main() {
                 .push(("fault_leg_slowdown".to_string(), fi_secs[1] / fi_secs[0].max(1e-9)));
         }
     }
+
+    // ---- 11. distributed distribution sort A/B ----
+    // 2-rank dsort (in-process mem switch: same code path as tcp minus
+    // the wire) against the phase-9 single-machine runs at the same
+    // total n.  The generation contract (every rank replays the full
+    // seeded stream and keeps its window) makes the input multiset
+    // identical, so all three output hashes must agree exactly.
+    let dsort_cfg = SimConfig::builder()
+        .p(2)
+        .v(4)
+        .k(2)
+        .mu(256 << 10)
+        .d(2)
+        .block(64 << 10)
+        .io(IoStyle::Async)
+        .build()
+        .unwrap();
+    let dsort_r = run_dsort(&dsort_cfg, dist_n, true).unwrap();
+    assert!(dsort_r.verified);
+    assert_eq!(
+        dsort_r.output_hash, merge_r.output_hash,
+        "dsort must be byte-identical to the merge sort"
+    );
+    let dsort_rate = dist_n as f64 / dsort_r.wall.max(1e-9) / 1e6;
+    println!(
+        "dsort A/B  {dsort_rate:>8.2} Melem/s over {} ranks ({} buckets, {} oversized, \
+         net {}); hid {} read / {} write; io ratio {:.3}r/{:.3}w vs the 2n bound",
+        dsort_r.ranks,
+        dsort_r.buckets,
+        dsort_r.oversized,
+        human_bytes(dsort_r.metrics.net_bytes),
+        human_bytes(dsort_r.hidden_read_bytes),
+        human_bytes(dsort_r.hidden_write_bytes),
+        dsort_r.io_read_ratio,
+        dsort_r.io_write_ratio,
+    );
+    summary.push(("dsort_melem_s".to_string(), dsort_rate));
+    summary.push(("dsort_vs_dist_speedup".to_string(), dsort_rate / dist_rate.max(1e-9)));
+    summary.push(("dsort_vs_merge_speedup".to_string(), dsort_rate / merge_rate.max(1e-9)));
+    summary.push((
+        "dsort_hidden_read_mb".to_string(),
+        dsort_r.hidden_read_bytes as f64 / (1 << 20) as f64,
+    ));
+    summary.push((
+        "dsort_hidden_write_mb".to_string(),
+        dsort_r.hidden_write_bytes as f64 / (1 << 20) as f64,
+    ));
+    summary
+        .push(("dsort_net_mb".to_string(), dsort_r.metrics.net_bytes as f64 / (1 << 20) as f64));
+    summary.push(("dsort_buckets".to_string(), dsort_r.buckets as f64));
+    summary.push(("dsort_io_read_ratio".to_string(), dsort_r.io_read_ratio));
+    summary.push(("dsort_io_write_ratio".to_string(), dsort_r.io_write_ratio));
 
     let dir = results_dir();
     write_series(

@@ -15,6 +15,11 @@
 //!   ([`crate::empq`]).
 //! * [`sssp`] — semi-external Dijkstra over `EmPq<SsspRecord>`, the
 //!   second in-tree instantiation of the generic record layer.
+//! * [`dsort`] — distributed distribution sort over the
+//!   [`crate::net::Switch`]: per-rank streaming partition with records
+//!   pushed toward their owner rank while the next chunk reads, pinned
+//!   byte-identical to the single-machine baselines by a composed
+//!   cross-rank output hash.
 //!
 //! Each app is an SPMD function over a [`crate::vp::Vp`] plus a driver
 //! that generates the workload, runs the engine, and verifies the result
@@ -98,6 +103,7 @@ pub(crate) fn exchange_node_results(
 }
 
 pub mod cgm_sort;
+pub mod dsort;
 pub mod euler_tour;
 pub mod graph_gen;
 pub mod list_ranking;
@@ -107,6 +113,7 @@ pub mod sssp;
 pub mod time_forward;
 
 pub use cgm_sort::run_cgm_sort;
+pub use dsort::{run_dsort, run_dsort_masked, run_dsort_shaped, DsortResult};
 pub use euler_tour::run_euler_tour;
 pub use list_ranking::run_list_ranking;
 pub use prefix_sum::run_prefix_sum;

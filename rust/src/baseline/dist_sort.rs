@@ -52,11 +52,12 @@ use crate::util::XorShift64;
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-/// Samples per target bucket in the splitter-selection pass.
-const OVERSAMPLE: usize = 32;
+/// Samples per target bucket in the splitter-selection pass (shared
+/// with the distributed sort in [`crate::apps::dsort`]).
+pub(crate) const OVERSAMPLE: usize = 32;
 /// Spare staging buffers beyond one-per-bucket, bounding how many
 /// scatter writes can be in flight before the partitioner stalls.
-const SCATTER_SPARES: usize = 4;
+pub(crate) const SCATTER_SPARES: usize = 4;
 
 /// Outcome of a distribution sort (the fields shared with
 /// [`crate::baseline::StxxlSortResult`] plus pipeline statistics).
@@ -93,9 +94,11 @@ pub struct DistSortResult {
 
 /// Bucket index of `x` under deduplicated sorted splitters `s`: even
 /// buckets are the open ranges between splitters, odd bucket `2i+1`
-/// holds exactly the values equal to `s[i]`.
+/// holds exactly the values equal to `s[i]`.  The single classifier
+/// shared by the local distribution sort and the distributed
+/// [`crate::apps::dsort`] (which must agree on it rank-for-rank).
 #[inline]
-fn bucket_of(x: u32, s: &[u32]) -> usize {
+pub(crate) fn bucket_of(x: u32, s: &[u32]) -> usize {
     let i = s.partition_point(|&v| v < x);
     if i < s.len() && s[i] == x {
         2 * i + 1
@@ -108,7 +111,8 @@ fn bucket_of(x: u32, s: &[u32]) -> usize {
 /// as zero-copy deferred writes when full.  A drained buffer is frozen
 /// in `in_flight` until its ticket is reclaimed ([`crate::io::WriteSrc`]'s
 /// contract); the partitioner only stalls when every spare is in flight.
-struct ScatterWriter<'a> {
+/// Also the receive-side spill path of the distributed sort.
+pub(crate) struct ScatterWriter<'a> {
     disks: &'a DiskSet,
     /// Bump cursor in the scratch region runs are appended at.
     cursor: u64,
@@ -123,7 +127,7 @@ struct ScatterWriter<'a> {
 }
 
 impl<'a> ScatterWriter<'a> {
-    fn new(disks: &'a DiskSet, base: u64, nbuckets: usize, stage_cap: usize) -> Self {
+    pub(crate) fn new(disks: &'a DiskSet, base: u64, nbuckets: usize, stage_cap: usize) -> Self {
         ScatterWriter {
             disks,
             cursor: base,
@@ -136,7 +140,7 @@ impl<'a> ScatterWriter<'a> {
         }
     }
 
-    fn push_slice(&mut self, bucket: usize, data: &[u32]) -> Result<()> {
+    pub(crate) fn push_slice(&mut self, bucket: usize, data: &[u32]) -> Result<()> {
         let mut at = 0;
         while at < data.len() {
             let room = self.stage_cap - self.stage[bucket].len();
@@ -195,7 +199,8 @@ impl<'a> ScatterWriter<'a> {
     }
 
     /// Flush every staging buffer and wait out all in-flight writes.
-    fn finish(mut self) -> Result<(Vec<Vec<(u64, u64)>>, u64, u64)> {
+    /// Returns (per-bucket runs, final cursor, hidden write bytes).
+    pub(crate) fn finish(mut self) -> Result<(Vec<Vec<(u64, u64)>>, u64, u64)> {
         for b in 0..self.stage.len() {
             self.flush_bucket(b)?;
         }
@@ -217,7 +222,7 @@ impl<'a> ScatterWriter<'a> {
 /// within a bucket is irrelevant: phase 3 sorts even buckets and odd
 /// buckets hold identical values, so the final bytes are independent
 /// of classification order.
-fn classify_chunk(
+pub(crate) fn classify_chunk(
     chunk: &[u32],
     splitters: &[u32],
     nbuckets: usize,
@@ -258,7 +263,7 @@ fn classify_chunk(
 /// path as `stxxl_sort` run formation), in-place sort otherwise.
 /// Byte-identical either way: the sorted sequence of a multiset is
 /// unique.
-fn sort_write_bucket(
+pub(crate) fn sort_write_bucket(
     buf: &mut [u32],
     disks: &DiskSet,
     out_off: u64,
@@ -286,7 +291,7 @@ fn sort_write_bucket(
 /// Stream-copy a bucket's runs to `out_at` without gathering them all
 /// (equality buckets can exceed the RAM budget; every element is
 /// identical so no sort is needed).
-fn stream_copy_runs(
+pub(crate) fn stream_copy_runs(
     disks: &DiskSet,
     runs: &[(u64, u64)],
     out_at: &mut u64,

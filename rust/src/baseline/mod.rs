@@ -18,4 +18,6 @@ pub mod dist_sort;
 pub mod stxxl_sort;
 
 pub use dist_sort::{run_dist_sort, run_dist_sort_masked, DistSortResult};
-pub use stxxl_sort::{run_stxxl_sort, run_stxxl_sort_masked, StxxlSortResult};
+pub use stxxl_sort::{
+    run_stxxl_sort, run_stxxl_sort_masked, run_stxxl_sort_shaped, KeyShape, StxxlSortResult,
+};

@@ -38,6 +38,43 @@ use crate::util::pool::WorkerPool;
 use crate::util::XorShift64;
 use std::sync::Arc;
 
+/// Key-shaping transform applied to every generated key.  Shared by
+/// the sort baselines and the distributed [`crate::apps::dsort`] so a
+/// differential run consumes an *identical* multiset on both sides —
+/// the reference hash and the distributed hash only compare cleanly
+/// when the shapes agree bit-for-bit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KeyShape {
+    /// Raw 32-bit keys straight from the seeded generator.
+    Full,
+    /// Keys AND-masked: a narrow mask collapses the key space to a
+    /// handful of distinct values (the duplicate-heavy adversary).
+    Mask(u32),
+    /// ~90 % of keys collapse to one constant value: the worst-case
+    /// ownership skew for a distributed sort (the equality bucket of
+    /// that value — and therefore its owner rank — holds ~90 % of all
+    /// records), while the remaining ~10 % keep full range.
+    Skew90,
+}
+
+impl KeyShape {
+    /// Apply the shape to one generated key.
+    #[inline]
+    pub fn apply(self, x: u32) -> u32 {
+        match self {
+            KeyShape::Full => x,
+            KeyShape::Mask(m) => x & m,
+            KeyShape::Skew90 => {
+                if x % 10 != 0 {
+                    42
+                } else {
+                    x
+                }
+            }
+        }
+    }
+}
+
 /// Outcome of a baseline sort.
 #[derive(Debug)]
 pub struct StxxlSortResult {
@@ -60,7 +97,7 @@ pub struct StxxlSortResult {
 /// Sort `n` random u32 keys with RAM budget `cfg.k * cfg.mu` and the
 /// disk set described by `cfg` (layout/D/driver/block are honoured).
 pub fn run_stxxl_sort(cfg: &SimConfig, n: u64, verify: bool) -> Result<StxxlSortResult> {
-    run_stxxl_sort_masked(cfg, n, verify, u32::MAX)
+    run_stxxl_sort_shaped(cfg, n, verify, KeyShape::Full)
 }
 
 /// [`run_stxxl_sort`] with every generated key AND-masked by `mask`.
@@ -72,6 +109,17 @@ pub fn run_stxxl_sort_masked(
     n: u64,
     verify: bool,
     mask: u32,
+) -> Result<StxxlSortResult> {
+    run_stxxl_sort_shaped(cfg, n, verify, KeyShape::Mask(mask))
+}
+
+/// [`run_stxxl_sort`] over a [`KeyShape`]-transformed key stream — the
+/// general entry the distributed sort's differential tests reference.
+pub fn run_stxxl_sort_shaped(
+    cfg: &SimConfig,
+    n: u64,
+    verify: bool,
+    shape: KeyShape,
 ) -> Result<StxxlSortResult> {
     let metrics = Arc::new(Metrics::new());
     let driver: Arc<dyn IoDriver> = match cfg.io {
@@ -108,7 +156,7 @@ pub fn run_stxxl_sort_masked(
             let take = buf.len().min((n - at) as usize);
             rng.fill_u32(&mut buf[..take]);
             for x in &mut buf[..take] {
-                *x &= mask;
+                *x = shape.apply(*x);
                 checksum_in = checksum_in.wrapping_add(*x as u64);
             }
             disks.write(IoClass::Delivery, in_base + at * 4, crate::util::bytes::as_bytes(&buf[..take]))?;

@@ -40,6 +40,7 @@ fn real_main(args: Vec<String>) -> Result<()> {
         "sssp" => cmd_sssp(&cli),
         "stxxl-sort" => cmd_stxxl_sort(&cli),
         "dist-sort" => cmd_dist_sort(&cli),
+        "dsort" => cmd_dsort(&cli),
         "alltoallv" => cmd_alltoallv(&cli),
         "launch" => cmd_launch(&cli),
         "info" => cmd_info(&cli),
@@ -70,6 +71,9 @@ COMMANDS
                 (--algo dist runs the distribution sort instead)
   dist-sort     EM distribution (sample) sort baseline: pipelined
                 sample/partition/bucket-sort with equality buckets
+  dsort         distributed distribution sort across --p ranks: records
+                stream toward their owner rank while the next chunk
+                reads (pems2 launch dsort --p 2 --n 1000000 --verify)
   alltoallv     a single Alltoallv over the whole data set (Fig. 7.2)
   launch        spawn --p local ranks of a subcommand over loopback TCP
                 (pems2 launch psrs --p 2 --n 1000000 --v 4 --verify)
@@ -125,6 +129,9 @@ SIMULATION FLAGS (Appendix B.3)
   --peers LIST    comma-separated host:port, one per rank in rank order;
                   rank i listens on the i-th entry (tcp only)
   --rank N        this process' node index into --peers (tcp only)  [0]
+  --fault-rank R  (launch only) apply --fault-plan to rank R alone; the
+                  other ranks run with fault injection explicitly
+                  disarmed (their --fault-plan is forced empty)
 
 WORKLOAD FLAGS
   --n N           elements (psrs, cgm-sort, prefix-sum, list-ranking, stxxl-sort)
@@ -416,6 +423,36 @@ fn cmd_dist_sort(cli: &Cli) -> Result<()> {
     verdict(r.verified)
 }
 
+fn cmd_dsort(cli: &Cli) -> Result<()> {
+    let cfg = cli.sim_config()?;
+    let n: u64 = cli.get_or("n", 1_000_000)?;
+    let session = cfg.trace_path().map(pems2::metrics::trace::Session::start);
+    let r = pems2::apps::run_dsort(&cfg, n, cli.flag("verify"))?;
+    let trace = session.map(|s| s.finish());
+    println!("app                dsort");
+    println!("n                  {}", r.n);
+    println!("ranks              {}", r.ranks);
+    println!("local_n            {}", r.local_n);
+    println!("owned_n            {}", r.owned_n);
+    println!("wall_seconds       {:.3}", r.wall);
+    println!("charged_seconds    {:.3}", r.charged);
+    println!("io_volume          {}", human_bytes(r.metrics.total_disk_bytes()));
+    println!("buckets            {}", r.buckets);
+    println!("oversized          {}", r.oversized);
+    println!(
+        "hidden_io          {} read / {} write",
+        human_bytes(r.hidden_read_bytes),
+        human_bytes(r.hidden_write_bytes)
+    );
+    println!(
+        "io_bound_ratio     {:.3} read / {:.3} write",
+        r.io_read_ratio, r.io_write_ratio
+    );
+    print_counters(&r.metrics);
+    print_phase_table(trace.as_ref());
+    verdict(r.verified)
+}
+
 fn cmd_alltoallv(cli: &Cli) -> Result<()> {
     let cfg = cli.sim_config()?;
     let elems: usize = cli.get_or("elems", 65_536)?;
@@ -461,14 +498,36 @@ fn cmd_launch(cli: &Cli) -> Result<()> {
     }
     let peer_list = peers.join(",");
 
-    // Forward everything except the transport trio and --p (each child
-    // gets the full node count so v/k/mu resolve identically).
+    // `--fault-rank R` is a launcher-only flag: the fault plan goes to
+    // rank R alone and every other rank runs explicitly disarmed (so a
+    // global PEMS2_FAULT_PLAN env cannot leak into the healthy ranks).
+    let fault_rank: Option<usize> = match cli.options.get("fault-rank") {
+        Some(r) => Some(r.parse().map_err(|_| {
+            pems2::error::Error::usage(format!("--fault-rank wants a rank index, got '{r}'"))
+        })?),
+        None => None,
+    };
+    if let Some(fr) = fault_rank {
+        if fr >= p {
+            return Err(pems2::error::Error::usage(format!(
+                "--fault-rank {fr} out of range for --p {p}"
+            )));
+        }
+    }
+    let fault_plan = cli.options.get("fault-plan").cloned().unwrap_or_default();
+
+    // Forward everything except the transport trio, --p (each child
+    // gets the full node count so v/k/mu resolve identically) and the
+    // launcher-owned fault flags when --fault-rank routes them.
     let mut forwarded: Vec<String> = vec![sub.clone()];
     forwarded.extend(cli.positional.iter().skip(1).cloned());
     let mut opts: Vec<(&String, &String)> = cli.options.iter().collect();
     opts.sort(); // HashMap order is nondeterministic; children must agree
     for (k, v) in opts {
-        if matches!(k.as_str(), "transport" | "rank" | "peers") {
+        if matches!(k.as_str(), "transport" | "rank" | "peers" | "fault-rank") {
+            continue;
+        }
+        if fault_rank.is_some() && k == "fault-plan" {
             continue;
         }
         forwarded.push(format!("--{k}={v}"));
@@ -478,34 +537,54 @@ fn cmd_launch(cli: &Cli) -> Result<()> {
     let exe = std::env::current_exe()?;
     let mut children = Vec::with_capacity(p);
     for rank in 0..p {
-        let child = std::process::Command::new(&exe)
-            .args(&forwarded)
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.args(&forwarded)
             .arg("--transport=tcp")
             .arg(format!("--rank={rank}"))
-            .arg(format!("--peers={peer_list}"))
+            .arg(format!("--peers={peer_list}"));
+        if let Some(fr) = fault_rank {
+            // An explicit --fault-plan always wins over the env var, so
+            // an empty one disarms the non-target ranks.
+            let plan = if rank == fr { fault_plan.as_str() } else { "" };
+            cmd.arg(format!("--fault-plan={plan}"));
+        }
+        let child = cmd
             .stdout(std::process::Stdio::piped())
             .stderr(std::process::Stdio::piped())
             .spawn()?;
         children.push(child);
     }
 
+    // Reap every child unconditionally — a failed wait on one rank must
+    // not leak the others — and exit with the worst child status so a
+    // single dead rank fails the whole launch with its own code.
     let mut failed = Vec::new();
+    let mut worst = 0i32;
     for (rank, child) in children.into_iter().enumerate() {
-        let out = child.wait_with_output()?;
-        println!("---- rank {rank}/{p} ({sub}) ----");
-        print!("{}", String::from_utf8_lossy(&out.stdout));
-        let err = String::from_utf8_lossy(&out.stderr);
-        if !err.is_empty() {
-            eprint!("{err}");
-        }
-        if !out.status.success() {
-            failed.push(rank);
+        match child.wait_with_output() {
+            Ok(out) => {
+                println!("---- rank {rank}/{p} ({sub}) ----");
+                print!("{}", String::from_utf8_lossy(&out.stdout));
+                let err = String::from_utf8_lossy(&out.stderr);
+                if !err.is_empty() {
+                    eprint!("{err}");
+                }
+                if !out.status.success() {
+                    failed.push(rank);
+                    worst = worst.max(out.status.code().unwrap_or(101).max(1));
+                }
+            }
+            Err(e) => {
+                println!("---- rank {rank}/{p} ({sub}) ----");
+                eprintln!("pems2: launch: waiting on rank {rank} failed: {e}");
+                failed.push(rank);
+                worst = worst.max(101);
+            }
         }
     }
     if !failed.is_empty() {
-        return Err(pems2::error::Error::comm(format!(
-            "launch: rank(s) {failed:?} exited with failure"
-        )));
+        eprintln!("pems2: launch: rank(s) {failed:?} exited with failure");
+        std::process::exit(worst);
     }
     Ok(())
 }

@@ -304,6 +304,26 @@ impl MetricsSnapshot {
         self.deliv_read_bytes + self.deliv_write_bytes
     }
 
+    /// Measured swap read/write volume as ratios of an algorithmic I/O
+    /// bound (`measured / bound`), the conformance check the sort apps
+    /// report against their 2n-read / 2n-write analysis: a pipeline
+    /// that stays near 1.0 moves no more bytes than the algorithm
+    /// requires (block rounding and sampling push it slightly above).
+    /// A zero bound yields 0.0 (an empty workload conforms trivially).
+    pub fn io_conformance(&self, read_bound_bytes: u64, write_bound_bytes: u64) -> (f64, f64) {
+        let ratio = |measured: u64, bound: u64| -> f64 {
+            if bound == 0 {
+                0.0
+            } else {
+                measured as f64 / bound as f64
+            }
+        };
+        (
+            ratio(self.swap_read_bytes, read_bound_bytes),
+            ratio(self.swap_write_bytes, write_bound_bytes),
+        )
+    }
+
     /// Difference (self - earlier), for per-phase accounting.
     pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
         MetricsSnapshot {
@@ -351,6 +371,19 @@ mod tests {
         assert_eq!(s.swap_ops, 2);
         assert_eq!(s.deliv_ops, 1);
         assert_eq!(s.total_disk_bytes(), 180);
+    }
+
+    #[test]
+    fn io_conformance_ratios() {
+        let m = Metrics::new();
+        m.read(IoClass::Swap, 300);
+        m.write(IoClass::Swap, 100);
+        let s = m.snapshot();
+        let (r, w) = s.io_conformance(200, 100);
+        assert!((r - 1.5).abs() < 1e-9);
+        assert!((w - 1.0).abs() < 1e-9);
+        // Zero bounds (empty workload) conform trivially.
+        assert_eq!(s.io_conformance(0, 0), (0.0, 0.0));
     }
 
     #[test]

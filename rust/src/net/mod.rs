@@ -282,6 +282,32 @@ impl Switch {
         self.alltoallv(me, out)
     }
 
+    /// Open a streaming-push session: records flow toward their
+    /// destination rank *as the producer emits them* instead of waiting
+    /// for a full alltoallv marshal.  On the TCP transport the bytes
+    /// hit the per-peer sender rings immediately (overlapping the
+    /// producer's next read/classify — see
+    /// [`tcp::TcpSwitch::stream_begin`]); the mem transport buffers
+    /// per-destination rows and performs one equivalent alltoallv at
+    /// [`StreamPush::finish`], so both transports deliver identical
+    /// bytes in identical rank order.  Like every collective, each rank
+    /// must open and finish the session exactly once, in the same
+    /// program position (the tcp seq-lockstep depends on it).  Pushing
+    /// to the caller's own rank is a contract violation on either
+    /// transport — owner-local records never enter the switch.
+    pub fn stream_push(&self, me: usize) -> StreamPush<'_> {
+        match self {
+            Switch::Mem(s) => StreamPush::Mem {
+                sw: s,
+                me,
+                rows: (0..s.nodes()).map(|_| Vec::new()).collect(),
+            },
+            Switch::Tcp(s) => StreamPush::Tcp(
+                s.stream_begin(me).unwrap_or_else(|e| panic!("{e}")),
+            ),
+        }
+    }
+
     /// Node-level reduce to `root` with a byte-level combiner: a logarithmic
     /// tree reduction (Fig. 7.6).  `combine(acc, other)` folds `other` into
     /// `acc`; payloads must be equal length on all nodes.
@@ -328,6 +354,51 @@ impl Switch {
             acc
         } else {
             None
+        }
+    }
+}
+
+/// A transport-dispatched streaming-push session (see
+/// [`Switch::stream_push`]).  Same panic-on-wire-fault contract as the
+/// [`Switch`] collectives.
+pub enum StreamPush<'a> {
+    /// Mem transport: rows accumulate locally; one alltoallv at finish.
+    Mem {
+        /// The switch the finish-time alltoallv runs on.
+        sw: &'a MemSwitch,
+        /// Calling rank.
+        me: usize,
+        /// Per-destination accumulated bytes.
+        rows: Vec<Vec<u8>>,
+    },
+    /// TCP transport: frames hit the per-peer sender rings immediately.
+    Tcp(tcp::TcpStreamPush<'a>),
+}
+
+impl StreamPush<'_> {
+    /// Route `data` toward rank `dst`.  TCP: on the wire now (blocking
+    /// only on ring back-pressure); mem: appended to the local row.
+    pub fn push(&mut self, dst: usize, data: &[u8]) {
+        match self {
+            StreamPush::Mem { me, rows, .. } => {
+                assert_ne!(dst, *me, "stream push to self: owner-local records stay local");
+                rows[dst].extend_from_slice(data);
+            }
+            StreamPush::Tcp(st) => st.push(dst, data).unwrap_or_else(|e| panic!("{e}")),
+        }
+    }
+
+    /// Seal the session and collect every peer's inbound stream in rank
+    /// order (the self slot is always empty).  All ranks must call this
+    /// at the same collective position.
+    pub fn finish(self) -> Vec<Vec<u8>> {
+        match self {
+            StreamPush::Mem { sw, me, rows } => {
+                let mut got = sw.alltoallv(me, rows);
+                got[me].clear(); // self row is empty by contract; keep the shape identical to tcp
+                got
+            }
+            StreamPush::Tcp(st) => st.finish().unwrap_or_else(|e| panic!("{e}")),
         }
     }
 }
@@ -480,6 +551,29 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.net_relations, 1);
         assert_eq!(s.net_bytes, 150); // max per-node volume
+    }
+
+    #[test]
+    fn stream_push_mem_accumulates_and_delivers_in_push_order() {
+        let results = run_nodes(3, |me, sw| {
+            let mut st = sw.stream_push(me);
+            for j in (0..3).filter(|&j| j != me) {
+                st.push(j, &[me as u8; 4]);
+                st.push(j, &[me as u8 + 10; 2]);
+            }
+            st.finish()
+        });
+        for (me, got) in results.iter().enumerate() {
+            for src in 0..3 {
+                if src == me {
+                    assert!(got[src].is_empty(), "self slot must stay empty");
+                } else {
+                    let mut want = vec![src as u8; 4];
+                    want.extend_from_slice(&[src as u8 + 10; 2]);
+                    assert_eq!(got[src], want, "rank {me} slot {src}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -22,7 +22,7 @@
 //! All traffic after the HELLO is length-prefixed frames:
 //!
 //! ```text
-//! kind: u8   | 1 = DATA, 2 = BARRIER
+//! kind: u8   | 1 = DATA, 2 = BARRIER, 3 = STREAM, 4 = STREAM_END
 //! seq:  u64  | collective sequence number (see below)
 //! total:u64  | full payload size of this (peer, seq) message
 //! off:  u64  | offset of this chunk within the payload
@@ -37,6 +37,25 @@
 //! (every collective invoked once per node, same order on all nodes —
 //! see [`super`]) plus per-connection TCP FIFO means `seq`, a plain
 //! per-switch counter, identifies the collective on both ends.
+//!
+//! # Streaming push (open-ended messages)
+//!
+//! The collectives above marshal a whole message before any byte hits
+//! the wire.  [`TcpSwitch::stream_begin`] opens the complementary
+//! *streaming-push* session for producers whose output size is unknown
+//! until they finish (the distributed distribution sort classifies and
+//! forwards records chunk by chunk): each [`TcpStreamPush::push`]
+//! frames its bytes immediately as `STREAM` frames (`total == 0` — the
+//! size is open; `off` is the cumulative per-destination stream cursor,
+//! which per-connection TCP FIFO keeps in order on the receive side),
+//! and [`TcpStreamPush::finish`] seals every peer's stream with a
+//! `STREAM_END` frame whose `total == off` carries the final byte
+//! count, then collects the peers' fully-assembled streams under the
+//! session's single `seq`.  Regular collectives may interleave with an
+//! open session on the same connections: they consume their own `seq`s
+//! and the lockstep invariant still routes every frame.  Push-side
+//! waiting (ring back-pressure and the final collect) is metered as
+//! `net_stall_ns` and traced as `dsort_stream_stall` spans.
 //!
 //! # Overlap (the perf core)
 //!
@@ -106,11 +125,16 @@ const CONNECT_TIMEOUT: Duration = Duration::from_secs(20);
 
 const KIND_DATA: u8 = 1;
 const KIND_BARRIER: u8 = 2;
+/// One chunk of an open-ended stream: `total == 0`, `off` = cumulative
+/// stream cursor (TCP FIFO keeps chunks in order per connection).
+const KIND_STREAM: u8 = 3;
+/// Stream seal: `len == 0`, `off == total` = final stream byte count.
+const KIND_STREAM_END: u8 = 4;
 
 /// Decoded frame header.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FrameHeader {
-    /// `KIND_DATA` or `KIND_BARRIER`.
+    /// `KIND_DATA`, `KIND_BARRIER`, `KIND_STREAM` or `KIND_STREAM_END`.
     pub kind: u8,
     /// Collective sequence number.
     pub seq: u64,
@@ -162,6 +186,34 @@ pub fn decode_header(buf: &[u8; HEADER_LEN]) -> Result<FrameHeader> {
                 return Err(Error::net("barrier frame carries payload".to_string()));
             }
         }
+        KIND_STREAM => {
+            if h.total != 0 {
+                return Err(Error::net(format!(
+                    "stream chunk declares a total ({}) before the stream is sealed",
+                    h.total
+                )));
+            }
+            let end = h.off.checked_add(h.len).ok_or_else(|| {
+                Error::net(format!("stream chunk overflows: off {} + len {}", h.off, h.len))
+            })?;
+            if end > MAX_FRAME_TOTAL {
+                return Err(Error::net(format!("stream cursor {end} exceeds sanity bound")));
+            }
+        }
+        KIND_STREAM_END => {
+            if h.len != 0 {
+                return Err(Error::net("stream seal carries payload".to_string()));
+            }
+            if h.off != h.total {
+                return Err(Error::net(format!(
+                    "stream seal off {} != total {}",
+                    h.off, h.total
+                )));
+            }
+            if h.total > MAX_FRAME_TOTAL {
+                return Err(Error::net(format!("stream total {} exceeds sanity bound", h.total)));
+            }
+        }
         other => return Err(Error::net(format!("unknown frame kind {other}"))),
     }
     Ok(h)
@@ -190,9 +242,13 @@ pub fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<b
 
 /// One chunk handed from a collective to a peer's sender thread.  The
 /// payload `Arc` is shared across all chunks of a message — the handoff
-/// copies nothing.
+/// copies nothing.  `body_off` is the chunk's offset *within the
+/// payload buffer*: for DATA frames it equals `header.off`, but stream
+/// frames carry the cumulative wire cursor in `header.off` while their
+/// body comes from the (smaller) per-push buffer.
 struct Job {
     header: FrameHeader,
+    body_off: u64,
     payload: Arc<Vec<u8>>,
 }
 
@@ -202,6 +258,9 @@ struct Job {
 struct InboxState {
     /// Messages still assembling: seq → (buffer, bytes filled).
     partial: HashMap<u64, (Vec<u8>, u64)>,
+    /// Open-ended streams still accumulating: seq → bytes so far.  A
+    /// STREAM_END seal moves the buffer into `done`.
+    streams: HashMap<u64, Vec<u8>>,
     /// Fully assembled messages, awaiting their collective.
     done: HashMap<u64, Vec<u8>>,
     /// Barrier seqs seen.
@@ -227,11 +286,37 @@ impl Inbox {
         self.cv.notify_all();
     }
 
-    /// Record one received frame.
-    fn deliver(&self, h: FrameHeader, body: Vec<u8>) {
+    /// Record one received frame.  Returns a protocol-violation message
+    /// when the frame breaks the stream contract (the caller poisons
+    /// the inbox and exits).
+    fn deliver(&self, h: FrameHeader, body: Vec<u8>) -> Option<String> {
         let mut st = self.state.lock().unwrap();
         if h.kind == KIND_BARRIER {
             st.barriers.insert(h.seq);
+        } else if h.kind == KIND_STREAM {
+            // TCP FIFO delivers stream chunks in push order, so the
+            // cumulative cursor must match the bytes assembled so far.
+            let buf = st.streams.entry(h.seq).or_default();
+            if buf.len() as u64 != h.off {
+                return Some(format!(
+                    "stream chunk out of order: cursor {} but {} bytes assembled (seq {})",
+                    h.off,
+                    buf.len(),
+                    h.seq
+                ));
+            }
+            buf.extend_from_slice(&body);
+        } else if h.kind == KIND_STREAM_END {
+            let buf = st.streams.remove(&h.seq).unwrap_or_default();
+            if buf.len() as u64 != h.total {
+                return Some(format!(
+                    "stream length mismatch: seal says {} bytes, {} assembled (seq {})",
+                    h.total,
+                    buf.len(),
+                    h.seq
+                ));
+            }
+            st.done.insert(h.seq, buf);
         } else if h.total == 0 {
             st.done.insert(h.seq, Vec::new());
         } else {
@@ -246,6 +331,7 @@ impl Inbox {
         }
         drop(st);
         self.cv.notify_all();
+        None
     }
 }
 
@@ -302,7 +388,7 @@ fn sender_loop(mut stream: TcpStream, rx: Receiver<Job>, inbox: Arc<Inbox>, metr
     while let Ok(job) = rx.recv() {
         let _span = trace::span_named(Phase::Net, "net_tx_frame");
         encode_header(&mut header, &job.header);
-        let body = &job.payload[job.header.off as usize..(job.header.off + job.header.len) as usize];
+        let body = &job.payload[job.body_off as usize..(job.body_off + job.header.len) as usize];
         if let Err(e) = stream.write_all(&header).and_then(|()| stream.write_all(body)) {
             inbox.fail(format!("send failed: {e}"));
             return;
@@ -344,7 +430,10 @@ fn receiver_loop(mut stream: TcpStream, inbox: Arc<Inbox>, metrics: Arc<Metrics>
             return;
         }
         metrics.net_rx(HEADER_LEN as u64 + h.len);
-        inbox.deliver(h, body);
+        if let Some(violation) = inbox.deliver(h, body) {
+            inbox.fail(violation);
+            return;
+        }
     }
 }
 
@@ -500,11 +589,18 @@ impl TcpSwitch {
     /// non-blocking ring push; a full ring blocks (the classification
     /// side got ahead of the wire) and meters the wait.
     fn enqueue(&self, j: usize, job: Job) -> Result<()> {
+        self.enqueue_named(j, job, "net_ring_full")
+    }
+
+    /// [`enqueue`](Self::enqueue) with a caller-chosen trace-span name
+    /// for the ring-full stall (streaming pushes report as
+    /// `dsort_stream_stall` so overlap gaps are attributable).
+    fn enqueue_named(&self, j: usize, job: Job, stall: &'static str) -> Result<()> {
         let tx = self.peers[j].as_ref().unwrap().tx.as_ref().unwrap();
         match tx.try_send(job) {
             Ok(()) => Ok(()),
             Err(TrySendError::Full(job)) => {
-                let _span = trace::span_named(Phase::Net, "net_ring_full");
+                let _span = trace::span_named(Phase::Net, stall);
                 let t0 = Instant::now();
                 let r = tx.send(job);
                 self.metrics.net_stall(t0.elapsed().as_nanos() as u64);
@@ -531,7 +627,7 @@ impl TcpSwitch {
                     if !announced[j] {
                         announced[j] = true;
                         let header = FrameHeader { kind: KIND_DATA, seq, total: 0, off: 0, len: 0 };
-                        self.enqueue(j, Job { header, payload: arc.clone() })?;
+                        self.enqueue(j, Job { header, body_off: 0, payload: arc.clone() })?;
                         progressed = true;
                     }
                     continue;
@@ -541,8 +637,9 @@ impl TcpSwitch {
                 }
                 let len = (total - cursor[j]).min(CHUNK_BYTES as u64);
                 let header = FrameHeader { kind: KIND_DATA, seq, total, off: cursor[j], len };
+                let body_off = cursor[j];
                 cursor[j] += len;
-                self.enqueue(j, Job { header, payload: arc.clone() })?;
+                self.enqueue(j, Job { header, body_off, payload: arc.clone() })?;
                 progressed = true;
             }
             if !progressed {
@@ -646,12 +743,99 @@ impl TcpSwitch {
         let empty = Arc::new(Vec::new());
         for j in (0..self.p).filter(|&j| j != self.me) {
             let header = FrameHeader { kind: KIND_BARRIER, seq, total: 0, off: 0, len: 0 };
-            self.enqueue(j, Job { header, payload: empty.clone() })?;
+            self.enqueue(j, Job { header, body_off: 0, payload: empty.clone() })?;
         }
         for j in (0..self.p).filter(|&j| j != self.me) {
             self.wait_for(j, seq, true)?;
         }
         Ok(())
+    }
+
+    /// Open a streaming-push session (see the module docs): one `seq`
+    /// for the whole session, consumed lockstep on every rank like any
+    /// collective.  Records pushed with [`TcpStreamPush::push`] hit the
+    /// wire immediately; [`TcpStreamPush::finish`] seals and collects.
+    /// Regular collectives may interleave while the session is open.
+    pub fn stream_begin(&self, me: usize) -> Result<TcpStreamPush<'_>> {
+        self.check_me(me)?;
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        Ok(TcpStreamPush { sw: self, seq, sent: vec![0; self.p] })
+    }
+}
+
+/// An open streaming-push session on a [`TcpSwitch`] — the
+/// records-flow-as-they-classify transport of the distributed
+/// distribution sort.  Push-side blocking (a full sender ring under a
+/// slow receiver, and the final collect) is metered as `net_stall_ns`
+/// and traced as `dsort_stream_stall`.
+pub struct TcpStreamPush<'a> {
+    sw: &'a TcpSwitch,
+    seq: u64,
+    /// Cumulative bytes pushed per destination (the wire cursor).
+    sent: Vec<u64>,
+}
+
+impl TcpStreamPush<'_> {
+    /// Frame `data` to `dst` immediately (cut into [`CHUNK_BYTES`]
+    /// chunks).  Blocks only when `dst`'s sender ring is full — the
+    /// receiver fell behind the classify rate — metered and traced as
+    /// a `dsort_stream_stall`.  Self-pushes are a contract error: the
+    /// producer keeps records it owns local (that is the point of a
+    /// distribution pass).
+    pub fn push(&mut self, dst: usize, data: &[u8]) -> Result<()> {
+        if dst == self.sw.me {
+            return Err(Error::comm(format!(
+                "stream push to self (rank {dst}): owner-local records never cross the wire"
+            )));
+        }
+        if data.is_empty() {
+            return Ok(());
+        }
+        let payload = Arc::new(data.to_vec());
+        let total_len = data.len() as u64;
+        let mut at = 0u64;
+        while at < total_len {
+            let len = (total_len - at).min(CHUNK_BYTES as u64);
+            let header = FrameHeader {
+                kind: KIND_STREAM,
+                seq: self.seq,
+                total: 0,
+                off: self.sent[dst],
+                len,
+            };
+            let job = Job { header, body_off: at, payload: payload.clone() };
+            self.sent[dst] += len;
+            at += len;
+            self.sw.enqueue_named(dst, job, "dsort_stream_stall")?;
+        }
+        Ok(())
+    }
+
+    /// Seal every peer's stream (a `STREAM_END` with the final byte
+    /// count — silent peers still get one, as presence), charge this
+    /// rank's total pushed volume as the h-relation, and collect each
+    /// peer's fully-assembled inbound stream in rank order.  The self
+    /// slot is always empty (self-pushes are rejected).
+    pub fn finish(self) -> Result<Vec<Vec<u8>>> {
+        let sw = self.sw;
+        let h: u64 = self.sent.iter().sum();
+        sw.metrics.net_relation(h);
+        let mut result: Vec<Vec<u8>> = (0..sw.p).map(|_| Vec::new()).collect();
+        if sw.p == 1 {
+            return Ok(result);
+        }
+        let empty = Arc::new(Vec::new());
+        for j in (0..sw.p).filter(|&j| j != sw.me) {
+            let total = self.sent[j];
+            let header =
+                FrameHeader { kind: KIND_STREAM_END, seq: self.seq, total, off: total, len: 0 };
+            sw.enqueue_named(j, Job { header, body_off: 0, payload: empty.clone() }, "dsort_stream_stall")?;
+        }
+        for j in (0..sw.p).filter(|&j| j != sw.me) {
+            let _span = trace::span_named(Phase::Net, "dsort_stream_stall");
+            result[j] = sw.wait_for(j, self.seq, false)?;
+        }
+        Ok(result)
     }
 }
 
@@ -736,6 +920,37 @@ mod tests {
             &FrameHeader { kind: KIND_BARRIER, seq: 0, total: 0, off: 0, len: 3 },
         );
         assert!(matches!(decode_header(&buf), Err(Error::Net(_))));
+        // Stream chunk declaring a total before the seal.
+        encode_header(
+            &mut buf,
+            &FrameHeader { kind: KIND_STREAM, seq: 0, total: 5, off: 0, len: 5 },
+        );
+        assert!(matches!(decode_header(&buf), Err(Error::Net(_))));
+        // Stream cursor past the sanity bound.
+        encode_header(
+            &mut buf,
+            &FrameHeader { kind: KIND_STREAM, seq: 0, total: 0, off: u64::MAX - 4, len: 8 },
+        );
+        assert!(matches!(decode_header(&buf), Err(Error::Net(_))));
+        // Stream seal carrying payload.
+        encode_header(
+            &mut buf,
+            &FrameHeader { kind: KIND_STREAM_END, seq: 0, total: 4, off: 4, len: 1 },
+        );
+        assert!(matches!(decode_header(&buf), Err(Error::Net(_))));
+        // Stream seal whose off disagrees with its total.
+        encode_header(
+            &mut buf,
+            &FrameHeader { kind: KIND_STREAM_END, seq: 0, total: 4, off: 0, len: 0 },
+        );
+        assert!(matches!(decode_header(&buf), Err(Error::Net(_))));
+        // Valid stream chunk and seal still round-trip.
+        let h = FrameHeader { kind: KIND_STREAM, seq: 2, total: 0, off: 512, len: 64 };
+        encode_header(&mut buf, &h);
+        assert_eq!(decode_header(&buf).unwrap(), h);
+        let h = FrameHeader { kind: KIND_STREAM_END, seq: 2, total: 576, off: 576, len: 0 };
+        encode_header(&mut buf, &h);
+        assert_eq!(decode_header(&buf).unwrap(), h);
     }
 
     /// A reader that trickles one byte per `read` call — the worst
@@ -853,6 +1068,245 @@ mod tests {
             Error::Net(msg) => assert!(msg.contains("peer 1"), "error names the peer: {msg}"),
             other => panic!("expected Error::Net, got {other:?}"),
         }
+    }
+
+    /// Connect a real rank-0 switch to a hand-rolled fake "rank 1"
+    /// whose socket behaviour after the HELLO exchange is scripted —
+    /// the harness for receiver-side torture scenarios no well-behaved
+    /// `TcpSwitch` can produce.
+    fn with_fake_peer<R: Send + 'static>(
+        script: impl FnOnce(TcpStream) -> R + Send + 'static,
+    ) -> (TcpSwitch, std::thread::JoinHandle<R>) {
+        let peers = free_peers(2);
+        let addr0 = peers[0].clone();
+        let handle = std::thread::spawn(move || {
+            let mut s = connect_retry(&addr0, Instant::now() + CONNECT_TIMEOUT).unwrap();
+            write_hello(&mut s, 1, 2).unwrap();
+            let mut hello = [0u8; HELLO_LEN];
+            s.read_exact(&mut hello).unwrap();
+            script(s)
+        });
+        let sw = TcpSwitch::connect(2, 0, &peers, Arc::new(Metrics::new())).unwrap();
+        (sw, handle)
+    }
+
+    #[test]
+    fn stream_push_round_trips_with_interleaved_collectives() {
+        // A stream session stays open across an alltoallv + barrier on
+        // the same connections: the seq-lockstep invariant must route
+        // stream chunks and collective frames independently.
+        let results = run_ranks(2, |me, sw| {
+            let other = 1 - me;
+            let mut st = sw.stream_begin(me).unwrap();
+            st.push(other, &vec![me as u8; 10_000]).unwrap();
+            let cols = sw.alltoallv(me, vec![vec![me as u8; 5], vec![me as u8; 5]]).unwrap();
+            assert_eq!(cols[other], vec![other as u8; 5], "interleaved alltoallv broke");
+            sw.barrier().unwrap();
+            // Second push crosses the chunk boundary (multi-frame).
+            st.push(other, &vec![0xEE; CHUNK_BYTES + 17]).unwrap();
+            st.finish().unwrap()
+        });
+        for (me, got) in results.iter().enumerate() {
+            let other = 1 - me;
+            let mut want = vec![other as u8; 10_000];
+            want.extend_from_slice(&vec![0xEE; CHUNK_BYTES + 17]);
+            assert_eq!(got[other], want, "rank {me}: stream bytes must arrive in push order");
+            assert!(got[me].is_empty(), "self slot must stay empty");
+        }
+    }
+
+    #[test]
+    fn stream_push_empty_streams_and_multi_peer() {
+        // Rank 2 pushes nothing: its seals are pure presence frames and
+        // every rank still completes with empty slots for it.
+        let results = run_ranks(3, |me, sw| {
+            let mut st = sw.stream_begin(me).unwrap();
+            if me != 2 {
+                for j in (0..3).filter(|&j| j != me) {
+                    st.push(j, &[me as u8 + 1; 7]).unwrap();
+                }
+            }
+            st.finish().unwrap()
+        });
+        for (me, got) in results.iter().enumerate() {
+            for src in 0..3 {
+                if src == me || src == 2 {
+                    assert!(got[src].is_empty(), "rank {me} slot {src}");
+                } else {
+                    assert_eq!(got[src], vec![src as u8 + 1; 7], "rank {me} slot {src}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stream_backpressure_stalls_then_completes_under_slow_receiver() {
+        let (sw, handle) = with_fake_peer(|mut s| {
+            // A slow receiver: let the sender ring and socket buffers
+            // fill before draining a single byte, then drain to EOF.
+            std::thread::sleep(Duration::from_millis(250));
+            let mut total = 0usize;
+            let mut buf = vec![0u8; 1 << 16];
+            loop {
+                match s.read(&mut buf) {
+                    Ok(0) => break,
+                    Ok(n) => total += n,
+                    Err(_) => break,
+                }
+            }
+            total
+        });
+        // 32 MiB of pushes vastly exceeds RING_FRAMES·CHUNK_BYTES plus
+        // any plausible socket buffering, so the push side must block
+        // (ring-full back-pressure) until the receiver starts draining.
+        let pushes = 128usize;
+        {
+            let mut st = sw.stream_begin(0).unwrap();
+            let chunk = vec![0xA5u8; CHUNK_BYTES];
+            for _ in 0..pushes {
+                st.push(1, &chunk).unwrap();
+            }
+            // No finish(): the scripted peer never streams back.  The
+            // switch Drop below flushes the ring and half-closes.
+        }
+        let stalled = sw.metrics.snapshot().net_stall_ns;
+        drop(sw);
+        let total = handle.join().unwrap();
+        assert_eq!(
+            total,
+            pushes * (CHUNK_BYTES + HEADER_LEN),
+            "every queued frame must still reach the wire"
+        );
+        assert!(stalled > 0, "a slow receiver must stall the push side measurably");
+    }
+
+    #[test]
+    fn torn_mid_record_stream_frame_surfaces_error() {
+        let (sw, handle) = with_fake_peer(|mut s| {
+            // A STREAM chunk promising 100 bytes, delivering 10, then
+            // dying: the receiver must poison, not wait forever.
+            let mut hdr = [0u8; HEADER_LEN];
+            encode_header(
+                &mut hdr,
+                &FrameHeader { kind: KIND_STREAM, seq: 0, total: 0, off: 0, len: 100 },
+            );
+            s.write_all(&hdr).unwrap();
+            s.write_all(&[7u8; 10]).unwrap();
+        });
+        let st = sw.stream_begin(0).unwrap();
+        let err = st.finish().unwrap_err();
+        match err {
+            Error::Net(msg) => assert!(msg.contains("peer 1"), "error names the peer: {msg}"),
+            other => panic!("expected Error::Net, got {other:?}"),
+        }
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn stream_protocol_violations_poison_the_inbox() {
+        // An out-of-order cursor (off skips ahead of the assembled
+        // bytes) breaks the FIFO contract.
+        let (sw, handle) = with_fake_peer(|mut s| {
+            let mut hdr = [0u8; HEADER_LEN];
+            encode_header(
+                &mut hdr,
+                &FrameHeader { kind: KIND_STREAM, seq: 0, total: 0, off: 50, len: 4 },
+            );
+            s.write_all(&hdr).unwrap();
+            s.write_all(&[1, 2, 3, 4]).unwrap();
+            // Hold the socket open until the switch side is done, so
+            // the failure is the protocol check, not an EOF race.
+            let mut b = [0u8; 1];
+            let _ = s.read(&mut b);
+        });
+        let st = sw.stream_begin(0).unwrap();
+        let err = st.finish().unwrap_err();
+        match err {
+            Error::Net(msg) => assert!(msg.contains("out of order"), "{msg}"),
+            other => panic!("expected Error::Net, got {other:?}"),
+        }
+        drop(sw);
+        handle.join().unwrap();
+
+        // A seal whose total disagrees with the assembled bytes.
+        let (sw, handle) = with_fake_peer(|mut s| {
+            let mut hdr = [0u8; HEADER_LEN];
+            encode_header(
+                &mut hdr,
+                &FrameHeader { kind: KIND_STREAM, seq: 0, total: 0, off: 0, len: 4 },
+            );
+            s.write_all(&hdr).unwrap();
+            s.write_all(&[1, 2, 3, 4]).unwrap();
+            encode_header(
+                &mut hdr,
+                &FrameHeader { kind: KIND_STREAM_END, seq: 0, total: 8, off: 8, len: 0 },
+            );
+            s.write_all(&hdr).unwrap();
+            let mut b = [0u8; 1];
+            let _ = s.read(&mut b);
+        });
+        let st = sw.stream_begin(0).unwrap();
+        let err = st.finish().unwrap_err();
+        match err {
+            Error::Net(msg) => assert!(msg.contains("length mismatch"), "{msg}"),
+            other => panic!("expected Error::Net, got {other:?}"),
+        }
+        drop(sw);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn peer_disconnect_mid_stream_errors_both_sides() {
+        // Receive side: the peer dies after pushing but before sealing;
+        // the survivor's finish() must fail structurally, fast.
+        let peers = Arc::new(free_peers(2));
+        let p2 = peers.clone();
+        let quitter = std::thread::spawn(move || {
+            let sw = TcpSwitch::connect(2, 1, &p2, Arc::new(Metrics::new())).unwrap();
+            let mut st = sw.stream_begin(1).unwrap();
+            st.push(0, &[1u8; 64]).unwrap();
+            // Dropping the session and switch without finish() leaves
+            // rank 0's stream unsealed.
+        });
+        let sw = TcpSwitch::connect(2, 0, &peers, Arc::new(Metrics::new())).unwrap();
+        let mut st = sw.stream_begin(0).unwrap();
+        st.push(1, &[2u8; 64]).unwrap();
+        let err = st.finish().unwrap_err();
+        match err {
+            Error::Net(msg) => assert!(msg.contains("peer 1"), "error names the peer: {msg}"),
+            other => panic!("expected Error::Net, got {other:?}"),
+        }
+        quitter.join().unwrap();
+
+        // Send side: the peer's socket is gone entirely; sustained
+        // pushes must start failing with a structured per-peer error
+        // (sender thread death disconnects the ring), never hang.
+        let (sw, handle) = with_fake_peer(drop);
+        handle.join().unwrap();
+        let mut st = sw.stream_begin(0).unwrap();
+        let chunk = vec![0u8; CHUNK_BYTES];
+        let mut saw = None;
+        for _ in 0..256 {
+            if let Err(e) = st.push(1, &chunk) {
+                saw = Some(e);
+                break;
+            }
+        }
+        match saw.expect("pushing 64 MiB at a vanished peer must fail") {
+            Error::Net(msg) => assert!(msg.contains("peer 1"), "error names the peer: {msg}"),
+            other => panic!("expected Error::Net, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stream_push_rejects_self_destination() {
+        let peers = free_peers(1);
+        let sw = TcpSwitch::connect(1, 0, &peers, Arc::new(Metrics::new())).unwrap();
+        let mut st = sw.stream_begin(0).unwrap();
+        assert!(matches!(st.push(0, &[1, 2, 3]), Err(Error::Comm(_))));
+        let got = st.finish().unwrap();
+        assert_eq!(got.len(), 1);
+        assert!(got[0].is_empty());
     }
 
     #[test]

@@ -39,6 +39,26 @@ impl Gen {
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         self.rng.range(lo, hi)
     }
+
+    /// A randomized *transient-safe* fault plan: every fault window fits
+    /// inside the driver's retry budget, so the run must heal invisibly
+    /// (`fatal == 0`, `injected == retried`, output byte-identical).
+    ///
+    /// Fault windows of 1..=4 consecutive ops heal within the budget
+    /// (4 retries after the first failure) as long as windows in the
+    /// same I/O class never touch: retries consume fresh op indices, so
+    /// two adjacent windows would chain into one failure run longer
+    /// than the budget.  Reads and writes count on separate per-disk
+    /// indices, so only the `short` clause (a write-class fault) needs
+    /// a gap from the `write` window.
+    pub fn transient_fault_plan(&mut self) -> String {
+        let w_nth = self.usize_in(1, 7);
+        let w_cnt = self.usize_in(1, 5);
+        let s_nth = w_nth + w_cnt + 1 + self.usize_in(1, 4);
+        let r_nth = self.usize_in(1, 7);
+        let r_cnt = self.usize_in(1, 5);
+        format!("write@*:{w_nth}x{w_cnt},short@*:{s_nth},read@*:{r_nth}x{r_cnt}")
+    }
 }
 
 /// A named property with a case budget.

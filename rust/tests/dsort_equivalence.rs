@@ -1,0 +1,289 @@
+//! Cross-rank differential suite for the distributed distribution sort.
+//!
+//! `pems2 dsort` must produce output byte-identical to the
+//! single-machine `stxxl_sort` reference on the same seeded, shaped
+//! input across every axis the simulator exposes: {mem, loopback-TCP}
+//! transports × {1, 2, 4} ranks × {serial, parallel} phases ×
+//! {prefetch on, off} — pinned through the composed cross-rank output
+//! hash (the FNV fold is linear mod 2⁶⁴, so rank digests compose into
+//! exactly the hash the reference computes over the whole output).
+//!
+//! Shapes pinned besides the uniform stream: `n = 0`, `n < P`
+//! (some ranks own and read nothing), all-equal-ish keys
+//! (`Mask(0x7)` — the duplicate adversary), and `Skew90` (~90 % of
+//! keys collapse to one value, so one rank owns ~90 % of all
+//! records).  Also pinned: nonzero overlap evidence on a 2-rank TCP
+//! run (prefetch-hidden bytes AND wire traffic during the partition
+//! pass) and the `pems2 launch dsort` end-to-end path.
+
+use pems2::apps::{run_dsort_shaped, DsortResult};
+use pems2::baseline::{run_stxxl_sort_shaped, KeyShape};
+use pems2::config::{IoStyle, SimConfig, Transport};
+use std::sync::Arc;
+
+/// Reserve `n` distinct loopback `host:port` strings by binding (and
+/// immediately dropping) ephemeral listeners.
+fn free_peers(n: usize) -> Vec<String> {
+    let probes: Vec<std::net::TcpListener> = (0..n)
+        .map(|_| std::net::TcpListener::bind("127.0.0.1:0").expect("bind ephemeral"))
+        .collect();
+    probes
+        .iter()
+        .map(|l| format!("127.0.0.1:{}", l.local_addr().unwrap().port()))
+        .collect()
+}
+
+/// Run `f(rank)` on `p` concurrent threads (the TCP ranks must
+/// rendezvous, so they cannot run sequentially).
+fn run_ranks<R, F>(p: usize, f: F) -> Vec<R>
+where
+    R: Send + 'static,
+    F: Fn(usize) -> R + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let handles: Vec<_> = (0..p)
+        .map(|rank| {
+            let f = f.clone();
+            std::thread::Builder::new()
+                .name(format!("dsort-rank-{rank}"))
+                .spawn(move || f(rank))
+                .expect("spawn rank")
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().expect("rank panicked")).collect()
+}
+
+fn mem_cfg(p: usize, parallel: bool, prefetch: bool) -> SimConfig {
+    SimConfig::builder()
+        .p(p)
+        .v(2 * p)
+        .k(2)
+        .mu(64 << 10)
+        .block(4096)
+        .io(IoStyle::Async)
+        .parallel_phases(parallel)
+        .swap_prefetch(prefetch)
+        .build()
+        .unwrap()
+}
+
+fn tcp_cfg(
+    p: usize,
+    parallel: bool,
+    prefetch: bool,
+    rank: usize,
+    peers: Vec<String>,
+) -> SimConfig {
+    SimConfig::builder()
+        .p(p)
+        .v(2 * p)
+        .k(2)
+        .mu(64 << 10)
+        .block(4096)
+        .io(IoStyle::Async)
+        .parallel_phases(parallel)
+        .swap_prefetch(prefetch)
+        .transport(Transport::Tcp)
+        .net_rank(rank)
+        .peers(peers)
+        .build()
+        .unwrap()
+}
+
+/// The single-machine reference hash for `(n, shape)` under the same
+/// seed and RAM budget.
+fn reference(n: u64, shape: KeyShape) -> u64 {
+    let r = run_stxxl_sort_shaped(&mem_cfg(1, false, true), n, true, shape).unwrap();
+    assert!(r.verified, "reference must verify (n={n}, shape={shape:?})");
+    r.output_hash
+}
+
+fn tcp_run(p: usize, parallel: bool, prefetch: bool, n: u64, shape: KeyShape) -> Vec<DsortResult> {
+    let peers = free_peers(p);
+    run_ranks(p, move |rank| {
+        run_dsort_shaped(&tcp_cfg(p, parallel, prefetch, rank, peers.clone()), n, true, shape)
+            .unwrap()
+    })
+}
+
+#[test]
+fn mem_matrix_matches_reference() {
+    let n = 30_000u64;
+    let want = reference(n, KeyShape::Full);
+    for p in [1usize, 2, 4] {
+        for parallel in [false, true] {
+            for prefetch in [false, true] {
+                let r = run_dsort_shaped(&mem_cfg(p, parallel, prefetch), n, true, KeyShape::Full)
+                    .unwrap();
+                let tag = format!("mem p={p} parallel={parallel} prefetch={prefetch}");
+                assert!(r.verified, "{tag}: verdict");
+                assert_eq!(r.output_hash, want, "{tag}: hash diverged from stxxl_sort");
+                assert_eq!(r.ranks, p, "{tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn tcp_matrix_matches_reference() {
+    let n = 30_000u64;
+    let want = reference(n, KeyShape::Full);
+    for p in [1usize, 2, 4] {
+        for parallel in [false, true] {
+            for prefetch in [false, true] {
+                let results = tcp_run(p, parallel, prefetch, n, KeyShape::Full);
+                for (rank, r) in results.iter().enumerate() {
+                    let tag =
+                        format!("tcp p={p} rank={rank} parallel={parallel} prefetch={prefetch}");
+                    assert!(r.verified, "{tag}: verdict");
+                    assert_eq!(r.output_hash, want, "{tag}: hash diverged from stxxl_sort");
+                    if p > 1 {
+                        // Splitter + stats allgathers cross the wire on
+                        // every rank even when no records are routed.
+                        assert!(r.metrics.net_bytes_tx > 0, "{tag}: wire never used");
+                        assert!(r.metrics.net_bytes_rx > 0, "{tag}: wire never used");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn empty_input_is_verified_everywhere() {
+    let want = reference(0, KeyShape::Full);
+    assert_eq!(want, 0, "the empty output folds to hash 0");
+    for p in [1usize, 2, 4] {
+        let r = run_dsort_shaped(&mem_cfg(p, true, true), 0, true, KeyShape::Full).unwrap();
+        assert!(r.verified, "mem p={p} n=0");
+        assert_eq!(r.output_hash, 0, "mem p={p} n=0");
+        assert_eq!(r.owned_n + r.local_n, 0, "mem p={p} n=0");
+    }
+    for (rank, r) in tcp_run(2, true, true, 0, KeyShape::Full).iter().enumerate() {
+        assert!(r.verified, "tcp rank={rank} n=0");
+        assert_eq!(r.output_hash, 0, "tcp rank={rank} n=0");
+    }
+}
+
+#[test]
+fn fewer_elements_than_ranks() {
+    // n = 3 over 4 ranks: at least one rank generates nothing and at
+    // least one owns nothing, yet every rank must agree on the verdict.
+    let n = 3u64;
+    let want = reference(n, KeyShape::Full);
+    let r = run_dsort_shaped(&mem_cfg(4, true, true), n, true, KeyShape::Full).unwrap();
+    assert!(r.verified);
+    assert_eq!(r.output_hash, want);
+    for (rank, r) in tcp_run(4, true, true, n, KeyShape::Full).iter().enumerate() {
+        assert!(r.verified, "tcp rank={rank} n=3");
+        assert_eq!(r.output_hash, want, "tcp rank={rank} n=3");
+    }
+}
+
+#[test]
+fn duplicate_heavy_keys_match_reference() {
+    // Mask 0x7: eight distinct values over 40k elements — nearly
+    // everything lands in equality buckets and stream-copies.
+    let n = 40_000u64;
+    let want = reference(n, KeyShape::Mask(0x7));
+    let r = run_dsort_shaped(&mem_cfg(2, true, true), n, true, KeyShape::Mask(0x7)).unwrap();
+    assert!(r.verified);
+    assert_eq!(r.output_hash, want);
+    for (rank, r) in tcp_run(2, true, true, n, KeyShape::Mask(0x7)).iter().enumerate() {
+        assert!(r.verified, "tcp rank={rank} mask");
+        assert_eq!(r.output_hash, want, "tcp rank={rank} mask");
+    }
+}
+
+#[test]
+fn adversarial_ownership_skew_matches_reference() {
+    // Skew90: ~90 % of keys collapse to the constant 42, so the rank
+    // owning 42's equality bucket holds ~90 % of all records.  The
+    // per-rank scratch regions are sized for exactly this worst case.
+    let n = 40_000u64;
+    let want = reference(n, KeyShape::Skew90);
+    let mem = run_dsort_shaped(&mem_cfg(2, true, true), n, true, KeyShape::Skew90).unwrap();
+    assert!(mem.verified);
+    assert_eq!(mem.output_hash, want);
+    let results = tcp_run(2, true, true, n, KeyShape::Skew90);
+    let mut owned: Vec<u64> = results.iter().map(|r| r.owned_n).collect();
+    for (rank, r) in results.iter().enumerate() {
+        assert!(r.verified, "tcp rank={rank} skew");
+        assert_eq!(r.output_hash, want, "tcp rank={rank} skew");
+    }
+    // The skew actually happened: one rank owns the overwhelming share.
+    owned.sort_unstable();
+    assert!(
+        owned[owned.len() - 1] >= (n * 8) / 10,
+        "expected one rank to own >= 80% of records, got {owned:?}"
+    );
+}
+
+#[test]
+fn serial_env_override_matches_parallel_hash() {
+    // PEMS2_FORCE_SERIAL must change scheduling only, never bytes —
+    // pinned here through the config knob the env var flips (the env
+    // var itself is process-global, so CI exercises it as a separate
+    // `cargo test` leg rather than per-test mutation).
+    let n = 25_000u64;
+    let par = run_dsort_shaped(&mem_cfg(2, true, true), n, true, KeyShape::Full).unwrap();
+    let ser = run_dsort_shaped(&mem_cfg(2, false, false), n, true, KeyShape::Full).unwrap();
+    assert!(par.verified && ser.verified);
+    assert_eq!(par.output_hash, ser.output_hash);
+    assert_eq!(ser.metrics.pool_jobs, 0, "serial leg must not touch the pool");
+}
+
+#[test]
+fn two_rank_tcp_shows_overlap_evidence() {
+    // The tentpole's reason to exist: with prefetch on, a 2-rank TCP
+    // run must (a) hide transfer behind classification — read tickets
+    // that completed entirely under CPU work — and (b) push stream
+    // bytes onto the wire during the partition pass.  Both counters
+    // nonzero on the same run is the overlap evidence.
+    let n = 120_000u64;
+    let results = tcp_run(2, true, true, n, KeyShape::Full);
+    let want = reference(n, KeyShape::Full);
+    for (rank, r) in results.iter().enumerate() {
+        assert!(r.verified, "rank {rank}");
+        assert_eq!(r.output_hash, want, "rank {rank}");
+        assert!(
+            r.hidden_read_bytes + r.hidden_write_bytes > 0,
+            "rank {rank}: nothing hidden behind the pipeline"
+        );
+        assert!(r.metrics.net_bytes_tx > 0, "rank {rank}: no stream bytes sent");
+        assert!(r.metrics.net_bytes_rx > 0, "rank {rank}: no stream bytes received");
+        // The I/O volume stays in the neighbourhood of the 2n-read /
+        // 2n-write bound (sampling + block rounding are the slack).
+        assert!(r.io_read_ratio >= 1.0, "rank {rank}: ratio {}", r.io_read_ratio);
+        assert!(r.io_read_ratio < 2.0, "rank {rank}: ratio {}", r.io_read_ratio);
+        assert!(r.io_write_ratio >= 0.9, "rank {rank}: ratio {}", r.io_write_ratio);
+        assert!(r.io_write_ratio < 2.0, "rank {rank}: ratio {}", r.io_write_ratio);
+    }
+}
+
+#[test]
+fn launch_dsort_runs_end_to_end() {
+    // The `pems2 launch dsort` path: two real OS processes over
+    // loopback, both must verify and print wire counters.
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_pems2"))
+        .args([
+            "launch", "dsort", "--p", "2", "--n", "60000", "--v", "4", "--k", "2", "--mu",
+            "64k", "--verify",
+        ])
+        .output()
+        .expect("spawn pems2 launch");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "launch failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    assert_eq!(
+        stdout.matches("verified           true").count(),
+        2,
+        "both ranks must print a passing verdict\nstdout:\n{stdout}"
+    );
+    assert!(stdout.contains("---- rank 0/2"), "per-rank headers expected\n{stdout}");
+    assert!(stdout.contains("app                dsort"), "dsort banner expected\n{stdout}");
+    assert!(
+        stdout.contains("net_wire"),
+        "wire counters must be nonzero (and printed) under tcp\n{stdout}"
+    );
+}

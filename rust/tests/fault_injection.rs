@@ -15,12 +15,15 @@
 //! both sides of the crash.
 
 use pems2::apps;
-use pems2::baseline::{run_dist_sort, run_stxxl_sort};
-use pems2::config::{IoStyle, SimConfig};
+use pems2::apps::run_dsort_shaped;
+use pems2::baseline::{run_dist_sort, run_stxxl_sort, KeyShape};
+use pems2::config::{IoStyle, SimConfig, Transport};
 use pems2::empq::{EmPq, Entry};
+use pems2::error::Result;
 use pems2::metrics::MetricsSnapshot;
 use pems2::util::proptest_mini::Prop;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// k=2 cores x µ=32 KiB => 64 KiB RAM budget.  The plan is always set
 /// explicitly — including `""` for the clean legs — so these tests pin
@@ -78,19 +81,9 @@ fn property_transient_plans_heal_and_preserve_output() {
     assert_eq!(m0.io_faults_injected, 0, "clean leg must not inject");
 
     Prop::new("transient_plans_heal", 6).max_size(8).run(|g| {
-        // Fault windows of 1..=4 consecutive ops heal within the retry
-        // budget (4 retries after the first failure) as long as windows
-        // in the same I/O class never touch: retries consume fresh op
-        // indices, so two adjacent windows would chain into one failure
-        // run longer than the budget.  Reads and writes count on
-        // separate per-disk indices, so only the `short` clause (a
-        // write-class fault) needs a gap from the `write` window.
-        let w_nth = g.usize_in(1, 7);
-        let w_cnt = g.usize_in(1, 5);
-        let s_nth = w_nth + w_cnt + 1 + g.usize_in(1, 4);
-        let r_nth = g.usize_in(1, 7);
-        let r_cnt = g.usize_in(1, 5);
-        let plan = format!("write@*:{w_nth}x{w_cnt},short@*:{s_nth},read@*:{r_nth}x{r_cnt}");
+        // See `Gen::transient_fault_plan` for the windowing argument
+        // that keeps every generated plan inside the retry budget.
+        let plan = g.transient_fault_plan();
 
         let (got, m) = drain_empq(&plan, 12_000, 0xFA11);
         assert!(m.io_faults_injected > 0, "plan {plan:?} never fired");
@@ -203,6 +196,186 @@ fn time_forward_crash_recovery_round_trip() {
     );
 
     let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}
+
+// ---------------------------------------------------------------------
+// Distributed path: faults on one rank of a 2-rank loopback dsort run.
+// ---------------------------------------------------------------------
+
+/// Reserve `n` distinct loopback `host:port` strings by binding (and
+/// immediately dropping) ephemeral listeners.
+fn free_peers(n: usize) -> Vec<String> {
+    let probes: Vec<std::net::TcpListener> = (0..n)
+        .map(|_| std::net::TcpListener::bind("127.0.0.1:0").expect("bind ephemeral"))
+        .collect();
+    probes
+        .iter()
+        .map(|l| format!("127.0.0.1:{}", l.local_addr().unwrap().port()))
+        .collect()
+}
+
+/// 2-rank loopback dsort with `plan` armed on rank 1 **only**; rank 0
+/// runs with injection explicitly disarmed (`""` beats the CI env var).
+/// Returns per-rank results in rank order.
+fn dsort_pair_with_rank1_plan(
+    n: u64,
+    plan: String,
+) -> Vec<Result<pems2::apps::DsortResult>> {
+    let peers = free_peers(2);
+    let plan = Arc::new(plan);
+    let handles: Vec<_> = (0..2usize)
+        .map(|rank| {
+            let peers = peers.clone();
+            let plan = plan.clone();
+            std::thread::Builder::new()
+                .name(format!("fi-dsort-rank-{rank}"))
+                .spawn(move || {
+                    let cfg = SimConfig::builder()
+                        .p(2)
+                        .v(4)
+                        .k(2)
+                        .mu(64 << 10)
+                        .d(2)
+                        .block(4096)
+                        .io(IoStyle::Async)
+                        .fault_plan(if rank == 1 { plan.as_str() } else { "" })
+                        .transport(Transport::Tcp)
+                        .net_rank(rank)
+                        .peers(peers)
+                        .build()
+                        .unwrap();
+                    run_dsort_shaped(&cfg, n, true, KeyShape::Full)
+                })
+                .expect("spawn rank")
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
+}
+
+/// A pinned transient plan on one rank of a 2-rank run must heal
+/// invisibly: both ranks verify, output hash byte-identical to the
+/// clean run, and only the armed rank's counters move.
+#[test]
+fn distributed_transient_faults_on_one_rank_heal() {
+    let n = 40_000u64;
+    let clean = dsort_pair_with_rank1_plan(n, String::new());
+    let clean: Vec<_> = clean.into_iter().map(|r| r.unwrap()).collect();
+    assert!(clean.iter().all(|r| r.verified));
+    assert_eq!(clean[0].metrics.io_faults_injected, 0, "clean leg must not inject");
+    assert_eq!(clean[1].metrics.io_faults_injected, 0, "clean leg must not inject");
+
+    let plan = "read@*:4x2,write@*:6x2,short@*:9";
+    let faulty = dsort_pair_with_rank1_plan(n, plan.to_string());
+    let faulty: Vec<_> = faulty.into_iter().map(|r| r.unwrap()).collect();
+    for (rank, r) in faulty.iter().enumerate() {
+        assert!(r.verified, "rank {rank} failed verification under faults");
+        assert_eq!(
+            r.output_hash, clean[rank].output_hash,
+            "rank {rank}: faults changed the produced bytes"
+        );
+    }
+    let m1 = &faulty[1].metrics;
+    assert!(m1.io_faults_injected > 0, "plan never fired on the armed rank");
+    assert_eq!(m1.io_fault_fatal, 0, "transient plan went fatal");
+    assert_eq!(m1.io_faults_injected, m1.io_retries, "injected != retried on armed rank");
+    assert_eq!(
+        faulty[0].metrics.io_faults_injected, 0,
+        "disarmed rank must stay clean even while its peer is faulting"
+    );
+}
+
+/// Randomized transient plans over the distributed path: the
+/// [`pems2::util::proptest_mini::Gen::transient_fault_plan`] sweep,
+/// pointed at rank 1 of a 2-rank loopback run.
+#[test]
+fn property_distributed_transient_plans_heal() {
+    let n = 20_000u64;
+    let clean = dsort_pair_with_rank1_plan(n, String::new());
+    let clean_hash = clean[0].as_ref().unwrap().output_hash;
+
+    Prop::new("distributed_transient_plans_heal", 4).max_size(4).run(|g| {
+        let plan = g.transient_fault_plan();
+        let results = dsort_pair_with_rank1_plan(n, plan.clone());
+        for (rank, r) in results.into_iter().enumerate() {
+            let r = r.unwrap_or_else(|e| panic!("plan {plan:?} broke rank {rank}: {e}"));
+            assert!(r.verified, "plan {plan:?}: rank {rank} failed verification");
+            assert_eq!(
+                r.output_hash, clean_hash,
+                "plan {plan:?}: rank {rank} diverged from the clean run"
+            );
+            if rank == 1 {
+                assert!(r.metrics.io_faults_injected > 0, "plan {plan:?} never fired");
+                assert_eq!(r.metrics.io_fault_fatal, 0, "plan {plan:?} went fatal");
+                assert_eq!(r.metrics.io_faults_injected, r.metrics.io_retries);
+            }
+        }
+    });
+}
+
+/// A persistent fault (every retry re-fails) on one rank must fail the
+/// whole job fast with a structured per-rank error — the faulting rank
+/// surfaces the injected I/O fault, the healthy rank surfaces a
+/// rank-tagged network error when its peer disappears.  Neither hangs.
+#[test]
+fn distributed_persistent_fault_fails_fast_with_structured_errors() {
+    let start = std::time::Instant::now();
+    let results = dsort_pair_with_rank1_plan(30_000, "read@*:1x100000".to_string());
+    assert!(
+        start.elapsed() < std::time::Duration::from_secs(60),
+        "persistent-fault job must fail fast, not hang"
+    );
+    let e1 = results[1].as_ref().expect_err("armed rank must fail").to_string();
+    assert!(
+        e1.contains("injected EIO (fault plan)"),
+        "armed rank must surface the structured I/O fault, got: {e1}"
+    );
+    let e0 = results[0].as_ref().expect_err("healthy rank must fail too").to_string();
+    assert!(
+        e0.contains("dsort rank 0"),
+        "healthy rank must surface a rank-tagged error, got: {e0}"
+    );
+}
+
+/// Regression: `pems2 launch` must propagate a nonzero child exit
+/// status.  A fault plan routed to rank 1 alone (`--fault-rank 1`)
+/// kills only that child; the launcher must still reap every rank,
+/// print both per-rank headers, and exit nonzero itself.
+#[test]
+fn launch_propagates_single_rank_failure() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_pems2"))
+        .args([
+            "launch",
+            "dsort",
+            "--p",
+            "2",
+            "--n",
+            "30000",
+            "--v",
+            "4",
+            "--k",
+            "2",
+            "--mu",
+            "64k",
+            "--verify",
+            "--fault-rank",
+            "1",
+            "--fault-plan",
+            "read@*:1x100000",
+        ])
+        .output()
+        .expect("spawn pems2 launch");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        !out.status.success(),
+        "launch must fail when a rank dies\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    assert!(stdout.contains("---- rank 0/2"), "rank 0 must still be reaped\n{stdout}");
+    assert!(stdout.contains("---- rank 1/2"), "rank 1 must still be reaped\n{stdout}");
+    assert!(
+        stderr.contains("exited with failure"),
+        "launcher must report the failed rank set\n{stderr}"
+    );
 }
 
 /// Same round trip for SSSP: checkpoint before a mid-run frontier round,
